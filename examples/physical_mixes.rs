@@ -1,0 +1,25 @@
+//! Physical-cluster mixes (paper §VI, Figs. 8-12): CRU / TTD / JCT of
+//! Gavel vs Hadar vs HadarE over the seven workload mixes on the AWS and
+//! testbed clusters, plus the slot-time sweeps.
+//!
+//! Run: `cargo run --release --example physical_mixes [-- --slots]`
+
+use hadar::figures::{physical, slots};
+
+fn main() {
+    println!("running Figs. 8-10 grid (2 clusters x 7 mixes x 3 schedulers)");
+    let p = physical::run(360.0);
+    println!("{}", physical::render_fig8(&p));
+    println!("{}", physical::render_fig9(&p));
+    println!("{}", physical::render_fig10(&p));
+
+    if std::env::args().any(|a| a == "--slots") {
+        println!("\nrunning Figs. 11-12 slot sweeps");
+        let se = slots::run("hadare");
+        println!("{}", slots::render(&se));
+        let sh = slots::run("hadar");
+        println!("{}", slots::render(&sh));
+    } else {
+        println!("(pass --slots for the Fig. 11/12 slot-time sweeps)");
+    }
+}

@@ -1,0 +1,19 @@
+//! Quickstart: the paper's §II-A motivational example in one binary.
+//!
+//! Three DL jobs on a 2xV100 + 3xP100 + 1xK80 cluster, scheduled by Gavel
+//! (job-level heterogeneity awareness: single GPU type per job per round)
+//! vs Hadar (task-level: mixed types allowed). Prints the round-by-round
+//! timelines and the Fig. 1 headline numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hadar::figures::{fig1, workloads};
+
+fn main() {
+    println!("{}", workloads::render_table2());
+    println!("{}", workloads::render_table3());
+
+    println!("== Fig. 1 — motivational example: Gavel vs Hadar ==");
+    let f = fig1::run();
+    println!("{}", fig1::render(&f));
+}

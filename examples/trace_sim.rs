@@ -1,0 +1,45 @@
+//! Trace-driven simulation (paper §IV): a Philly-shaped trace on the
+//! 15-node / 60-GPU simulated cluster under YARN-CS, Tiresias, Gavel, and
+//! Hadar. Regenerates the Fig. 3 (GRU) and Fig. 4 (completion CDF / TTD)
+//! comparisons, plus the Fig. 5 scalability sweep.
+//!
+//! Run: `cargo run --release --example trace_sim [-- --jobs 480 --full]`
+//! (the default is a scaled-down trace so the example finishes quickly;
+//! pass `--full` for the paper-magnitude 480-job run).
+
+use hadar::figures::{fig5, trace_eval};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let jobs = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if full { 480 } else { 120 });
+
+    let cfg = trace_eval::TraceEvalConfig {
+        n_jobs: jobs,
+        seed: 42,
+        slot_secs: 360.0,
+        hours_scale: if full { 1.0 } else { 0.25 },
+    };
+    println!("simulating {jobs} jobs on sim60 (hours_scale={})...",
+             cfg.hours_scale);
+    let te = trace_eval::run(&cfg);
+
+    println!("\n== Fig. 3 — GPU resource utilisation ==");
+    println!("{}", trace_eval::render_fig3(&te));
+    println!("\n== Fig. 4 — completion CDF + TTD ==");
+    println!("{}", trace_eval::render_fig4(&te));
+
+    println!("\n== Fig. 5 — scheduling-time scalability ==");
+    let scales: &[usize] = if full {
+        &[32, 64, 128, 256, 512, 1024, 2048]
+    } else {
+        &[32, 64, 128, 256]
+    };
+    let pts = fig5::run(scales);
+    println!("{}", fig5::render(&pts));
+}

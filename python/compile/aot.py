@@ -1,0 +1,154 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); the Rust binary is then fully
+self-contained — Python never executes on the scheduling/training path.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+  {variant}_train.hlo.txt   train_step: (tokens i32[B,S+1], lr f32[],
+                            P params..., P momenta...) ->
+                            (loss f32[], P new params..., P new momenta...)
+  {variant}_eval.hlo.txt    eval_step: (tokens, P params...) -> (loss, acc)
+  manifest.json             the Rust-side contract: per-variant model config,
+                            flat parameter order/shapes/init specs, artifact
+                            file names, VMEM footprint estimates.
+  model.hlo.txt             symlink-equivalent copy of the default variant's
+                            train artifact (Makefile staleness anchor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import attention as attn_k
+from .kernels import ffn as ffn_k
+
+DEFAULT_VARIANTS = ["tiny", "small", "medium"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def init_spec(name: str) -> dict:
+    """Init rule for one parameter (mirrors model.init_params); the Rust
+    runtime re-creates initial parameters from this spec with its own
+    deterministic PRNG."""
+    if name.endswith(".g"):
+        return {"kind": "ones"}
+    if name.endswith((".b", "b1", "b2")):
+        return {"kind": "zeros"}
+    return {"kind": "normal"}  # scale resolved per-shape below
+
+
+def lower_variant(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Lower train/eval for one variant; return its manifest entry."""
+    specs = M.param_specs(cfg)
+    tok_shape = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    lr_shape = jax.ShapeDtypeStruct((), jnp.float32)
+    param_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+
+    t0 = time.time()
+    train_lowered = jax.jit(
+        lambda t, l, *fl: M.train_step(cfg, t, l, *fl)).lower(
+            tok_shape, lr_shape, *param_shapes, *param_shapes)
+    train_txt = to_hlo_text(train_lowered)
+    train_file = f"{cfg.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, train_file), "w") as f:
+        f.write(train_txt)
+
+    eval_lowered = jax.jit(
+        lambda t, *ps: M.eval_step(cfg, t, *ps)).lower(
+            tok_shape, *param_shapes)
+    eval_txt = to_hlo_text(eval_lowered)
+    eval_file = f"{cfg.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, eval_file), "w") as f:
+        f.write(eval_txt)
+    dt = time.time() - t0
+
+    params = []
+    for name, shape in specs:
+        spec = init_spec(name)
+        if spec["kind"] == "normal":
+            spec["scale"] = 0.02 if "emb" in name else 1.0 / math.sqrt(shape[0])
+        params.append({"name": name, "shape": list(shape), **spec})
+
+    attn_fwd, attn_bwd = attn_k.vmem_footprint_bytes(cfg.seq, cfg.d_head)
+    tokens = cfg.batch * cfg.seq
+    ffn_fwd, ffn_bwd = ffn_k.vmem_footprint_bytes(cfg.d_model, cfg.d_ff,
+                                                  tokens)
+    print(f"  {cfg.name}: {cfg.param_count()} params, lowered in {dt:.1f}s "
+          f"(train {len(train_txt)//1024} KiB, eval {len(eval_txt)//1024} KiB)")
+    return {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq": cfg.seq, "batch": cfg.batch,
+        },
+        "param_count": cfg.param_count(),
+        "params": params,
+        "train_hlo": train_file,
+        "eval_hlo": eval_file,
+        "train_inputs": {
+            "tokens": [cfg.batch, cfg.seq + 1],
+            "lr": [],
+            "n_params": len(specs),
+        },
+        "vmem_estimate_bytes": {
+            "attention_fwd": attn_fwd, "attention_bwd": attn_bwd,
+            "ffn_fwd": ffn_fwd, "ffn_bwd": ffn_bwd,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy anchor path (model.hlo.txt)")
+    ap.add_argument("--variants", default=",".join(DEFAULT_VARIANTS))
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    variants = [v for v in args.variants.split(",") if v]
+    manifest = {"format": 1, "variants": {}}
+    print(f"lowering variants: {variants} -> {out_dir}")
+    for v in variants:
+        cfg = M.VARIANTS[v]
+        manifest["variants"][v] = lower_variant(cfg, out_dir)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Makefile staleness anchor: copy of the default variant's train HLO.
+    anchor = os.path.join(out_dir, "model.hlo.txt")
+    default = manifest["variants"][variants[0]]["train_hlo"]
+    with open(os.path.join(out_dir, default)) as src, open(anchor, "w") as dst:
+        dst.write(src.read())
+    print(f"wrote manifest + anchor to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Layer-1 Pallas kernels: blocked fused causal attention, fwd + bwd.
+
+This is the compute hot-spot of the Layer-2 transformer model
+(``python/compile/model.py``). The kernels are written for the TPU memory
+model even though this sandbox can only *execute* them under
+``interpret=True`` (the CPU PJRT plugin cannot run Mosaic custom-calls):
+
+* **Forward** grid iterates over ``(batch*heads, seq blocks)``; each program
+  streams one ``[BLOCK_Q, d_head]`` query tile from HBM into VMEM via its
+  BlockSpec while K and V for the whole sequence stay resident
+  (``d_head <= 64``, ``seq <= 512`` keeps the footprint well under the
+  ~16 MiB VMEM budget — see DESIGN.md §Hardware-Adaptation).
+* **Backward** grid iterates over ``batch*heads`` only: one program
+  recomputes the score/softmax tile for its head (flash-style
+  rematerialisation — probabilities are never written to HBM) and emits
+  dQ/dK/dV in a single pass, avoiding cross-program accumulation.
+* The matmuls are shaped ``[m, d] x [d, n]`` so they map onto the MXU
+  systolic array; softmax/masking run on the VPU in f32.
+* What a CUDA flash-attention kernel expresses with threadblocks +
+  shared-memory tiles is expressed here with the grid + BlockSpecs: the
+  HBM->VMEM schedule is the index_map, not explicit ``__shared__`` loads.
+
+Reverse-mode autodiff through ``pallas_call`` is not supported by this JAX
+build, so the pair is stitched together with ``jax.custom_vjp``.
+
+Numerics are validated against ``ref.attention_ref`` (forward) and jnp
+autodiff of the oracle (backward) by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+_NEG_INF = -1e30  # python float: jnp scalars become captured consts in pallas kernels
+
+
+def _fwd_kernel(rows_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float,
+                causal: bool):
+    """One grid step: attend one query tile against the full K/V.
+
+    Refs (all VMEM):
+      rows_ref: [block_q]      absolute row indices of this query tile
+                               (blocked iota input; autodiff-safe substitute
+                               for ``pl.program_id``).
+      q_ref: [1, block_q, d]   query tile for this (bh, qblock) program.
+      k_ref: [1, seq, d]       full keys for this batch-head.
+      v_ref: [1, seq, d]       full values.
+      o_ref: [1, block_q, d]   output tile.
+    """
+    q = q_ref[0].astype(jnp.float32)          # [block_q, d]
+    k = k_ref[0].astype(jnp.float32)          # [seq, d]
+    v = v_ref[0].astype(jnp.float32)          # [seq, d]
+
+    # MXU matmul: [block_q, d] x [d, seq] -> [block_q, seq]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        seq = k.shape[0]
+        row = rows_ref[...][:, None]          # [block_q, 1] absolute rows
+        col = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], seq), 1)
+        scores = jnp.where(row >= col, scores, _NEG_INF)
+
+    # Numerically-stable softmax on the VPU.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    # MXU matmul: [block_q, seq] x [seq, d] -> [block_q, d]
+    o_ref[0] = jnp.dot(probs, v,
+                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *,
+                scale: float, causal: bool):
+    """Backward for one batch-head: recompute probs, emit dQ/dK/dV.
+
+    All refs are [1, seq, d]. The [seq, seq] score/prob tiles live only in
+    VMEM/registers (seq<=512 -> 1 MiB f32), the flash-attention trade.
+    """
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    seq = q.shape[0]
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+        scores = jnp.where(row >= col, scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)   # [seq, seq]
+
+    dv = jnp.dot(probs.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    # softmax VJP: ds = probs * (dp - sum(dp * probs, axis=-1))
+    ds = probs * (dp - jnp.sum(dp * probs, axis=-1, keepdims=True))
+    dq = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _attention_fwd_call(q, k, v, causal: bool, block_q: int):
+    bh, seq, d = q.shape
+    grid = (bh, seq // block_q)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal)
+    rows = jnp.arange(seq, dtype=jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, i: (i,)),
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,  # CPU PJRT gate; see module docstring.
+    )(rows, q, k, v)
+
+
+def _attention_bwd_call(q, k, v, do, causal: bool):
+    bh, seq, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_bwd_kernel, scale=scale, causal=causal)
+    spec = pl.BlockSpec((1, seq, d), lambda b: (b, 0, 0))
+    shape = jax.ShapeDtypeStruct((bh, seq, d), q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shape, shape, shape],
+        interpret=True,
+    )(q, k, v, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _attention(q, k, v, causal: bool, block_q: int):
+    return _attention_fwd_call(q, k, v, causal, block_q)
+
+
+def _attention_vjp_fwd(q, k, v, causal, block_q):
+    return _attention_fwd_call(q, k, v, causal, block_q), (q, k, v)
+
+
+def _attention_vjp_bwd(causal, block_q, res, do):
+    q, k, v = res
+    dq, dk, dv = _attention_bwd_call(q, k, v, do, causal)
+    return dq, dk, dv
+
+
+_attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, block_q: int | None = None) -> jnp.ndarray:
+    """Blocked causal attention via Pallas (differentiable).
+
+    Args:
+      q, k, v: ``[bh, seq, d_head]`` with ``bh = batch*heads``.
+      causal: lower-triangular masking.
+      block_q: query-block size; must divide seq (default: min(seq, 64)).
+
+    Returns:
+      ``[bh, seq, d_head]`` output with q's dtype.
+    """
+    bh, seq, d = q.shape
+    if block_q is None:
+        block_q = min(seq, DEFAULT_BLOCK_Q)
+    assert seq % block_q == 0, f"seq={seq} not divisible by block_q={block_q}"
+    return _attention(q, k, v, causal, block_q)
+
+
+def vmem_footprint_bytes(seq: int, d: int, block_q: int | None = None,
+                         dtype_bytes: int = 4) -> Tuple[int, int]:
+    """Estimated VMEM bytes resident per program instance (fwd, bwd).
+
+    Used by DESIGN/EXPERIMENTS to argue the kernels fit the ~16 MiB VMEM
+    budget on real TPUs.
+    """
+    if block_q is None:
+        block_q = min(seq, DEFAULT_BLOCK_Q)
+    fwd = (block_q * d + 2 * seq * d + block_q * seq + block_q * d
+           ) * dtype_bytes
+    bwd = (4 * seq * d + 2 * seq * seq + 3 * seq * d) * dtype_bytes
+    return fwd, bwd

@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernels: fused feed-forward block (linear+GELU+linear), fwd+bwd.
+
+The forward kernel fuses the transformer MLP so the ``[tokens, d_ff]``
+intermediate never round-trips through HBM: each grid step loads one
+``[BLOCK_T, d_model]`` token tile plus both weight matrices into VMEM,
+computes ``GELU(x @ w1 + b1) @ w2 + b2`` on the MXU/VPU, and writes one
+output tile.
+
+The backward kernel runs as a single program (grid=()) that recomputes the
+GELU intermediate (rematerialisation — it is never stored) and emits all
+five input gradients in one pass; this sidesteps cross-program weight-grad
+accumulation, which interpret-mode Pallas cannot express without
+``program_id`` (whose autodiff rule is unsupported in this JAX build).
+
+VMEM budget (f32): forward tile + w1 + w2 + intermediate =
+``(BLOCK_T*d + 2*d*f + BLOCK_T*f) * 4`` bytes — for d=256, f=1024,
+BLOCK_T=128 that is ~2.6 MiB; the backward single-program footprint for the
+largest lowered variant (t=1024, d=256, f=512) is ~6.5 MiB. Both fit the
+~16 MiB VMEM.
+
+Reverse-mode is wired with ``jax.custom_vjp``; validated against
+``ref.ffn_ref`` and its jnp autodiff by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 128
+_C0 = 0.7978845608028654  # sqrt(2/pi)
+_C1 = 0.044715
+
+
+def _gelu(h):
+    return 0.5 * h * (1.0 + jnp.tanh(_C0 * (h + _C1 * h * h * h)))
+
+
+def _gelu_grad(h):
+    u = _C0 * (h + _C1 * h * h * h)
+    t = jnp.tanh(u)
+    du = _C0 * (1.0 + 3.0 * _C1 * h * h)
+    return 0.5 * (1.0 + t) + 0.5 * h * (1.0 - t * t) * du
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [block_t, d]
+    w1 = w1_ref[...].astype(jnp.float32)        # [d, f]
+    b1 = b1_ref[...].astype(jnp.float32)        # [f]
+    w2 = w2_ref[...].astype(jnp.float32)        # [f, d]
+    b2 = b2_ref[...].astype(jnp.float32)        # [d]
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1
+    g = _gelu(h)
+    o_ref[...] = (jnp.dot(g, w2, preferred_element_type=jnp.float32)
+                  + b2).astype(o_ref.dtype)
+
+
+def _bwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, dout_ref,
+                dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w1 = w1_ref[...].astype(jnp.float32)
+    b1 = b1_ref[...].astype(jnp.float32)
+    w2 = w2_ref[...].astype(jnp.float32)
+    dout = dout_ref[...].astype(jnp.float32)
+
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1
+    g = _gelu(h)
+    dg = jnp.dot(dout, w2.T, preferred_element_type=jnp.float32)
+    dh = dg * _gelu_grad(h)
+
+    dx_ref[...] = jnp.dot(dh, w1.T,
+                          preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dw1_ref[...] = jnp.dot(x.T, dh,
+                           preferred_element_type=jnp.float32).astype(dw1_ref.dtype)
+    db1_ref[...] = jnp.sum(dh, axis=0).astype(db1_ref.dtype)
+    dw2_ref[...] = jnp.dot(g.T, dout,
+                           preferred_element_type=jnp.float32).astype(dw2_ref.dtype)
+    db2_ref[...] = jnp.sum(dout, axis=0).astype(db2_ref.dtype)
+
+
+def _ffn_fwd_call(x, w1, b1, w2, b2, block_t: int):
+    t, d = x.shape
+    f = w1.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _ffn_bwd_call(x, w1, b1, w2, dout):
+    t, d = x.shape
+    f = w1.shape[1]
+    shapes = [
+        jax.ShapeDtypeStruct((t, d), x.dtype),
+        jax.ShapeDtypeStruct((d, f), w1.dtype),
+        jax.ShapeDtypeStruct((f,), b1.dtype),
+        jax.ShapeDtypeStruct((f, d), w2.dtype),
+        jax.ShapeDtypeStruct((d,), w2.dtype),
+    ]
+    return pl.pallas_call(_bwd_kernel, out_shape=shapes, interpret=True)(
+        x, w1, b1, w2, dout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ffn(x, w1, b1, w2, b2, block_t: int):
+    return _ffn_fwd_call(x, w1, b1, w2, b2, block_t)
+
+
+def _ffn_vjp_fwd(x, w1, b1, w2, b2, block_t):
+    return _ffn_fwd_call(x, w1, b1, w2, b2, block_t), (x, w1, b1, w2)
+
+
+def _ffn_vjp_bwd(block_t, res, dout):
+    x, w1, b1, w2 = res
+    dx, dw1, db1, dw2, db2 = _ffn_bwd_call(x, w1, b1, w2, dout)
+    return dx, dw1, db1, dw2, db2
+
+
+_ffn.defvjp(_ffn_vjp_fwd, _ffn_vjp_bwd)
+
+
+def ffn(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray,
+        block_t: int | None = None) -> jnp.ndarray:
+    """Fused MLP over a ``[tokens, d_model]`` input (differentiable).
+
+    ``tokens`` must be divisible by ``block_t`` (default min(tokens, 128)).
+    """
+    t, _ = x.shape
+    if block_t is None:
+        block_t = min(t, DEFAULT_BLOCK_T)
+    assert t % block_t == 0, f"tokens={t} not divisible by block_t={block_t}"
+    return _ffn(x, w1, b1, w2, b2, block_t)
+
+
+def vmem_footprint_bytes(d: int, f: int, t: int,
+                         block_t: int = DEFAULT_BLOCK_T,
+                         dtype_bytes: int = 4) -> Tuple[int, int]:
+    """Estimated per-instance VMEM bytes (fwd, bwd). See module docstring."""
+    fwd = (block_t * d + 2 * d * f + block_t * f + f + d) * dtype_bytes
+    bwd = (3 * t * d + 2 * d * f + 2 * t * f + 2 * f + d) * dtype_bytes
+    return fwd, bwd

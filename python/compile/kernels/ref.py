@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` asserts
+``assert_allclose(kernel(...), ref(...))`` across a hypothesis-driven sweep of
+shapes and dtypes; this file is therefore the single source of truth for the
+kernels' semantics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Scaled dot-product attention oracle.
+
+    Args:
+      q, k, v: ``[batch*heads, seq, d_head]`` arrays.
+      causal: apply a lower-triangular mask when True.
+
+    Returns:
+      ``[batch*heads, seq, d_head]`` attention output, f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        seq_q, seq_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)
+
+
+def ffn_ref(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+            w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Fused feed-forward oracle: GELU(x @ w1 + b1) @ w2 + b2.
+
+    Args:
+      x: ``[tokens, d_model]``.
+      w1: ``[d_model, d_ff]``; b1: ``[d_ff]``.
+      w2: ``[d_ff, d_model]``; b2: ``[d_model]``.
+    """
+    x = x.astype(jnp.float32)
+    h = x @ w1.astype(jnp.float32) + b1.astype(jnp.float32)
+    # tanh-approximated GELU (matches the kernel).
+    g = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    return g @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm oracle over the last axis."""
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,194 @@
+"""Layer-2: decoder-only transformer LM — fwd/bwd/SGD as one jitted function.
+
+This is the *DL training job substrate* of the Hadar/HadarE reproduction: the
+paper schedules opaque DL training jobs; here every job is an instance of this
+model (at a size class mapped from Table II/III — see ``VARIANTS``), trained
+with real gradients. The hot-spots (attention, MLP) call the Layer-1 Pallas
+kernels so they lower into the same HLO module.
+
+The public entry points are ``train_step`` and ``eval_step``; ``aot.py``
+lowers them once per model variant to HLO text that the Rust runtime
+(``rust/src/runtime``) loads and executes via PJRT. Python never runs at
+training time.
+
+Parameter layout
+----------------
+Parameters and SGD-momentum buffers are *flat ordered lists* of arrays; the
+ordering is defined by ``param_specs`` and recorded in
+``artifacts/manifest.json``, which is the contract with the Rust side (it
+allocates, checkpoints, and weight-averages parameters by that order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention as pallas_attention
+from .kernels.ffn import ffn as pallas_ffn
+from .kernels.ref import layernorm_ref as layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one transformer-LM variant."""
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(s)) for _, s in param_specs(self))
+
+
+# Size classes map the paper's Table II/III workloads onto what a single CPU
+# core can actually train (DESIGN.md documents the substitution). The five
+# physical-cluster models (IC/LM/LT/RS/MM) are assigned variants in
+# rust/src/jobs/model.rs.
+VARIANTS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=128, seq=64, batch=8),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=2,
+                         n_heads=4, d_ff=256, seq=64, batch=8),
+    "medium": ModelConfig("medium", vocab=1024, d_model=256, n_layers=4,
+                          n_heads=4, d_ff=512, seq=128, batch=8),
+    # 100M-class config for completeness; lowered on demand only (too slow to
+    # train for hundreds of steps on this single-core sandbox).
+    "xl": ModelConfig("xl", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+                      d_ff=3072, seq=256, batch=8),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """The (name, shape) list defining the flat parameter order."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    specs += [("lnf.g", (cfg.d_model,)), ("lnf.b", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic initialisation matching ``param_specs`` order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", "b1", "b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 0.02 if "emb" in name else 1.0 / math.sqrt(fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat: Sequence[jnp.ndarray]) -> dict:
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+def forward(cfg: ModelConfig, flat_params: Sequence[jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits for ``tokens [batch, seq]`` -> ``[batch, seq, vocab]``."""
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = layernorm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        hm = h.reshape(b * s, cfg.d_model)
+        q = (hm @ p[pre + "wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        k = (hm @ p[pre + "wk"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        v = (hm @ p[pre + "wv"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        # -> [b*heads, seq, d_head] for the Pallas kernel.
+        q = q.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.d_head)
+        k = k.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.d_head)
+        v = v.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.d_head)
+        att = pallas_attention(q, k, v, causal=True)
+        att = att.reshape(b, cfg.n_heads, s, cfg.d_head).transpose(0, 2, 1, 3)
+        att = att.reshape(b * s, cfg.d_model) @ p[pre + "wo"]
+        x = x + att.reshape(b, s, cfg.d_model)
+
+        h2 = layernorm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        ff = pallas_ffn(h2.reshape(b * s, cfg.d_model), p[pre + "w1"],
+                        p[pre + "b1"], p[pre + "w2"], p[pre + "b2"])
+        x = x + ff.reshape(b, s, cfg.d_model)
+
+    x = layernorm(x, p["lnf.g"], p["lnf.b"])
+    # Tied output head: logits = x @ tok_emb^T.
+    return x @ p["tok_emb"].T
+
+
+def loss_fn(cfg: ModelConfig, flat_params: Sequence[jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy. ``tokens`` is ``[batch, seq+1]``."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat_params, inp)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(cfg: ModelConfig, tokens: jnp.ndarray, lr: jnp.ndarray,
+               *flat: jnp.ndarray):
+    """One SGD-momentum step.
+
+    Positional layout (this is the AOT/HLO contract):
+      tokens [batch, seq+1] i32, lr f32 scalar,
+      then P parameter arrays, then P momentum arrays.
+    Returns (loss, new_params..., new_momentum...) as a flat tuple.
+    """
+    n = len(flat) // 2
+    params, moms = list(flat[:n]), list(flat[n:])
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens))(params)
+    mu = jnp.float32(0.9)
+    new_params, new_moms = [], []
+    for pa, mo, gr in zip(params, moms, grads):
+        nm = mu * mo + gr
+        new_moms.append(nm)
+        new_params.append(pa - lr * nm)
+    return tuple([loss] + new_params + new_moms)
+
+
+def eval_step(cfg: ModelConfig, tokens: jnp.ndarray, *params: jnp.ndarray):
+    """Evaluation: (mean CE loss, top-1 next-token accuracy)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, list(params), inp)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == tgt).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,70 @@
+"""AOT pipeline: lowered HLO text is parseable, manifest is complete."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    txt = aot.to_hlo_text(lowered)
+    assert "HloModule" in txt
+    assert "ENTRY" in txt
+
+
+def test_init_spec_rules():
+    assert aot.init_spec("layer0.ln1.g") == {"kind": "ones"}
+    assert aot.init_spec("layer0.ln1.b") == {"kind": "zeros"}
+    assert aot.init_spec("layer0.b1") == {"kind": "zeros"}
+    assert aot.init_spec("tok_emb") == {"kind": "normal"}
+    assert aot.init_spec("layer0.wq") == {"kind": "normal"}
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_has_variants(self, manifest):
+        assert manifest["format"] == 1
+        assert "tiny" in manifest["variants"]
+
+    def test_manifest_param_order_matches_model(self, manifest):
+        for name, entry in manifest["variants"].items():
+            cfg = M.VARIANTS[name]
+            specs = M.param_specs(cfg)
+            assert len(entry["params"]) == len(specs)
+            for rec, (pname, shape) in zip(entry["params"], specs):
+                assert rec["name"] == pname
+                assert tuple(rec["shape"]) == shape
+
+    def test_artifact_files_exist_and_are_hlo(self, manifest):
+        for entry in manifest["variants"].values():
+            for key in ("train_hlo", "eval_hlo"):
+                path = os.path.join(ART, entry[key])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    head = f.read(200)
+                assert "HloModule" in head
+
+    def test_normal_init_has_scale(self, manifest):
+        for entry in manifest["variants"].values():
+            for rec in entry["params"]:
+                if rec["kind"] == "normal":
+                    assert rec["scale"] > 0
+
+    def test_vmem_estimates_under_budget(self, manifest):
+        for entry in manifest["variants"].values():
+            for v in entry["vmem_estimate_bytes"].values():
+                assert v < 16 * 2**20

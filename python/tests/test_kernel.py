@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (``ref.py``).
+
+Hypothesis sweeps shapes/dtypes; every property asserts ``assert_allclose``
+against the oracle — this is the core correctness signal for the kernels
+that end up inside every AOT-lowered training artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ffn as F
+from compile.kernels import ref as R
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.integers(1, 6),
+    seq_pow=st.integers(3, 7),          # seq in {8..128}
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(bh, seq_pow, d, causal, seed):
+    seq = 2 ** seq_pow
+    q = _rand(seed, (bh, seq, d), jnp.float32)
+    k = _rand(seed + 1, (bh, seq, d), jnp.float32)
+    v = _rand(seed + 2, (bh, seq, d), jnp.float32)
+    out = A.attention(q, k, v, causal=causal)
+    ref = R.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.integers(1, 3),
+    seq=st.sampled_from([16, 64]),
+    d=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_grads_match_ref(bh, seq, d, causal, seed):
+    q = _rand(seed, (bh, seq, d), jnp.float32)
+    k = _rand(seed + 1, (bh, seq, d), jnp.float32)
+    v = _rand(seed + 2, (bh, seq, d), jnp.float32)
+    f_ker = lambda *a: jnp.sum(jnp.sin(A.attention(*a, causal=causal)))
+    f_ref = lambda *a: jnp.sum(jnp.sin(R.attention_ref(*a, causal=causal)))
+    gk = jax.grad(f_ker, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_q", [8, 16, 32, 64])
+def test_attention_block_size_invariance(block_q):
+    """Output must not depend on the VMEM tiling choice."""
+    q = _rand(7, (2, 64, 16), jnp.float32)
+    k = _rand(8, (2, 64, 16), jnp.float32)
+    v = _rand(9, (2, 64, 16), jnp.float32)
+    base = A.attention(q, k, v, block_q=64)
+    out = A.attention(q, k, v, block_q=block_q)
+    np.testing.assert_allclose(out, base, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_bf16_inputs():
+    q = _rand(1, (2, 32, 16), jnp.bfloat16)
+    k = _rand(2, (2, 32, 16), jnp.bfloat16)
+    v = _rand(3, (2, 32, 16), jnp.bfloat16)
+    out = A.attention(q, k, v)
+    ref = R.attention_ref(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_attention_rejects_bad_block():
+    q = _rand(1, (1, 48, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        A.attention(q, q, q, block_q=32)
+
+
+def test_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q = _rand(11, (1, 32, 8), jnp.float32)
+    k = _rand(12, (1, 32, 8), jnp.float32)
+    v = _rand(13, (1, 32, 8), jnp.float32)
+    base = A.attention(q, k, v, causal=True)
+    k2 = k.at[:, 20:, :].set(99.0)
+    v2 = v.at[:, 20:, :].set(-99.0)
+    pert = A.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :20, :], pert[:, :20, :], rtol=1e-6,
+                               atol=1e-6)
+    assert not np.allclose(base[:, 20:, :], pert[:, 20:, :])
+
+
+def test_attention_vmem_budget():
+    """The lowered sizes must stay under a 16 MiB VMEM budget."""
+    for seq in (64, 128, 256, 512):
+        for d in (16, 32, 64):
+            fwd, bwd = A.vmem_footprint_bytes(seq, d)
+            assert fwd < 16 * 2**20, (seq, d, fwd)
+            assert bwd < 16 * 2**20, (seq, d, bwd)
+
+
+# ---------------------------------------------------------------------- ffn
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_matches_ref(t_blocks, d, f, seed):
+    t = 128 * t_blocks
+    x = _rand(seed, (t, d), jnp.float32)
+    w1 = 0.2 * _rand(seed + 1, (d, f), jnp.float32)
+    b1 = 0.1 * _rand(seed + 2, (f,), jnp.float32)
+    w2 = 0.2 * _rand(seed + 3, (f, d), jnp.float32)
+    b2 = 0.1 * _rand(seed + 4, (d,), jnp.float32)
+    out = F.ffn(x, w1, b1, w2, b2)
+    ref = R.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_ffn_grads_match_ref(seed):
+    x = _rand(seed, (128, 16), jnp.float32)
+    w1 = 0.2 * _rand(seed + 1, (16, 32), jnp.float32)
+    b1 = 0.1 * _rand(seed + 2, (32,), jnp.float32)
+    w2 = 0.2 * _rand(seed + 3, (32, 16), jnp.float32)
+    b2 = 0.1 * _rand(seed + 4, (16,), jnp.float32)
+    fk = lambda *a: jnp.sum(jnp.cos(F.ffn(*a)))
+    fr = lambda *a: jnp.sum(jnp.cos(R.ffn_ref(*a)))
+    gk = jax.grad(fk, argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    gr = jax.grad(fr, argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_block_size_invariance():
+    x = _rand(20, (256, 32), jnp.float32)
+    w1 = 0.2 * _rand(21, (32, 64), jnp.float32)
+    b1 = jnp.zeros(64)
+    w2 = 0.2 * _rand(22, (64, 32), jnp.float32)
+    b2 = jnp.zeros(32)
+    base = F.ffn(x, w1, b1, w2, b2, block_t=256)
+    for bt in (32, 64, 128):
+        np.testing.assert_allclose(F.ffn(x, w1, b1, w2, b2, block_t=bt),
+                                   base, rtol=1e-6, atol=1e-6)
+
+
+def test_ffn_vmem_budget():
+    fwd, bwd = F.vmem_footprint_bytes(256, 512, 1024)
+    assert fwd < 16 * 2**20
+    assert bwd < 16 * 2**20

@@ -1,0 +1,73 @@
+//! Ablations over Hadar's design knobs (DESIGN.md §Key design decisions):
+//!
+//! * DP vs payoff-density greedy (the dp_job_cap switch);
+//! * communication-cost factor for spread allocations;
+//! * price-scale η (Theorem 2's D_0 <= OPT/2 knob);
+//! * incremental vs full re-scheduling.
+//!
+//! Run: `cargo bench --bench ablation_hadar`
+
+use hadar::cluster::spec::ClusterSpec;
+use hadar::jobs::queue::JobQueue;
+use hadar::sched::hadar::{Hadar, HadarConfig};
+use hadar::sim::engine::{self, SimConfig};
+use hadar::trace::philly::{generate, TraceConfig};
+use hadar::trace::workload::materialize;
+use hadar::util::bench::{section, Bencher};
+use hadar::util::table::Table;
+
+fn run_with(cfg: HadarConfig, n_jobs: usize) -> (f64, f64, f64) {
+    let cluster = ClusterSpec::sim60();
+    let trace = generate(&TraceConfig {
+        n_jobs,
+        seed: 5,
+        all_at_start: true,
+        max_gpus: 8,
+        ..Default::default()
+    });
+    let mut jobs = materialize(&trace, &cluster, 5);
+    for j in &mut jobs {
+        j.epochs = (j.epochs / 4).max(1); // keep the ablation quick
+    }
+    let mut queue = JobQueue::new();
+    for j in jobs {
+        queue.admit(j);
+    }
+    let mut hadar = Hadar::with_config(cfg);
+    let res = engine::run(&mut queue, &mut hadar, &cluster,
+                          &SimConfig::default(), false);
+    (res.ttd, res.gru, res.sched_wall_per_round * 1e3)
+}
+
+fn main() {
+    section("Ablation — Hadar design knobs (120-job trace, sim60)");
+
+    let base = HadarConfig::default();
+    let mut t = Table::new(&["variant", "TTD (s)", "GRU", "sched ms/round"]);
+    let mut add = |name: &str, cfg: HadarConfig| {
+        let (ttd, gru, ms) = Bencher::new(&format!("ablation_{name}"))
+            .warmup(0)
+            .iters(1)
+            .run(|| run_with(cfg, 120));
+        t.row(&[
+            name.to_string(),
+            format!("{ttd:.0}"),
+            format!("{:.1}%", gru * 100.0),
+            format!("{ms:.2}"),
+        ]);
+    };
+
+    add("baseline", base);
+    add("dp_always(greedy_off)", HadarConfig { dp_job_cap: 0, ..base });
+    add("comm_factor=0", HadarConfig { comm_factor: 0.0, ..base });
+    add("comm_factor=0.5", HadarConfig { comm_factor: 0.5, ..base });
+    add("eta=4", HadarConfig { eta: 4.0, ..base });
+    add("eta=0.25", HadarConfig { eta: 0.25, ..base });
+    add("incremental", HadarConfig { incremental: true, ..base });
+    println!("{}", t.render());
+    println!(
+        "notes: dp_job_cap=0 forces the greedy path for every queue size; \
+         comm_factor sweeps the spread-allocation penalty of Algorithm 2 \
+         line 27; eta scales U_min (Eq. 7)."
+    );
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 10 — average job completion time (with min/max ranges) of
+//! Gavel/Hadar/HadarE across the seven workload mixes on both clusters.
+//! Run: `cargo bench --bench fig10_jct`
+
+use hadar::figures::physical;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 10 — JCT across workload mixes (aws5 + testbed5)");
+    let p = Bencher::new("fig10_grid")
+        .warmup(0)
+        .iters(1)
+        .run(|| physical::run(360.0));
+    println!("{}", physical::render_fig10(&p));
+}

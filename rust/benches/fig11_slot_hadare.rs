@@ -1,0 +1,15 @@
+//! Bench: Fig. 11 — HadarE's CRU vs slot time {90,180,360,720}s over the
+//! workload mixes on both clusters.
+//! Run: `cargo bench --bench fig11_slot_hadare`
+
+use hadar::figures::slots;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 11 — HadarE CRU vs slot time");
+    let s = Bencher::new("fig11_sweep")
+        .warmup(0)
+        .iters(1)
+        .run(|| slots::run("hadare"));
+    println!("{}", slots::render(&s));
+}

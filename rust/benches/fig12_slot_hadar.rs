@@ -1,0 +1,15 @@
+//! Bench: Fig. 12 — Hadar's CRU vs slot time {90,180,360,720}s over the
+//! workload mixes on both clusters.
+//! Run: `cargo bench --bench fig12_slot_hadar`
+
+use hadar::figures::slots;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 12 — Hadar CRU vs slot time");
+    let s = Bencher::new("fig12_sweep")
+        .warmup(0)
+        .iters(1)
+        .run(|| slots::run("hadar"));
+    println!("{}", slots::render(&s));
+}

@@ -1,0 +1,12 @@
+//! Bench: Fig. 1 motivational example — regenerates the round-by-round
+//! Gavel vs Hadar comparison and times it.
+//! Run: `cargo bench --bench fig1_motivation`
+
+use hadar::figures::fig1;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 1 — motivational example (Gavel vs Hadar)");
+    let f = Bencher::new("fig1_motivation").warmup(1).iters(5).run(fig1::run);
+    println!("{}", fig1::render(&f));
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 3 — GPU resource utilisation of the four schedulers on the
+//! 480-job Philly-shaped trace over the 60-GPU simulated cluster.
+//! Run: `cargo bench --bench fig3_gru` (env HADAR_FULL_TRACE=1 for the
+//! paper-magnitude run; the default is scaled for a single-core sandbox).
+
+use hadar::figures::trace_eval::{self, TraceEvalConfig};
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    let full = std::env::var("HADAR_FULL_TRACE").is_ok();
+    let cfg = TraceEvalConfig {
+        n_jobs: 480,
+        seed: 42,
+        slot_secs: 360.0,
+        hours_scale: if full { 1.0 } else { 0.25 },
+    };
+    section("Fig. 3 — GPU resource utilisation (480 jobs, sim60)");
+    let te = Bencher::new("fig3_trace_eval")
+        .warmup(0)
+        .iters(1)
+        .run(|| trace_eval::run(&cfg));
+    println!("{}", trace_eval::render_fig3(&te));
+}

@@ -1,0 +1,22 @@
+//! Bench: Fig. 4 — completion CDF and total time duration of the four
+//! schedulers on the 480-job trace.
+//! Run: `cargo bench --bench fig4_ttd_cdf`
+
+use hadar::figures::trace_eval::{self, TraceEvalConfig};
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    let full = std::env::var("HADAR_FULL_TRACE").is_ok();
+    let cfg = TraceEvalConfig {
+        n_jobs: 480,
+        seed: 42,
+        slot_secs: 360.0,
+        hours_scale: if full { 1.0 } else { 0.25 },
+    };
+    section("Fig. 4 — completion CDF + TTD (480 jobs, sim60)");
+    let te = Bencher::new("fig4_trace_eval")
+        .warmup(0)
+        .iters(1)
+        .run(|| trace_eval::run(&cfg));
+    println!("{}", trace_eval::render_fig4(&te));
+}

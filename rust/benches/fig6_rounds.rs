@@ -1,0 +1,12 @@
+//! Bench: Fig. 6 — Hadar vs HadarE round-by-round node occupancy on the
+//! 5-node testbed (M-3 mix).
+//! Run: `cargo bench --bench fig6_rounds`
+
+use hadar::figures::fig6;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 6 — round timelines, Hadar vs HadarE (testbed5, M-3)");
+    let f = Bencher::new("fig6_rounds").warmup(1).iters(5).run(fig6::run);
+    println!("{}", fig6::render(&f));
+}

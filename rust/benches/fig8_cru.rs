@@ -1,0 +1,15 @@
+//! Bench: Fig. 8 — cluster resource utilisation of Gavel/Hadar/HadarE on
+//! the AWS and testbed clusters across the seven workload mixes.
+//! Run: `cargo bench --bench fig8_cru`
+
+use hadar::figures::physical;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 8 — CRU across workload mixes (aws5 + testbed5)");
+    let p = Bencher::new("fig8_grid")
+        .warmup(0)
+        .iters(1)
+        .run(|| physical::run(360.0));
+    println!("{}", physical::render_fig8(&p));
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 9 — total time duration of Gavel/Hadar/HadarE across the
+//! seven workload mixes on both clusters.
+//! Run: `cargo bench --bench fig9_ttd`
+
+use hadar::figures::physical;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 9 — TTD across workload mixes (aws5 + testbed5)");
+    let p = Bencher::new("fig9_grid")
+        .warmup(0)
+        .iters(1)
+        .run(|| physical::run(360.0));
+    println!("{}", physical::render_fig9(&p));
+}

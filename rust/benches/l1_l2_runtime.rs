@@ -1,0 +1,66 @@
+//! Microbenchmarks of the L1/L2 runtime hot path: PJRT train-step latency
+//! per model variant (the fused fwd+bwd+SGD HLO containing the Pallas
+//! kernels), eval-step latency, and consolidation cost.
+//!
+//! Run: `make artifacts && cargo bench --bench l1_l2_runtime`
+
+use hadar::runtime::{
+    consolidate_states, Manifest, Runtime, Trainer,
+};
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIPPED: {e} — run `make artifacts` first");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    println!("platform: {}", rt.platform());
+
+    section("L2 — train_step latency per variant (fused fwd+bwd+SGD HLO)");
+    for name in ["tiny", "small", "medium"] {
+        let Some(v) = manifest.variant(name) else { continue };
+        let exe = rt.load_train(v).expect("compile");
+        let mut trainer =
+            Trainer::new(rt.init_state(v, 1), v.vocab, 1, 0.1);
+        Bencher::new(&format!("train_step_{name} ({} params)",
+                              v.param_count))
+            .warmup(2)
+            .iters(10)
+            .run(|| trainer.run_steps(&exe, 1).expect("step"));
+    }
+
+    section("L2 — eval_step latency");
+    for name in ["tiny", "small"] {
+        let Some(v) = manifest.variant(name) else { continue };
+        let eval = rt.load_eval(v).expect("compile eval");
+        let trainer = Trainer::new(rt.init_state(v, 2), v.vocab, 2, 0.1);
+        let mut rng = hadar::util::rng::Rng::new(3);
+        let toks = trainer.corpus.batch(&mut rng, v.batch, v.seq + 1);
+        Bencher::new(&format!("eval_step_{name}"))
+            .warmup(2)
+            .iters(10)
+            .run(|| {
+                eval.eval(&trainer.state, &toks, v.batch, v.seq + 1)
+                    .expect("eval")
+            });
+    }
+
+    section("L3 — consolidation (weight averaging) cost");
+    for name in ["tiny", "medium"] {
+        let Some(v) = manifest.variant(name) else { continue };
+        let a = Trainer::new(rt.init_state(v, 4), v.vocab, 4, 0.1);
+        let b = Trainer::new(rt.init_state(v, 5), v.vocab, 5, 0.1);
+        Bencher::new(&format!("consolidate_2x_{name}"))
+            .warmup(1)
+            .iters(10)
+            .run(|| {
+                consolidate_states(&[&a.state, &b.state], &[1.0, 1.0], v)
+                    .expect("consolidate")
+                    .len()
+            });
+    }
+}

@@ -1,0 +1,84 @@
+//! Microbenchmarks of the L3 scheduler hot path (the §Perf targets):
+//! one Hadar scheduling decision at several queue sizes, FIND_ALLOC-level
+//! throughput, and the HadarE round planner.
+//!
+//! Run: `cargo bench --bench l3_sched_micro`
+
+use hadar::cluster::spec::ClusterSpec;
+use hadar::forking::forker::ForkIds;
+use hadar::forking::tracker::JobTracker;
+use hadar::jobs::queue::JobQueue;
+use hadar::sched::hadar::{Hadar, HadarConfig};
+use hadar::sched::hadare::HadarE;
+use hadar::sched::{RoundCtx, Scheduler};
+use hadar::trace::philly::{generate, TraceConfig};
+use hadar::trace::workload::{materialize, physical_jobs};
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("L3 microbench — Hadar decision latency");
+    for &n in &[16usize, 64, 256, 1024] {
+        let nodes_per_type = (n / 12).max(1);
+        let cluster = ClusterSpec::scaled(nodes_per_type, 4);
+        let trace = generate(&TraceConfig {
+            n_jobs: n,
+            seed: 3,
+            all_at_start: true,
+            max_gpus: 4,
+            ..Default::default()
+        });
+        let jobs = materialize(&trace, &cluster, 3);
+        let mut queue = JobQueue::new();
+        for j in jobs {
+            queue.admit(j);
+        }
+        let active = queue.active_at(0.0);
+        Bencher::new(&format!("hadar_decision_{n}jobs"))
+            .warmup(1)
+            .iters(5)
+            .run(|| {
+                let mut hadar = Hadar::with_config(HadarConfig::default());
+                let ctx = RoundCtx {
+                    round: 0,
+                    now: 0.0,
+                    slot_secs: 360.0,
+                    horizon: 1e7,
+                    queue: &queue,
+                    active: &active,
+                    cluster: &cluster,
+                };
+                hadar.schedule(&ctx).scheduled_jobs().len()
+            });
+    }
+
+    section("L3 microbench — HadarE round planning (5 nodes)");
+    let cluster = ClusterSpec::testbed5();
+    let jobs = physical_jobs("M-12", &cluster, 1.0).unwrap();
+    let ids = ForkIds { max_job_count: 64 };
+    let mut tracker = JobTracker::new(ids);
+    let mut queue = JobQueue::new();
+    for j in &jobs {
+        tracker.register(
+            j.id,
+            j.total_iters(),
+            &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+        );
+        queue.admit(j.clone());
+    }
+    Bencher::new("hadare_plan_round_m12")
+        .warmup(2)
+        .iters(20)
+        .run(|| {
+            let mut planner = HadarE::new(5);
+            let ctx = RoundCtx {
+                round: 0,
+                now: 0.0,
+                slot_secs: 90.0,
+                horizon: 1e7,
+                queue: &queue,
+                active: &[],
+                cluster: &cluster,
+            };
+            planner.plan_round(&ctx, &tracker).scheduled_jobs().len()
+        });
+}

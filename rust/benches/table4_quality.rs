@@ -1,0 +1,39 @@
+//! Bench: Table IV — inference quality of models trained under HadarE
+//! (forking + §V-B consolidation) vs Hadar (no forking), with REAL
+//! transformer training executed through the AOT-compiled HLO artifacts
+//! (run `make artifacts` first).
+//! Run: `cargo bench --bench table4_quality`
+
+use hadar::exec::emulation::EmulationConfig;
+use hadar::figures::table4;
+use hadar::runtime::Manifest;
+use hadar::sim::engine::SimConfig;
+use hadar::util::bench::{section, Bencher};
+
+fn main() {
+    section("Table IV — inference quality, forking vs no forking (M-5)");
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIPPED: {e} — run `make artifacts` first");
+            return;
+        }
+    };
+    let cfg = EmulationConfig {
+        sim: SimConfig {
+            slot_secs: 90.0,
+            restart_overhead: 10.0,
+            max_rounds: 2_000,
+            horizon: 1e7,
+        },
+        steps_scale: 0.01,
+        max_real_steps_per_round: 200,
+        lr: 0.1,
+        seed: 42,
+    };
+    let t4 = Bencher::new("table4_real_training")
+        .warmup(0)
+        .iters(1)
+        .run(|| table4::run(&manifest, &cfg).expect("emulation"));
+    println!("{}", table4::render(&t4));
+}

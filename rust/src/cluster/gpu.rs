@@ -1,0 +1,136 @@
+//! GPU type catalogue with the attributes the paper's throughput model
+//! (Eq. 10) consumes: PMI (Performance-Memory Index), VRAM, and the PCIe
+//! generation of the host the card typically sits in.
+//!
+//! The catalogue covers both evaluation settings of the paper: the
+//! simulated 60-GPU cluster (V100/P100/K80, §IV) and the two physical
+//! clusters (§VI): AWS (V100/K80/T4) and the lab testbed (Titan RTX, T4,
+//! T400, RTX 3090, RTX A2000).
+
+/// A GPU model. `Ord` derives a stable type index used across matrices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuType {
+    V100,
+    P100,
+    K80,
+    T4,
+    TitanRtx,
+    T400,
+    Rtx3090,
+    RtxA2000,
+}
+
+impl GpuType {
+    pub const ALL: [GpuType; 8] = [
+        GpuType::V100,
+        GpuType::P100,
+        GpuType::K80,
+        GpuType::T4,
+        GpuType::TitanRtx,
+        GpuType::T400,
+        GpuType::Rtx3090,
+        GpuType::RtxA2000,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuType::V100 => "V100",
+            GpuType::P100 => "P100",
+            GpuType::K80 => "K80",
+            GpuType::T4 => "T4",
+            GpuType::TitanRtx => "TitanRTX",
+            GpuType::T400 => "T400",
+            GpuType::Rtx3090 => "RTX3090",
+            GpuType::RtxA2000 => "RTXA2000",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GpuType> {
+        GpuType::ALL.iter().copied().find(|g| {
+            g.name().eq_ignore_ascii_case(s)
+        })
+    }
+
+    /// Peak tensor throughput in TFLOPS (fp16/tensor-core where present,
+    /// else fp32) — public spec-sheet numbers.
+    pub fn tflops(&self) -> f64 {
+        match self {
+            GpuType::V100 => 125.0,   // tensor cores
+            GpuType::P100 => 21.2,    // fp16
+            GpuType::K80 => 8.7,      // fp32 (per board)
+            GpuType::T4 => 65.0,      // tensor cores
+            GpuType::TitanRtx => 130.5,
+            GpuType::T400 => 1.1,
+            GpuType::Rtx3090 => 142.0,
+            GpuType::RtxA2000 => 63.9,
+        }
+    }
+
+    /// On-board VRAM in GiB.
+    pub fn vram_gib(&self) -> f64 {
+        match self {
+            GpuType::V100 => 16.0,
+            GpuType::P100 => 16.0,
+            GpuType::K80 => 12.0,
+            GpuType::T4 => 16.0,
+            GpuType::TitanRtx => 24.0,
+            GpuType::T400 => 4.0,
+            GpuType::Rtx3090 => 24.0,
+            GpuType::RtxA2000 => 6.0,
+        }
+    }
+
+    /// Performance-Memory Index from the paper's Eq. (10) rationale:
+    /// parallel tensor throughput weighted by sqrt(VRAM).
+    pub fn pmi(&self) -> f64 {
+        self.tflops() * self.vram_gib().sqrt()
+    }
+}
+
+/// PCIe generation of a host; Eq. (10)'s `pcie_scaling` term.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PcieGen {
+    Gen3,
+    Gen4,
+}
+
+impl PcieGen {
+    /// Relative host<->device bandwidth scale (Gen3 x16 ≈ 16 GB/s = 1.0).
+    pub fn scaling(&self) -> f64 {
+        match self {
+            PcieGen::Gen3 => 1.0,
+            PcieGen::Gen4 => 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for g in GpuType::ALL {
+            assert_eq!(GpuType::from_name(g.name()), Some(g));
+        }
+        assert_eq!(GpuType::from_name("v100"), Some(GpuType::V100));
+        assert_eq!(GpuType::from_name("nope"), None);
+    }
+
+    #[test]
+    fn pmi_ordering_matches_generation_gaps() {
+        // The paper's motivating observation: V100 >> K80.
+        assert!(GpuType::V100.pmi() / GpuType::K80.pmi() > 5.0);
+        // P100 sits between them.
+        assert!(GpuType::P100.pmi() > GpuType::K80.pmi());
+        assert!(GpuType::P100.pmi() < GpuType::V100.pmi());
+        // Testbed extremes: 3090 fastest, T400 slowest.
+        assert!(GpuType::Rtx3090.pmi() > GpuType::RtxA2000.pmi());
+        assert!(GpuType::T400.pmi() < GpuType::RtxA2000.pmi());
+    }
+
+    #[test]
+    fn pcie_scaling() {
+        assert!(PcieGen::Gen4.scaling() > PcieGen::Gen3.scaling());
+    }
+}

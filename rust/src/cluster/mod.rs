@@ -1,0 +1,12 @@
+//! The modelled cluster: GPU catalogue, nodes, cluster specs, and the
+//! per-round allocation state shared by all schedulers.
+
+pub mod gpu;
+pub mod node;
+pub mod spec;
+pub mod state;
+
+pub use gpu::{GpuType, PcieGen};
+pub use node::Node;
+pub use spec::ClusterSpec;
+pub use state::{Assignment, ClusterState};

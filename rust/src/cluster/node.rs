@@ -1,0 +1,57 @@
+//! Cluster nodes (machines/servers): per-type GPU capacities `c_h^r`.
+
+use crate::cluster::gpu::{GpuType, PcieGen};
+use std::collections::BTreeMap;
+
+/// One machine `h` with capacity `c_h^r` for each GPU type `r`.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    /// `c_h^r`: capacity per GPU type (most real nodes carry one type).
+    pub gpus: BTreeMap<GpuType, usize>,
+    pub pcie: PcieGen,
+}
+
+impl Node {
+    pub fn new(id: usize, name: &str, gpus: &[(GpuType, usize)],
+               pcie: PcieGen) -> Self {
+        Node {
+            id,
+            name: name.to_string(),
+            gpus: gpus.iter().copied().collect(),
+            pcie,
+        }
+    }
+
+    pub fn capacity(&self, r: GpuType) -> usize {
+        self.gpus.get(&r).copied().unwrap_or(0)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus.values().sum()
+    }
+
+    /// The dominant (highest-capacity) GPU type on this node.
+    pub fn primary_gpu(&self) -> Option<GpuType> {
+        self.gpus
+            .iter()
+            .max_by_key(|(_, &c)| c)
+            .map(|(&g, _)| g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities() {
+        let n = Node::new(0, "n0", &[(GpuType::V100, 4), (GpuType::K80, 2)],
+                          PcieGen::Gen3);
+        assert_eq!(n.capacity(GpuType::V100), 4);
+        assert_eq!(n.capacity(GpuType::T4), 0);
+        assert_eq!(n.total_gpus(), 6);
+        assert_eq!(n.primary_gpu(), Some(GpuType::V100));
+    }
+}

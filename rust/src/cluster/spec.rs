@@ -1,0 +1,248 @@
+//! Cluster specifications: the three evaluation clusters from the paper,
+//! plus JSON load/save for custom clusters.
+
+use crate::cluster::gpu::{GpuType, PcieGen};
+use crate::cluster::node::Node;
+use crate::util::json::{self, Json};
+
+/// A full cluster: the set of nodes plus derived views.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl ClusterSpec {
+    pub fn new(name: &str, nodes: Vec<Node>) -> Self {
+        ClusterSpec {
+            name: name.to_string(),
+            nodes,
+        }
+    }
+
+    /// §IV simulated cluster: 15 nodes, 60 GPUs — 20 each of V100, P100,
+    /// K80 (following Gavel's simulation setup). 5 nodes per type, 4 GPUs
+    /// per node.
+    pub fn sim60() -> Self {
+        let mut nodes = Vec::new();
+        let types = [GpuType::V100, GpuType::P100, GpuType::K80];
+        for (ti, &t) in types.iter().enumerate() {
+            for i in 0..5 {
+                let id = ti * 5 + i;
+                nodes.push(Node::new(
+                    id,
+                    &format!("{}-{}", t.name().to_lowercase(), i),
+                    &[(t, 4)],
+                    PcieGen::Gen3,
+                ));
+            }
+        }
+        ClusterSpec::new("sim60", nodes)
+    }
+
+    /// §VI AWS cluster: 1x p3.2xlarge (V100), 2x p2.xlarge (K80),
+    /// 2x g4dn.xlarge (T4); one GPU used per node.
+    pub fn aws5() -> Self {
+        ClusterSpec::new(
+            "aws5",
+            vec![
+                Node::new(0, "p3.2xlarge", &[(GpuType::V100, 1)], PcieGen::Gen3),
+                Node::new(1, "p2.xlarge-a", &[(GpuType::K80, 1)], PcieGen::Gen3),
+                Node::new(2, "p2.xlarge-b", &[(GpuType::K80, 1)], PcieGen::Gen3),
+                Node::new(3, "g4dn.xlarge-a", &[(GpuType::T4, 1)], PcieGen::Gen3),
+                Node::new(4, "g4dn.xlarge-b", &[(GpuType::T4, 1)], PcieGen::Gen3),
+            ],
+        )
+    }
+
+    /// §VI lab testbed: Titan RTX, T4, T400, RTX 3090, RTX A2000; the paper
+    /// notes three of five nodes have older PCIe-3.0 motherboards.
+    pub fn testbed5() -> Self {
+        ClusterSpec::new(
+            "testbed5",
+            vec![
+                Node::new(0, "titan", &[(GpuType::TitanRtx, 1)], PcieGen::Gen3),
+                Node::new(1, "t4", &[(GpuType::T4, 1)], PcieGen::Gen3),
+                Node::new(2, "t400", &[(GpuType::T400, 1)], PcieGen::Gen3),
+                Node::new(3, "dell-3090", &[(GpuType::Rtx3090, 1)], PcieGen::Gen4),
+                Node::new(4, "a2000", &[(GpuType::RtxA2000, 1)], PcieGen::Gen4),
+            ],
+        )
+    }
+
+    /// Fig. 1 motivational cluster: 2x V100, 3x P100, 1x K80, modelled as
+    /// three nodes (one per type) matching the paper's per-type totals.
+    pub fn motivational() -> Self {
+        ClusterSpec::new(
+            "motivational",
+            vec![
+                Node::new(0, "v100-node", &[(GpuType::V100, 2)], PcieGen::Gen3),
+                Node::new(1, "p100-node", &[(GpuType::P100, 3)], PcieGen::Gen3),
+                Node::new(2, "k80-node", &[(GpuType::K80, 1)], PcieGen::Gen3),
+            ],
+        )
+    }
+
+    /// Scaled cluster for the Fig. 5 scalability sweep: grows with the job
+    /// count, keeping the 1:1:1 V100/P100/K80 mix of `sim60`.
+    pub fn scaled(nodes_per_type: usize, gpus_per_node: usize) -> Self {
+        let mut nodes = Vec::new();
+        let types = [GpuType::V100, GpuType::P100, GpuType::K80];
+        let mut id = 0;
+        for &t in &types {
+            for i in 0..nodes_per_type {
+                nodes.push(Node::new(
+                    id,
+                    &format!("{}-{}", t.name().to_lowercase(), i),
+                    &[(t, gpus_per_node)],
+                    PcieGen::Gen3,
+                ));
+                id += 1;
+            }
+        }
+        ClusterSpec::new("scaled", nodes)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.total_gpus()).sum()
+    }
+
+    /// GPU types present, in stable order.
+    pub fn gpu_types(&self) -> Vec<GpuType> {
+        let mut types: Vec<GpuType> = GpuType::ALL
+            .iter()
+            .copied()
+            .filter(|&t| self.nodes.iter().any(|n| n.capacity(t) > 0))
+            .collect();
+        types.sort();
+        types
+    }
+
+    /// Total capacity of one GPU type across the cluster.
+    pub fn capacity_of(&self, r: GpuType) -> usize {
+        self.nodes.iter().map(|n| n.capacity(r)).sum()
+    }
+
+    // ------------------------------------------------------------- JSON I/O
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut gpus = Json::obj();
+                for (g, c) in &n.gpus {
+                    gpus.insert(g.name(), *c);
+                }
+                Json::obj()
+                    .set("id", n.id)
+                    .set("name", n.name.as_str())
+                    .set("gpus", gpus)
+                    .set(
+                        "pcie",
+                        match n.pcie {
+                            PcieGen::Gen3 => "gen3",
+                            PcieGen::Gen4 => "gen4",
+                        },
+                    )
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("nodes", Json::Arr(nodes))
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let name = v.get("name").as_str().unwrap_or("custom").to_string();
+        let mut nodes = Vec::new();
+        for (i, nv) in v
+            .get("nodes")
+            .as_arr()
+            .ok_or("cluster: 'nodes' must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let gpus_obj = nv
+                .get("gpus")
+                .as_obj()
+                .ok_or("node: 'gpus' must be an object")?;
+            let mut gpus = Vec::new();
+            for (gname, count) in gpus_obj {
+                let g = GpuType::from_name(gname)
+                    .ok_or_else(|| format!("unknown gpu type '{gname}'"))?;
+                gpus.push((g, count.as_usize().ok_or("gpu count must be int")?));
+            }
+            let pcie = match nv.get("pcie").as_str() {
+                Some("gen4") => PcieGen::Gen4,
+                _ => PcieGen::Gen3,
+            };
+            nodes.push(Node::new(
+                nv.get("id").as_usize().unwrap_or(i),
+                nv.get("name").as_str().unwrap_or(&format!("node{i}")),
+                &gpus,
+                pcie,
+            ));
+        }
+        if nodes.is_empty() {
+            return Err("cluster has no nodes".into());
+        }
+        Ok(ClusterSpec { name, nodes })
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim60_matches_paper() {
+        let c = ClusterSpec::sim60();
+        assert_eq!(c.nodes.len(), 15);
+        assert_eq!(c.total_gpus(), 60);
+        assert_eq!(c.capacity_of(GpuType::V100), 20);
+        assert_eq!(c.capacity_of(GpuType::P100), 20);
+        assert_eq!(c.capacity_of(GpuType::K80), 20);
+    }
+
+    #[test]
+    fn aws5_and_testbed5_are_five_single_gpu_nodes() {
+        for c in [ClusterSpec::aws5(), ClusterSpec::testbed5()] {
+            assert_eq!(c.nodes.len(), 5);
+            assert_eq!(c.total_gpus(), 5);
+            assert!(c.nodes.iter().all(|n| n.total_gpus() == 1));
+        }
+        assert_eq!(ClusterSpec::testbed5().gpu_types().len(), 5);
+    }
+
+    #[test]
+    fn motivational_matches_fig1() {
+        let c = ClusterSpec::motivational();
+        assert_eq!(c.capacity_of(GpuType::V100), 2);
+        assert_eq!(c.capacity_of(GpuType::P100), 3);
+        assert_eq!(c.capacity_of(GpuType::K80), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterSpec::testbed5();
+        let txt = c.to_json().pretty();
+        let c2 = ClusterSpec::parse(&txt).unwrap();
+        assert_eq!(c2.nodes.len(), c.nodes.len());
+        assert_eq!(c2.total_gpus(), c.total_gpus());
+        assert_eq!(c2.gpu_types(), c.gpu_types());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(ClusterSpec::parse("{}").is_err());
+        assert!(ClusterSpec::parse(
+            r#"{"nodes": [{"gpus": {"NotAGpu": 1}}]}"#
+        )
+        .is_err());
+    }
+}

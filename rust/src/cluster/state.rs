@@ -1,0 +1,299 @@
+//! Per-round allocation state: `γ_h^r(t)` (allocated counts) against
+//! capacities `c_h^r`, with the allocate/release bookkeeping all schedulers
+//! share.
+//!
+//! §Perf note: storage is dense `[node][type]` arrays rather than maps —
+//! `find_alloc` scans every (node, type) pool for every queued job, so pool
+//! lookup is the hottest load in the Fig. 5 scalability path (see
+//! EXPERIMENTS.md §Perf for the before/after).
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::JobId;
+
+const NTYPES: usize = GpuType::ALL.len();
+
+#[inline]
+fn tix(g: GpuType) -> usize {
+    g as usize
+}
+
+/// One allocation entry: `w_{jh}^r` GPUs of type `r` on node `h` for job `j`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub job: JobId,
+    pub node: usize,
+    pub gpu: GpuType,
+    pub count: usize,
+}
+
+/// Mutable view of the cluster within a scheduling round.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// `γ_h^r(t)`, dense [node][type].
+    allocated: Vec<[u16; NTYPES]>,
+    /// Capacity `c_h^r`, dense [node][type].
+    capacity: Vec<[u16; NTYPES]>,
+    /// Free GPUs per type across all nodes (incrementally maintained).
+    free_by_type: [i64; NTYPES],
+    total_free_count: i64,
+    total_capacity_count: i64,
+    /// Live assignments for introspection/release.
+    assignments: Vec<Assignment>,
+}
+
+impl ClusterState {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let n = spec
+            .nodes
+            .iter()
+            .map(|nd| nd.id + 1)
+            .max()
+            .unwrap_or(0);
+        let mut capacity = vec![[0u16; NTYPES]; n];
+        let mut free_by_type = [0i64; NTYPES];
+        let mut total = 0i64;
+        for node in &spec.nodes {
+            for (&g, &c) in &node.gpus {
+                capacity[node.id][tix(g)] = c as u16;
+                free_by_type[tix(g)] += c as i64;
+                total += c as i64;
+            }
+        }
+        ClusterState {
+            allocated: vec![[0u16; NTYPES]; n],
+            capacity,
+            free_by_type,
+            total_free_count: total,
+            total_capacity_count: total,
+            assignments: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.capacity.len()
+    }
+
+    #[inline]
+    pub fn capacity(&self, node: usize, gpu: GpuType) -> usize {
+        self.capacity
+            .get(node)
+            .map(|row| row[tix(gpu)] as usize)
+            .unwrap_or(0)
+    }
+
+    /// `γ_h^r(t)`.
+    #[inline]
+    pub fn allocated(&self, node: usize, gpu: GpuType) -> usize {
+        self.allocated
+            .get(node)
+            .map(|row| row[tix(gpu)] as usize)
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn free(&self, node: usize, gpu: GpuType) -> usize {
+        self.capacity(node, gpu) - self.allocated(node, gpu)
+    }
+
+    /// Total free GPUs of one type across all nodes — O(1).
+    #[inline]
+    pub fn free_of_type(&self, gpu: GpuType) -> usize {
+        self.free_by_type[tix(gpu)] as usize
+    }
+
+    #[inline]
+    pub fn total_free(&self) -> usize {
+        self.total_free_count as usize
+    }
+
+    #[inline]
+    pub fn total_capacity(&self) -> usize {
+        self.total_capacity_count as usize
+    }
+
+    #[inline]
+    pub fn total_allocated(&self) -> usize {
+        (self.total_capacity_count - self.total_free_count) as usize
+    }
+
+    /// All (node, type, free) triples with free > 0.
+    pub fn free_slots(&self) -> Vec<(usize, GpuType, usize)> {
+        let mut out = Vec::new();
+        for (h, (cap, alloc)) in
+            self.capacity.iter().zip(self.allocated.iter()).enumerate()
+        {
+            for (t, (&c, &a)) in cap.iter().zip(alloc.iter()).enumerate() {
+                if c > a {
+                    out.push((h, GpuType::ALL[t], (c - a) as usize));
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether every GPU in the cluster is allocated — O(1).
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.total_free_count == 0
+    }
+
+    /// Record an allocation. Panics if capacity is exceeded (scheduler bug —
+    /// constraint (1d) must hold by construction).
+    pub fn allocate(&mut self, a: Assignment) {
+        assert!(a.count > 0, "zero-count assignment");
+        let free = self.free(a.node, a.gpu);
+        assert!(
+            a.count <= free,
+            "capacity violation: node {} type {:?}: want {} free {}",
+            a.node,
+            a.gpu,
+            a.count,
+            free
+        );
+        self.allocated[a.node][tix(a.gpu)] += a.count as u16;
+        self.free_by_type[tix(a.gpu)] -= a.count as i64;
+        self.total_free_count -= a.count as i64;
+        self.assignments.push(a);
+    }
+
+    /// Release every assignment of one job; returns how many GPUs freed.
+    pub fn release_job(&mut self, job: JobId) -> usize {
+        let mut freed = 0;
+        let allocated = &mut self.allocated;
+        let free_by_type = &mut self.free_by_type;
+        let total_free = &mut self.total_free_count;
+        self.assignments.retain(|a| {
+            if a.job == job {
+                allocated[a.node][tix(a.gpu)] -= a.count as u16;
+                free_by_type[tix(a.gpu)] += a.count as i64;
+                *total_free += a.count as i64;
+                freed += a.count;
+                false
+            } else {
+                true
+            }
+        });
+        freed
+    }
+
+    pub fn assignments(&self) -> &[Assignment] {
+        &self.assignments
+    }
+
+    pub fn assignments_of(&self, job: JobId) -> Vec<Assignment> {
+        self.assignments
+            .iter()
+            .copied()
+            .filter(|a| a.job == job)
+            .collect()
+    }
+
+    /// GPU types a job currently uses (for the bottleneck rule Eq. (1b)).
+    pub fn gpu_types_of(&self, job: JobId) -> Vec<GpuType> {
+        let mut types: Vec<GpuType> = self
+            .assignments
+            .iter()
+            .filter(|a| a.job == job)
+            .map(|a| a.gpu)
+            .collect();
+        types.sort();
+        types.dedup();
+        types
+    }
+
+    /// Distinct nodes a job currently uses (consolidation check).
+    pub fn nodes_of(&self, job: JobId) -> Vec<usize> {
+        let mut nodes: Vec<usize> = self
+            .assignments
+            .iter()
+            .filter(|a| a.job == job)
+            .map(|a| a.node)
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// Fast digest of the free state (DP memo key). FNV-1a over the dense
+    /// allocation rows.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for row in &self.allocated {
+            for &a in row {
+                h ^= a as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+
+    fn state() -> ClusterState {
+        ClusterState::new(&ClusterSpec::motivational())
+    }
+
+    #[test]
+    fn initial_state_is_empty() {
+        let s = state();
+        assert_eq!(s.total_free(), 6);
+        assert_eq!(s.total_allocated(), 0);
+        assert!(!s.is_full());
+    }
+
+    #[test]
+    fn allocate_and_release() {
+        let mut s = state();
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 2 });
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::P100, count: 1 });
+        assert_eq!(s.free(0, GpuType::V100), 0);
+        assert_eq!(s.total_allocated(), 3);
+        assert_eq!(s.free_of_type(GpuType::P100), 2);
+        assert_eq!(s.gpu_types_of(JobId(1)), vec![GpuType::V100, GpuType::P100]);
+        assert_eq!(s.nodes_of(JobId(1)), vec![0, 1]);
+        assert_eq!(s.release_job(JobId(1)), 3);
+        assert_eq!(s.total_allocated(), 0);
+        assert_eq!(s.free_of_type(GpuType::P100), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity violation")]
+    fn over_allocation_panics() {
+        let mut s = state();
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 3 });
+    }
+
+    #[test]
+    fn free_slots_reflect_allocations() {
+        let mut s = state();
+        s.allocate(Assignment { job: JobId(2), node: 2, gpu: GpuType::K80, count: 1 });
+        let slots = s.free_slots();
+        assert!(!slots.iter().any(|&(h, g, _)| h == 2 && g == GpuType::K80));
+        assert_eq!(s.free_of_type(GpuType::P100), 3);
+    }
+
+    #[test]
+    fn is_full_when_everything_allocated() {
+        let mut s = state();
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 2 });
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::P100, count: 3 });
+        s.allocate(Assignment { job: JobId(1), node: 2, gpu: GpuType::K80, count: 1 });
+        assert!(s.is_full());
+    }
+
+    #[test]
+    fn digest_changes_with_allocations() {
+        let mut s = state();
+        let d0 = s.digest();
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 1 });
+        assert_ne!(d0, s.digest());
+        s.release_job(JobId(1));
+        assert_eq!(d0, s.digest());
+    }
+}

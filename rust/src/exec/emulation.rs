@@ -1,0 +1,351 @@
+//! Replay a scheduler's round log with **real** PJRT training.
+//!
+//! For Hadar/Gavel the per-round `(job, node, progressed)` records from
+//! `sim::engine` drive each job's own `Trainer`; for HadarE the per-copy
+//! work log from `sim::hadare_engine` additionally routes every round
+//! through the Job Tracker's weight consolidation (§V-B): copies start
+//! from the consolidated parent parameters, train their share, and the
+//! round ends with a throughput/step-weighted parameter average.
+
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::{Job, JobId};
+use crate::jobs::queue::JobQueue;
+use crate::runtime::artifacts::{Manifest, Variant};
+use crate::runtime::client::{ModelState, Runtime, TrainStep};
+use crate::runtime::trainer::{consolidate_states, Corpus, Trainer};
+use crate::sched::Scheduler;
+use crate::sim::engine::{self, SimConfig, SimResult};
+use crate::sim::hadare_engine;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Corpus seed for one job — shared by BOTH emulation paths and the
+/// quality evaluator so forked and unforked training see the same data
+/// distribution (the eval stream itself uses an independent RNG).
+pub fn corpus_seed(cfg_seed: u64, job: crate::jobs::job::JobId) -> u64 {
+    cfg_seed ^ (job.0 << 4) ^ 0xDA7A
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EmulationConfig {
+    pub sim: SimConfig,
+    /// Virtual-step -> real-step down-sampling (e.g. 0.02 = 1 real step
+    /// per 50 virtual iterations).
+    pub steps_scale: f64,
+    /// Cap on real steps per (job, round) so emulation stays tractable.
+    pub max_real_steps_per_round: u64,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for EmulationConfig {
+    fn default() -> Self {
+        EmulationConfig {
+            sim: SimConfig {
+                slot_secs: 90.0,
+                restart_overhead: 10.0,
+                max_rounds: 2_000,
+                horizon: 1e7,
+            },
+            steps_scale: 0.02,
+            max_real_steps_per_round: 200,
+            lr: 0.1,
+            seed: 42,
+        }
+    }
+}
+
+/// A really-trained model at the end of an emulated run.
+pub struct TrainedModel {
+    pub job: JobId,
+    pub variant: String,
+    pub state: ModelState,
+    /// (cumulative real step, loss) curve.
+    pub losses: Vec<(u64, f32)>,
+    pub real_steps: u64,
+}
+
+/// Emulation outcome: scheduling metrics + genuinely trained models.
+pub struct EmulationResult {
+    pub sim: SimResult,
+    pub models: Vec<TrainedModel>,
+    /// Total real train steps executed through PJRT.
+    pub total_real_steps: u64,
+}
+
+fn scale_steps(cfg: &EmulationConfig, virtual_steps: f64) -> u64 {
+    ((virtual_steps * cfg.steps_scale).round() as u64)
+        .min(cfg.max_real_steps_per_round)
+}
+
+/// Shared executable cache: one compiled TrainStep per variant.
+pub struct ExecutablePool<'m> {
+    runtime: Runtime,
+    manifest: &'m Manifest,
+    train: BTreeMap<String, TrainStep>,
+}
+
+impl<'m> ExecutablePool<'m> {
+    pub fn new(manifest: &'m Manifest) -> Result<Self> {
+        Ok(ExecutablePool {
+            runtime: Runtime::cpu()?,
+            manifest,
+            train: BTreeMap::new(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.manifest
+            .variant(name)
+            .ok_or_else(|| anyhow!("variant '{name}' not in manifest"))
+    }
+
+    pub fn train_step(&mut self, variant: &str) -> Result<&TrainStep> {
+        if !self.train.contains_key(variant) {
+            let v = self
+                .manifest
+                .variant(variant)
+                .ok_or_else(|| anyhow!("variant '{variant}'"))?;
+            let exe = self.runtime.load_train(v)?;
+            self.train.insert(variant.to_string(), exe);
+        }
+        Ok(&self.train[variant])
+    }
+}
+
+/// Run a non-forking scheduler (Hadar/Gavel/…) over `jobs` with real
+/// training replay.
+pub fn run_scheduler_emulation(
+    jobs: &[Job], scheduler: &mut dyn Scheduler, cluster: &ClusterSpec,
+    manifest: &Manifest, cfg: &EmulationConfig,
+) -> Result<EmulationResult> {
+    // 1) Virtual schedule.
+    let mut queue = JobQueue::new();
+    for j in jobs {
+        queue.admit(j.clone());
+    }
+    let sim = engine::run(&mut queue, scheduler, cluster, &cfg.sim, true);
+
+    // 2) Real-training replay, one Trainer per job, in round order.
+    let mut pool = ExecutablePool::new(manifest)?;
+    let mut trainers: BTreeMap<JobId, (String, Trainer)> = BTreeMap::new();
+    for j in jobs {
+        let vname = j.model.runtime_variant().to_string();
+        let v = pool.variant(&vname)?;
+        let state = pool.runtime().init_state(v, cfg.seed ^ j.id.0);
+        trainers.insert(
+            j.id,
+            (vname.clone(),
+             Trainer::new(state, v.vocab, corpus_seed(cfg.seed, j.id),
+                          cfg.lr)),
+        );
+    }
+    let mut total_real = 0u64;
+    for rec in &sim.timeline {
+        for (&id, rj) in &rec.jobs {
+            let steps = scale_steps(cfg, rj.progressed);
+            if steps == 0 {
+                continue;
+            }
+            let (vname, trainer) =
+                trainers.get_mut(&id).expect("trainer exists");
+            let vname = vname.clone();
+            let exe = pool.train_step(&vname)?;
+            trainer.run_steps(exe, steps)?;
+            total_real += steps;
+        }
+    }
+
+    let models = trainers
+        .into_iter()
+        .map(|(id, (variant, t))| TrainedModel {
+            job: id,
+            variant,
+            losses: t.losses.clone(),
+            real_steps: t.steps_done,
+            state: t.state,
+        })
+        .collect();
+    Ok(EmulationResult {
+        sim,
+        models,
+        total_real_steps: total_real,
+    })
+}
+
+/// Run HadarE over `jobs` with real training + §V-B consolidation replay.
+pub fn run_hadare_emulation(
+    jobs: &[Job], cluster: &ClusterSpec, manifest: &Manifest,
+    cfg: &EmulationConfig, copies: Option<u64>,
+) -> Result<EmulationResult> {
+    // 1) Virtual schedule with the per-copy work log.
+    let hres = hadare_engine::run(jobs, cluster, &cfg.sim, copies);
+
+    // 2) Replay with consolidation at each round boundary.
+    let mut pool = ExecutablePool::new(manifest)?;
+    // Parent state + corpus (shared across copies so data is the job's).
+    struct ParentCtx {
+        variant: String,
+        state: ModelState,
+        corpus: Corpus,
+        rng: Rng,
+        losses: Vec<(u64, f32)>,
+        real_steps: u64,
+    }
+    let mut parents: BTreeMap<JobId, ParentCtx> = BTreeMap::new();
+    for j in jobs {
+        let vname = j.model.runtime_variant().to_string();
+        let v = pool.variant(&vname)?;
+        parents.insert(
+            j.id,
+            ParentCtx {
+                variant: vname,
+                state: pool.runtime().init_state(v, cfg.seed ^ j.id.0),
+                corpus: Corpus::new(v.vocab, 4,
+                                    corpus_seed(cfg.seed, j.id)),
+                rng: Rng::new(cfg.seed ^ (j.id.0 << 8)),
+                losses: Vec::new(),
+                real_steps: 0,
+            },
+        );
+    }
+
+    // Group work log by round.
+    let max_round = hres
+        .work_log
+        .iter()
+        .map(|w| w.round)
+        .max()
+        .unwrap_or(0);
+    let mut total_real = 0u64;
+    for round in 0..=max_round {
+        // parent -> [(copy steps real)]
+        let mut by_parent: BTreeMap<JobId, Vec<u64>> = BTreeMap::new();
+        for w in hres.work_log.iter().filter(|w| w.round == round) {
+            let steps = scale_steps(cfg, w.steps);
+            by_parent.entry(w.parent).or_default().push(steps);
+        }
+        for (pid, copy_steps) in by_parent {
+            let pctx = parents.get_mut(&pid).expect("parent ctx");
+            let vname = pctx.variant.clone();
+            let total: u64 = copy_steps.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let v_vocab;
+            let v_batch;
+            let v_seq;
+            {
+                let v = pool.variant(&vname)?;
+                v_vocab = v.vocab;
+                v_batch = v.batch;
+                v_seq = v.seq;
+            }
+            let _ = v_vocab;
+            // Each copy clones the consolidated parent state, trains its
+            // share on the parent's data stream, then the round closes
+            // with a step-weighted average (§V-B).
+            let mut copy_states: Vec<ModelState> = Vec::new();
+            let mut weights: Vec<f64> = Vec::new();
+            let mut last_losses: Vec<(u64, f32)> = Vec::new();
+            for &steps in &copy_steps {
+                if steps == 0 {
+                    continue;
+                }
+                let mut st = ModelState {
+                    params: clone_literals(&pctx.state.params)?,
+                    momenta: clone_literals(&pctx.state.momenta)?,
+                };
+                let exe = pool.train_step(&vname)?;
+                let mut last = f32::NAN;
+                for _ in 0..steps {
+                    let toks = pctx
+                        .corpus
+                        .batch(&mut pctx.rng, v_batch, v_seq + 1);
+                    last = exe.step(&mut st, &toks, cfg.lr)?;
+                    pctx.real_steps += 1;
+                    total_real += 1;
+                }
+                last_losses.push((pctx.real_steps, last));
+                copy_states.push(st);
+                weights.push(steps as f64);
+            }
+            if copy_states.is_empty() {
+                continue;
+            }
+            let refs: Vec<&ModelState> = copy_states.iter().collect();
+            let v = pool.variant(&vname)?;
+            let params = consolidate_states(&refs, &weights, v)?;
+            // Momenta: consolidate the same way (keeps SGD state coherent).
+            let flats: Vec<Vec<f32>> = copy_states
+                .iter()
+                .map(|s| crate::runtime::client::flatten_params(&s.momenta))
+                .collect::<Result<_>>()?;
+            let avg =
+                crate::forking::tracker::consolidate_weights(&flats, &weights);
+            let momenta =
+                crate::runtime::client::unflatten_params(&avg, v)?;
+            pctx.state = ModelState { params, momenta };
+            pctx.losses.extend(last_losses);
+        }
+    }
+
+    let models = parents
+        .into_iter()
+        .map(|(id, p)| TrainedModel {
+            job: id,
+            variant: p.variant,
+            state: p.state,
+            losses: p.losses,
+            real_steps: p.real_steps,
+        })
+        .collect();
+    Ok(EmulationResult {
+        sim: hres.sim,
+        models,
+        total_real_steps: total_real,
+    })
+}
+
+/// Deep-copy literals through host vectors.
+fn clone_literals(lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    lits.iter()
+        .map(|l| {
+            let shape = l
+                .shape()
+                .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+            let dims: Vec<usize> = match &shape {
+                xla::Shape::Array(a) => {
+                    a.dims().iter().map(|&d| d as usize).collect()
+                }
+                _ => return Err(anyhow!("non-array literal")),
+            };
+            let data = l
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?;
+            Ok(crate::runtime::client::literal_f32(&data, &dims))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_steps_rounds_and_caps() {
+        let cfg = EmulationConfig {
+            steps_scale: 0.1,
+            max_real_steps_per_round: 5,
+            ..Default::default()
+        };
+        assert_eq!(scale_steps(&cfg, 0.0), 0);
+        assert_eq!(scale_steps(&cfg, 20.0), 2);
+        assert_eq!(scale_steps(&cfg, 1000.0), 5); // capped
+    }
+}

@@ -1,0 +1,16 @@
+//! Physical-cluster *emulation* (paper §VI): real DL training executed
+//! through the PJRT runtime on virtual-clock heterogeneous nodes.
+//!
+//! The schedule (who trains where, each round) comes from the same
+//! engines as the pure simulation; this layer replays it with **real**
+//! train steps so Table IV's model-quality comparison and the loss curves
+//! of the end-to-end example are genuine measurements, not simulations.
+//! Virtual steps are down-sampled to real steps by `steps_scale`
+//! (DESIGN.md §Substitutions — the paper's multi-hour GPU workloads would
+//! not fit a single-CPU sandbox otherwise).
+
+pub mod emulation;
+pub mod quality;
+
+pub use emulation::{EmulationConfig, EmulationResult, TrainedModel};
+pub use quality::{evaluate_quality, QualityReport, QualityRow};

@@ -1,0 +1,150 @@
+//! Table IV: inference quality of models trained under HadarE (forking)
+//! vs Hadar (no forking).
+//!
+//! Quality metrics on the synthetic-corpus substrate:
+//! * ACC  — top-1 next-token accuracy × 100 (stands in for the paper's
+//!          translation/classification accuracy);
+//! * MSE  — held-out cross-entropy loss (a squared-error-like "lower is
+//!          better" quality signal for the MSE-metric models).
+
+use crate::exec::emulation::TrainedModel;
+use crate::jobs::job::JobId;
+use crate::jobs::model::{DlModel, QualityMetric};
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::{EvalStep, Runtime};
+use crate::runtime::trainer::Corpus;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One Table IV row.
+#[derive(Clone, Debug)]
+pub struct QualityRow {
+    pub job: JobId,
+    pub model: DlModel,
+    pub metric: QualityMetric,
+    /// Value under HadarE (forking).
+    pub forking: f64,
+    /// Value under Hadar (no forking).
+    pub no_forking: f64,
+}
+
+impl QualityRow {
+    /// Whether forking matched-or-beat no-forking on this row's metric.
+    pub fn forking_wins(&self) -> bool {
+        match self.metric {
+            QualityMetric::Acc => self.forking >= self.no_forking,
+            QualityMetric::Mse => self.forking <= self.no_forking,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct QualityReport {
+    pub rows: Vec<QualityRow>,
+}
+
+/// Evaluate one trained model on `n_batches` held-out batches; returns
+/// (mean loss, mean accuracy).
+pub fn eval_model(runtime: &Runtime, eval: &EvalStep, model: &TrainedModel,
+                  manifest: &Manifest, train_seed: u64, eval_seed: u64,
+                  n_batches: usize) -> Result<(f64, f64)> {
+    let v = manifest
+        .variant(&model.variant)
+        .ok_or_else(|| anyhow!("variant {}", model.variant))?;
+    let _ = runtime;
+    // Held-out data: the SAME corpus the job trained on (same Markov
+    // structure), sampled with an independent stream — generalisation to
+    // unseen sequences, not to a different language.
+    let corpus = Corpus::new(
+        v.vocab, 4,
+        crate::exec::emulation::corpus_seed(train_seed, model.job));
+    let mut rng = Rng::new(eval_seed ^ 0xE7A1);
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    for _ in 0..n_batches {
+        let toks = corpus.batch(&mut rng, v.batch, v.seq + 1);
+        let (l, a) = eval.eval(&model.state, &toks, v.batch, v.seq + 1)?;
+        loss_sum += l as f64;
+        acc_sum += a as f64;
+    }
+    Ok((loss_sum / n_batches as f64, acc_sum / n_batches as f64))
+}
+
+/// Build the Table IV comparison from two emulation outcomes over the same
+/// job set: `forked` (HadarE) and `unforked` (Hadar).
+pub fn evaluate_quality(
+    jobs: &[(JobId, DlModel)], forked: &[TrainedModel],
+    unforked: &[TrainedModel], manifest: &Manifest, train_seed: u64,
+    eval_seed: u64,
+) -> Result<QualityReport> {
+    let runtime = Runtime::cpu()?;
+    let mut evals: BTreeMap<String, EvalStep> = BTreeMap::new();
+    let f_by_id: BTreeMap<JobId, &TrainedModel> =
+        forked.iter().map(|m| (m.job, m)).collect();
+    let u_by_id: BTreeMap<JobId, &TrainedModel> =
+        unforked.iter().map(|m| (m.job, m)).collect();
+
+    let mut rows = Vec::new();
+    for &(id, model) in jobs {
+        let (Some(fm), Some(um)) = (f_by_id.get(&id), u_by_id.get(&id))
+        else {
+            continue;
+        };
+        let vname = fm.variant.clone();
+        if !evals.contains_key(&vname) {
+            let v = manifest
+                .variant(&vname)
+                .ok_or_else(|| anyhow!("variant {vname}"))?;
+            evals.insert(vname.clone(), runtime.load_eval(v)?);
+        }
+        let eval = &evals[&vname];
+        let (fl, fa) =
+            eval_model(&runtime, eval, fm, manifest, train_seed, eval_seed, 4)?;
+        let (ul, ua) =
+            eval_model(&runtime, eval, um, manifest, train_seed, eval_seed, 4)?;
+        let metric = model.quality_metric();
+        let (fv, uv) = match metric {
+            QualityMetric::Acc => (fa * 100.0, ua * 100.0),
+            QualityMetric::Mse => (fl, ul),
+        };
+        rows.push(QualityRow {
+            job: id,
+            model,
+            metric,
+            forking: fv,
+            no_forking: uv,
+        });
+    }
+    Ok(QualityReport { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forking_wins_semantics() {
+        let acc = QualityRow {
+            job: JobId(0),
+            model: DlModel::Transformer,
+            metric: QualityMetric::Acc,
+            forking: 54.7,
+            no_forking: 52.4,
+        };
+        assert!(acc.forking_wins());
+        let mse = QualityRow {
+            job: JobId(1),
+            model: DlModel::MiMa,
+            metric: QualityMetric::Mse,
+            forking: 0.025,
+            no_forking: 0.028,
+        };
+        assert!(mse.forking_wins());
+        let worse = QualityRow {
+            forking: 0.03,
+            ..mse
+        };
+        assert!(!worse.forking_wins());
+    }
+}

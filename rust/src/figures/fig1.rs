@@ -1,0 +1,138 @@
+//! Fig. 1 + §II-A motivational example: three jobs on a 2xV100 + 3xP100 +
+//! 1xK80 cluster under Gavel vs Hadar — round-by-round remaining epochs,
+//! CRU per round, and the total round count.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::{Job, JobId};
+use crate::jobs::model::DlModel;
+use crate::jobs::queue::JobQueue;
+use crate::sched::{gavel::Gavel, hadar::Hadar, Scheduler};
+use crate::sim::engine::{self, SimConfig, SimResult};
+use crate::util::table::Table;
+
+/// The three motivational jobs: J1 (3 GPUs, 80 epochs), J2 (2, 30),
+/// J3 (2, 50). Throughputs follow the §II-A X-matrix flavour, with
+/// per-job heterogeneity sensitivity as in the paper's §I observation:
+/// J1 is ResNet-50-steep (~8x V100:K80), J2 moderate, J3 A3C-flat (~1.4x)
+/// — flat jobs are exactly the ones task-level mixing helps.
+pub fn jobs() -> Vec<Job> {
+    // (id, W_j, epochs, x_V100, x_P100, x_K80) — iterations/second chosen
+    // so jobs span several 360 s rounds (10 iterations per epoch).
+    let specs = [
+        (1u64, 3usize, 80u64, 0.24, 0.15, 0.03),
+        (2, 2, 30, 0.20, 0.14, 0.07),
+        (3, 2, 50, 0.10, 0.09, 0.07),
+    ];
+    specs
+        .iter()
+        .map(|&(id, w, epochs, v, p, k)| {
+            let mut j = Job::new(id, DlModel::ResNet18, 0.0, w, epochs, 10);
+            j.set_throughput(GpuType::V100, v);
+            j.set_throughput(GpuType::P100, p);
+            j.set_throughput(GpuType::K80, k);
+            j
+        })
+        .collect()
+}
+
+pub struct Fig1 {
+    pub gavel: SimResult,
+    pub hadar: SimResult,
+}
+
+pub fn run() -> Fig1 {
+    let cluster = ClusterSpec::motivational();
+    let cfg = SimConfig {
+        slot_secs: 360.0,
+        restart_overhead: 10.0,
+        max_rounds: 200,
+        horizon: 1e6,
+    };
+    let run_one = |mut s: Box<dyn Scheduler>| -> SimResult {
+        let mut q = JobQueue::new();
+        for j in jobs() {
+            q.admit(j);
+        }
+        engine::run(&mut q, s.as_mut(), &cluster, &cfg, true)
+    };
+    Fig1 {
+        gavel: run_one(Box::new(Gavel::new())),
+        hadar: run_one(Box::new(Hadar::new())),
+    }
+}
+
+pub fn render(f: &Fig1) -> String {
+    let mut out = String::new();
+    for (name, res) in [("Gavel", &f.gavel), ("Hadar", &f.hadar)] {
+        out.push_str(&format!(
+            "\n{name}: rounds={} CRU={:.0}% TTD={:.0}s\n",
+            res.rounds,
+            res.gru * 100.0,
+            res.ttd
+        ));
+        let mut t = Table::new(&["round", "J1 rem", "J2 rem", "J3 rem",
+                                 "busy GPUs", "CRU"]);
+        for rec in &res.timeline {
+            let rem = |id: u64| -> String {
+                rec.jobs
+                    .get(&JobId(id))
+                    .map(|rj| format!("{:.0}ep", rj.remaining_before / 10.0))
+                    .unwrap_or_else(|| "-".to_string())
+            };
+            let busy: usize =
+                rec.jobs.values().map(|rj| rj.gpus).sum();
+            t.row(&[
+                format!("R{}", rec.round + 1),
+                rem(1),
+                rem(2),
+                rem(3),
+                format!("{busy}/6"),
+                format!("{:.0}%",
+                        100.0 * rec.busy_gpu_secs / rec.avail_gpu_secs),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out.push_str(&format!(
+        "\npaper: Hadar CRU ~87% vs Gavel ~78%, Hadar one round shorter\n\
+         ours : Hadar CRU {:.0}% vs Gavel {:.0}%, rounds {} vs {}\n",
+        f.hadar.gru * 100.0,
+        f.gavel.gru * 100.0,
+        f.hadar.rounds,
+        f.gavel.rounds
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadar_dominates_gavel_on_motivational_example() {
+        let f = run();
+        // The paper's headline on this example: Hadar finishes at least one
+        // round earlier with utilisation at or above Gavel's.
+        assert!(f.hadar.rounds < f.gavel.rounds,
+                "rounds: hadar {} vs gavel {}", f.hadar.rounds,
+                f.gavel.rounds);
+        assert!(f.hadar.ttd <= f.gavel.ttd,
+                "TTD: hadar {} vs gavel {}", f.hadar.ttd, f.gavel.ttd);
+        assert!(f.hadar.gru > f.gavel.gru - 0.02,
+                "CRU: hadar {} vs gavel {}", f.hadar.gru, f.gavel.gru);
+        // Stable placements: Hadar restarts fewer rounds than Gavel's
+        // priority rotation.
+        assert!(f.hadar.change_fraction <= f.gavel.change_fraction);
+        assert_eq!(f.hadar.jct.len(), 3);
+        assert_eq!(f.gavel.jct.len(), 3);
+    }
+
+    #[test]
+    fn render_includes_rounds() {
+        let f = run();
+        let s = render(&f);
+        assert!(s.contains("R1"));
+        assert!(s.contains("CRU"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md's
+//! experiment index). Shared by `examples/` and `rust/benches/`.
+
+pub mod fig1;
+pub mod fig5;
+pub mod fig6;
+pub mod physical;
+pub mod slots;
+pub mod table4;
+pub mod trace_eval;
+pub mod workloads;

@@ -1,0 +1,75 @@
+//! Table IV: inference quality of models trained under HadarE (forking)
+//! vs Hadar (no forking) — **real training** through the PJRT runtime on
+//! the emulated testbed cluster, M-5 mix.
+
+use crate::cluster::spec::ClusterSpec;
+use crate::exec::emulation::{
+    run_hadare_emulation, run_scheduler_emulation, EmulationConfig,
+};
+use crate::exec::quality::{evaluate_quality, QualityReport};
+use crate::jobs::model::QualityMetric;
+use crate::runtime::artifacts::Manifest;
+use crate::sched::hadar::Hadar;
+use crate::trace::workload::physical_jobs;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub struct Table4 {
+    pub report: QualityReport,
+    pub hadare_ttd: f64,
+    pub hadar_ttd: f64,
+    pub real_steps: u64,
+}
+
+pub fn run(manifest: &Manifest, cfg: &EmulationConfig) -> Result<Table4> {
+    let cluster = ClusterSpec::testbed5();
+    let jobs = physical_jobs("M-5", &cluster, 1.0).expect("M-5");
+    let forked = run_hadare_emulation(&jobs, &cluster, manifest, cfg, None)?;
+    let mut hadar = Hadar::new();
+    let unforked =
+        run_scheduler_emulation(&jobs, &mut hadar, &cluster, manifest, cfg)?;
+    let pairs: Vec<_> = jobs.iter().map(|j| (j.id, j.model)).collect();
+    let report = evaluate_quality(&pairs, &forked.models, &unforked.models,
+                                  manifest, cfg.seed, cfg.seed ^ 0xEEAA)?;
+    Ok(Table4 {
+        report,
+        hadare_ttd: forked.sim.ttd,
+        hadar_ttd: unforked.sim.ttd,
+        real_steps: forked.total_real_steps + unforked.total_real_steps,
+    })
+}
+
+pub fn render(t4: &Table4) -> String {
+    let mut t = Table::new(&["Training Job", "Forking (HadarE)",
+                             "No Forking (Hadar)", "Metric", "winner"]);
+    for row in &t4.report.rows {
+        let fmt = |v: f64| match row.metric {
+            QualityMetric::Acc => format!("{v:.2}"),
+            QualityMetric::Mse => format!("{v:.3}"),
+        };
+        t.row(&[
+            format!("{} ({})", row.model.task(), row.model.code()),
+            fmt(row.forking),
+            fmt(row.no_forking),
+            match row.metric {
+                QualityMetric::Acc => "ACC".to_string(),
+                QualityMetric::Mse => "MSE (held-out CE)".to_string(),
+            },
+            if row.forking_wins() { "forking" } else { "no-forking" }
+                .to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    let wins =
+        t4.report.rows.iter().filter(|r| r.forking_wins()).count();
+    out.push_str(&format!(
+        "forking wins {}/{} rows (paper: 5/5); virtual TTD: HadarE {:.0}s \
+         vs Hadar {:.0}s; real train steps executed: {}\n",
+        wins,
+        t4.report.rows.len(),
+        t4.hadare_ttd,
+        t4.hadar_ttd,
+        t4.real_steps
+    ));
+    out
+}

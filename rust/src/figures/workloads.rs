@@ -1,0 +1,51 @@
+//! Tables II & III: the workload catalogues, printed as the paper lays
+//! them out (plus the mix notation of §VI-B).
+
+use crate::jobs::model::DlModel;
+use crate::trace::workload::{mix, MIX_NAMES};
+use crate::util::table::Table;
+
+pub fn render_table2() -> String {
+    let mut t = Table::new(&["Training Job", "Model", "Dataset", "Size"]);
+    for m in DlModel::TABLE2 {
+        t.row(&[
+            m.task().to_string(),
+            m.name().to_string(),
+            m.dataset().to_string(),
+            m.size_class().name().to_string(),
+        ]);
+    }
+    format!("Table II — trace-driven evaluation workloads\n{}", t.render())
+}
+
+pub fn render_table3() -> String {
+    let mut t = Table::new(&["Training Job", "Model", "Dataset", "Size"]);
+    for m in DlModel::TABLE3 {
+        t.row(&[
+            format!("{} ({})", m.task(), m.code()),
+            m.name().to_string(),
+            m.dataset().to_string(),
+            m.size_class().name().to_string(),
+        ]);
+    }
+    let mut out =
+        format!("Table III — physical-cluster workloads\n{}", t.render());
+    out.push_str("\nworkload mixes:\n");
+    for name in MIX_NAMES {
+        let models = mix(name).unwrap();
+        let codes: Vec<&str> = models.iter().map(|m| m.code()).collect();
+        out.push_str(&format!("  {name:<5} = <{}>\n", codes.join(", ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tables_render() {
+        let t2 = super::render_table2();
+        assert!(t2.contains("ResNet-50") && t2.contains("ImageNet"));
+        let t3 = super::render_table3();
+        assert!(t3.contains("MiMa") && t3.contains("M-12"));
+    }
+}

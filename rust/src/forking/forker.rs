@@ -1,0 +1,87 @@
+//! HadarE's **Job Forker** (paper §V-A): fork every training job into `n`
+//! copies for an `n`-node cluster, with the paper's job-ID formula
+//!
+//! ```text
+//! job_ID = max_job_count * i + parent_job_id,   i = 1..=copies
+//! ```
+
+use crate::jobs::job::{Job, JobId};
+
+/// Copy-ID arithmetic shared by the forker and the tracker.
+#[derive(Clone, Copy, Debug)]
+pub struct ForkIds {
+    /// The paper's `max_job_count`: the largest number of parent jobs
+    /// expected to coexist; copy ids live in bands above it.
+    pub max_job_count: u64,
+}
+
+impl ForkIds {
+    pub fn copy_id(&self, parent: JobId, i: u64) -> JobId {
+        debug_assert!(i >= 1);
+        debug_assert!(parent.0 < self.max_job_count);
+        JobId(self.max_job_count * i + parent.0)
+    }
+
+    pub fn parent_of(&self, copy: JobId) -> JobId {
+        JobId(copy.0 % self.max_job_count)
+    }
+
+    pub fn copy_index(&self, copy: JobId) -> u64 {
+        copy.0 / self.max_job_count
+    }
+
+    pub fn is_copy(&self, id: JobId) -> bool {
+        id.0 >= self.max_job_count
+    }
+}
+
+/// Fork one parent into `copies` copy-jobs. Each copy requests a single
+/// node's worth of workers (1 GPU in the paper's §VI clusters) and starts
+/// with the parent's throughput row; its share of work is (re)assigned by
+/// the Job Tracker each round, so copies carry the *parent's* total length
+/// for utility purposes.
+pub fn fork(parent: &Job, copies: u64, ids: ForkIds) -> Vec<Job> {
+    (1..=copies)
+        .map(|i| {
+            let mut c = parent.clone();
+            c.id = ids.copy_id(parent.id, i);
+            c.parent = Some(parent.id);
+            c.gpus_requested = 1;
+            c
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::model::DlModel;
+
+    #[test]
+    fn id_formula_matches_paper_and_roundtrips() {
+        let ids = ForkIds { max_job_count: 100 };
+        let copy = ids.copy_id(JobId(7), 3);
+        assert_eq!(copy, JobId(307));
+        assert_eq!(ids.parent_of(copy), JobId(7));
+        assert_eq!(ids.copy_index(copy), 3);
+        assert!(ids.is_copy(copy));
+        assert!(!ids.is_copy(JobId(7)));
+    }
+
+    #[test]
+    fn fork_produces_distinct_single_gpu_copies() {
+        let ids = ForkIds { max_job_count: 100 };
+        let mut parent = Job::new(5, DlModel::MiMa, 0.0, 1, 20, 100);
+        parent.weight = 2.0;
+        let copies = fork(&parent, 5, ids);
+        assert_eq!(copies.len(), 5);
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &copies {
+            assert!(seen.insert(c.id));
+            assert_eq!(c.parent, Some(JobId(5)));
+            assert_eq!(c.gpus_requested, 1);
+            assert_eq!(c.total_iters(), parent.total_iters());
+            assert_eq!(c.weight, 2.0);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! HadarE's forking machinery (paper §V): the Job Forker creates per-node
+//! copies of every training job; the Job Tracker aggregates their steps
+//! and consolidates their model parameters at round boundaries.
+
+pub mod forker;
+pub mod tracker;
+
+pub use forker::{fork, ForkIds};
+pub use tracker::{consolidate_weights, JobTracker, ParentProgress};

@@ -1,0 +1,233 @@
+//! HadarE's **Job Tracker** (paper §V-A/B): registers forked copies,
+//! aggregates completed training steps across copies, divides the
+//! remaining work proportionally to node throughputs, and coordinates
+//! model-parameter consolidation at round boundaries.
+//!
+//! The tracker is engine-agnostic: the discrete-time simulator uses the
+//! step accounting only; the physical-cluster emulation also routes
+//! parameter vectors through [`consolidate_weights`].
+
+use crate::forking::forker::ForkIds;
+use crate::jobs::job::JobId;
+use std::collections::BTreeMap;
+
+/// Per-parent training state.
+#[derive(Clone, Debug)]
+pub struct ParentProgress {
+    /// Total steps required (the parent's `E_j * N_j`).
+    pub total_steps: f64,
+    /// Steps aggregated across all copies so far.
+    pub done_steps: f64,
+    /// Registered copy ids.
+    pub copies: Vec<JobId>,
+}
+
+impl ParentProgress {
+    /// Relative tolerance for float step accumulation across copies.
+    const EPS: f64 = 1e-9;
+
+    pub fn remaining(&self) -> f64 {
+        let rem = self.total_steps - self.done_steps;
+        if rem <= Self::EPS * self.total_steps.max(1.0) {
+            0.0
+        } else {
+            rem
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.remaining() <= 0.0
+    }
+}
+
+/// The Job Tracker.
+#[derive(Clone, Debug)]
+pub struct JobTracker {
+    pub ids: ForkIds,
+    parents: BTreeMap<JobId, ParentProgress>,
+}
+
+impl JobTracker {
+    pub fn new(ids: ForkIds) -> Self {
+        JobTracker {
+            ids,
+            parents: BTreeMap::new(),
+        }
+    }
+
+    /// Register a parent and its forked copies.
+    pub fn register(&mut self, parent: JobId, total_steps: f64,
+                    copies: &[JobId]) {
+        for &c in copies {
+            debug_assert_eq!(self.ids.parent_of(c), parent);
+        }
+        self.parents.insert(
+            parent,
+            ParentProgress {
+                total_steps,
+                done_steps: 0.0,
+                copies: copies.to_vec(),
+            },
+        );
+    }
+
+    pub fn parent(&self, id: JobId) -> Option<&ParentProgress> {
+        self.parents.get(&id)
+    }
+
+    pub fn parents(&self) -> impl Iterator<Item = (&JobId, &ParentProgress)> {
+        self.parents.iter()
+    }
+
+    /// Resolve any id (parent or copy) to its parent.
+    pub fn resolve(&self, id: JobId) -> JobId {
+        if self.ids.is_copy(id) {
+            self.ids.parent_of(id)
+        } else {
+            id
+        }
+    }
+
+    /// §V-B result aggregation: sum completed steps reported by a node for
+    /// one copy into the parent's total. Returns the parent id.
+    pub fn report_steps(&mut self, copy: JobId, steps: f64) -> JobId {
+        let parent = self.resolve(copy);
+        if let Some(p) = self.parents.get_mut(&parent) {
+            p.done_steps = (p.done_steps + steps).min(p.total_steps);
+        }
+        parent
+    }
+
+    pub fn is_parent_complete(&self, id: JobId) -> bool {
+        let parent = self.resolve(id);
+        self.parents
+            .get(&parent)
+            .map(|p| p.is_complete())
+            .unwrap_or(false)
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.parents.values().all(|p| p.is_complete())
+    }
+
+    /// §V-B work division: split the parent's remaining steps across the
+    /// nodes assigned this round, proportionally to their throughputs
+    /// (iterations/sec of the parent's model on each node's GPU). The
+    /// shares are what each copy should complete in the next slot, capped
+    /// by slot capacity.
+    pub fn divide_steps(&self, parent: JobId, node_throughputs: &[f64],
+                        slot_secs: f64) -> Vec<f64> {
+        let remaining = match self.parents.get(&parent) {
+            Some(p) => p.remaining(),
+            None => return vec![0.0; node_throughputs.len()],
+        };
+        let total_x: f64 = node_throughputs.iter().sum();
+        if total_x <= 0.0 || remaining <= 0.0 {
+            return vec![0.0; node_throughputs.len()];
+        }
+        node_throughputs
+            .iter()
+            .map(|&x| {
+                let share = remaining * x / total_x;
+                // A node cannot exceed its slot capacity x * L.
+                share.min(x * slot_secs)
+            })
+            .collect()
+    }
+}
+
+/// §V-B result consolidation: weight-average the parameter vectors of the
+/// copies trained this round. `weights` are the per-copy step counts (the
+/// paper averages; step-weighting is the natural generalisation and is
+/// ablated — pass equal weights for the plain average).
+pub fn consolidate_weights(copies: &[Vec<f32>], weights: &[f64])
+                           -> Vec<f32> {
+    assert!(!copies.is_empty());
+    assert_eq!(copies.len(), weights.len());
+    let dim = copies[0].len();
+    assert!(copies.iter().all(|c| c.len() == dim), "shape mismatch");
+    let total: f64 = weights.iter().sum();
+    let norm: Vec<f64> = if total > 0.0 {
+        weights.iter().map(|w| w / total).collect()
+    } else {
+        vec![1.0 / copies.len() as f64; copies.len()]
+    };
+    let mut out = vec![0.0f32; dim];
+    for (copy, &w) in copies.iter().zip(norm.iter()) {
+        for (o, &v) in out.iter_mut().zip(copy.iter()) {
+            *o += (w * v as f64) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> JobTracker {
+        let ids = ForkIds { max_job_count: 100 };
+        let mut t = JobTracker::new(ids);
+        t.register(JobId(1), 1000.0,
+                   &[JobId(101), JobId(201), JobId(301)]);
+        t
+    }
+
+    #[test]
+    fn aggregation_sums_and_caps() {
+        let mut t = tracker();
+        assert_eq!(t.report_steps(JobId(101), 300.0), JobId(1));
+        t.report_steps(JobId(201), 400.0);
+        assert_eq!(t.parent(JobId(1)).unwrap().done_steps, 700.0);
+        assert!(!t.is_parent_complete(JobId(301)));
+        t.report_steps(JobId(301), 500.0); // overshoot capped
+        assert_eq!(t.parent(JobId(1)).unwrap().done_steps, 1000.0);
+        assert!(t.is_parent_complete(JobId(1)));
+        assert!(t.all_complete());
+    }
+
+    #[test]
+    fn step_division_is_throughput_proportional() {
+        let t = tracker();
+        let shares = t.divide_steps(JobId(1), &[30.0, 20.0, 10.0], 1e9);
+        assert!((shares[0] - 500.0).abs() < 1e-9);
+        assert!((shares[1] - 333.3333).abs() < 1e-2);
+        assert!((shares[2] - 166.6667).abs() < 1e-2);
+        assert!((shares.iter().sum::<f64>() - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_division_caps_at_slot_capacity() {
+        let t = tracker();
+        // Slot of 10s at 10 it/s: max 100 steps per node.
+        let shares = t.divide_steps(JobId(1), &[10.0, 10.0], 10.0);
+        assert!(shares.iter().all(|&s| s <= 100.0 + 1e-9));
+    }
+
+    #[test]
+    fn zero_throughput_division_is_empty() {
+        let t = tracker();
+        assert_eq!(t.divide_steps(JobId(1), &[0.0, 0.0], 10.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn consolidation_weighted_average() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 4.0, 5.0];
+        // Equal weights -> plain average.
+        let avg = consolidate_weights(&[a.clone(), b.clone()], &[1.0, 1.0]);
+        assert_eq!(avg, vec![2.0, 3.0, 4.0]);
+        // 3:1 weighting.
+        let w = consolidate_weights(&[a, b], &[3.0, 1.0]);
+        assert!((w[0] - 1.5).abs() < 1e-6);
+        // Zero weights fall back to plain average.
+        let z = consolidate_weights(&[vec![2.0], vec![4.0]], &[0.0, 0.0]);
+        assert_eq!(z, vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn consolidation_rejects_shape_mismatch() {
+        consolidate_weights(&[vec![1.0], vec![1.0, 2.0]], &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! The unit of scheduling: one DL training job (paper Table I notation).
+
+use crate::cluster::gpu::GpuType;
+use crate::jobs::model::DlModel;
+use std::collections::BTreeMap;
+
+/// Job identifier. HadarE's fork-copy ids are derived from parent ids via
+/// the paper's formula (see `forking::forker`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "J{}", self.0)
+    }
+}
+
+/// Lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Completed,
+}
+
+/// One DL training job `j`:
+/// arrival `a_j`, demand `W_j`, length `E_j * N_j` iterations, and its
+/// per-GPU-type throughput row `X_j^r` (iterations/second).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub model: DlModel,
+    /// `a_j` (seconds).
+    pub arrival: f64,
+    /// `W_j`: number of workers requested (gang — all or nothing).
+    pub gpus_requested: usize,
+    /// `E_j`: epochs.
+    pub epochs: u64,
+    /// `N_j`: iterations (data chunks) per epoch.
+    pub iters_per_epoch: u64,
+    /// `X_j^r` — iterations/second on one GPU of each type.
+    pub throughput: BTreeMap<GpuType, f64>,
+    /// Completed iterations so far (monotone).
+    pub progress: f64,
+    pub status: JobStatus,
+    /// `f_j` once complete (seconds).
+    pub finish_time: Option<f64>,
+    /// Utility weight (1.0 unless a policy weighs jobs).
+    pub weight: f64,
+    /// Parent id if this job is a HadarE fork copy.
+    pub parent: Option<JobId>,
+}
+
+impl Job {
+    pub fn new(id: u64, model: DlModel, arrival: f64, gpus: usize,
+               epochs: u64, iters_per_epoch: u64) -> Self {
+        Job {
+            id: JobId(id),
+            model,
+            arrival,
+            gpus_requested: gpus,
+            epochs,
+            iters_per_epoch,
+            throughput: BTreeMap::new(),
+            progress: 0.0,
+            status: JobStatus::Queued,
+            finish_time: None,
+            weight: 1.0,
+            parent: None,
+        }
+    }
+
+    /// `E_j * N_j`.
+    pub fn total_iters(&self) -> f64 {
+        (self.epochs * self.iters_per_epoch) as f64
+    }
+
+    pub fn remaining_iters(&self) -> f64 {
+        let rem = self.total_iters() - self.progress;
+        // Relative tolerance: float progress accumulation across rounds.
+        if rem <= 1e-9 * self.total_iters().max(1.0) {
+            0.0
+        } else {
+            rem
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.remaining_iters() <= 0.0
+    }
+
+    /// `X_j^r`; 0 for types this job has no measurement for.
+    pub fn throughput_on(&self, gpu: GpuType) -> f64 {
+        self.throughput.get(&gpu).copied().unwrap_or(0.0)
+    }
+
+    pub fn set_throughput(&mut self, gpu: GpuType, iters_per_sec: f64) {
+        self.throughput.insert(gpu, iters_per_sec);
+    }
+
+    /// Fastest / slowest single-GPU throughputs (Eqs. (6)-(7) use the
+    /// corresponding t_min / t_max).
+    pub fn max_throughput(&self) -> f64 {
+        self.throughput.values().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn min_throughput(&self) -> f64 {
+        self.throughput
+            .values()
+            .cloned()
+            .filter(|&x| x > 0.0)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// `t_j^min` / `t_j^max` from §III-B: best/worst-case runtime given the
+    /// requested gang size.
+    pub fn t_min(&self) -> f64 {
+        self.total_iters()
+            / (self.gpus_requested as f64 * self.max_throughput())
+    }
+
+    pub fn t_max(&self) -> f64 {
+        self.total_iters()
+            / (self.gpus_requested as f64 * self.min_throughput())
+    }
+
+    /// Job utility `U_j(tau)` for completion duration `tau`: the paper's
+    /// *effective throughput* special case — completed iterations per
+    /// second over the job's lifetime, weighted.
+    pub fn utility(&self, duration: f64) -> f64 {
+        if duration <= 0.0 {
+            return 0.0;
+        }
+        self.weight * self.total_iters() / duration
+    }
+
+    /// Completion time `f_j - a_j` if finished.
+    pub fn completion_time(&self) -> Option<f64> {
+        self.finish_time.map(|f| f - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        let mut j = Job::new(1, DlModel::ResNet18, 10.0, 2, 4, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        j
+    }
+
+    #[test]
+    fn iteration_accounting() {
+        let mut j = job();
+        assert_eq!(j.total_iters(), 400.0);
+        assert_eq!(j.remaining_iters(), 400.0);
+        j.progress = 150.0;
+        assert_eq!(j.remaining_iters(), 250.0);
+        assert!(!j.is_complete());
+        j.progress = 400.0;
+        assert!(j.is_complete());
+    }
+
+    #[test]
+    fn throughput_extremes_and_times() {
+        let j = job();
+        assert_eq!(j.max_throughput(), 40.0);
+        assert_eq!(j.min_throughput(), 8.0);
+        assert!((j.t_min() - 400.0 / 80.0).abs() < 1e-9);
+        assert!((j.t_max() - 400.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utility_is_effective_throughput() {
+        let j = job();
+        assert!((j.utility(100.0) - 4.0).abs() < 1e-9);
+        // Non-increasing in duration.
+        assert!(j.utility(50.0) > j.utility(100.0));
+        assert_eq!(j.utility(0.0), 0.0);
+    }
+
+    #[test]
+    fn completion_time() {
+        let mut j = job();
+        assert_eq!(j.completion_time(), None);
+        j.finish_time = Some(110.0);
+        assert_eq!(j.completion_time(), Some(100.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Jobs: the DL model catalogue (Tables II/III), the job abstraction
+//! (Table I notation), throughput modelling (Eq. 10 + online refinement),
+//! and the global queue.
+
+pub mod job;
+pub mod model;
+pub mod queue;
+pub mod throughput;
+
+pub use job::{Job, JobId, JobStatus};
+pub use model::{DlModel, QualityMetric, SizeClass};
+pub use queue::JobQueue;

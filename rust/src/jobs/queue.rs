@@ -1,0 +1,136 @@
+//! The global job queue managed by the scheduler (paper §III-A): arrival
+//! admission, status tracking, and the per-round waiting set.
+
+use crate::jobs::job::{Job, JobId, JobStatus};
+use std::collections::BTreeMap;
+
+/// Owns all jobs through their lifecycle.
+#[derive(Clone, Debug, Default)]
+pub struct JobQueue {
+    jobs: BTreeMap<JobId, Job>,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        JobQueue::default()
+    }
+
+    pub fn admit(&mut self, job: Job) {
+        assert!(
+            !self.jobs.contains_key(&job.id),
+            "duplicate job id {}",
+            job.id
+        );
+        self.jobs.insert(job.id, job);
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.jobs.get_mut(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Job> {
+        self.jobs.values_mut()
+    }
+
+    /// Jobs that have arrived by `now` and are not complete — the waiting
+    /// set `Q` a scheduler sees in a round.
+    pub fn active_at(&self, now: f64) -> Vec<JobId> {
+        self.jobs
+            .values()
+            .filter(|j| j.arrival <= now && j.status != JobStatus::Completed)
+            .map(|j| j.id)
+            .collect()
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.jobs
+            .values()
+            .all(|j| j.status == JobStatus::Completed)
+    }
+
+    pub fn completed(&self) -> Vec<&Job> {
+        self.jobs
+            .values()
+            .filter(|j| j.status == JobStatus::Completed)
+            .collect()
+    }
+
+    /// Earliest arrival among jobs not yet arrived at `now` (next event).
+    pub fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.jobs
+            .values()
+            .filter(|j| j.arrival > now)
+            .map(|j| j.arrival)
+            .fold(None, |acc, a| {
+                Some(acc.map_or(a, |b: f64| b.min(a)))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::model::DlModel;
+
+    fn mk(id: u64, arrival: f64) -> Job {
+        Job::new(id, DlModel::Lstm, arrival, 1, 1, 10)
+    }
+
+    #[test]
+    fn admission_and_lookup() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 0.0));
+        q.admit(mk(2, 5.0));
+        assert_eq!(q.len(), 2);
+        assert!(q.get(JobId(1)).is_some());
+        assert!(q.get(JobId(3)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_admission_panics() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 0.0));
+        q.admit(mk(1, 1.0));
+    }
+
+    #[test]
+    fn active_set_respects_arrival_and_completion() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 0.0));
+        q.admit(mk(2, 100.0));
+        assert_eq!(q.active_at(50.0), vec![JobId(1)]);
+        assert_eq!(q.active_at(100.0).len(), 2);
+        q.get_mut(JobId(1)).unwrap().status = JobStatus::Completed;
+        assert_eq!(q.active_at(100.0), vec![JobId(2)]);
+        assert!(!q.all_complete());
+        q.get_mut(JobId(2)).unwrap().status = JobStatus::Completed;
+        assert!(q.all_complete());
+    }
+
+    #[test]
+    fn next_arrival() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 10.0));
+        q.admit(mk(2, 30.0));
+        assert_eq!(q.next_arrival_after(0.0), Some(10.0));
+        assert_eq!(q.next_arrival_after(10.0), Some(30.0));
+        assert_eq!(q.next_arrival_after(30.0), None);
+    }
+}

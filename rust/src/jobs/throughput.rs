@@ -1,0 +1,184 @@
+//! Throughput modelling: measured anchors, the paper's Eq. (10) initial
+//! estimator, and the online refinement loop (§V-A "Initial Throughput
+//! Estimation").
+//!
+//! ```text
+//! Throughput = PMI * batch_size * pcie_scaling / (model_weight * dataset_size)
+//! ```
+//!
+//! The estimator is calibrated per model so that its V100 prediction equals
+//! the measured V100 anchor; other GPU types then scale by their PMI and
+//! PCIe terms. During emulated execution, measured samples are folded in
+//! with an exponential moving average, reproducing the paper's progressive
+//! refinement.
+
+use crate::cluster::gpu::{GpuType, PcieGen};
+use crate::jobs::model::DlModel;
+use std::collections::BTreeMap;
+
+/// Raw Eq. (10) value (uncalibrated).
+pub fn eq10_raw(model: DlModel, gpu: GpuType, pcie: PcieGen) -> f64 {
+    gpu.pmi() * model.batch_size() * pcie.scaling()
+        / (model.weight_scale() * model.size_class().dataset_scale())
+}
+
+/// Eq. (10) estimate calibrated to the model's V100 anchor, in
+/// iterations/second.
+pub fn estimate(model: DlModel, gpu: GpuType, pcie: PcieGen) -> f64 {
+    let anchor = model
+        .anchor_throughput(GpuType::V100)
+        .expect("V100 anchor always present");
+    let raw_v100 = eq10_raw(model, GpuType::V100, PcieGen::Gen3);
+    anchor * eq10_raw(model, gpu, pcie) / raw_v100
+}
+
+/// A job's throughput row over the GPU types of a cluster: measured anchors
+/// where available, Eq. (10) estimates elsewhere.
+pub fn throughput_row(model: DlModel, gpu_pcie: &[(GpuType, PcieGen)])
+                      -> BTreeMap<GpuType, f64> {
+    let mut row = BTreeMap::new();
+    for &(gpu, pcie) in gpu_pcie {
+        let x = model
+            .anchor_throughput(gpu)
+            .unwrap_or_else(|| estimate(model, gpu, pcie));
+        row.insert(gpu, x);
+    }
+    row
+}
+
+/// Online estimator: starts from Eq. (10)/anchors and folds in measured
+/// iterations/sec samples (EMA), as the Job Tracker receives per-round
+/// reports.
+#[derive(Clone, Debug)]
+pub struct OnlineEstimator {
+    /// Current estimates keyed by (model, gpu type).
+    estimates: BTreeMap<(DlModel, GpuType), f64>,
+    /// Number of measurements folded in per key.
+    samples: BTreeMap<(DlModel, GpuType), usize>,
+    /// EMA factor for new measurements.
+    pub alpha: f64,
+}
+
+impl OnlineEstimator {
+    pub fn new(alpha: f64) -> Self {
+        OnlineEstimator {
+            estimates: BTreeMap::new(),
+            samples: BTreeMap::new(),
+            alpha,
+        }
+    }
+
+    /// Current estimate; seeds from anchors/Eq. (10) on first access.
+    pub fn get(&mut self, model: DlModel, gpu: GpuType, pcie: PcieGen) -> f64 {
+        *self
+            .estimates
+            .entry((model, gpu))
+            .or_insert_with(|| {
+                model
+                    .anchor_throughput(gpu)
+                    .unwrap_or_else(|| estimate(model, gpu, pcie))
+            })
+    }
+
+    /// Fold in one measured sample (iterations/sec on one GPU).
+    pub fn observe(&mut self, model: DlModel, gpu: GpuType, measured: f64) {
+        let e = self.estimates.entry((model, gpu)).or_insert(measured);
+        *e = (1.0 - self.alpha) * *e + self.alpha * measured;
+        *self.samples.entry((model, gpu)).or_insert(0) += 1;
+    }
+
+    pub fn sample_count(&self, model: DlModel, gpu: GpuType) -> usize {
+        self.samples.get(&(model, gpu)).copied().unwrap_or(0)
+    }
+
+    /// Mean absolute relative error against a ground-truth function —
+    /// used by the estimator-quality ablation bench.
+    pub fn relative_error(
+        &mut self,
+        pairs: &[(DlModel, GpuType, PcieGen)],
+        truth: impl Fn(DlModel, GpuType) -> f64,
+    ) -> f64 {
+        let mut err = 0.0;
+        for &(m, g, p) in pairs {
+            let e = self.get(m, g, p);
+            let t = truth(m, g);
+            err += ((e - t) / t).abs();
+        }
+        err / pairs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_matches_anchor_on_v100() {
+        for m in DlModel::ALL {
+            let est = estimate(m, GpuType::V100, PcieGen::Gen3);
+            let anchor = m.anchor_throughput(GpuType::V100).unwrap();
+            assert!((est - anchor).abs() / anchor < 1e-9, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn estimate_monotone_in_pmi() {
+        // Faster GPUs (higher PMI) get higher estimates.
+        for m in DlModel::ALL {
+            let t4 = estimate(m, GpuType::T4, PcieGen::Gen3);
+            let t400 = estimate(m, GpuType::T400, PcieGen::Gen3);
+            let r3090 = estimate(m, GpuType::Rtx3090, PcieGen::Gen3);
+            assert!(r3090 > t4 && t4 > t400, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn pcie_gen4_improves_estimate() {
+        let g3 = estimate(DlModel::MiMa, GpuType::Rtx3090, PcieGen::Gen3);
+        let g4 = estimate(DlModel::MiMa, GpuType::Rtx3090, PcieGen::Gen4);
+        assert!(g4 > g3);
+    }
+
+    #[test]
+    fn throughput_row_prefers_anchors() {
+        let row = throughput_row(
+            DlModel::ResNet50,
+            &[
+                (GpuType::V100, PcieGen::Gen3),
+                (GpuType::K80, PcieGen::Gen3),
+                (GpuType::T4, PcieGen::Gen3),
+            ],
+        );
+        assert_eq!(row[&GpuType::V100], 3.2);
+        assert_eq!(row[&GpuType::K80], 0.32); // anchor, not estimate
+        assert!(row[&GpuType::T4] > 0.0);
+    }
+
+    #[test]
+    fn online_estimator_converges_to_measurements() {
+        let mut est = OnlineEstimator::new(0.5);
+        let initial = est.get(DlModel::Lstm, GpuType::T4, PcieGen::Gen3);
+        let truth = initial * 2.0;
+        for _ in 0..20 {
+            est.observe(DlModel::Lstm, GpuType::T4, truth);
+        }
+        let now = est.get(DlModel::Lstm, GpuType::T4, PcieGen::Gen3);
+        assert!((now - truth).abs() / truth < 1e-3);
+        assert_eq!(est.sample_count(DlModel::Lstm, GpuType::T4), 20);
+    }
+
+    #[test]
+    fn relative_error_decreases_with_observations() {
+        let mut est = OnlineEstimator::new(0.5);
+        let pairs = [(DlModel::MiMa, GpuType::TitanRtx, PcieGen::Gen3)];
+        let truth =
+            |m: DlModel, g: GpuType| estimate(m, g, PcieGen::Gen3) * 1.5;
+        let before = est.relative_error(&pairs, truth);
+        for _ in 0..10 {
+            est.observe(DlModel::MiMa, GpuType::TitanRtx,
+                        truth(DlModel::MiMa, GpuType::TitanRtx));
+        }
+        let after = est.relative_error(&pairs, truth);
+        assert!(after < before);
+    }
+}

@@ -1,0 +1,36 @@
+//! # Hadar / HadarE — heterogeneity-aware DL-cluster scheduling
+//!
+//! Reproduction of *Resource Heterogeneity-Aware and Utilization-Enhanced
+//! Scheduling for Deep Learning Clusters* (Sultana et al., IEEE TC 2025;
+//! Hadar first appeared at IPDPS'24).
+//!
+//! Layer-3 of the three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`sched`] — the paper's contribution: the Hadar primal-dual/DP
+//!   scheduler (Algorithms 1-2), the Gavel/Tiresias/YARN-CS baselines, and
+//!   the HadarE forking scheduler.
+//! * [`sim`] — discrete-time trace-driven simulator (paper §IV).
+//! * [`exec`] — physical-cluster *emulation*: virtual-clock heterogeneous
+//!   nodes running **real** training steps through the PJRT runtime
+//!   (paper §VI), including HadarE's aggregate + consolidate loop.
+//! * [`runtime`] — loads the AOT-compiled HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them via the `xla` crate's PJRT
+//!   CPU client. Python never runs on this path.
+//! * [`cluster`], [`jobs`], [`trace`] — the modelled world: GPU types,
+//!   nodes, jobs, throughput matrices, Philly-like traces, workload mixes.
+//! * [`forking`] — HadarE's Job Forker and Job Tracker (paper §V).
+//! * [`figures`] — one driver per paper table/figure (see DESIGN.md's
+//!   experiment index), shared by examples and benches.
+//! * [`util`] — self-contained substrates (JSON, RNG, CLI, stats, tables,
+//!   property-test + bench harnesses).
+
+pub mod cluster;
+pub mod exec;
+pub mod figures;
+pub mod forking;
+pub mod jobs;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,159 @@
+//! `hadar` — CLI for the Hadar/HadarE scheduling framework.
+//!
+//! Subcommands map onto the paper's experiments (see DESIGN.md):
+//!   workloads   Tables II/III
+//!   motivate    Fig. 1 motivational example
+//!   simulate    trace-driven simulation, Figs. 3-4
+//!   scale       Fig. 5 scheduling-time scalability
+//!   rounds      Fig. 6 Hadar vs HadarE round timelines
+//!   physical    Figs. 8-10 mixes grid
+//!   slots       Figs. 11-12 slot-time sweeps
+//!   train       end-to-end real-training emulation + Table IV
+//!   bench-info  where each figure's bench target lives
+
+use hadar::util::cli::{App, Args, Command, Parsed};
+
+fn app() -> App {
+    App::new("hadar", "heterogeneity-aware DL cluster scheduling (paper reproduction)")
+        .command(Command::new("workloads", "print Tables II and III"))
+        .command(Command::new("motivate", "Fig. 1 motivational example (Gavel vs Hadar)"))
+        .command(
+            Command::new("simulate", "trace-driven simulation (Figs. 3-4)")
+                .opt("jobs", Some("480"), "number of trace jobs")
+                .opt("seed", Some("42"), "trace seed")
+                .opt("slot", Some("360"), "slot length in seconds")
+                .opt("hours-scale", Some("1.0"), "scale on job GPU-hours"),
+        )
+        .command(
+            Command::new("scale", "Fig. 5 scheduling-time scalability")
+                .opt("max", Some("2048"), "largest job count (powers of 2 from 32)"),
+        )
+        .command(Command::new("rounds", "Fig. 6 round-by-round Hadar vs HadarE"))
+        .command(
+            Command::new("physical", "Figs. 8-10 workload-mix grid")
+                .opt("slot", Some("360"), "slot length in seconds"),
+        )
+        .command(
+            Command::new("slots", "Figs. 11-12 slot-time sweeps")
+                .opt("scheduler", Some("hadare"), "hadare or hadar"),
+        )
+        .command(
+            Command::new("train", "end-to-end real-training emulation (Table IV)")
+                .opt("mix", Some("M-5"), "workload mix (M-1..M-12)")
+                .opt("steps-scale", Some("0.01"), "virtual->real step ratio")
+                .opt("seed", Some("42"), "emulation seed"),
+        )
+        .command(Command::new("bench-info", "map figures/tables to bench targets"))
+}
+
+fn cmd_simulate(args: &Args) {
+    let cfg = hadar::figures::trace_eval::TraceEvalConfig {
+        n_jobs: args.get_usize("jobs"),
+        seed: args.get_u64("seed"),
+        slot_secs: args.get_f64("slot"),
+        hours_scale: args.get_f64("hours-scale"),
+    };
+    let te = hadar::figures::trace_eval::run(&cfg);
+    println!("{}", hadar::figures::trace_eval::render_fig3(&te));
+    println!("{}", hadar::figures::trace_eval::render_fig4(&te));
+}
+
+fn cmd_scale(args: &Args) {
+    let max = args.get_usize("max");
+    let mut scales = Vec::new();
+    let mut n = 32;
+    while n <= max {
+        scales.push(n);
+        n *= 2;
+    }
+    let pts = hadar::figures::fig5::run(&scales);
+    println!("{}", hadar::figures::fig5::render(&pts));
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    use hadar::exec::emulation::*;
+    use hadar::sim::engine::SimConfig;
+    let manifest = hadar::runtime::Manifest::load(
+        hadar::runtime::Manifest::default_dir(),
+    )
+    .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts`"))?;
+    let cfg = EmulationConfig {
+        sim: SimConfig {
+            slot_secs: 90.0,
+            restart_overhead: 10.0,
+            max_rounds: 2_000,
+            horizon: 1e7,
+        },
+        steps_scale: args.get_f64("steps-scale"),
+        max_real_steps_per_round: 200,
+        lr: 0.1,
+        seed: args.get_u64("seed"),
+    };
+    let t4 = hadar::figures::table4::run(&manifest, &cfg)?;
+    println!("{}", hadar::figures::table4::render(&t4));
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&argv) {
+        Parsed::Help(text) => print!("{text}"),
+        Parsed::Error(text) => {
+            eprint!("{text}");
+            std::process::exit(2);
+        }
+        Parsed::Run(cmd, args) => match cmd.as_str() {
+            "workloads" => {
+                println!("{}", hadar::figures::workloads::render_table2());
+                println!("{}", hadar::figures::workloads::render_table3());
+            }
+            "motivate" => {
+                let f = hadar::figures::fig1::run();
+                println!("{}", hadar::figures::fig1::render(&f));
+            }
+            "simulate" => cmd_simulate(&args),
+            "scale" => cmd_scale(&args),
+            "rounds" => {
+                let f = hadar::figures::fig6::run();
+                println!("{}", hadar::figures::fig6::render(&f));
+            }
+            "physical" => {
+                let p = hadar::figures::physical::run(args.get_f64("slot"));
+                println!("{}", hadar::figures::physical::render_fig8(&p));
+                println!("{}", hadar::figures::physical::render_fig9(&p));
+                println!("{}", hadar::figures::physical::render_fig10(&p));
+            }
+            "slots" => {
+                let s = hadar::figures::slots::run(&args.get_str("scheduler"));
+                println!("{}", hadar::figures::slots::render(&s));
+            }
+            "train" => {
+                if let Err(e) = cmd_train(&args) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            "bench-info" => {
+                println!(
+                    "figure/table -> bench target (cargo bench --bench <name>)\n\
+                     Fig. 1   fig1_motivation\n\
+                     Fig. 3   fig3_gru\n\
+                     Fig. 4   fig4_ttd_cdf\n\
+                     Fig. 5   fig5_scalability\n\
+                     Fig. 6   fig6_rounds\n\
+                     Fig. 8   fig8_cru\n\
+                     Fig. 9   fig9_ttd\n\
+                     Fig. 10  fig10_jct\n\
+                     Fig. 11  fig11_slot_hadare\n\
+                     Fig. 12  fig12_slot_hadar\n\
+                     Table IV table4_quality\n\
+                     ablations ablation_hadar, ablation_estimator"
+                );
+            }
+            other => {
+                eprintln!("unhandled command {other}");
+                std::process::exit(2);
+            }
+        },
+    }
+}

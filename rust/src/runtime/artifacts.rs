@@ -1,0 +1,210 @@
+//! The AOT artifact manifest — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::util::json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// How a parameter is initialised (mirrors `model.init_params`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    Ones,
+    Zeros,
+    /// Gaussian with the given stddev.
+    Normal(f64),
+}
+
+/// One flat parameter slot.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered model variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+}
+
+impl Variant {
+    /// Token input shape for train_step: [batch, seq+1].
+    pub fn token_len(&self) -> usize {
+        self.batch * (self.seq + 1)
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        if v.get("format").as_usize() != Some(1) {
+            return Err("unsupported manifest format".into());
+        }
+        let mut variants = BTreeMap::new();
+        let vmap = v
+            .get("variants")
+            .as_obj()
+            .ok_or("manifest: missing 'variants'")?;
+        for (name, entry) in vmap {
+            let cfg = entry.get("config");
+            let mut params = Vec::new();
+            for p in entry
+                .get("params")
+                .as_arr()
+                .ok_or("variant: missing 'params'")?
+            {
+                let kind = p.get("kind").as_str().unwrap_or("normal");
+                let init = match kind {
+                    "ones" => Init::Ones,
+                    "zeros" => Init::Zeros,
+                    "normal" => Init::Normal(
+                        p.get("scale").as_f64().unwrap_or(0.02),
+                    ),
+                    other => return Err(format!("unknown init '{other}'")),
+                };
+                params.push(ParamSpec {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or("param missing name")?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or("param missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    init,
+                });
+            }
+            let variant = Variant {
+                name: name.clone(),
+                vocab: cfg.get("vocab").as_usize().unwrap_or(0),
+                d_model: cfg.get("d_model").as_usize().unwrap_or(0),
+                n_layers: cfg.get("n_layers").as_usize().unwrap_or(0),
+                seq: cfg.get("seq").as_usize().unwrap_or(0),
+                batch: cfg.get("batch").as_usize().unwrap_or(0),
+                param_count: entry.get("param_count").as_usize().unwrap_or(0),
+                params,
+                train_hlo: dir.join(
+                    entry.get("train_hlo").as_str().ok_or("missing train_hlo")?,
+                ),
+                eval_hlo: dir.join(
+                    entry.get("eval_hlo").as_str().ok_or("missing eval_hlo")?,
+                ),
+            };
+            variants.insert(name.clone(), variant);
+        }
+        if variants.is_empty() {
+            return Err("manifest has no variants".into());
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.get(name)
+    }
+
+    /// Default artifact directory: `$HADAR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HADAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "variants": {
+        "tiny": {
+          "config": {"name": "tiny", "vocab": 256, "d_model": 64,
+                     "n_layers": 2, "n_heads": 2, "d_ff": 128,
+                     "seq": 64, "batch": 8},
+          "param_count": 87040,
+          "params": [
+            {"name": "tok_emb", "shape": [256, 64], "kind": "normal",
+             "scale": 0.02},
+            {"name": "layer0.ln1.g", "shape": [64], "kind": "ones"},
+            {"name": "layer0.b1", "shape": [128], "kind": "zeros"}
+          ],
+          "train_hlo": "tiny_train.hlo.txt",
+          "eval_hlo": "tiny_eval.hlo.txt",
+          "train_inputs": {"tokens": [8, 65], "lr": [], "n_params": 26}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.vocab, 256);
+        assert_eq!(v.batch, 8);
+        assert_eq!(v.params.len(), 3);
+        assert_eq!(v.params[0].init, Init::Normal(0.02));
+        assert_eq!(v.params[1].init, Init::Ones);
+        assert_eq!(v.params[2].init, Init::Zeros);
+        assert_eq!(v.params[0].numel(), 256 * 64);
+        assert_eq!(v.train_hlo, PathBuf::from("/tmp/a/tiny_train.hlo.txt"));
+        assert_eq!(v.token_len(), 8 * 65);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "variants": {}}"#,
+                                PathBuf::new())
+            .is_err());
+        assert!(Manifest::parse(r#"{"format": 1, "variants": {}}"#,
+                                PathBuf::new())
+            .is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.variant("tiny").is_some());
+            let v = m.variant("tiny").unwrap();
+            assert!(v.train_hlo.exists());
+            assert!(v.eval_hlo.exists());
+        }
+    }
+}

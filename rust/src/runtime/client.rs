@@ -1,0 +1,221 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! on the `xla` crate's CPU client. This is the only place the training
+//! path touches compiled compute — Python never runs here.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md: jax >= 0.5 serialized protos are rejected by
+//! xla_extension 0.5.1; the text parser reassigns instruction ids).
+
+use crate::runtime::artifacts::{Init, Manifest, Variant};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+
+/// Owns the PJRT client; compile once, execute many.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled train-step: `(tokens, lr, P params, P momenta) ->
+/// (loss, P params, P momenta)` as one HLO module (fwd + bwd + SGD fused).
+pub struct TrainStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// A compiled eval-step: `(tokens, P params) -> (loss, accuracy)`.
+pub struct EvalStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_params: usize,
+}
+
+/// Model state held as host literals between steps.
+pub struct ModelState {
+    pub params: Vec<xla::Literal>,
+    pub momenta: Vec<xla::Literal>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &std::path::Path)
+                    -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    /// Compile the train-step artifact of one variant.
+    pub fn load_train(&self, variant: &Variant) -> Result<TrainStep> {
+        Ok(TrainStep {
+            exe: self.compile_file(&variant.train_hlo)?,
+            n_params: variant.params.len(),
+            batch: variant.batch,
+            seq: variant.seq,
+        })
+    }
+
+    /// Compile the eval-step artifact of one variant.
+    pub fn load_eval(&self, variant: &Variant) -> Result<EvalStep> {
+        Ok(EvalStep {
+            exe: self.compile_file(&variant.eval_hlo)?,
+            n_params: variant.params.len(),
+        })
+    }
+
+    /// Initialise a model state from the manifest's init specs with a
+    /// deterministic seed (mirrors `model.init_params` semantics; exact
+    /// values differ — documented in DESIGN.md).
+    pub fn init_state(&self, variant: &Variant, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed ^ 0x11AD_A12E);
+        let mut params = Vec::with_capacity(variant.params.len());
+        let mut momenta = Vec::with_capacity(variant.params.len());
+        for spec in &variant.params {
+            let n = spec.numel();
+            let values: Vec<f32> = match spec.init {
+                Init::Ones => vec![1.0; n],
+                Init::Zeros => vec![0.0; n],
+                Init::Normal(scale) => (0..n)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect(),
+            };
+            params.push(literal_f32(&values, &spec.shape));
+            momenta.push(literal_f32(&vec![0.0; n], &spec.shape));
+        }
+        ModelState { params, momenta }
+    }
+}
+
+/// Build an f32 literal with the given shape.
+pub fn literal_f32(values: &[f32], shape: &[usize]) -> xla::Literal {
+    let flat = xla::Literal::vec1(values);
+    if shape.len() == 1 {
+        flat
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        flat.reshape(&dims).expect("reshape literal")
+    }
+}
+
+/// Build an i32 token literal of shape [batch, seq+1].
+pub fn literal_tokens(tokens: &[i32], batch: usize, seq_plus1: usize)
+                      -> xla::Literal {
+    assert_eq!(tokens.len(), batch * seq_plus1);
+    xla::Literal::vec1(tokens)
+        .reshape(&[batch as i64, seq_plus1 as i64])
+        .expect("reshape tokens")
+}
+
+impl TrainStep {
+    /// Run one SGD step; returns the loss and advances `state` in place.
+    pub fn step(&self, state: &mut ModelState, tokens: &[i32], lr: f32)
+                -> Result<f32> {
+        let tok = literal_tokens(tokens, self.batch, self.seq + 1);
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(
+            2 + 2 * self.n_params,
+        );
+        args.push(&tok);
+        args.push(&lr_lit);
+        args.extend(state.params.iter());
+        args.extend(state.momenta.iter());
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("train step execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose result: {e:?}"))?;
+        if parts.len() != 1 + 2 * self.n_params {
+            return Err(anyhow!(
+                "train step returned {} outputs, expected {}",
+                parts.len(),
+                1 + 2 * self.n_params
+            ));
+        }
+        let momenta: Vec<xla::Literal> =
+            parts.split_off(1 + self.n_params);
+        let params: Vec<xla::Literal> = parts.split_off(1);
+        let loss = parts[0]
+            .to_vec::<f32>()
+            .context("loss literal")?[0];
+        state.params = params;
+        state.momenta = momenta;
+        Ok(loss)
+    }
+}
+
+impl EvalStep {
+    /// Evaluate on one batch: (cross-entropy loss, top-1 accuracy).
+    pub fn eval(&self, state: &ModelState, tokens: &[i32], batch: usize,
+                seq_plus1: usize) -> Result<(f32, f32)> {
+        let tok = literal_tokens(tokens, batch, seq_plus1);
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(1 + self.n_params);
+        args.push(&tok);
+        args.extend(state.params.iter());
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("eval execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch eval: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose eval: {e:?}"))?;
+        let loss = parts[0].to_vec::<f32>().context("loss")?[0];
+        let acc = parts[1].to_vec::<f32>().context("acc")?[0];
+        Ok((loss, acc))
+    }
+}
+
+/// Flatten a state's parameters to one f32 vector (consolidation I/O).
+pub fn flatten_params(params: &[xla::Literal]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for p in params {
+        out.extend(p.to_vec::<f32>().context("flatten param")?);
+    }
+    Ok(out)
+}
+
+/// Rebuild parameter literals from a flat vector using the variant's specs.
+pub fn unflatten_params(flat: &[f32], variant: &Variant)
+                        -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(variant.params.len());
+    let mut off = 0;
+    for spec in &variant.params {
+        let n = spec.numel();
+        if off + n > flat.len() {
+            return Err(anyhow!("flat params too short"));
+        }
+        out.push(literal_f32(&flat[off..off + n], &spec.shape));
+        off += n;
+    }
+    if off != flat.len() {
+        return Err(anyhow!("flat params too long: {} vs {}", flat.len(), off));
+    }
+    Ok(out)
+}
+
+/// Load the default manifest (helper shared by examples/benches/tests).
+pub fn load_default_manifest() -> Result<Manifest> {
+    Manifest::load(Manifest::default_dir())
+        .map_err(|e| anyhow!("load manifest: {e} (run `make artifacts`)"))
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: artifact manifest, compiled executables, and the trainer
+//! substrate (synthetic corpora, consolidation).
+
+pub mod artifacts;
+pub mod client;
+pub mod trainer;
+
+pub use artifacts::{Init, Manifest, ParamSpec, Variant};
+pub use client::{
+    flatten_params, literal_f32, literal_tokens, load_default_manifest,
+    unflatten_params, EvalStep, ModelState, Runtime, TrainStep,
+};
+pub use trainer::{consolidate_states, Corpus, Trainer};

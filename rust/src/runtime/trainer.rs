@@ -1,0 +1,146 @@
+//! Trainer: synthetic corpus generation + the training-loop driver the
+//! emulated cluster nodes share, including HadarE's parameter
+//! consolidation in literal space.
+
+use crate::forking::tracker::consolidate_weights;
+use crate::runtime::artifacts::Variant;
+use crate::runtime::client::{
+    flatten_params, unflatten_params, ModelState, TrainStep,
+};
+use crate::util::rng::{Rng, ZipfTable};
+use anyhow::Result;
+
+/// Deterministic synthetic corpus: a Zipf-weighted order-1 Markov chain
+/// over the vocabulary. It has real learnable structure (transition rows
+/// are low-entropy) so cross-entropy falls well below log(vocab) and
+/// next-token accuracy is meaningful — the substitution for the paper's
+/// datasets (DESIGN.md §Substitutions).
+pub struct Corpus {
+    vocab: usize,
+    /// Per-state candidate successors (front-loaded probability).
+    successors: Vec<Vec<u32>>,
+    zipf: ZipfTable,
+}
+
+impl Corpus {
+    /// `branch` successors per state; smaller = more learnable.
+    pub fn new(vocab: usize, branch: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC0E9_05);
+        let successors = (0..vocab)
+            .map(|_| {
+                (0..branch.max(1))
+                    .map(|_| rng.below(vocab as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        Corpus {
+            vocab,
+            successors,
+            zipf: ZipfTable::new(branch.max(1), 1.5),
+        }
+    }
+
+    /// Sample a `[batch, seq+1]` token batch (flattened row-major).
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq_plus1: usize)
+                 -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_plus1);
+        for _ in 0..batch {
+            let mut cur = rng.below(self.vocab as u64) as usize;
+            out.push(cur as i32);
+            for _ in 1..seq_plus1 {
+                let succ = &self.successors[cur];
+                cur = succ[self.zipf.sample(rng)] as usize;
+                out.push(cur as i32);
+            }
+        }
+        out
+    }
+}
+
+/// One model under training: state + its data stream.
+pub struct Trainer {
+    pub state: ModelState,
+    pub corpus: Corpus,
+    pub rng: Rng,
+    pub steps_done: u64,
+    pub losses: Vec<(u64, f32)>,
+    pub lr: f32,
+}
+
+impl Trainer {
+    /// `corpus_seed` defines the data distribution (shared across copies
+    /// and with the evaluator); the sampling stream is derived from it.
+    pub fn new(state: ModelState, vocab: usize, corpus_seed: u64, lr: f32)
+               -> Self {
+        Trainer {
+            state,
+            corpus: Corpus::new(vocab, 4, corpus_seed),
+            rng: Rng::new(corpus_seed ^ 0x7EA1),
+            steps_done: 0,
+            losses: Vec::new(),
+            lr,
+        }
+    }
+
+    /// Run `n` real train steps through the compiled executable.
+    pub fn run_steps(&mut self, exe: &TrainStep, n: u64) -> Result<f32> {
+        let mut last = f32::NAN;
+        for _ in 0..n {
+            let tokens =
+                self.corpus.batch(&mut self.rng, exe.batch, exe.seq + 1);
+            last = exe.step(&mut self.state, &tokens, self.lr)?;
+            self.steps_done += 1;
+            self.losses.push((self.steps_done, last));
+        }
+        Ok(last)
+    }
+}
+
+/// HadarE §V-B consolidation over literal-space parameter vectors:
+/// flatten each copy's parameters, weight-average, unflatten.
+pub fn consolidate_states(states: &[&ModelState], weights: &[f64],
+                          variant: &Variant) -> Result<Vec<xla::Literal>> {
+    let flats: Vec<Vec<f32>> = states
+        .iter()
+        .map(|s| flatten_params(&s.params))
+        .collect::<Result<_>>()?;
+    let avg = consolidate_weights(&flats, weights);
+    unflatten_params(&avg, variant)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic_and_in_range() {
+        let c = Corpus::new(64, 4, 9);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = c.batch(&mut r1, 2, 10);
+        let b = c.batch(&mut r2, 2, 10);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        assert!(a.iter().all(|&t| t >= 0 && (t as usize) < 64));
+    }
+
+    #[test]
+    fn corpus_has_learnable_structure() {
+        // Transitions should be concentrated: the same current token leads
+        // to few successors.
+        let c = Corpus::new(32, 2, 1);
+        let mut rng = Rng::new(2);
+        let toks = c.batch(&mut rng, 8, 65);
+        let mut pairs = std::collections::BTreeMap::new();
+        for row in toks.chunks(65) {
+            for w in row.windows(2) {
+                pairs
+                    .entry(w[0])
+                    .or_insert_with(std::collections::BTreeSet::new)
+                    .insert(w[1]);
+            }
+        }
+        // Each state has at most `branch` = 2 successors.
+        assert!(pairs.values().all(|s| s.len() <= 2));
+    }
+}

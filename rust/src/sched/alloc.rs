@@ -1,0 +1,127 @@
+//! Round plans: what a scheduler returns for one scheduling round.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::Assignment;
+use crate::jobs::job::JobId;
+use std::collections::BTreeMap;
+
+/// The allocation decided for one job in one round: its `w_{jh}^r` entries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobAllocation {
+    /// (node, gpu type) -> count.
+    pub slots: BTreeMap<(usize, GpuType), usize>,
+}
+
+impl JobAllocation {
+    pub fn new() -> Self {
+        JobAllocation::default()
+    }
+
+    pub fn add(&mut self, node: usize, gpu: GpuType, count: usize) {
+        if count > 0 {
+            *self.slots.entry((node, gpu)).or_insert(0) += count;
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.slots.values().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// GPU types used (for the bottleneck rule Eq. (1b)).
+    pub fn gpu_types(&self) -> Vec<GpuType> {
+        let mut types: Vec<GpuType> =
+            self.slots.keys().map(|&(_, g)| g).collect();
+        types.sort();
+        types.dedup();
+        types
+    }
+
+    /// Distinct nodes used (consolidation / comm-cost check).
+    pub fn nodes(&self) -> Vec<usize> {
+        let mut nodes: Vec<usize> =
+            self.slots.keys().map(|&(h, _)| h).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    pub fn assignments(&self, job: JobId) -> Vec<Assignment> {
+        self.slots
+            .iter()
+            .map(|(&(node, gpu), &count)| Assignment {
+                job,
+                node,
+                gpu,
+                count,
+            })
+            .collect()
+    }
+}
+
+/// A full round plan: job -> allocation. Jobs absent from the map receive
+/// nothing this round (the all-or-nothing constraint (1e) is enforced by
+/// the schedulers: present jobs get exactly `W_j` GPUs).
+#[derive(Clone, Debug, Default)]
+pub struct RoundPlan {
+    pub allocations: BTreeMap<JobId, JobAllocation>,
+}
+
+impl RoundPlan {
+    pub fn new() -> Self {
+        RoundPlan::default()
+    }
+
+    pub fn insert(&mut self, job: JobId, alloc: JobAllocation) {
+        if !alloc.is_empty() {
+            self.allocations.insert(job, alloc);
+        }
+    }
+
+    pub fn get(&self, job: JobId) -> Option<&JobAllocation> {
+        self.allocations.get(&job)
+    }
+
+    pub fn scheduled_jobs(&self) -> Vec<JobId> {
+        self.allocations.keys().copied().collect()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.allocations.values().map(|a| a.total_gpus()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_accounting() {
+        let mut a = JobAllocation::new();
+        a.add(0, GpuType::V100, 2);
+        a.add(1, GpuType::P100, 1);
+        a.add(0, GpuType::V100, 1); // accumulates
+        a.add(2, GpuType::K80, 0); // ignored
+        assert_eq!(a.total_gpus(), 4);
+        assert_eq!(a.gpu_types(), vec![GpuType::V100, GpuType::P100]);
+        assert_eq!(a.nodes(), vec![0, 1]);
+        let asg = a.assignments(JobId(3));
+        assert_eq!(asg.len(), 2);
+        assert!(asg.iter().all(|x| x.job == JobId(3)));
+    }
+
+    #[test]
+    fn plan_skips_empty_allocations() {
+        let mut plan = RoundPlan::new();
+        plan.insert(JobId(1), JobAllocation::new());
+        assert!(plan.scheduled_jobs().is_empty());
+        let mut a = JobAllocation::new();
+        a.add(0, GpuType::K80, 1);
+        plan.insert(JobId(2), a);
+        assert_eq!(plan.scheduled_jobs(), vec![JobId(2)]);
+        assert_eq!(plan.total_gpus(), 1);
+    }
+}

@@ -1,0 +1,280 @@
+//! **Gavel** baseline [Narayanan et al., OSDI'20] — job-level
+//! heterogeneity-aware round-based scheduling.
+//!
+//! Gavel computes an optimal time-fraction matrix `Y` (how much of each
+//! GPU type each job should receive) and realises it with round-based
+//! priorities `Y_{jr} / rounds_received_j`. The crucial contrast with
+//! Hadar (paper §II-A): **within a round all tasks of a job run on a
+//! single GPU type** — if no one type has `W_j` free GPUs, the job waits,
+//! even when a mixed-type set would satisfy it.
+//!
+//! `Y` here is the max-min-fair water-filling approximation of Gavel's LP:
+//! each job's normalised effective throughput per type, balanced so
+//! per-type demand matches capacity in expectation.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::{Job, JobId};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::BTreeMap;
+
+pub struct Gavel {
+    /// Rounds of service received per (job, GPU type) — Gavel's priority
+    /// denominator tracks how much of each type a job has already had.
+    rounds_received: BTreeMap<(JobId, GpuType), f64>,
+}
+
+impl Default for Gavel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gavel {
+    pub fn new() -> Self {
+        Gavel {
+            rounds_received: BTreeMap::new(),
+        }
+    }
+
+    /// Approximate Gavel's optimal allocation matrix `Y` for the active
+    /// jobs: normalised per-type throughput, water-filled against per-type
+    /// capacity so heavily-demanded types are shared.
+    fn compute_y(jobs: &[&Job], gpu_types: &[GpuType],
+                 capacity: &BTreeMap<GpuType, usize>)
+                 -> BTreeMap<(JobId, GpuType), f64> {
+        let mut y = BTreeMap::new();
+        // Start with throughput-proportional preferences per job.
+        for job in jobs {
+            let total: f64 = gpu_types
+                .iter()
+                .map(|&r| job.throughput_on(r))
+                .sum();
+            if total <= 0.0 {
+                continue;
+            }
+            for &r in gpu_types {
+                y.insert((job.id, r), job.throughput_on(r) / total);
+            }
+        }
+        // Water-fill: scale down columns whose expected demand (in GPUs)
+        // exceeds capacity.
+        for &r in gpu_types {
+            let demand: f64 = jobs
+                .iter()
+                .map(|j| {
+                    y.get(&(j.id, r)).copied().unwrap_or(0.0)
+                        * j.gpus_requested as f64
+                })
+                .sum();
+            let cap = capacity.get(&r).copied().unwrap_or(0) as f64;
+            if demand > cap && demand > 0.0 {
+                let scale = cap / demand;
+                for job in jobs {
+                    if let Some(v) = y.get_mut(&(job.id, r)) {
+                        *v *= scale;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Try to place `W_j` GPUs of one single type `r` (Gavel's job-level
+    /// constraint), consolidating on as few nodes as possible.
+    fn place_single_type(state: &ClusterState, w: usize, r: GpuType)
+                         -> Option<JobAllocation> {
+        if state.free_of_type(r) < w {
+            return None;
+        }
+        let mut slots: Vec<(usize, usize)> = (0..state.n_nodes())
+            .map(|h| (h, state.free(h, r)))
+            .filter(|&(_, f)| f > 0)
+            .collect();
+        slots.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut alloc = JobAllocation::new();
+        let mut need = w;
+        for (h, free) in slots {
+            if need == 0 {
+                break;
+            }
+            let take = free.min(need);
+            alloc.add(h, r, take);
+            need -= take;
+        }
+        (need == 0).then_some(alloc)
+    }
+}
+
+impl Scheduler for Gavel {
+    fn name(&self) -> &'static str {
+        "gavel"
+    }
+
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        let jobs: Vec<&Job> = ctx
+            .active
+            .iter()
+            .filter_map(|&id| ctx.queue.get(id))
+            .filter(|j| !j.is_complete())
+            .collect();
+        if jobs.is_empty() {
+            return RoundPlan::new();
+        }
+        let gpu_types = ctx.cluster.gpu_types();
+        let capacity: BTreeMap<GpuType, usize> = gpu_types
+            .iter()
+            .map(|&r| (r, ctx.cluster.capacity_of(r)))
+            .collect();
+        let y = Self::compute_y(&jobs, &gpu_types, &capacity);
+
+        // Priority list: (job, type) pairs by Y / rounds_received.
+        let mut prios: Vec<(f64, JobId, GpuType)> = Vec::new();
+        for job in &jobs {
+            for &r in &gpu_types {
+                let rr = self
+                    .rounds_received
+                    .get(&(job.id, r))
+                    .copied()
+                    .unwrap_or(0.0);
+                let yv = y.get(&(job.id, r)).copied().unwrap_or(0.0);
+                if yv > 0.0 {
+                    prios.push((yv / (1.0 + rr), job.id, r));
+                }
+            }
+        }
+        prios.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let mut state = ClusterState::new(ctx.cluster);
+        let mut plan = RoundPlan::new();
+        let mut placed: BTreeMap<JobId, bool> = BTreeMap::new();
+        for (_, id, r) in prios {
+            if placed.contains_key(&id) {
+                continue;
+            }
+            let job = ctx.queue.get(id).unwrap();
+            if job.throughput_on(r) <= 0.0 {
+                continue;
+            }
+            if let Some(alloc) =
+                Self::place_single_type(&state, job.gpus_requested.max(1), r)
+            {
+                for a in alloc.assignments(id) {
+                    state.allocate(a);
+                }
+                plan.insert(id, alloc);
+                placed.insert(id, true);
+            }
+        }
+        for id in plan.scheduled_jobs() {
+            for g in plan.get(id).unwrap().gpu_types() {
+                *self.rounds_received.entry((id, g)).or_insert(0.0) += 1.0;
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+
+    fn mk_job(id: u64, w: usize) -> Job {
+        let mut j = Job::new(id, DlModel::ResNet18, 0.0, w, 10, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        j
+    }
+
+    fn ctx<'a>(queue: &'a JobQueue, active: &'a [JobId],
+               cluster: &'a ClusterSpec) -> RoundCtx<'a> {
+        RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue,
+            active,
+            cluster,
+        }
+    }
+
+    #[test]
+    fn cannot_mix_types_for_one_job() {
+        // The paper's §I example: job wants 3 GPUs; cluster has 2 V100 +
+        // 3 P100 + 1 K80. Gavel must place all 3 on P100 (the only type
+        // with >= 3), never mixing.
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 3));
+        let active = vec![JobId(1)];
+        let mut g = Gavel::new();
+        let plan = g.schedule(&ctx(&queue, &active, &cluster));
+        let alloc = plan.get(JobId(1)).expect("P100 pool fits it");
+        assert_eq!(alloc.gpu_types().len(), 1, "single type only");
+        assert_eq!(alloc.gpu_types()[0], GpuType::P100);
+    }
+
+    #[test]
+    fn job_waits_when_no_single_type_fits() {
+        // 4-GPU job: no type has 4 free -> must wait (Hadar would run it).
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 4));
+        let active = vec![JobId(1)];
+        let mut g = Gavel::new();
+        let plan = g.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn rounds_received_rotates_service() {
+        // Two jobs compete for the only V100 pair; after J1 is served its
+        // priority drops and J2 gets the fast type.
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 2));
+        queue.admit(mk_job(2, 2));
+        let active = vec![JobId(1), JobId(2)];
+        let mut g = Gavel::new();
+        let p1 = g.schedule(&ctx(&queue, &active, &cluster));
+        let first_v100: Vec<JobId> = p1
+            .allocations
+            .iter()
+            .filter(|(_, a)| a.gpu_types().contains(&GpuType::V100))
+            .map(|(&id, _)| id)
+            .collect();
+        assert_eq!(first_v100.len(), 1);
+        let p2 = g.schedule(&ctx(&queue, &active, &cluster));
+        let second_v100: Vec<JobId> = p2
+            .allocations
+            .iter()
+            .filter(|(_, a)| a.gpu_types().contains(&GpuType::V100))
+            .map(|(&id, _)| id)
+            .collect();
+        assert_eq!(second_v100.len(), 1);
+        assert_ne!(first_v100[0], second_v100[0], "service rotates");
+    }
+
+    #[test]
+    fn water_filling_caps_demand() {
+        let jobs_owned: Vec<Job> = (0..10).map(|i| mk_job(i, 4)).collect();
+        let jobs: Vec<&Job> = jobs_owned.iter().collect();
+        let types = vec![GpuType::V100, GpuType::P100, GpuType::K80];
+        let cap: BTreeMap<GpuType, usize> =
+            types.iter().map(|&r| (r, 4usize)).collect();
+        let y = Gavel::compute_y(&jobs, &types, &cap);
+        for &r in &types {
+            let demand: f64 = jobs
+                .iter()
+                .map(|j| y[&(j.id, r)] * j.gpus_requested as f64)
+                .sum();
+            assert!(demand <= 4.0 + 1e-9, "{r:?} over-subscribed: {demand}");
+        }
+    }
+}

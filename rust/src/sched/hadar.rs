@@ -1,0 +1,606 @@
+//! **Hadar** — the paper's task-level heterogeneity-aware scheduler
+//! (Algorithms 1 and 2).
+//!
+//! Each round, Hadar prices every (node, GPU-type) pool with the
+//! exponential dual price (Eq. 5, [`price`]) and solves Eq. (8): choose a
+//! subset of queued jobs and task-level allocations minimising priced
+//! resource cost (equivalently maximising total payoff
+//! `φ_j = U_j − Σ k·w`), subject to capacity (1d) and gang all-or-nothing
+//! (1e).
+//!
+//! * `FIND_ALLOC` (Algorithm 2, lines 22-34) generates candidate
+//!   allocations per job — **packed** (consolidated on one node) and
+//!   **spread** (across nodes, with a communication cost), both pure-type
+//!   and mixed-type (the task-level flexibility Gavel lacks) — and keeps
+//!   the payoff-maximal feasible one (`μ_j > 0`).
+//! * `DP_allocation` (lines 1-21) explores select/skip per job with
+//!   memoisation on (job index, server-state digest). Beyond a configurable
+//!   queue size the scheduler switches to the payoff-density greedy that
+//!   the DP converges to — this is what keeps Fig. 5's scheduling times
+//!   flat at thousands of jobs.
+//! * Incremental mode (§IV-B "Scalability") keeps running jobs'
+//!   allocations and only places newcomers, tracking how many rounds
+//!   actually changed allocations (the paper reports ~30%).
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::{Job, JobId};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::price::{PriceBounds, PriceTable};
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::{BTreeMap, HashMap};
+
+/// Tunables (ablated in `benches/ablation_*.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct HadarConfig {
+    /// Eq. (7) scale factor `η` bounding the initial dual objective.
+    pub eta: f64,
+    /// Weight of the non-consolidated communication cost (Algorithm 2,
+    /// line 27) as a fraction of job utility per extra node.
+    pub comm_factor: f64,
+    /// Queue size up to which the exact select/skip DP runs; larger queues
+    /// use the payoff-density greedy.
+    pub dp_job_cap: usize,
+    /// Memoisation budget (entries) for the DP.
+    pub dp_memo_cap: usize,
+    /// Keep running jobs' allocations between rounds, scheduling only
+    /// newcomers (the paper's scalability optimisation).
+    pub incremental: bool,
+    /// Discard candidate allocations whose bottleneck throughput is below
+    /// this fraction of the job's best single-GPU throughput — a gang
+    /// running at (say) <10% efficiency wastes every worker in it
+    /// (Eq. 1b), so waiting a round beats taking the placement.
+    pub min_efficiency: f64,
+}
+
+impl Default for HadarConfig {
+    fn default() -> Self {
+        HadarConfig {
+            eta: 1.0,
+            comm_factor: 0.05,
+            dp_job_cap: 12,
+            dp_memo_cap: 50_000,
+            incremental: false,
+            min_efficiency: 0.0,
+        }
+    }
+}
+
+/// Decision statistics (scalability + the "~30% of rounds change
+/// allocations" observation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HadarStats {
+    pub rounds: u64,
+    pub rounds_with_change: u64,
+    pub dp_invocations: u64,
+    pub greedy_invocations: u64,
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+}
+
+pub struct Hadar {
+    pub cfg: HadarConfig,
+    /// FIND_ALLOC line 23: GPU types sorted by `X_j^r` once per job.
+    type_order: BTreeMap<JobId, Vec<GpuType>>,
+    prev_plan: RoundPlan,
+    pub stats: HadarStats,
+}
+
+impl Default for Hadar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hadar {
+    pub fn new() -> Self {
+        Hadar::with_config(HadarConfig::default())
+    }
+
+    pub fn with_config(cfg: HadarConfig) -> Self {
+        Hadar {
+            cfg,
+            type_order: BTreeMap::new(),
+            prev_plan: RoundPlan::new(),
+            stats: HadarStats::default(),
+        }
+    }
+
+    /// GPU types by descending job throughput (cached for the job's
+    /// lifetime — the O(R·H log H) sort in Theorem 1 happens once).
+    fn sorted_types(&mut self, job: &Job) -> Vec<GpuType> {
+        if let Some(t) = self.type_order.get(&job.id) {
+            return t.clone();
+        }
+        let mut types: Vec<GpuType> = job
+            .throughput
+            .iter()
+            .filter(|(_, &x)| x > 0.0)
+            .map(|(&g, _)| g)
+            .collect();
+        types.sort_by(|a, b| {
+            job.throughput_on(*b)
+                .partial_cmp(&job.throughput_on(*a))
+                .unwrap()
+        });
+        self.type_order.insert(job.id, types.clone());
+        types
+    }
+
+    /// Payoff of a candidate allocation: `U_j(est. completion) − priced
+    /// cost − comm cost` (Algorithm 2 lines 26-29).
+    fn payoff(job: &Job, alloc: &JobAllocation, cost: f64, comm: f64,
+              now: f64, min_efficiency: f64) -> f64 {
+        let x_min = alloc
+            .gpu_types()
+            .iter()
+            .map(|&g| job.throughput_on(g))
+            .fold(f64::INFINITY, f64::min);
+        if !x_min.is_finite() || x_min <= 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        // Bottleneck-efficiency guard: a placement that runs the whole
+        // gang at a tiny fraction of the job's best throughput burns
+        // W_j GPUs for negligible progress — reject it outright.
+        if x_min < min_efficiency * job.max_throughput() {
+            return f64::NEG_INFINITY;
+        }
+        // Estimated completion if the job keeps this allocation: the
+        // bottleneck rule (1b) — every worker advances at the slowest
+        // device's pace.
+        let rate = alloc.total_gpus() as f64 * x_min;
+        let est_duration = (now - job.arrival) + job.remaining_iters() / rate;
+        job.utility(est_duration.max(job.t_min())) - cost - comm
+    }
+
+    /// Algorithm 2's FIND_ALLOC: best feasible allocation of `W_j` GPUs
+    /// given current prices/state, or None if no candidate has `μ_j > 0`.
+    fn find_alloc(&mut self, job: &Job, state: &ClusterState,
+                  prices: &PriceTable, now: f64)
+                  -> Option<(JobAllocation, f64)> {
+        let w = job.gpus_requested.max(1);
+        let types = self.sorted_types(job);
+        if types.is_empty() {
+            return None;
+        }
+        let mut best: Option<(JobAllocation, f64)> = None;
+        let min_eff = self.cfg.min_efficiency;
+        let mut consider = |alloc: JobAllocation, cost: f64, comm: f64| {
+            if alloc.total_gpus() != w {
+                return;
+            }
+            let p = Self::payoff(job, &alloc, cost, comm, now, min_eff);
+            if p > 0.0 && best.as_ref().map_or(true, |(_, bp)| p > *bp) {
+                best = Some((alloc, p));
+            }
+        };
+
+        // §Perf: per-type free-slot lists (node, free) sorted by free desc,
+        // built ONCE per FIND_ALLOC call and shared by the spread and mixed
+        // candidate generators below.
+        let per_type_slots: Vec<Vec<(usize, usize)>> = types
+            .iter()
+            .map(|&g| {
+                let mut slots: Vec<(usize, usize)> = (0..state.n_nodes())
+                    .map(|h| (h, state.free(h, g)))
+                    .filter(|&(_, f)| f > 0)
+                    .collect();
+                slots.sort_by(|a, b| b.1.cmp(&a.1));
+                slots
+            })
+            .collect();
+
+        // --- packed candidates: all W_j workers on a single node, fastest
+        // types first (Algorithm 2 line 24).
+        for node in 0..state.n_nodes() {
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for &g in &types {
+                if need == 0 {
+                    break;
+                }
+                let take = state.free(node, g).min(need);
+                if take > 0 {
+                    cost += prices.marginal_cost(state, node, g, take);
+                    alloc.add(node, g, take);
+                    need -= take;
+                }
+            }
+            if need == 0 {
+                consider(alloc, cost, 0.0);
+            }
+        }
+
+        // --- spread candidates (line 25). Two flavours:
+        // (a) pure-type: all workers on the job's k-th fastest type,
+        // filled from nodes with most free first (fewest nodes used).
+        for (ti, &g) in types.iter().enumerate() {
+            if state.free_of_type(g) < w {
+                continue;
+            }
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for &(h, free) in &per_type_slots[ti] {
+                if need == 0 {
+                    break;
+                }
+                let take = free.min(need);
+                cost += prices.marginal_cost(state, h, g, take);
+                alloc.add(h, g, take);
+                need -= take;
+            }
+            let nodes_used = alloc.nodes().len();
+            let comm = self.comm_cost(job, nodes_used, now);
+            consider(alloc, cost, comm);
+        }
+
+        // (b) mixed-type: greedy best-throughput-first over every free slot
+        // — the task-level flexibility of §II-A (J1 on 2xV100 + 3xP100 +
+        // 1xK80).
+        {
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for (ti, &g) in types.iter().enumerate() {
+                if need == 0 {
+                    break;
+                }
+                for &(h, free) in &per_type_slots[ti] {
+                    if need == 0 {
+                        break;
+                    }
+                    let take = free.min(need);
+                    cost += prices.marginal_cost(state, h, g, take);
+                    alloc.add(h, g, take);
+                    need -= take;
+                }
+            }
+            if need == 0 {
+                let nodes_used = alloc.nodes().len();
+                let comm = self.comm_cost(job, nodes_used, now);
+                consider(alloc, cost, comm);
+            }
+        }
+
+        best
+    }
+
+    /// Non-consolidated communication cost (Algorithm 2 line 27): a
+    /// utility-proportional penalty per extra node crossed.
+    fn comm_cost(&self, job: &Job, nodes_used: usize, _now: f64) -> f64 {
+        if nodes_used <= 1 {
+            return 0.0;
+        }
+        self.cfg.comm_factor * (nodes_used - 1) as f64
+            * job.utility(job.t_min())
+    }
+
+    /// Digest of γ over all (node, type) pools — the DP memo key.
+    #[inline]
+    fn digest(state: &ClusterState) -> u64 {
+        state.digest()
+    }
+
+    /// Algorithm 2's DP: explore select/skip for each queued job,
+    /// memoised; returns the best sub-plan from `idx` on.
+    ///
+    /// Branches are compared **work-conservation first** (GPUs utilised),
+    /// then by payoff. Comparing on payoff alone would let the skip branch
+    /// starve slow jobs — utility is effective throughput, so handing a
+    /// fast node to a faster job always "pays" more this round — whereas
+    /// the paper's Hadar explicitly minimises the number of GPUs left
+    /// unused (§IV-B) and resolves contention through the prices.
+    #[allow(clippy::too_many_arguments)]
+    fn dp(&mut self, idx: usize, jobs: &[&Job], state: &ClusterState,
+          prices: &PriceTable, now: f64,
+          memo: &mut HashMap<(usize, u64),
+                             (usize, f64, Vec<(JobId, JobAllocation)>)>)
+          -> (usize, f64, Vec<(JobId, JobAllocation)>) {
+        if idx >= jobs.len() || state.is_full() {
+            return (0, 0.0, Vec::new());
+        }
+        let key = (idx, Self::digest(state));
+        if let Some(hit) = memo.get(&key) {
+            self.stats.memo_hits += 1;
+            return hit.clone();
+        }
+        self.stats.memo_misses += 1;
+
+        // Skip branch (line 15).
+        let mut best = self.dp(idx + 1, jobs, state, prices, now, memo);
+
+        // Select branch (line 14): only if FIND_ALLOC yields positive payoff.
+        if let Some((alloc, payoff)) =
+            self.find_alloc(jobs[idx], state, prices, now)
+        {
+            let mut st = state.clone();
+            for a in alloc.assignments(jobs[idx].id) {
+                st.allocate(a);
+            }
+            let (rest_gpus, rest_pay, mut rest_plan) =
+                self.dp(idx + 1, jobs, &st, prices, now, memo);
+            let gpus = rest_gpus + alloc.total_gpus();
+            let pay = payoff + rest_pay;
+            if gpus > best.0 || (gpus == best.0 && pay > best.1) {
+                rest_plan.push((jobs[idx].id, alloc));
+                best = (gpus, pay, rest_plan);
+            }
+        }
+
+        if memo.len() < self.cfg.dp_memo_cap {
+            memo.insert(key, best.clone());
+        }
+        best
+    }
+
+    /// Large-queue path: payoff-density greedy (utility per requested GPU,
+    /// recomputed against live prices), O(n log n + n·H·R).
+    fn greedy(&mut self, jobs: &[&Job], state: &mut ClusterState,
+              prices: &PriceTable, now: f64)
+              -> Vec<(JobId, JobAllocation)> {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let da = jobs[a].utility(jobs[a].t_min())
+                / jobs[a].gpus_requested.max(1) as f64;
+            let db = jobs[b].utility(jobs[b].t_min())
+                / jobs[b].gpus_requested.max(1) as f64;
+            db.partial_cmp(&da).unwrap()
+        });
+        let mut out = Vec::new();
+        for i in order {
+            if state.is_full() {
+                break;
+            }
+            if let Some((alloc, _)) =
+                self.find_alloc(jobs[i], state, prices, now)
+            {
+                for a in alloc.assignments(jobs[i].id) {
+                    state.allocate(a);
+                }
+                out.push((jobs[i].id, alloc));
+            }
+        }
+        out
+    }
+
+    /// Drop the per-job type cache for completed jobs (bounded memory).
+    pub fn forget_job(&mut self, id: JobId) {
+        self.type_order.remove(&id);
+    }
+}
+
+impl Scheduler for Hadar {
+    fn name(&self) -> &'static str {
+        "hadar"
+    }
+
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        self.stats.rounds += 1;
+        let jobs: Vec<&Job> = ctx
+            .active
+            .iter()
+            .filter_map(|&id| ctx.queue.get(id))
+            .filter(|j| !j.is_complete())
+            .collect();
+        if jobs.is_empty() {
+            self.prev_plan = RoundPlan::new();
+            return RoundPlan::new();
+        }
+
+        let gpu_types = ctx.cluster.gpu_types();
+        let bounds =
+            PriceBounds::from_jobs(&jobs, &gpu_types, ctx.horizon, self.cfg.eta);
+        let prices = PriceTable::new(bounds);
+        let mut state = ClusterState::new(ctx.cluster);
+        let mut plan = RoundPlan::new();
+
+        // Incremental mode: carry over running jobs' allocations when they
+        // still fit; only the remainder is (re)scheduled.
+        let mut pending: Vec<&Job> = Vec::new();
+        if self.cfg.incremental {
+            for job in &jobs {
+                if let Some(prev) = self.prev_plan.get(job.id) {
+                    let fits = prev.slots.iter().all(|(&(h, g), &c)| {
+                        state.free(h, g) >= c
+                    });
+                    if fits {
+                        for a in prev.assignments(job.id) {
+                            state.allocate(a);
+                        }
+                        plan.insert(job.id, prev.clone());
+                        continue;
+                    }
+                }
+                pending.push(job);
+            }
+        } else {
+            pending = jobs.clone();
+        }
+
+        // LPT-flavoured queue order: longest *total* best-case runtime
+        // first, so FIND_ALLOC hands the fastest pools to the jobs that
+        // gate the makespan. The key is static (t_j^min, not remaining
+        // time) so the order — and therefore the job->node matching — is
+        // stable across rounds: re-sorting on remaining time makes jobs
+        // swap nodes mid-flight and pay checkpoint-restart every round.
+        pending.sort_by(|a, b| {
+            b.t_min()
+                .partial_cmp(&a.t_min())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+
+        let chosen: Vec<(JobId, JobAllocation)> =
+            if pending.len() <= self.cfg.dp_job_cap {
+                self.stats.dp_invocations += 1;
+                let mut memo = HashMap::new();
+                let (_, _, sub) =
+                    self.dp(0, &pending, &state, &prices, ctx.now, &mut memo);
+                sub
+            } else {
+                self.stats.greedy_invocations += 1;
+                self.greedy(&pending, &mut state, &prices, ctx.now)
+            };
+        for (id, alloc) in chosen {
+            plan.insert(id, alloc);
+        }
+
+        // Change tracking (the paper's ~30% observation).
+        let changed = jobs.iter().any(|j| {
+            plan.get(j.id) != self.prev_plan.get(j.id)
+        });
+        if changed {
+            self.stats.rounds_with_change += 1;
+        }
+        self.prev_plan = plan.clone();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+
+    /// The §II-A motivational jobs: J1 (3 GPUs, 80 epochs), J2 (2, 30),
+    /// J3 (2, 50).
+    fn motivational_jobs() -> JobQueue {
+        let mut q = JobQueue::new();
+        for (id, w, epochs) in [(1u64, 3usize, 80u64), (2, 2, 30), (3, 2, 50)] {
+            let mut j = Job::new(id, DlModel::ResNet18, 0.0, w, epochs, 100);
+            // Fig. 1's X-matrix flavour: V100 fastest, K80 slow.
+            j.set_throughput(GpuType::V100, 40.0);
+            j.set_throughput(GpuType::P100, 25.0);
+            j.set_throughput(GpuType::K80, 8.0);
+            q.admit(j);
+        }
+        q
+    }
+
+    fn ctx<'a>(queue: &'a JobQueue, active: &'a [JobId],
+               cluster: &'a ClusterSpec) -> RoundCtx<'a> {
+        RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue,
+            active,
+            cluster,
+        }
+    }
+
+    #[test]
+    fn schedules_across_heterogeneous_types() {
+        // The headline behaviour: with 2 V100 + 3 P100 + 1 K80 free, a
+        // 3-GPU job CAN run (Gavel could not if no single type has 3).
+        let cluster = ClusterSpec::motivational();
+        let queue = motivational_jobs();
+        let active = vec![JobId(1)];
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        let alloc = plan.get(JobId(1)).expect("J1 scheduled");
+        assert_eq!(alloc.total_gpus(), 3);
+    }
+
+    #[test]
+    fn respects_gang_all_or_nothing() {
+        let cluster = ClusterSpec::motivational(); // 6 GPUs
+        let mut queue = JobQueue::new();
+        let mut j = Job::new(1, DlModel::ResNet18, 0.0, 9, 10, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        queue.admit(j);
+        let active = vec![JobId(1)];
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none(), "9 > 6 GPUs: must not run");
+    }
+
+    #[test]
+    fn packs_cluster_with_multiple_jobs() {
+        let cluster = ClusterSpec::motivational();
+        let queue = motivational_jobs();
+        let active: Vec<JobId> = vec![JobId(1), JobId(2), JobId(3)];
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        // 6 GPUs, demands 3+2+2: at least two jobs (5 GPUs) run.
+        assert!(plan.scheduled_jobs().len() >= 2);
+        assert!(plan.total_gpus() >= 5);
+        // Capacity respected per pool.
+        let mut used: BTreeMap<(usize, GpuType), usize> = BTreeMap::new();
+        for (_, alloc) in &plan.allocations {
+            for (&k, &c) in &alloc.slots {
+                *used.entry(k).or_insert(0) += c;
+            }
+        }
+        let state = ClusterState::new(&cluster);
+        for ((h, g), c) in used {
+            assert!(c <= state.capacity(h, g));
+        }
+    }
+
+    #[test]
+    fn prefers_fast_types_when_free() {
+        let cluster = ClusterSpec::motivational();
+        let queue = motivational_jobs();
+        let active = vec![JobId(2)]; // W=2, both V100 free
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        let alloc = plan.get(JobId(2)).unwrap();
+        // Packed on the V100 node (fastest, zero comm cost) is optimal.
+        assert_eq!(alloc.gpu_types(), vec![GpuType::V100]);
+    }
+
+    #[test]
+    fn greedy_path_engages_beyond_cap() {
+        let cluster = ClusterSpec::sim60();
+        let mut queue = JobQueue::new();
+        for id in 0..40u64 {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, 2, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            queue.admit(j);
+        }
+        let active: Vec<JobId> = (0..40).map(JobId).collect();
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(hadar.stats.greedy_invocations, 1);
+        assert_eq!(hadar.stats.dp_invocations, 0);
+        // 60 GPUs, 40 single-GPU jobs: all should run.
+        assert_eq!(plan.scheduled_jobs().len(), 40);
+    }
+
+    #[test]
+    fn incremental_mode_keeps_running_allocations() {
+        let cluster = ClusterSpec::motivational();
+        let queue = motivational_jobs();
+        let active: Vec<JobId> = vec![JobId(1), JobId(2), JobId(3)];
+        let mut hadar = Hadar::with_config(HadarConfig {
+            incremental: true,
+            ..Default::default()
+        });
+        let plan1 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        let plan2 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        for id in plan1.scheduled_jobs() {
+            assert_eq!(plan1.get(id), plan2.get(id), "{id} moved");
+        }
+        // Round 2 changed nothing.
+        assert_eq!(hadar.stats.rounds_with_change, 1);
+    }
+
+    #[test]
+    fn empty_queue_yields_empty_plan() {
+        let cluster = ClusterSpec::motivational();
+        let queue = JobQueue::new();
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &[], &cluster));
+        assert!(plan.scheduled_jobs().is_empty());
+    }
+}

@@ -1,0 +1,284 @@
+//! **HadarE** (paper §V) — Hadar enhanced with job forking.
+//!
+//! Every unfinished parent job has `n` forked copies (for an `n`-node
+//! cluster); each round HadarE assigns *whole nodes* to copies so that no
+//! node idles while any parent has work left (Theorem 3 / its corollary).
+//! Scheduling itself reuses Hadar's machinery over the copy queue with two
+//! extra constraints:
+//!
+//! * at most one copy of a given parent per node (copies exist to run on
+//!   *separate* nodes);
+//! * work-conservation: after the payoff-driven pass, any still-idle node
+//!   is given a copy of the parent with the most remaining work that is
+//!   not yet on that node.
+//!
+//! The engines call [`HadarE::plan_round`] with the tracker state; step
+//! division + aggregation + consolidation happen in the engine through the
+//! [`crate::forking::JobTracker`].
+
+use crate::cluster::gpu::GpuType;
+use crate::forking::tracker::JobTracker;
+use crate::jobs::job::{Job, JobId};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::RoundCtx;
+use std::collections::BTreeMap;
+
+pub struct HadarE {
+    /// Copies per job (usually = node count; Theorem 3's maximum).
+    pub copies: u64,
+}
+
+impl HadarE {
+    pub fn new(copies: u64) -> Self {
+        HadarE { copies }
+    }
+
+    /// Assign nodes to parent jobs for this round.
+    ///
+    /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on node
+    /// `h` means node `h` trains `p`'s model this slot. All single-GPU
+    /// nodes (the paper's §VI clusters) — one copy occupies one node.
+    pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
+                      -> RoundPlan {
+        // Parents with work left, by remaining steps (desc).
+        let mut parents: Vec<(JobId, f64)> = tracker
+            .parents()
+            .filter(|(_, p)| !p.is_complete())
+            .map(|(&id, p)| (id, p.remaining()))
+            .collect();
+        parents.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut plan = RoundPlan::new();
+        if parents.is_empty() {
+            return plan;
+        }
+
+        // Node inventory: (node id, gpu type) — single-GPU nodes.
+        let nodes: Vec<(usize, GpuType)> = ctx
+            .cluster
+            .nodes
+            .iter()
+            .filter_map(|n| n.primary_gpu().map(|g| (n.id, g)))
+            .collect();
+
+        // Payoff of placing parent p on node (h, g): throughput-weighted
+        // urgency — remaining work × speed, the greedy core of Hadar's
+        // price argument specialised to whole-node slots.
+        let job_of = |id: JobId| -> Option<&Job> { ctx.queue.get(id) };
+        let mut node_load: BTreeMap<usize, bool> = BTreeMap::new();
+        let mut copies_used: BTreeMap<JobId, u64> = BTreeMap::new();
+        let mut placed_on: BTreeMap<(JobId, usize), bool> = BTreeMap::new();
+
+        let place = |pid: JobId, h: usize, g: GpuType,
+                         plan: &mut RoundPlan,
+                         node_load: &mut BTreeMap<usize, bool>,
+                         copies_used: &mut BTreeMap<JobId, u64>,
+                         placed_on: &mut BTreeMap<(JobId, usize), bool>| {
+            let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
+            let copy = tracker.ids.copy_id(pid, i);
+            let mut alloc = JobAllocation::new();
+            alloc.add(h, g, 1);
+            plan.insert(copy, alloc);
+            node_load.insert(h, true);
+            copies_used.insert(pid, i);
+            placed_on.insert((pid, h), true);
+        };
+
+        // Pass 0: fairness — every unfinished parent first gets its best
+        // still-free node (longest-remaining parent picks first). Without
+        // this, one long job hogs every fast node and serialises the rest,
+        // which is exactly what HadarE exists to avoid (§V-A: copies of
+        // *all* jobs run concurrently).
+        for &(pid, _) in &parents {
+            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                continue;
+            }
+            let best = nodes
+                .iter()
+                .filter(|&&(h, _)| !node_load.get(&h).unwrap_or(&false))
+                .filter_map(|&(h, g)| {
+                    job_of(pid).map(|j| (h, g, j.throughput_on(g)))
+                })
+                .filter(|&(_, _, x)| x > 0.0)
+                .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+            if let Some((h, g, _)) = best {
+                place(pid, h, g, &mut plan, &mut node_load,
+                      &mut copies_used, &mut placed_on);
+            }
+        }
+
+        // Build all candidate (score, parent, node, gpu) tuples.
+        let mut cands: Vec<(f64, JobId, usize, GpuType)> = Vec::new();
+        for &(pid, remaining) in &parents {
+            if let Some(job) = job_of(pid) {
+                for &(h, g) in &nodes {
+                    let x = job.throughput_on(g);
+                    if x > 0.0 {
+                        // Urgency: how much of the remaining work this
+                        // node can burn this slot.
+                        let burn = (x * ctx.slot_secs).min(remaining);
+                        cands.push((burn, pid, h, g));
+                    }
+                }
+            }
+        }
+        cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        // Pass 1: payoff-greedy with the per-parent copy budget.
+        for &(_, pid, h, g) in &cands {
+            if *node_load.get(&h).unwrap_or(&false) {
+                continue;
+            }
+            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                continue;
+            }
+            if placed_on.contains_key(&(pid, h)) {
+                continue;
+            }
+            place(pid, h, g, &mut plan, &mut node_load, &mut copies_used,
+                  &mut placed_on);
+        }
+
+        // Pass 2: work conservation — fill any idle node with the parent
+        // owning the most remaining work not already on that node
+        // (corollary to Theorem 3: no idle node before the last round).
+        for &(h, g) in &nodes {
+            if *node_load.get(&h).unwrap_or(&false) {
+                continue;
+            }
+            for &(pid, _) in &parents {
+                if placed_on.contains_key(&(pid, h)) {
+                    continue;
+                }
+                if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                    continue;
+                }
+                let ok = job_of(pid)
+                    .map(|j| j.throughput_on(g) > 0.0)
+                    .unwrap_or(false);
+                if ok {
+                    let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
+                    let copy = tracker.ids.copy_id(pid, i);
+                    let mut alloc = JobAllocation::new();
+                    alloc.add(h, g, 1);
+                    plan.insert(copy, alloc);
+                    node_load.insert(h, true);
+                    copies_used.insert(pid, i);
+                    placed_on.insert((pid, h), true);
+                    break;
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::forking::forker::ForkIds;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+    use crate::jobs::throughput;
+    use crate::trace::workload::cluster_gpu_pcie;
+
+    fn setup(n_parents: u64) -> (ClusterSpec, JobQueue, JobTracker) {
+        let cluster = ClusterSpec::testbed5();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut queue = JobQueue::new();
+        let ids = ForkIds { max_job_count: 100 };
+        let mut tracker = JobTracker::new(ids);
+        for id in 0..n_parents {
+            let mut j = Job::new(id, DlModel::MiMa, 0.0, 1, 20, 100);
+            j.throughput = throughput::throughput_row(DlModel::MiMa, &pairs);
+            tracker.register(
+                j.id,
+                j.total_iters(),
+                &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+            );
+            queue.admit(j);
+        }
+        (cluster, queue, tracker)
+    }
+
+    fn ctx<'a>(queue: &'a JobQueue, cluster: &'a ClusterSpec)
+               -> RoundCtx<'a> {
+        RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue,
+            active: &[],
+            cluster,
+        }
+    }
+
+    #[test]
+    fn single_job_occupies_all_nodes() {
+        // The paper's headline: one remaining job, five nodes, five copies
+        // running concurrently (Hadar would use one node).
+        let (cluster, queue, tracker) = setup(1);
+        let mut h = HadarE::new(5);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.scheduled_jobs().len(), 5);
+        let nodes: std::collections::BTreeSet<usize> = plan
+            .allocations
+            .values()
+            .flat_map(|a| a.nodes())
+            .collect();
+        assert_eq!(nodes.len(), 5, "all five nodes busy");
+        // All copies resolve to the same parent.
+        for id in plan.scheduled_jobs() {
+            assert_eq!(tracker.resolve(id), JobId(0));
+        }
+    }
+
+    #[test]
+    fn no_idle_node_with_multiple_jobs() {
+        let (cluster, queue, tracker) = setup(3);
+        let mut h = HadarE::new(5);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.scheduled_jobs().len(), 5, "5 nodes, 5 copies");
+        // At most one copy of a parent per node; parents spread.
+        let mut per_node: BTreeMap<usize, Vec<JobId>> = BTreeMap::new();
+        for (id, a) in &plan.allocations {
+            for n in a.nodes() {
+                per_node.entry(n).or_default().push(tracker.resolve(*id));
+            }
+        }
+        for (_, ps) in per_node {
+            assert_eq!(ps.len(), 1);
+        }
+    }
+
+    #[test]
+    fn copy_budget_respected() {
+        let (cluster, queue, tracker) = setup(1);
+        let mut h = HadarE::new(2); // only 2 copies allowed
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.scheduled_jobs().len(), 2);
+    }
+
+    #[test]
+    fn finished_parents_release_all_nodes() {
+        let (cluster, queue, mut tracker) = setup(2);
+        // Parent 0 completes.
+        tracker.report_steps(JobId(0), 1e9);
+        let mut h = HadarE::new(5);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        for id in plan.scheduled_jobs() {
+            assert_eq!(tracker.resolve(id), JobId(1));
+        }
+        assert_eq!(plan.scheduled_jobs().len(), 5);
+    }
+
+    #[test]
+    fn all_complete_yields_empty_plan() {
+        let (cluster, queue, mut tracker) = setup(1);
+        tracker.report_steps(JobId(0), 1e9);
+        let mut h = HadarE::new(5);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert!(plan.scheduled_jobs().is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! Schedulers: the paper's contribution (Hadar, HadarE) and its three
+//! baselines (Gavel, Tiresias, YARN-CS), behind one trait so the
+//! discrete-time simulator (§IV) and the physical-cluster emulation (§VI)
+//! drive them identically.
+
+pub mod alloc;
+pub mod gavel;
+pub mod hadar;
+pub mod hadare;
+pub mod price;
+pub mod tiresias;
+pub mod yarn_cs;
+
+pub use alloc::{JobAllocation, RoundPlan};
+
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::JobId;
+use crate::jobs::queue::JobQueue;
+
+/// Everything a scheduler sees in one round.
+pub struct RoundCtx<'a> {
+    /// Round number (0-based).
+    pub round: u64,
+    /// Virtual time at round start (seconds).
+    pub now: f64,
+    /// Slot length `L` (seconds).
+    pub slot_secs: f64,
+    /// Horizon `T` for the utility lower bound in Eq. (7).
+    pub horizon: f64,
+    pub queue: &'a JobQueue,
+    /// Arrived, incomplete jobs (waiting set `Q`).
+    pub active: &'a [JobId],
+    pub cluster: &'a ClusterSpec,
+}
+
+/// A round-based cluster scheduler.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Decide the allocations for this round. Implementations must respect
+    /// capacity (1d) and all-or-nothing (1e); the engine enforces both.
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan;
+
+    /// Whether the engine may preempt running jobs between rounds (YARN-CS
+    /// says no).
+    fn preemptive(&self) -> bool {
+        true
+    }
+}
+
+/// Construct a scheduler by name (CLI surface).
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name.to_ascii_lowercase().as_str() {
+        "hadar" => Some(Box::new(hadar::Hadar::new())),
+        "gavel" => Some(Box::new(gavel::Gavel::new())),
+        "tiresias" => Some(Box::new(tiresias::Tiresias::new())),
+        "yarn-cs" | "yarn" => Some(Box::new(yarn_cs::YarnCs::new())),
+        _ => None,
+    }
+}
+
+/// All baseline names, in the paper's comparison order.
+pub const SCHEDULER_NAMES: [&str; 4] = ["yarn-cs", "tiresias", "gavel", "hadar"];

@@ -1,0 +1,236 @@
+//! The dual price function — Eqs. (5)-(7) of the paper.
+//!
+//! `k_h^r(γ) = U_min^r * (U_max^r / U_min^r)^(γ / c_h^r)`
+//!
+//! The price for a (node, GPU-type) pool starts at `U_min^r` (low enough to
+//! admit any job) and rises exponentially to `U_max^r` as the pool fills
+//! (high enough that no job's payoff stays positive), which is what gives
+//! Theorem 2 its `2α` competitive ratio with
+//! `α = max_r(1, ln(U_max^r / U_min^r))`.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::Job;
+use std::collections::BTreeMap;
+
+/// Per-GPU-type utility bounds (Eqs. (6)-(7)).
+#[derive(Clone, Debug)]
+pub struct PriceBounds {
+    pub u_max: BTreeMap<GpuType, f64>,
+    pub u_min: BTreeMap<GpuType, f64>,
+}
+
+impl PriceBounds {
+    /// Compute the bounds from the current workload (paper: "U_max and
+    /// U_min are calculated based on the cluster's workload").
+    ///
+    /// * `U_max^r = max_j U_j(t_j^min) / w_j^r`  — best-case per-unit value;
+    ///   `w_j^r` is the gang size when run on type r (all `W_j` here).
+    /// * `U_min^r = (1/4η) * min_j U_j(T - a_j) / (t_j^max Σ_r w_j^r)` —
+    ///   the smallest utility a job may achieve (ending at horizon `T`),
+    ///   discounted by the scale factor η (Theorem 2: D_0 ≤ ½ OPT).
+    pub fn from_jobs(jobs: &[&Job], gpu_types: &[GpuType], horizon: f64,
+                     eta: f64) -> Self {
+        let mut u_max = BTreeMap::new();
+        let mut u_min = BTreeMap::new();
+        for &r in gpu_types {
+            let mut hi: f64 = 0.0;
+            let mut lo = f64::INFINITY;
+            for job in jobs {
+                if job.throughput_on(r) <= 0.0 {
+                    continue;
+                }
+                let w = job.gpus_requested.max(1) as f64;
+                hi = hi.max(job.utility(job.t_min()) / w);
+                let min_duration = (horizon - job.arrival).max(job.t_min());
+                let t_max = job.t_max();
+                let denom = t_max * (gpu_types.len() as f64) * w;
+                if denom > 0.0 {
+                    lo = lo.min(job.utility(min_duration) / denom
+                                / (4.0 * eta));
+                }
+            }
+            if !hi.is_finite() || hi <= 0.0 {
+                hi = 1.0;
+            }
+            if !lo.is_finite() || lo <= 0.0 {
+                lo = hi * 1e-4;
+            }
+            // Guarantee U_min < U_max so α ≥ 1 and the exponent is sane.
+            if lo >= hi {
+                lo = hi * 0.5;
+            }
+            u_max.insert(r, hi);
+            u_min.insert(r, lo);
+        }
+        PriceBounds { u_max, u_min }
+    }
+
+    /// `α = max_r(1, ln(U_max^r / U_min^r))` (Theorem 2).
+    pub fn alpha(&self) -> f64 {
+        self.u_max
+            .iter()
+            .map(|(r, &hi)| (hi / self.u_min[r]).ln())
+            .fold(1.0_f64, f64::max)
+    }
+}
+
+/// Live prices `k_h^r(t)`, updated as allocations accumulate in a round.
+#[derive(Clone, Debug)]
+pub struct PriceTable {
+    bounds: PriceBounds,
+}
+
+impl PriceTable {
+    pub fn new(bounds: PriceBounds) -> Self {
+        PriceTable { bounds }
+    }
+
+    pub fn bounds(&self) -> &PriceBounds {
+        &self.bounds
+    }
+
+    /// Eq. (5): price of one type-r GPU on node h given the *current*
+    /// allocation state. `gamma_extra` lets the DP price a hypothetical
+    /// allocation without mutating the state.
+    pub fn price(&self, state: &ClusterState, node: usize, gpu: GpuType,
+                 gamma_extra: usize) -> f64 {
+        let cap = state.capacity(node, gpu);
+        if cap == 0 {
+            return f64::INFINITY;
+        }
+        let gamma = (state.allocated(node, gpu) + gamma_extra) as f64;
+        let frac = (gamma / cap as f64).min(1.0);
+        let hi = self.bounds.u_max.get(&gpu).copied().unwrap_or(1.0);
+        let lo = self.bounds.u_min.get(&gpu).copied().unwrap_or(1e-4);
+        lo * (hi / lo).powf(frac)
+    }
+
+    /// Marginal cost of taking `count` GPUs of (node, type): the sum of the
+    /// per-unit prices as γ steps up — the discrete form of the
+    /// differential allocation-cost relationship (Definition 2).
+    ///
+    /// §Perf: evaluated in closed form. With `r = (hi/lo)^(1/c)` the sum
+    /// `Σ_{i=0}^{count-1} lo·r^(γ+i)` is the geometric series
+    /// `lo·r^γ·(r^count - 1)/(r - 1)` — one `powf` instead of `count`.
+    pub fn marginal_cost(&self, state: &ClusterState, node: usize,
+                         gpu: GpuType, count: usize) -> f64 {
+        if count == 0 {
+            return 0.0;
+        }
+        let cap = state.capacity(node, gpu);
+        if cap == 0 {
+            return f64::INFINITY;
+        }
+        let gamma = state.allocated(node, gpu) as f64;
+        let hi = self.bounds.u_max.get(&gpu).copied().unwrap_or(1.0);
+        let lo = self.bounds.u_min.get(&gpu).copied().unwrap_or(1e-4);
+        let r = (hi / lo).powf(1.0 / cap as f64);
+        if (r - 1.0).abs() < 1e-12 {
+            return lo * count as f64;
+        }
+        lo * r.powf(gamma) * (r.powf(count as f64) - 1.0) / (r - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::cluster::state::Assignment;
+    use crate::jobs::job::JobId;
+    use crate::jobs::model::DlModel;
+
+    fn mk_job(id: u64) -> Job {
+        let mut j = Job::new(id, DlModel::ResNet18, 0.0, 2, 4, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        j
+    }
+
+    fn bounds(jobs: &[&Job]) -> PriceBounds {
+        PriceBounds::from_jobs(
+            jobs,
+            &[GpuType::V100, GpuType::P100, GpuType::K80],
+            10_000.0,
+            1.0,
+        )
+    }
+
+    #[test]
+    fn bounds_ordering() {
+        let j = mk_job(1);
+        let b = bounds(&[&j]);
+        for r in [GpuType::V100, GpuType::P100, GpuType::K80] {
+            assert!(b.u_min[&r] > 0.0);
+            assert!(b.u_min[&r] < b.u_max[&r]);
+        }
+        assert!(b.alpha() >= 1.0);
+    }
+
+    #[test]
+    fn price_starts_at_umin_and_caps_at_umax() {
+        let j = mk_job(1);
+        let b = bounds(&[&j]);
+        let table = PriceTable::new(b.clone());
+        let spec = ClusterSpec::motivational();
+        let mut state = ClusterState::new(&spec);
+        // Empty pool: price == U_min.
+        let p0 = table.price(&state, 0, GpuType::V100, 0);
+        assert!((p0 - b.u_min[&GpuType::V100]).abs() / p0 < 1e-9);
+        // Full pool: price == U_max.
+        state.allocate(Assignment {
+            job: JobId(9),
+            node: 0,
+            gpu: GpuType::V100,
+            count: 2,
+        });
+        let pfull = table.price(&state, 0, GpuType::V100, 0);
+        assert!((pfull - b.u_max[&GpuType::V100]).abs() / pfull < 1e-9);
+    }
+
+    #[test]
+    fn price_is_monotone_in_gamma() {
+        let j = mk_job(1);
+        let table = PriceTable::new(bounds(&[&j]));
+        let spec = ClusterSpec::motivational();
+        let state = ClusterState::new(&spec);
+        let mut last = 0.0;
+        for extra in 0..=3 {
+            let p = table.price(&state, 1, GpuType::P100, extra);
+            assert!(p > last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn marginal_cost_sums_unit_prices() {
+        let j = mk_job(1);
+        let table = PriceTable::new(bounds(&[&j]));
+        let spec = ClusterSpec::motivational();
+        let state = ClusterState::new(&spec);
+        let c2 = table.marginal_cost(&state, 1, GpuType::P100, 2);
+        let p0 = table.price(&state, 1, GpuType::P100, 0);
+        let p1 = table.price(&state, 1, GpuType::P100, 1);
+        assert!((c2 - (p0 + p1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_capacity_prices_infinite() {
+        let j = mk_job(1);
+        let table = PriceTable::new(bounds(&[&j]));
+        let spec = ClusterSpec::motivational();
+        let state = ClusterState::new(&spec);
+        assert!(table.price(&state, 0, GpuType::K80, 0).is_infinite());
+    }
+
+    #[test]
+    fn eta_scales_umin_down() {
+        let j = mk_job(1);
+        let b1 = PriceBounds::from_jobs(&[&j], &[GpuType::V100], 1000.0, 1.0);
+        let b4 = PriceBounds::from_jobs(&[&j], &[GpuType::V100], 1000.0, 4.0);
+        assert!(b4.u_min[&GpuType::V100] < b1.u_min[&GpuType::V100]);
+        assert!(b4.alpha() > b1.alpha());
+    }
+}

@@ -1,0 +1,211 @@
+//! **Tiresias** baseline [Gu et al., NSDI'19] — heterogeneity-*unaware*
+//! two-queue discretized LAS (least attained service), Promote disabled,
+//! as configured in the paper's §IV-B comparison.
+//!
+//! Priority: jobs with attained GPU-service below the queue threshold sit
+//! in the high-priority queue; within a queue, FIFO by arrival. Gangs are
+//! placed on a single GPU type (Tiresias targets homogeneous clusters; on
+//! a heterogeneous one it simply treats any type as "a GPU", picking the
+//! pool with most free devices — it never mixes types for one gang and
+//! never *chooses* by throughput, which is exactly the unawareness the
+//! paper contrasts with).
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::{Job, JobId};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::BTreeMap;
+
+pub struct Tiresias {
+    /// Attained service in GPU-seconds.
+    attained: BTreeMap<JobId, f64>,
+    /// Queue-0/1 threshold in GPU-seconds.
+    pub threshold: f64,
+}
+
+impl Default for Tiresias {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tiresias {
+    pub fn new() -> Self {
+        Tiresias {
+            attained: BTreeMap::new(),
+            // One hour of single-GPU service — the two-queue knee.
+            threshold: 3600.0,
+        }
+    }
+
+    /// Called by the engine after each round with the GPU-seconds each
+    /// scheduled job consumed.
+    pub fn record_service(&mut self, job: JobId, gpu_seconds: f64) {
+        *self.attained.entry(job).or_insert(0.0) += gpu_seconds;
+    }
+
+    fn queue_of(&self, job: JobId) -> usize {
+        if self.attained.get(&job).copied().unwrap_or(0.0) < self.threshold {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// Place on the single type with the most free GPUs (type-blind).
+    fn place(state: &ClusterState, w: usize, types: &[GpuType])
+             -> Option<JobAllocation> {
+        let mut best: Option<(usize, GpuType)> = None;
+        for &r in types {
+            let free = state.free_of_type(r);
+            if free >= w && best.map_or(true, |(bf, _)| free > bf) {
+                best = Some((free, r));
+            }
+        }
+        let (_, r) = best?;
+        let mut slots: Vec<(usize, usize)> = (0..state.n_nodes())
+            .map(|h| (h, state.free(h, r)))
+            .filter(|&(_, f)| f > 0)
+            .collect();
+        slots.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut alloc = JobAllocation::new();
+        let mut need = w;
+        for (h, free) in slots {
+            if need == 0 {
+                break;
+            }
+            let take = free.min(need);
+            alloc.add(h, r, take);
+            need -= take;
+        }
+        (need == 0).then_some(alloc)
+    }
+}
+
+impl Scheduler for Tiresias {
+    fn name(&self) -> &'static str {
+        "tiresias"
+    }
+
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        let mut jobs: Vec<&Job> = ctx
+            .active
+            .iter()
+            .filter_map(|&id| ctx.queue.get(id))
+            .filter(|j| !j.is_complete())
+            .collect();
+        // (queue, arrival) order: discretized 2-queue LAS, Promote off.
+        jobs.sort_by(|a, b| {
+            let qa = self.queue_of(a.id);
+            let qb = self.queue_of(b.id);
+            qa.cmp(&qb)
+                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+                .then(a.id.cmp(&b.id))
+        });
+
+        let types = ctx.cluster.gpu_types();
+        let mut state = ClusterState::new(ctx.cluster);
+        let mut plan = RoundPlan::new();
+        for job in jobs {
+            if state.is_full() {
+                break;
+            }
+            if let Some(alloc) =
+                Self::place(&state, job.gpus_requested.max(1), &types)
+            {
+                for a in alloc.assignments(job.id) {
+                    state.allocate(a);
+                }
+                plan.insert(job.id, alloc);
+            }
+        }
+        // Account service now (slot-granular LAS).
+        let slot = ctx.slot_secs;
+        for id in plan.scheduled_jobs() {
+            let gpus = plan.get(id).unwrap().total_gpus() as f64;
+            self.record_service(id, gpus * slot);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+
+    fn mk_job(id: u64, w: usize, arrival: f64) -> Job {
+        let mut j = Job::new(id, DlModel::Lstm, arrival, w, 10, 100);
+        j.set_throughput(GpuType::V100, 60.0);
+        j.set_throughput(GpuType::P100, 40.0);
+        j.set_throughput(GpuType::K80, 15.0);
+        j
+    }
+
+    fn ctx<'a>(queue: &'a JobQueue, active: &'a [JobId],
+               cluster: &'a ClusterSpec) -> RoundCtx<'a> {
+        RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue,
+            active,
+            cluster,
+        }
+    }
+
+    #[test]
+    fn single_type_gangs_only() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 4, 0.0)); // no type has 4
+        let active = vec![JobId(1)];
+        let mut t = Tiresias::new();
+        let plan = t.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn las_prioritises_low_attained_service() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 3, 0.0));
+        queue.admit(mk_job(2, 3, 5.0)); // later arrival
+        let active = vec![JobId(1), JobId(2)];
+        let mut t = Tiresias::new();
+        // J1 has consumed a lot of service -> demoted to queue 1.
+        t.record_service(JobId(1), 10_000.0);
+        let plan = t.schedule(&ctx(&queue, &active, &cluster));
+        // Only P100 can host a 3-gang; J2 (queue 0) must get it.
+        assert!(plan.get(JobId(2)).is_some());
+        assert!(plan.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn fifo_within_queue() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 3, 10.0));
+        queue.admit(mk_job(2, 3, 0.0)); // earlier
+        let active = vec![JobId(1), JobId(2)];
+        let mut t = Tiresias::new();
+        let plan = t.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(2)).is_some());
+        assert!(plan.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn service_recorded_per_round() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 2, 0.0));
+        let active = vec![JobId(1)];
+        let mut t = Tiresias::new();
+        let _ = t.schedule(&ctx(&queue, &active, &cluster));
+        assert!((t.attained[&JobId(1)] - 2.0 * 360.0).abs() < 1e-9);
+    }
+}

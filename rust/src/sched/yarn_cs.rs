@@ -1,0 +1,216 @@
+//! **YARN-CS** baseline — Apache YARN's capacity scheduler as used for the
+//! paper's production-default comparison: FIFO admission, *non-preemptive*
+//! (a running job keeps its GPUs until completion), heterogeneity-unaware.
+//!
+//! Non-preemption is why YARN-CS posts the highest GPU utilisation in
+//! Fig. 3 while posting the worst total time duration in Fig. 4.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::{Job, JobId, JobStatus};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::BTreeMap;
+
+pub struct YarnCs {
+    /// Allocations pinned at admission; released only on completion.
+    running: BTreeMap<JobId, JobAllocation>,
+}
+
+impl Default for YarnCs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl YarnCs {
+    pub fn new() -> Self {
+        YarnCs {
+            running: BTreeMap::new(),
+        }
+    }
+
+    /// FIFO placement: first free pool that fits the whole gang, mixing
+    /// types only if a single type can't fit (capacity scheduler treats
+    /// all GPUs as one resource dimension).
+    fn place(state: &ClusterState, w: usize, types: &[GpuType])
+             -> Option<JobAllocation> {
+        // Prefer a single type (consolidated behaviour of CS node labels).
+        for &r in types {
+            if state.free_of_type(r) >= w {
+                let mut alloc = JobAllocation::new();
+                let mut need = w;
+                for h in 0..state.n_nodes() {
+                    if need == 0 {
+                        break;
+                    }
+                    let take = state.free(h, r).min(need);
+                    alloc.add(h, r, take);
+                    need -= take;
+                }
+                return Some(alloc);
+            }
+        }
+        // Fall back to any free GPUs (resource-dimension blindness).
+        if state.total_free() >= w {
+            let mut alloc = JobAllocation::new();
+            let mut need = w;
+            for (h, g, free) in state.free_slots() {
+                if need == 0 {
+                    break;
+                }
+                let take = free.min(need);
+                alloc.add(h, g, take);
+                need -= take;
+            }
+            if alloc.total_gpus() == w {
+                return Some(alloc);
+            }
+        }
+        None
+    }
+}
+
+impl Scheduler for YarnCs {
+    fn name(&self) -> &'static str {
+        "yarn-cs"
+    }
+
+    fn preemptive(&self) -> bool {
+        false
+    }
+
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        // Drop completed jobs from the pinned set.
+        self.running.retain(|id, _| {
+            ctx.queue
+                .get(*id)
+                .map(|j| j.status != JobStatus::Completed && !j.is_complete())
+                .unwrap_or(false)
+        });
+
+        let mut state = ClusterState::new(ctx.cluster);
+        let mut plan = RoundPlan::new();
+        // Re-assert pinned allocations.
+        for (&id, alloc) in &self.running {
+            for a in alloc.assignments(id) {
+                state.allocate(a);
+            }
+            plan.insert(id, alloc.clone());
+        }
+
+        // Admit waiting jobs strictly FIFO (head-of-line blocking is part
+        // of the baseline's behaviour).
+        let mut waiting: Vec<&Job> = ctx
+            .active
+            .iter()
+            .filter_map(|&id| ctx.queue.get(id))
+            .filter(|j| !j.is_complete() && !self.running.contains_key(&j.id))
+            .collect();
+        waiting.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let types = ctx.cluster.gpu_types();
+        for job in waiting {
+            if state.is_full() {
+                break;
+            }
+            // FIFO admission order with backfill: a job that does not fit
+            // is skipped (capacity-scheduler leaf queues effectively let
+            // smaller jobs start while a big head waits); admitted jobs
+            // are never preempted.
+            if let Some(alloc) =
+                Self::place(&state, job.gpus_requested.max(1), &types)
+            {
+                for a in alloc.assignments(job.id) {
+                    state.allocate(a);
+                }
+                plan.insert(job.id, alloc.clone());
+                self.running.insert(job.id, alloc);
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+
+    fn mk_job(id: u64, w: usize, arrival: f64) -> Job {
+        let mut j = Job::new(id, DlModel::Lstm, arrival, w, 10, 100);
+        j.set_throughput(GpuType::V100, 60.0);
+        j.set_throughput(GpuType::P100, 40.0);
+        j.set_throughput(GpuType::K80, 15.0);
+        j
+    }
+
+    fn ctx<'a>(queue: &'a JobQueue, active: &'a [JobId],
+               cluster: &'a ClusterSpec) -> RoundCtx<'a> {
+        RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue,
+            active,
+            cluster,
+        }
+    }
+
+    #[test]
+    fn fifo_with_backfill() {
+        let cluster = ClusterSpec::motivational(); // 6 GPUs
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 5, 0.0)); // takes most of the cluster
+        queue.admit(mk_job(2, 4, 1.0)); // cannot fit -> waits
+        queue.admit(mk_job(3, 1, 2.0)); // backfills the last GPU
+        let active = vec![JobId(1), JobId(2), JobId(3)];
+        let mut y = YarnCs::new();
+        let plan = y.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_some());
+        assert!(plan.get(JobId(2)).is_none(), "4-gang cannot fit");
+        assert!(plan.get(JobId(3)).is_some(), "small job backfills");
+    }
+
+    #[test]
+    fn allocations_are_pinned_until_completion() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 2, 0.0));
+        let active = vec![JobId(1)];
+        let mut y = YarnCs::new();
+        let p1 = y.schedule(&ctx(&queue, &active, &cluster));
+        let p2 = y.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(p1.get(JobId(1)), p2.get(JobId(1)));
+        // After completion the pin is dropped.
+        queue.get_mut(JobId(1)).unwrap().progress = 1000.0;
+        queue.get_mut(JobId(1)).unwrap().status = JobStatus::Completed;
+        let p3 = y.schedule(&ctx(&queue, &[], &cluster));
+        assert!(p3.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn non_preemptive_flag() {
+        assert!(!YarnCs::new().preemptive());
+    }
+
+    #[test]
+    fn mixes_types_when_no_single_type_fits() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 5, 0.0));
+        let active = vec![JobId(1)];
+        let mut y = YarnCs::new();
+        let plan = y.schedule(&ctx(&queue, &active, &cluster));
+        let alloc = plan.get(JobId(1)).expect("5 of 6 GPUs free");
+        assert_eq!(alloc.total_gpus(), 5);
+        assert!(alloc.gpu_types().len() > 1);
+    }
+}

@@ -1,0 +1,367 @@
+//! Discrete-time, round-based trace-driven simulator (paper §IV).
+//!
+//! Each round of length `L` the engine asks the scheduler for a plan,
+//! charges the 10-second checkpoint-restart overhead to every job whose
+//! allocation changed (paper §IV: "The overhead of each checkpoint-restart
+//! is simulated by enforcing a 10-second delay when a job receives a new
+//! allocation"), advances progress with the bottleneck-throughput rule
+//! (Eq. 1b — all workers run at the slowest device's pace), and records
+//! utilisation/time metrics.
+
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::{JobId, JobStatus};
+use crate::jobs::queue::JobQueue;
+use crate::sched::alloc::RoundPlan;
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Round/slot length `L` in seconds (paper default: 6 minutes).
+    pub slot_secs: f64,
+    /// Checkpoint-restart delay charged on allocation change (10 s).
+    pub restart_overhead: f64,
+    /// Safety cap on rounds.
+    pub max_rounds: u64,
+    /// Horizon `T` handed to price-based schedulers.
+    pub horizon: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            slot_secs: 360.0,
+            restart_overhead: 10.0,
+            max_rounds: 20_000,
+            horizon: 14.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Per-job, per-round accounting (drives both figure timelines and the
+/// real-training replay in `exec`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundJob {
+    pub gpus: usize,
+    /// Remaining iterations at round start.
+    pub remaining_before: f64,
+    /// Iterations progressed this round.
+    pub progressed: f64,
+    /// First node hosting the job this round (single-GPU-node clusters).
+    pub node: usize,
+}
+
+/// One round's record, enough to redraw Fig. 1 / Fig. 6 style timelines.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub start: f64,
+    pub jobs: BTreeMap<JobId, RoundJob>,
+    /// Busy GPU-seconds this round (excludes restart overhead).
+    pub busy_gpu_secs: f64,
+    /// GPU-seconds *allocated* this round (scheduled jobs x slot).
+    pub alloc_gpu_secs: f64,
+    /// Total GPU-seconds available this round.
+    pub avail_gpu_secs: f64,
+}
+
+/// Simulation outcome + metrics inputs.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheduler: String,
+    /// Total time duration (makespan), seconds.
+    pub ttd: f64,
+    /// Per-job completion times `f_j - a_j` (seconds).
+    pub jct: BTreeMap<JobId, f64>,
+    /// Completion instants `f_j` (for the Fig. 4 CDF).
+    pub finish_times: Vec<f64>,
+    /// Aggregate GPU resource utilisation in [0, 1]: busy time over
+    /// total capacity x makespan (Fig. 3's GRU).
+    pub gru: f64,
+    /// Cluster resource utilisation in [0, 1]: busy time over *allocated*
+    /// node-slots (the paper's §VI CRU — idle/unallocated nodes don't
+    /// enter the denominator, wasted slot tails and restarts do).
+    pub cru: f64,
+    pub rounds: u64,
+    /// Wall-clock seconds spent inside `Scheduler::schedule`.
+    pub sched_wall_secs: f64,
+    /// Mean wall-clock per scheduling round (Fig. 5's y-axis).
+    pub sched_wall_per_round: f64,
+    pub timeline: Vec<RoundRecord>,
+    /// Fraction of rounds whose plan differed from the previous round's.
+    pub change_fraction: f64,
+}
+
+/// Run one scheduler over one workload. `record_timeline` keeps per-round
+/// records (disable for the 2048-job scalability sweeps).
+pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
+           cluster: &ClusterSpec, cfg: &SimConfig, record_timeline: bool)
+           -> SimResult {
+    let total_gpus = cluster.total_gpus() as f64;
+    let mut now = 0.0;
+    let mut round = 0u64;
+    let mut busy_total = 0.0;
+    let mut alloc_total = 0.0;
+    // (round start, allocated gpu-secs) — kept even without timelines.
+    let mut alloc_log: Vec<(f64, f64)> = Vec::new();
+    let mut last_finish: f64 = 0.0;
+    let mut prev_plan = RoundPlan::new();
+    let mut sched_wall = 0.0;
+    let mut timeline = Vec::new();
+    let mut changed_rounds = 0u64;
+
+    while !queue.all_complete() && round < cfg.max_rounds {
+        let active = queue.active_at(now);
+        if active.is_empty() {
+            // Idle until the next arrival.
+            match queue.next_arrival_after(now) {
+                Some(t) => {
+                    now = t;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let plan = {
+            let ctx = RoundCtx {
+                round,
+                now,
+                slot_secs: cfg.slot_secs,
+                horizon: cfg.horizon,
+                queue,
+                active: &active,
+                cluster,
+            };
+            let t0 = Instant::now();
+            let plan = scheduler.schedule(&ctx);
+            sched_wall += t0.elapsed().as_secs_f64();
+            plan
+        };
+        if plan_differs(&plan, &prev_plan) {
+            changed_rounds += 1;
+        }
+
+        let mut rec = RoundRecord {
+            round,
+            start: now,
+            jobs: BTreeMap::new(),
+            busy_gpu_secs: 0.0,
+            alloc_gpu_secs: 0.0,
+            avail_gpu_secs: total_gpus * cfg.slot_secs,
+        };
+
+        for (&id, alloc) in &plan.allocations {
+            let job = queue.get_mut(id).expect("plan references live job");
+            if job.is_complete() {
+                continue;
+            }
+            let remaining_before = job.remaining_iters();
+            // Restart overhead if this job's allocation changed.
+            let changed = prev_plan.get(id) != Some(alloc);
+            let overhead = if changed { cfg.restart_overhead } else { 0.0 };
+            let eff = (cfg.slot_secs - overhead).max(0.0);
+            // Bottleneck rule (1b): slowest used type gates every worker.
+            let x_min = alloc
+                .gpu_types()
+                .iter()
+                .map(|&g| job.throughput_on(g))
+                .fold(f64::INFINITY, f64::min);
+            if !x_min.is_finite() || x_min <= 0.0 {
+                continue;
+            }
+            let rate = alloc.total_gpus() as f64 * x_min;
+            let need = job.remaining_iters();
+            let used_secs = (need / rate).min(eff);
+            job.progress += rate * used_secs;
+            job.status = JobStatus::Running;
+            rec.busy_gpu_secs += alloc.total_gpus() as f64 * used_secs;
+            rec.alloc_gpu_secs += alloc.total_gpus() as f64 * cfg.slot_secs;
+            if record_timeline {
+                rec.jobs.insert(
+                    id,
+                    RoundJob {
+                        gpus: alloc.total_gpus(),
+                        remaining_before,
+                        progressed: rate * used_secs,
+                        node: alloc.nodes().first().copied().unwrap_or(0),
+                    },
+                );
+            }
+            if job.is_complete() {
+                let f = now + overhead + used_secs;
+                job.finish_time = Some(f);
+                job.status = JobStatus::Completed;
+                last_finish = last_finish.max(f);
+            }
+        }
+
+        busy_total += rec.busy_gpu_secs;
+        alloc_log.push((rec.start, rec.alloc_gpu_secs));
+        if record_timeline {
+            timeline.push(rec);
+        }
+        prev_plan = plan;
+        round += 1;
+        now += cfg.slot_secs;
+    }
+
+    let ttd = if last_finish > 0.0 { last_finish } else { now };
+    // CRU denominator: allocated node-slots, with the final slot clamped
+    // at the batch finish (a node is not "allocated" past the experiment).
+    for &(start, alloc_secs) in &alloc_log {
+        let span = (ttd - start).clamp(0.0, cfg.slot_secs);
+        alloc_total += alloc_secs / cfg.slot_secs * span;
+    }
+    let mut jct = BTreeMap::new();
+    let mut finish_times = Vec::new();
+    for job in queue.iter() {
+        if let (Some(f), Some(c)) = (job.finish_time, job.completion_time()) {
+            jct.insert(job.id, c);
+            finish_times.push(f);
+        }
+    }
+    finish_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SimResult {
+        scheduler: scheduler.name().to_string(),
+        ttd,
+        jct,
+        finish_times,
+        gru: if ttd > 0.0 {
+            busy_total / (total_gpus * ttd)
+        } else {
+            0.0
+        },
+        cru: if alloc_total > 0.0 {
+            busy_total / alloc_total
+        } else {
+            0.0
+        },
+        rounds: round,
+        sched_wall_secs: sched_wall,
+        sched_wall_per_round: if round > 0 {
+            sched_wall / round as f64
+        } else {
+            0.0
+        },
+        timeline,
+        change_fraction: if round > 0 {
+            changed_rounds as f64 / round as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+fn plan_differs(a: &RoundPlan, b: &RoundPlan) -> bool {
+    a.allocations != b.allocations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::GpuType;
+    use crate::jobs::job::Job;
+    use crate::jobs::model::DlModel;
+    use crate::sched;
+
+    fn mk_queue(n: u64, epochs: u64) -> JobQueue {
+        let mut q = JobQueue::new();
+        for id in 0..n {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, epochs, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            q.admit(j);
+        }
+        q
+    }
+
+    #[test]
+    fn all_schedulers_complete_small_workload() {
+        for name in sched::SCHEDULER_NAMES {
+            let cluster = ClusterSpec::motivational();
+            let mut queue = mk_queue(4, 2);
+            let mut s = sched::by_name(name).unwrap();
+            let res = run(&mut queue, s.as_mut(), &cluster,
+                          &SimConfig::default(), true);
+            assert!(queue.all_complete(), "{name} left work");
+            assert!(res.ttd > 0.0);
+            assert_eq!(res.jct.len(), 4, "{name}");
+            assert!(res.gru > 0.0 && res.gru <= 1.0, "{name} gru={}", res.gru);
+        }
+    }
+
+    #[test]
+    fn restart_overhead_slows_completion() {
+        let cluster = ClusterSpec::motivational();
+        let mk = || mk_queue(1, 50); // ~5000 iters at 120/s on 2xV100
+        let cfg_free = SimConfig {
+            restart_overhead: 0.0,
+            ..Default::default()
+        };
+        let cfg_cost = SimConfig {
+            restart_overhead: 60.0,
+            ..Default::default()
+        };
+        let mut q1 = mk();
+        let r1 = run(&mut q1, &mut sched::hadar::Hadar::new(), &cluster,
+                     &cfg_free, false);
+        let mut q2 = mk();
+        let r2 = run(&mut q2, &mut sched::hadar::Hadar::new(), &cluster,
+                     &cfg_cost, false);
+        assert!(r2.jct[&JobId(0)] >= r1.jct[&JobId(0)]);
+    }
+
+    #[test]
+    fn arrivals_are_respected() {
+        let cluster = ClusterSpec::motivational();
+        let mut q = JobQueue::new();
+        let mut j = Job::new(0, DlModel::Lstm, 1000.0, 1, 1, 10);
+        j.set_throughput(GpuType::V100, 60.0);
+        q.admit(j);
+        let res = run(&mut q, &mut sched::hadar::Hadar::new(), &cluster,
+                      &SimConfig::default(), false);
+        let job = q.get(JobId(0)).unwrap();
+        assert!(job.finish_time.unwrap() >= 1000.0);
+        assert!(res.ttd >= 1000.0);
+    }
+
+    #[test]
+    fn timeline_records_busy_time() {
+        let cluster = ClusterSpec::motivational();
+        let mut q = mk_queue(2, 3);
+        let res = run(&mut q, &mut sched::hadar::Hadar::new(), &cluster,
+                      &SimConfig::default(), true);
+        assert!(!res.timeline.is_empty());
+        for rec in &res.timeline {
+            assert!(rec.busy_gpu_secs <= rec.avail_gpu_secs + 1e-9);
+        }
+    }
+
+    #[test]
+    fn hadar_beats_gavel_when_mixing_is_needed() {
+        // One 4-GPU job on the motivational cluster: Gavel can never place
+        // it (no single type has 4), Hadar mixes and completes.
+        let cluster = ClusterSpec::motivational();
+        let mk = || {
+            let mut q = JobQueue::new();
+            let mut j = Job::new(0, DlModel::ResNet18, 0.0, 4, 5, 100);
+            j.set_throughput(GpuType::V100, 40.0);
+            j.set_throughput(GpuType::P100, 25.0);
+            j.set_throughput(GpuType::K80, 8.0);
+            q.admit(j);
+            q
+        };
+        let cfg = SimConfig {
+            max_rounds: 200,
+            ..Default::default()
+        };
+        let mut qh = mk();
+        run(&mut qh, &mut sched::hadar::Hadar::new(), &cluster, &cfg, false);
+        assert!(qh.all_complete(), "hadar completes the mixed-type job");
+        let mut qg = mk();
+        run(&mut qg, &mut sched::gavel::Gavel::new(), &cluster, &cfg, false);
+        assert!(!qg.all_complete(), "gavel cannot place the 4-GPU gang");
+    }
+}

@@ -1,0 +1,316 @@
+//! HadarE's round engine over *forked* jobs (paper §V), shared between the
+//! pure simulation (CRU/TTD/JCT figures) and the PJRT-backed emulation
+//! (which layers real training on the same schedule via `exec`).
+//!
+//! Per round: the HadarE planner assigns whole nodes to copies; the Job
+//! Tracker divides each parent's remaining steps across its scheduled
+//! copies in proportion to node throughput (§V-B); nodes burn their share
+//! (bounded by slot capacity and the restart overhead); the tracker
+//! aggregates completed steps. A parent finishes the moment its aggregated
+//! steps reach the target — possibly mid-slot ("early finish", §V-A).
+
+use crate::cluster::spec::ClusterSpec;
+use crate::forking::forker::{fork, ForkIds};
+use crate::forking::tracker::JobTracker;
+use crate::jobs::job::{Job, JobId, JobStatus};
+use crate::jobs::queue::JobQueue;
+use crate::sched::hadare::HadarE;
+use crate::sched::RoundCtx;
+use crate::sim::engine::{RoundJob, RoundRecord, SimConfig, SimResult};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// What one copy did in one round — the hook `exec` uses to run real
+/// training steps for the same schedule.
+#[derive(Clone, Debug)]
+pub struct CopyWork {
+    pub round: u64,
+    pub copy: JobId,
+    pub parent: JobId,
+    pub node: usize,
+    /// Steps this node completed this round.
+    pub steps: f64,
+    /// Seconds of the slot the node was busy.
+    pub busy_secs: f64,
+}
+
+/// HadarE simulation outcome: the usual metrics plus the per-round copy
+/// work log.
+pub struct HadarESimResult {
+    pub sim: SimResult,
+    pub work_log: Vec<CopyWork>,
+}
+
+/// Run HadarE over `parents` on `cluster`. `copies` defaults to the node
+/// count (Theorem 3's optimum) when `None`.
+pub fn run(parents: &[Job], cluster: &ClusterSpec, cfg: &SimConfig,
+           copies: Option<u64>) -> HadarESimResult {
+    let n_nodes = cluster.nodes.len() as u64;
+    let copies = copies.unwrap_or(n_nodes).max(1);
+    let ids = ForkIds {
+        max_job_count: parents
+            .iter()
+            .map(|j| j.id.0 + 1)
+            .max()
+            .unwrap_or(1)
+            .max(64),
+    };
+    let mut tracker = JobTracker::new(ids);
+    let mut queue = JobQueue::new();
+    for p in parents {
+        let copy_jobs = fork(p, copies, ids);
+        tracker.register(
+            p.id,
+            p.total_iters(),
+            &copy_jobs.iter().map(|c| c.id).collect::<Vec<_>>(),
+        );
+        queue.admit(p.clone());
+    }
+
+    let mut planner = HadarE::new(copies);
+    let total_gpus = cluster.total_gpus() as f64;
+    let mut now = 0.0;
+    let mut round = 0u64;
+    let mut busy_total = 0.0;
+    let mut alloc_total = 0.0;
+    let mut last_finish: f64 = 0.0;
+    let mut sched_wall = 0.0;
+    let mut timeline = Vec::new();
+    let mut work_log = Vec::new();
+    // Per-parent first-seen finish time.
+    let mut finish: BTreeMap<JobId, f64> = BTreeMap::new();
+    // Copies previously bound to a node (restart overhead bookkeeping).
+    let mut prev_binding: BTreeMap<usize, JobId> = BTreeMap::new();
+
+    while !tracker.all_complete() && round < cfg.max_rounds {
+        let active = queue.active_at(now);
+        let plan = {
+            let ctx = RoundCtx {
+                round,
+                now,
+                slot_secs: cfg.slot_secs,
+                horizon: cfg.horizon,
+                queue: &queue,
+                active: &active,
+                cluster,
+            };
+            let t0 = Instant::now();
+            let plan = planner.plan_round(&ctx, &tracker);
+            sched_wall += t0.elapsed().as_secs_f64();
+            plan
+        };
+
+        // Group scheduled copies by parent, collect (copy, node, x).
+        let mut per_parent: BTreeMap<JobId, Vec<(JobId, usize, f64)>> =
+            BTreeMap::new();
+        for (&copy, alloc) in &plan.allocations {
+            let parent = tracker.resolve(copy);
+            let job = queue.get(parent).expect("parent job");
+            for (&(node, gpu), _) in &alloc.slots {
+                per_parent.entry(parent).or_default().push((
+                    copy,
+                    node,
+                    job.throughput_on(gpu),
+                ));
+            }
+        }
+
+        let mut rec = RoundRecord {
+            round,
+            start: now,
+            jobs: BTreeMap::new(),
+            busy_gpu_secs: 0.0,
+            alloc_gpu_secs: 0.0,
+            avail_gpu_secs: total_gpus * cfg.slot_secs,
+        };
+        let mut new_binding: BTreeMap<usize, JobId> = BTreeMap::new();
+
+        for (parent, assigned) in &per_parent {
+            let throughputs: Vec<f64> =
+                assigned.iter().map(|&(_, _, x)| x).collect();
+            let shares =
+                tracker.divide_steps(*parent, &throughputs, cfg.slot_secs);
+            let remaining_before =
+                tracker.parent(*parent).map(|p| p.remaining()).unwrap_or(0.0);
+            rec.jobs.insert(
+                *parent,
+                RoundJob {
+                    gpus: assigned.len(),
+                    remaining_before,
+                    progressed: 0.0, // filled below as copies report
+                    node: assigned.first().map(|&(_, n, _)| n).unwrap_or(0),
+                },
+            );
+            for (&(copy, node, x), &share) in
+                assigned.iter().zip(shares.iter())
+            {
+                // Restart overhead when the node switches models.
+                let switched = prev_binding.get(&node) != Some(&copy.clone())
+                    && prev_binding.get(&node).map(|c| tracker.resolve(*c))
+                        != Some(*parent);
+                let overhead =
+                    if switched { cfg.restart_overhead } else { 0.0 };
+                let eff = (cfg.slot_secs - overhead).max(0.0);
+                let steps = share.min(x * eff);
+                let busy = if x > 0.0 { steps / x } else { 0.0 };
+                tracker.report_steps(copy, steps);
+                rec.busy_gpu_secs += busy;
+                rec.alloc_gpu_secs += cfg.slot_secs;
+                if let Some(rj) = rec.jobs.get_mut(parent) {
+                    rj.progressed += steps;
+                }
+                work_log.push(CopyWork {
+                    round,
+                    copy,
+                    parent: *parent,
+                    node,
+                    steps,
+                    busy_secs: busy,
+                });
+                new_binding.insert(node, copy);
+                // Parent finishing mid-slot: early finish.
+                if tracker.is_parent_complete(*parent)
+                    && !finish.contains_key(parent)
+                {
+                    let f = now + overhead + busy;
+                    finish.insert(*parent, f);
+                    last_finish = last_finish.max(f);
+                }
+            }
+        }
+
+        busy_total += rec.busy_gpu_secs;
+        timeline.push(rec);
+        prev_binding = new_binding;
+        round += 1;
+        now += cfg.slot_secs;
+    }
+
+    // Mark queue state + collect metrics.
+    let mut jct = BTreeMap::new();
+    let mut finish_times = Vec::new();
+    for job in queue.iter_mut() {
+        if let Some(&f) = finish.get(&job.id) {
+            job.finish_time = Some(f);
+            job.status = JobStatus::Completed;
+            job.progress = job.total_iters();
+            jct.insert(job.id, f - job.arrival);
+            finish_times.push(f);
+        }
+    }
+    finish_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ttd = if last_finish > 0.0 { last_finish } else { now };
+    // CRU denominator: allocated node-slots, with the final slot clamped
+    // at the batch finish (a node is not "allocated" past the experiment).
+    for rec in &timeline {
+        let span = (ttd - rec.start).clamp(0.0, cfg.slot_secs);
+        alloc_total += rec.alloc_gpu_secs / cfg.slot_secs * span;
+    }
+    HadarESimResult {
+        sim: SimResult {
+            scheduler: "hadare".to_string(),
+            ttd,
+            jct,
+            finish_times,
+            gru: if ttd > 0.0 {
+                busy_total / (total_gpus * ttd)
+            } else {
+                0.0
+            },
+            cru: if alloc_total > 0.0 {
+                busy_total / alloc_total
+            } else {
+                0.0
+            },
+            rounds: round,
+            sched_wall_secs: sched_wall,
+            sched_wall_per_round: if round > 0 {
+                sched_wall / round as f64
+            } else {
+                0.0
+            },
+            timeline,
+            change_fraction: 0.0,
+        },
+        work_log,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::throughput;
+    use crate::trace::workload::{cluster_gpu_pcie, physical_jobs};
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            slot_secs: 90.0,
+            restart_overhead: 10.0,
+            max_rounds: 5000,
+            horizon: 1e7,
+        }
+    }
+
+    #[test]
+    fn completes_m5_mix_on_testbed() {
+        let cluster = ClusterSpec::testbed5();
+        let jobs = physical_jobs("M-5", &cluster, 1.0).unwrap();
+        let res = run(&jobs, &cluster, &cfg(), None);
+        assert_eq!(res.sim.jct.len(), 5, "all five parents complete");
+        assert!(res.sim.gru > 0.5, "gru={}", res.sim.gru);
+    }
+
+    #[test]
+    fn single_job_uses_all_nodes_and_beats_single_node() {
+        let cluster = ClusterSpec::testbed5();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut j = Job::new(0, DlModel::MiMa, 0.0, 1, 30, 100);
+        j.throughput = throughput::throughput_row(DlModel::MiMa, &pairs);
+        let res5 = run(std::slice::from_ref(&j), &cluster, &cfg(), None);
+        let res1 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(1));
+        assert!(res5.sim.ttd < res1.sim.ttd,
+                "forking speeds up: {} vs {}", res5.sim.ttd, res1.sim.ttd);
+        // First round uses all five nodes.
+        let first_round_nodes: std::collections::BTreeSet<usize> = res5
+            .work_log
+            .iter()
+            .filter(|w| w.round == 0)
+            .map(|w| w.node)
+            .collect();
+        assert_eq!(first_round_nodes.len(), 5);
+    }
+
+    #[test]
+    fn more_copies_never_hurt_cru_theorem3() {
+        // Theorem 3: CRU_1 < CRU_x < CRU_n = CRU_{n+j}.
+        let cluster = ClusterSpec::testbed5();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut j = Job::new(0, DlModel::Transformer, 0.0, 1, 40, 100);
+        j.throughput =
+            throughput::throughput_row(DlModel::Transformer, &pairs);
+        let g1 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(1)).sim.gru;
+        let g3 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(3)).sim.gru;
+        let g5 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(5)).sim.gru;
+        let g7 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(7)).sim.gru;
+        assert!(g1 < g3, "{g1} !< {g3}");
+        assert!(g3 < g5 + 1e-9, "{g3} !< {g5}");
+        assert!((g5 - g7).abs() < 0.05, "n vs n+j: {g5} vs {g7}");
+    }
+
+    #[test]
+    fn work_log_steps_match_tracker_totals() {
+        let cluster = ClusterSpec::testbed5();
+        let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
+        let res = run(&jobs, &cluster, &cfg(), None);
+        let mut per_parent: BTreeMap<JobId, f64> = BTreeMap::new();
+        for w in &res.work_log {
+            *per_parent.entry(w.parent).or_insert(0.0) += w.steps;
+        }
+        for j in &jobs {
+            let done = per_parent.get(&j.id).copied().unwrap_or(0.0);
+            assert!((done - j.total_iters()).abs() < 1e-6,
+                    "parent {} steps {} vs {}", j.id, done, j.total_iters());
+        }
+    }
+}

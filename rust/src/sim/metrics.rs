@@ -1,0 +1,102 @@
+//! Metrics derived from simulation results: GRU/CRU, TTD, JCT summaries,
+//! and the completion CDF of Fig. 4.
+
+use crate::sim::engine::SimResult;
+use crate::util::stats;
+
+/// Summary of one run in the paper's reporting vocabulary.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub scheduler: String,
+    /// GPU resource utilisation (busy / capacity x makespan, Fig. 3).
+    pub gru: f64,
+    /// Cluster resource utilisation (busy / allocated slots, §VI).
+    pub cru: f64,
+    /// Total time duration (makespan), seconds.
+    pub ttd: f64,
+    pub jct_mean: f64,
+    pub jct_min: f64,
+    pub jct_max: f64,
+    /// Time by which 50% of jobs completed (Fig. 4's gray line).
+    pub median_completion: f64,
+    pub completed: usize,
+    pub rounds: u64,
+    pub sched_wall_per_round: f64,
+    pub change_fraction: f64,
+}
+
+impl Metrics {
+    pub fn from_result(res: &SimResult) -> Self {
+        let jcts: Vec<f64> = res.jct.values().copied().collect();
+        Metrics {
+            scheduler: res.scheduler.clone(),
+            gru: res.gru,
+            cru: res.cru,
+            ttd: res.ttd,
+            jct_mean: stats::mean(&jcts),
+            jct_min: if jcts.is_empty() { 0.0 } else { stats::min(&jcts) },
+            jct_max: if jcts.is_empty() { 0.0 } else { stats::max(&jcts) },
+            median_completion: stats::percentile(&res.finish_times, 50.0),
+            completed: res.jct.len(),
+            rounds: res.rounds,
+            sched_wall_per_round: res.sched_wall_per_round,
+            change_fraction: res.change_fraction,
+        }
+    }
+}
+
+/// Fig. 4: cumulative fraction of completed jobs at each point in `hours`.
+pub fn completion_cdf(res: &SimResult, points_hours: &[f64]) -> Vec<(f64, f64)> {
+    let secs: Vec<f64> = points_hours.iter().map(|h| h * 3600.0).collect();
+    let total = res.jct.len().max(1) as f64;
+    let fracs = stats::ecdf_at(&res.finish_times, &secs);
+    points_hours
+        .iter()
+        .zip(fracs)
+        .map(|(&h, f)| (h, f * res.finish_times.len() as f64 / total))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::job::JobId;
+    use std::collections::BTreeMap;
+
+    fn fake_result() -> SimResult {
+        let mut jct = BTreeMap::new();
+        jct.insert(JobId(0), 100.0);
+        jct.insert(JobId(1), 300.0);
+        SimResult {
+            scheduler: "test".into(),
+            ttd: 400.0,
+            jct,
+            finish_times: vec![100.0, 400.0],
+            gru: 0.8,
+            cru: 0.9,
+            rounds: 4,
+            sched_wall_secs: 0.04,
+            sched_wall_per_round: 0.01,
+            timeline: vec![],
+            change_fraction: 0.25,
+        }
+    }
+
+    #[test]
+    fn metrics_summary() {
+        let m = Metrics::from_result(&fake_result());
+        assert_eq!(m.jct_mean, 200.0);
+        assert_eq!(m.jct_min, 100.0);
+        assert_eq!(m.jct_max, 300.0);
+        assert_eq!(m.completed, 2);
+        assert!(m.median_completion >= 100.0);
+    }
+
+    #[test]
+    fn cdf_reaches_one() {
+        let res = fake_result();
+        let cdf = completion_cdf(&res, &[0.0, 0.05, 0.2]);
+        assert_eq!(cdf[0].1, 0.0);
+        assert!((cdf[2].1 - 1.0).abs() < 1e-9); // 720s > all finishes
+    }
+}

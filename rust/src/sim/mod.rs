@@ -1,0 +1,10 @@
+//! Discrete-time simulation (paper §IV) and the HadarE forked-round engine
+//! (paper §V), plus derived metrics.
+
+pub mod engine;
+pub mod hadare_engine;
+pub mod metrics;
+
+pub use engine::{run, RoundRecord, SimConfig, SimResult};
+pub use hadare_engine::{run as run_hadare, CopyWork, HadarESimResult};
+pub use metrics::{completion_cdf, Metrics};

@@ -1,0 +1,7 @@
+//! Traces and workloads: the Philly-shaped synthetic trace generator
+//! (+ CSV parser for real traces) and the paper's workload mixes.
+
+pub mod philly;
+pub mod workload;
+
+pub use philly::{generate, parse_csv, TraceConfig, TraceJob};

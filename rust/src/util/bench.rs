@@ -1,0 +1,79 @@
+//! Bench harness (criterion substitute) for `[[bench]] harness = false`
+//! targets.
+//!
+//! Every paper figure/table has a bench target under `rust/benches/` that
+//! (1) regenerates the figure's rows/series via this harness, printing the
+//! same quantities the paper reports, and (2) times the run. Timing method:
+//! warmup iterations followed by measured iterations, reporting
+//! mean ± stddev / min / max.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+pub struct Bencher {
+    pub name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup: 1,
+            iters: 5,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Time `f`, printing a criterion-style summary line. Returns the last
+    /// result so benches can also *print* the figure it regenerates.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> T {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut s = Summary::new();
+        let mut last = None;
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            let out = f();
+            s.add(t0.elapsed().as_secs_f64() * 1e3);
+            last = Some(out);
+        }
+        println!(
+            "bench {:<40} {:>10.3} ms ± {:>8.3} (min {:.3}, max {:.3}, n={})",
+            self.name,
+            s.mean(),
+            s.stddev(),
+            s.min,
+            s.max,
+            s.n
+        );
+        last.unwrap()
+    }
+}
+
+/// Section header in bench output, mirroring the paper's figure captions.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_returns_result() {
+        let out = Bencher::new("t").warmup(0).iters(3).run(|| 2 + 2);
+        assert_eq!(out, 4);
+    }
+}

@@ -1,0 +1,333 @@
+//! Declarative command-line parser (clap substitute — no network for crates).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Value { default: Option<String> },
+    Switch,
+}
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    kind: Kind,
+}
+
+/// One (sub)command: a set of options plus metadata.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: Kind::Value {
+                default: default.map(|s| s.to_string()),
+            },
+        });
+        self
+    }
+
+    /// Boolean `--name` switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: Kind::Switch,
+        });
+        self
+    }
+
+    fn usage(&self, program: &str) -> String {
+        let mut out = format!("{} {} — {}\n\noptions:\n", program, self.name,
+                              self.about);
+        for o in &self.opts {
+            let line = match &o.kind {
+                Kind::Value { default: Some(d) } => {
+                    format!("  --{} <v>   {} (default: {})", o.name, o.help, d)
+                }
+                Kind::Value { default: None } => {
+                    format!("  --{} <v>   {} (required)", o.name, o.help)
+                }
+                Kind::Switch => format!("  --{}       {}", o.name, o.help),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| panic!("missing required --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// Top-level application: subcommands + dispatch.
+pub struct App {
+    pub name: String,
+    pub about: String,
+    commands: Vec<Command>,
+}
+
+pub enum Parsed {
+    /// (command name, parsed args)
+    Run(String, Args),
+    /// Help/usage text to print; exit 0.
+    Help(String),
+    /// Error text; exit 2.
+    Error(String),
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> Self {
+        App {
+            name: name.to_string(),
+            about: about.to_string(),
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, cmd: Command) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    fn overview(&self) -> String {
+        let mut out = format!("{} — {}\n\ncommands:\n", self.name, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str(&format!(
+            "\nrun `{} <command> --help` for command options\n",
+            self.name
+        ));
+        out
+    }
+
+    /// Parse an argv (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Parsed {
+        if argv.is_empty()
+            || argv[0] == "--help"
+            || argv[0] == "-h"
+            || argv[0] == "help"
+        {
+            return Parsed::Help(self.overview());
+        }
+        let cmd = match self.commands.iter().find(|c| c.name == argv[0]) {
+            Some(c) => c,
+            None => {
+                return Parsed::Error(format!(
+                    "unknown command '{}'\n\n{}",
+                    argv[0],
+                    self.overview()
+                ))
+            }
+        };
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Kind::Value {
+                default: Some(d), ..
+            } = &o.kind
+            {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Parsed::Help(cmd.usage(&self.name));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = match cmd.opts.iter().find(|o| o.name == name) {
+                    Some(o) => o,
+                    None => {
+                        return Parsed::Error(format!(
+                            "unknown option --{name} for '{}'\n\n{}",
+                            cmd.name,
+                            cmd.usage(&self.name)
+                        ))
+                    }
+                };
+                match &opt.kind {
+                    Kind::Switch => {
+                        args.switches.insert(name, true);
+                    }
+                    Kind::Value { .. } => {
+                        let value = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                match argv.get(i) {
+                                    Some(v) => v.clone(),
+                                    None => {
+                                        return Parsed::Error(format!(
+                                            "--{name} expects a value"
+                                        ))
+                                    }
+                                }
+                            }
+                        };
+                        args.values.insert(name, value);
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &cmd.opts {
+            if let Kind::Value { default: None } = &o.kind {
+                if !args.values.contains_key(&o.name) {
+                    return Parsed::Error(format!(
+                        "missing required --{}\n\n{}",
+                        o.name,
+                        cmd.usage(&self.name)
+                    ));
+                }
+            }
+        }
+        Parsed::Run(cmd.name.clone(), args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("hadar", "DL cluster scheduler")
+            .command(
+                Command::new("simulate", "trace-driven simulation")
+                    .opt("jobs", Some("480"), "number of jobs")
+                    .opt("seed", Some("42"), "rng seed")
+                    .opt("sched", None, "scheduler name")
+                    .switch("verbose", "chatty output"),
+            )
+            .command(Command::new("workloads", "print Table II/III"))
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        match app().parse(&argv(&["simulate", "--sched", "hadar"])) {
+            Parsed::Run(name, args) => {
+                assert_eq!(name, "simulate");
+                assert_eq!(args.get_usize("jobs"), 480);
+                assert_eq!(args.get_str("sched"), "hadar");
+                assert!(!args.flag("verbose"));
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn parses_equals_form_and_switch() {
+        match app().parse(&argv(&[
+            "simulate",
+            "--jobs=64",
+            "--sched=gavel",
+            "--verbose",
+        ])) {
+            Parsed::Run(_, args) => {
+                assert_eq!(args.get_usize("jobs"), 64);
+                assert!(args.flag("verbose"));
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(matches!(
+            app().parse(&argv(&["simulate"])),
+            Parsed::Error(_)
+        ));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(matches!(app().parse(&argv(&["nope"])), Parsed::Error(_)));
+        assert!(matches!(
+            app().parse(&argv(&["simulate", "--sched", "x", "--bogus"])),
+            Parsed::Error(_)
+        ));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&argv(&[])), Parsed::Help(_)));
+        assert!(matches!(app().parse(&argv(&["--help"])), Parsed::Help(_)));
+        assert!(matches!(
+            app().parse(&argv(&["simulate", "--help"])),
+            Parsed::Help(_)
+        ));
+    }
+}

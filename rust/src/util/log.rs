@@ -1,0 +1,69 @@
+//! Leveled stderr logger with a global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(2); // Info by default
+
+pub fn set_level(level: Level) {
+    VERBOSITY.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= VERBOSITY.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, &format!($($t)*)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrate utilities (see DESIGN.md §Substitutions: the
+//! usual crates — serde, clap, rand, criterion, proptest — are unavailable
+//! in this sandbox, so each has a focused, tested replacement here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

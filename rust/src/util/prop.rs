@@ -1,0 +1,175 @@
+//! Lightweight property-testing harness (proptest substitute).
+//!
+//! The real `proptest` crate is unavailable (no network); this provides the
+//! part the test suite needs: seeded random case generation, a fixed case
+//! budget, and greedy input shrinking for failures. Used by
+//! `rust/tests/prop_*.rs` for scheduler/coordinator invariants.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` against `cases` random inputs drawn by `gen`. On failure,
+/// tries up to 64 shrink steps via `shrink` (smaller candidates of the
+/// failing input) and panics with the minimal reproduction found.
+pub fn check<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink: repeatedly take the first failing smaller candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 64;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x})\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: Config, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check(cfg, gen, |_| Vec::new(), prop);
+}
+
+/// Shrinker for vectors: drop halves, drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 8 {
+        for i in 0..v.len() {
+            let mut smaller = v.to_vec();
+            smaller.remove(i);
+            out.push(smaller);
+        }
+    }
+    out
+}
+
+/// Shrinker for integers: toward zero.
+pub fn shrink_int(x: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check_no_shrink(
+            Config { cases: 50, seed: 1 },
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(
+            Config { cases: 50, seed: 2 },
+            |rng| rng.below(100),
+            |&x| {
+                if x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 90"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property: all vectors have length < 4. Shrinking should find a
+        // minimal failing vector (length exactly 4).
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config { cases: 50, seed: 3 },
+                |rng| {
+                    (0..rng.range_u(0, 12))
+                        .map(|_| rng.below(10))
+                        .collect::<Vec<u64>>()
+                },
+                |v| shrink_vec(v),
+                |v| {
+                    if v.len() < 4 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {}", v.len()))
+                    }
+                },
+            )
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("len 4"), "shrunk to minimal length: {msg}");
+    }
+
+    #[test]
+    fn int_shrinker_descends() {
+        assert_eq!(shrink_int(10), vec![5, 9]);
+        assert!(shrink_int(0).is_empty());
+    }
+}

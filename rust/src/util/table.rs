@@ -1,0 +1,213 @@
+//! ASCII tables and series plots — how every paper figure/table is rendered.
+//!
+//! The bench harness prints the same rows/series the paper reports; these
+//! helpers keep that output aligned and diffable.
+
+/// A simple aligned table with a header row.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", cell, w = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            let _ = ncols;
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A labelled (x, y) series rendered as a unicode line chart — stands in for
+/// the paper's figures in terminal output.
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Chart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push((name.to_string(), points));
+        self
+    }
+
+    /// Render as a `width x height` character grid with per-series glyphs.
+    pub fn render(&self, width: usize, height: usize) -> String {
+        const GLYPHS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().cloned())
+            .collect();
+        if all.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; width]; height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            let glyph = GLYPHS[si % GLYPHS.len()];
+            for &(x, y) in pts {
+                let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round()
+                    as usize;
+                let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round()
+                    as usize;
+                grid[height - 1 - cy][cx.min(width - 1)] = glyph;
+            }
+        }
+        let mut out = format!("{}\n", self.title);
+        out.push_str(&format!("{:>10} {}\n", format!("{:.3}", y1), "▲"));
+        for row in &grid {
+            out.push_str("           ");
+            out.push_str(&row.iter().collect::<String>());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{:>10} └{}▶ {}\n",
+            format!("{:.3}", y0),
+            "─".repeat(width),
+            self.x_label
+        ));
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| format!("{} {}", GLYPHS[i % GLYPHS.len()], name))
+            .collect();
+        out.push_str(&format!("           [{}] y = {}\n", legend.join("  "),
+                              self.y_label));
+        out
+    }
+}
+
+/// Format a ratio as the paper does: `1.20x`.
+pub fn ratio(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "inf".to_string()
+    } else {
+        format!("{:.2}x", a / b)
+    }
+}
+
+/// Format seconds as `1h 23m` / `45.2s`.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.1}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["sched", "TTD (h)", "ratio"]);
+        t.row(&["Hadar".into(), "40.0".into(), "1.00x".into()]);
+        t.row(&["Gavel".into(), "48.4".into(), "1.21x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("sched"));
+        assert!(lines[2].contains("Hadar"));
+        // All lines same width.
+        assert_eq!(lines[0].chars().count(), lines[2].chars().count());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let mut c = Chart::new("Fig. 4", "hours", "fraction complete");
+        c.series("Hadar", vec![(0.0, 0.0), (40.0, 1.0)]);
+        c.series("Gavel", vec![(0.0, 0.0), (48.0, 1.0)]);
+        let s = c.render(40, 10);
+        assert!(s.contains("Fig. 4"));
+        assert!(s.contains("* Hadar"));
+        assert!(s.contains("+ Gavel"));
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(ratio(48.0, 40.0), "1.20x");
+        assert_eq!(human_time(7200.0), "2.0h");
+        assert_eq!(human_time(90.0), "1.5m");
+        assert_eq!(human_time(5.0), "5.0s");
+    }
+}

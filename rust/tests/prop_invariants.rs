@@ -1,0 +1,296 @@
+//! Property-based invariants over the schedulers and engines (Theorem 1/2
+//! supports + the constraints of problem P1), using the in-tree property
+//! harness (`util::prop` — proptest substitute, see DESIGN.md).
+
+use hadar::cluster::gpu::GpuType;
+use hadar::cluster::spec::ClusterSpec;
+use hadar::cluster::state::ClusterState;
+use hadar::jobs::job::{Job, JobId};
+use hadar::jobs::model::DlModel;
+use hadar::jobs::queue::JobQueue;
+use hadar::sched::price::{PriceBounds, PriceTable};
+use hadar::sched::{by_name, RoundCtx, Scheduler, SCHEDULER_NAMES};
+use hadar::sim::engine::{self, SimConfig};
+use hadar::util::prop::{check_no_shrink, Config};
+use hadar::util::rng::Rng;
+
+/// Random job set over the sim60 GPU types.
+fn gen_jobs(rng: &mut Rng) -> Vec<Job> {
+    let n = rng.range_u(1, 14) as usize;
+    (0..n)
+        .map(|i| {
+            let w = [1usize, 1, 2, 2, 4, 8][rng.below(6) as usize];
+            let epochs = rng.range_u(1, 12);
+            let mut j = Job::new(i as u64, DlModel::Lstm,
+                                 rng.range_f(0.0, 2000.0), w, epochs, 50);
+            let base = rng.range_f(5.0, 80.0);
+            j.set_throughput(GpuType::V100, base);
+            j.set_throughput(GpuType::P100, base * rng.range_f(0.4, 0.9));
+            j.set_throughput(GpuType::K80, base * rng.range_f(0.05, 0.4));
+            j
+        })
+        .collect()
+}
+
+/// Every scheduler, every round: capacity (1d) and gang (1e) hold.
+#[test]
+fn prop_capacity_and_gang_constraints() {
+    check_no_shrink(
+        Config { cases: 40, seed: 0xA11 },
+        gen_jobs,
+        |jobs| {
+            let cluster = ClusterSpec::motivational();
+            for name in SCHEDULER_NAMES {
+                let mut queue = JobQueue::new();
+                for j in jobs {
+                    let mut j = j.clone();
+                    j.arrival = 0.0;
+                    queue.admit(j);
+                }
+                let active = queue.active_at(0.0);
+                let mut s = by_name(name).unwrap();
+                let ctx = RoundCtx {
+                    round: 0,
+                    now: 0.0,
+                    slot_secs: 360.0,
+                    horizon: 1e7,
+                    queue: &queue,
+                    active: &active,
+                    cluster: &cluster,
+                };
+                let plan = s.schedule(&ctx);
+                // Capacity: re-applying the plan into a fresh state must
+                // never exceed any pool (allocate() panics otherwise).
+                let mut state = ClusterState::new(&cluster);
+                for (id, alloc) in &plan.allocations {
+                    for a in alloc.assignments(*id) {
+                        if a.count > state.free(a.node, a.gpu) {
+                            return Err(format!(
+                                "{name}: capacity violated at node {} {:?}",
+                                a.node, a.gpu
+                            ));
+                        }
+                        state.allocate(a);
+                    }
+                }
+                // Gang all-or-nothing: W_j exactly, or nothing.
+                for (id, alloc) in &plan.allocations {
+                    let job = queue.get(*id).unwrap();
+                    if alloc.total_gpus() != job.gpus_requested {
+                        return Err(format!(
+                            "{name}: job {} got {} of {}",
+                            id,
+                            alloc.total_gpus(),
+                            job.gpus_requested
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The dual price function: monotone in γ, bounded by [U_min, U_max],
+/// and α >= 1 (Theorem 2's constants are well-defined).
+#[test]
+fn prop_price_function_bounds() {
+    check_no_shrink(
+        Config { cases: 60, seed: 0xB22 },
+        gen_jobs,
+        |jobs| {
+            let refs: Vec<&Job> = jobs.iter().collect();
+            if refs.is_empty() {
+                return Ok(());
+            }
+            let types = [GpuType::V100, GpuType::P100, GpuType::K80];
+            let bounds = PriceBounds::from_jobs(&refs, &types, 1e6, 1.0);
+            if bounds.alpha() < 1.0 {
+                return Err(format!("alpha {} < 1", bounds.alpha()));
+            }
+            let table = PriceTable::new(bounds.clone());
+            let cluster = ClusterSpec::motivational();
+            let state = ClusterState::new(&cluster);
+            for &(node, gpu, cap) in
+                &[(0usize, GpuType::V100, 2usize), (1, GpuType::P100, 3),
+                  (2, GpuType::K80, 1)]
+            {
+                let mut last = 0.0;
+                for extra in 0..=cap {
+                    let p = table.price(&state, node, gpu, extra);
+                    if p < last {
+                        return Err(format!("price not monotone at {gpu:?}"));
+                    }
+                    if extra == 0
+                        && (p - bounds.u_min[&gpu]).abs() > 1e-9 * p
+                    {
+                        return Err("empty pool != U_min".into());
+                    }
+                    if extra == cap
+                        && (p - bounds.u_max[&gpu]).abs() > 1e-9 * p
+                    {
+                        return Err("full pool != U_max".into());
+                    }
+                    last = p;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Simulation conservation laws: every completed job did exactly its work;
+/// completion times ordered after arrivals; GRU in [0,1]; busy time never
+/// exceeds capacity.
+#[test]
+fn prop_simulation_conservation() {
+    check_no_shrink(
+        Config { cases: 15, seed: 0xC33 },
+        gen_jobs,
+        |jobs| {
+            let cluster = ClusterSpec::sim60();
+            for name in ["hadar", "gavel"] {
+                let mut queue = JobQueue::new();
+                for j in jobs {
+                    let mut j = j.clone();
+                    // Re-derive throughputs across sim60's types.
+                    j.set_throughput(GpuType::V100,
+                                     j.throughput_on(GpuType::V100));
+                    queue.admit(j);
+                }
+                let mut s = by_name(name).unwrap();
+                let cfg = SimConfig {
+                    max_rounds: 3_000,
+                    ..Default::default()
+                };
+                let res = engine::run(&mut queue, s.as_mut(), &cluster,
+                                      &cfg, true);
+                if !(0.0..=1.0 + 1e-9).contains(&res.gru) {
+                    return Err(format!("{name}: gru {}", res.gru));
+                }
+                if !(0.0..=1.0 + 1e-9).contains(&res.cru) {
+                    return Err(format!("{name}: cru {}", res.cru));
+                }
+                for rec in &res.timeline {
+                    if rec.busy_gpu_secs > rec.avail_gpu_secs + 1e-6 {
+                        return Err(format!("{name}: busy > capacity"));
+                    }
+                }
+                for job in queue.iter() {
+                    if let Some(f) = job.finish_time {
+                        if f < job.arrival {
+                            return Err(format!(
+                                "{name}: {} finished before arrival",
+                                job.id
+                            ));
+                        }
+                        if job.progress < job.total_iters() - 1e-6 {
+                            return Err(format!(
+                                "{name}: {} marked done early", job.id
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Hadar's payoff rule: a scheduled allocation never mixes in a GPU type
+/// with zero throughput for that job (it would stall the whole gang via
+/// the bottleneck rule).
+#[test]
+fn prop_hadar_never_uses_zero_throughput_types() {
+    check_no_shrink(
+        Config { cases: 40, seed: 0xD44 },
+        |rng: &mut Rng| {
+            let mut jobs = gen_jobs(rng);
+            // Knock out K80 support for half the jobs.
+            for j in jobs.iter_mut() {
+                if rng.f64() < 0.5 {
+                    j.throughput.remove(&GpuType::K80);
+                }
+            }
+            jobs
+        },
+        |jobs| {
+            let cluster = ClusterSpec::motivational();
+            let mut queue = JobQueue::new();
+            for j in jobs {
+                let mut j = j.clone();
+                j.arrival = 0.0;
+                queue.admit(j);
+            }
+            let active = queue.active_at(0.0);
+            let mut s = by_name("hadar").unwrap();
+            let ctx = RoundCtx {
+                round: 0,
+                now: 0.0,
+                slot_secs: 360.0,
+                horizon: 1e7,
+                queue: &queue,
+                active: &active,
+                cluster: &cluster,
+            };
+            let plan = s.schedule(&ctx);
+            for (id, alloc) in &plan.allocations {
+                let job = queue.get(*id).unwrap();
+                for g in alloc.gpu_types() {
+                    if job.throughput_on(g) <= 0.0 {
+                        return Err(format!(
+                            "job {id} allocated unusable type {g:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// HadarE work conservation (Theorem 3 corollary) across random mixes:
+/// while >= 1 parent is unfinished, no node idles except possibly in the
+/// final round.
+#[test]
+fn prop_hadare_no_idle_nodes_before_last_round() {
+    check_no_shrink(
+        Config { cases: 20, seed: 0xE55 },
+        |rng: &mut Rng| {
+            let cluster = ClusterSpec::testbed5();
+            let pairs = hadar::trace::workload::cluster_gpu_pcie(&cluster);
+            let n = rng.range_u(1, 6) as usize;
+            (0..n)
+                .map(|i| {
+                    let mut j = Job::new(i as u64, DlModel::MiMa, 0.0, 1,
+                                         rng.range_u(5, 40), 100);
+                    j.throughput = hadar::jobs::throughput::throughput_row(
+                        DlModel::MiMa, &pairs);
+                    j
+                })
+                .collect::<Vec<Job>>()
+        },
+        |jobs| {
+            let cluster = ClusterSpec::testbed5();
+            let cfg = SimConfig {
+                slot_secs: 90.0,
+                restart_overhead: 10.0,
+                max_rounds: 3_000,
+                horizon: 1e7,
+            };
+            let res = hadar::sim::run_hadare(jobs, &cluster, &cfg, None);
+            let n_nodes = cluster.nodes.len();
+            for (i, rec) in res.sim.timeline.iter().enumerate() {
+                let nodes_busy: usize =
+                    rec.jobs.values().map(|rj| rj.gpus).sum();
+                let is_last = i + 1 == res.sim.timeline.len();
+                if !is_last && nodes_busy < n_nodes {
+                    return Err(format!(
+                        "round {i}: {nodes_busy}/{n_nodes} nodes busy"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

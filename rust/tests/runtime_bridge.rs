@@ -1,0 +1,104 @@
+//! Integration: the python-AOT -> rust-PJRT bridge. Requires
+//! `make artifacts` (tests are skipped gracefully if artifacts are absent,
+//! so `cargo test` stays green on a fresh checkout).
+
+use hadar::runtime::{
+    consolidate_states, flatten_params, Manifest, Runtime, Trainer,
+};
+use hadar::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> Option<Manifest> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).expect("manifest parses"))
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn train_step_runs_and_loss_decreases() {
+    let Some(m) = manifest() else { return };
+    let v = m.variant("tiny").expect("tiny variant");
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let exe = rt.load_train(v).expect("compile train hlo");
+    let state = rt.init_state(v, 42);
+    let mut trainer = Trainer::new(state, v.vocab, 42, 0.1);
+
+    let first = trainer.run_steps(&exe, 1).expect("first step");
+    // Untrained CE should be near log(vocab) = log(256) ≈ 5.55.
+    assert!((first - (v.vocab as f32).ln()).abs() < 1.0,
+            "initial loss {first} far from log(vocab)");
+    let last = trainer.run_steps(&exe, 30).expect("more steps");
+    assert!(last < first - 0.5,
+            "loss should fall: {first} -> {last}");
+    assert_eq!(trainer.steps_done, 31);
+    assert_eq!(trainer.losses.len(), 31);
+}
+
+#[test]
+fn eval_step_reports_loss_and_accuracy() {
+    let Some(m) = manifest() else { return };
+    let v = m.variant("tiny").expect("tiny variant");
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let train = rt.load_train(v).expect("train");
+    let eval = rt.load_eval(v).expect("eval");
+    let state = rt.init_state(v, 7);
+    let mut trainer = Trainer::new(state, v.vocab, 7, 0.1);
+    let mut rng = Rng::new(99);
+
+    let tokens = trainer.corpus.batch(&mut rng, v.batch, v.seq + 1);
+    let (l0, a0) = eval
+        .eval(&trainer.state, &tokens, v.batch, v.seq + 1)
+        .expect("eval before");
+    trainer.run_steps(&train, 40).expect("train");
+    let (l1, a1) = eval
+        .eval(&trainer.state, &tokens, v.batch, v.seq + 1)
+        .expect("eval after");
+    assert!(l1 < l0, "eval loss should fall: {l0} -> {l1}");
+    assert!(a1 > a0, "accuracy should rise: {a0} -> {a1}");
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+#[test]
+fn deterministic_given_same_seed() {
+    let Some(m) = manifest() else { return };
+    let v = m.variant("tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_train(v).unwrap();
+    let run = |seed: u64| -> f32 {
+        let mut t = Trainer::new(rt.init_state(v, seed), v.vocab, seed, 0.1);
+        t.run_steps(&exe, 5).unwrap()
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+}
+
+#[test]
+fn consolidation_preserves_shapes_and_averages() {
+    let Some(m) = manifest() else { return };
+    let v = m.variant("tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_train(v).unwrap();
+    // Two copies from the same init, trained on different streams.
+    let mut a = Trainer::new(rt.init_state(v, 1), v.vocab, 10, 0.05);
+    let mut b = Trainer::new(rt.init_state(v, 1), v.vocab, 20, 0.05);
+    a.run_steps(&exe, 3).unwrap();
+    b.run_steps(&exe, 3).unwrap();
+    let avg = consolidate_states(&[&a.state, &b.state], &[1.0, 1.0], v)
+        .expect("consolidate");
+    let fa = flatten_params(&a.state.params).unwrap();
+    let fb = flatten_params(&b.state.params).unwrap();
+    let favg = flatten_params(&avg).unwrap();
+    assert_eq!(favg.len(), fa.len());
+    for i in (0..favg.len()).step_by(1000) {
+        let expect = (fa[i] + fb[i]) / 2.0;
+        assert!((favg[i] - expect).abs() < 1e-6);
+    }
+}
