@@ -1,0 +1,45 @@
+//! Bench: serial vs parallel execution of a 16-scenario sweep grid
+//! (the built-in `demo16` spec: 4 schedulers x 2 slots x 2 seeds over a
+//! scaled Philly trace on sim60).
+//! Run: `cargo bench --bench sweep_throughput`.
+
+use hadar::expt::artifact::{self, ScenarioRecord};
+use hadar::expt::runner;
+use hadar::expt::spec::SweepSpec;
+use hadar::util::bench::section;
+use std::time::Instant;
+
+fn main() {
+    let spec = SweepSpec::demo();
+    let n = spec.n_scenarios();
+    section(&format!(
+        "sweep_throughput — {n}-scenario grid, serial vs parallel"
+    ));
+
+    let t0 = Instant::now();
+    let serial = runner::run_sweep(&spec, 1).expect("serial sweep");
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    let workers = runner::default_workers();
+    let t0 = Instant::now();
+    let parallel = runner::run_sweep(&spec, workers).expect("parallel sweep");
+    let parallel_secs = t0.elapsed().as_secs_f64();
+
+    let rec_s: Vec<ScenarioRecord> =
+        serial.iter().map(ScenarioRecord::from_run).collect();
+    let rec_p: Vec<ScenarioRecord> =
+        parallel.iter().map(ScenarioRecord::from_run).collect();
+    assert_eq!(
+        artifact::canonical_jsonl(&rec_s),
+        artifact::canonical_jsonl(&rec_p),
+        "parallel execution must not change results"
+    );
+
+    println!("scenarios            {n}");
+    println!("serial   (1 worker)  {serial_secs:>8.3} s");
+    println!("parallel ({workers} workers) {parallel_secs:>8.3} s");
+    println!(
+        "speedup              {:.2}x (results byte-identical)",
+        serial_secs / parallel_secs.max(1e-9)
+    );
+}

@@ -1,0 +1,319 @@
+//! JSONL sweep artifacts: per-scenario summary records, the run manifest,
+//! and the loader used to re-aggregate a finished sweep without re-running
+//! it.
+//!
+//! Two serialisations exist per record:
+//!
+//! * [`to_jsonl`] — the full record, including the scheduling wall-time
+//!   measurements (`sched_wall_secs`, `sched_wall_per_round`). Wall time
+//!   is inherently non-deterministic, so these lines vary run to run.
+//! * [`canonical_jsonl`] — the same records with the timing fields
+//!   dropped. Everything left is a pure function of the spec, so two runs
+//!   of the same sweep — at any worker count — emit byte-identical
+//!   canonical lines. The determinism tests and any diff-based tooling
+//!   should use this form.
+
+use crate::expt::runner::ScenarioResult;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+use std::io;
+use std::path::Path;
+
+/// One scenario's summary: identity + the paper's reporting metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioRecord {
+    pub id: String,
+    pub scheduler: String,
+    pub cluster: String,
+    pub workload: String,
+    pub slot_secs: f64,
+    pub seed: u64,
+    /// Total time duration (makespan), seconds.
+    pub ttd: f64,
+    /// Whole-makespan busy fraction (Fig. 3's GRU).
+    pub gru: f64,
+    /// Busy time over allocated slots (§VI CRU).
+    pub cru: f64,
+    pub jct_mean: f64,
+    pub jct_p50: f64,
+    pub jct_p90: f64,
+    pub jct_p99: f64,
+    pub jct_min: f64,
+    pub jct_max: f64,
+    pub completed: usize,
+    pub rounds: u64,
+    pub change_fraction: f64,
+    /// Wall-clock seconds inside `Scheduler::schedule` (non-deterministic).
+    pub sched_wall_secs: f64,
+    /// Mean wall-clock per round (non-deterministic).
+    pub sched_wall_per_round: f64,
+}
+
+impl ScenarioRecord {
+    pub fn from_run(run: &ScenarioResult) -> Self {
+        let res = &run.result;
+        let jcts: Vec<f64> = res.jct.values().copied().collect();
+        let (jct_min, jct_max) = if jcts.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (stats::min(&jcts), stats::max(&jcts))
+        };
+        ScenarioRecord {
+            id: run.spec.id(),
+            scheduler: run.spec.scheduler.clone(),
+            cluster: run.spec.cluster.label(),
+            workload: run.spec.workload.label(),
+            slot_secs: run.spec.sim.slot_secs,
+            seed: run.spec.seed,
+            ttd: res.ttd,
+            gru: res.gru,
+            cru: res.cru,
+            jct_mean: stats::mean(&jcts),
+            jct_p50: stats::percentile(&jcts, 50.0),
+            jct_p90: stats::percentile(&jcts, 90.0),
+            jct_p99: stats::percentile(&jcts, 99.0),
+            jct_min,
+            jct_max,
+            completed: res.jct.len(),
+            rounds: res.rounds,
+            change_fraction: res.change_fraction,
+            sched_wall_secs: res.sched_wall_secs,
+            sched_wall_per_round: res.sched_wall_per_round,
+        }
+    }
+
+    /// Emit as JSON; `include_timing` controls the non-deterministic
+    /// wall-time fields (see the module docs).
+    pub fn to_json(&self, include_timing: bool) -> Json {
+        let mut v = Json::obj()
+            .set("id", self.id.as_str())
+            .set("scheduler", self.scheduler.as_str())
+            .set("cluster", self.cluster.as_str())
+            .set("workload", self.workload.as_str())
+            .set("slot_secs", self.slot_secs)
+            .set("seed", self.seed)
+            .set("ttd", self.ttd)
+            .set("gru", self.gru)
+            .set("cru", self.cru)
+            .set("jct_mean", self.jct_mean)
+            .set("jct_p50", self.jct_p50)
+            .set("jct_p90", self.jct_p90)
+            .set("jct_p99", self.jct_p99)
+            .set("jct_min", self.jct_min)
+            .set("jct_max", self.jct_max)
+            .set("completed", self.completed)
+            .set("rounds", self.rounds)
+            .set("change_fraction", self.change_fraction);
+        if include_timing {
+            v.insert("sched_wall_secs", self.sched_wall_secs);
+            v.insert("sched_wall_per_round", self.sched_wall_per_round);
+        }
+        v
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .as_f64()
+                .ok_or_else(|| format!("record: '{key}' must be a number"))
+        };
+        Ok(ScenarioRecord {
+            id: v
+                .get("id")
+                .as_str()
+                .ok_or("record: 'id' must be a string")?
+                .to_string(),
+            scheduler: v
+                .get("scheduler")
+                .as_str()
+                .ok_or("record: 'scheduler' must be a string")?
+                .to_string(),
+            cluster: v.get("cluster").as_str().unwrap_or("?").to_string(),
+            workload: v.get("workload").as_str().unwrap_or("?").to_string(),
+            slot_secs: f("slot_secs")?,
+            seed: v.get("seed").as_u64().unwrap_or(0),
+            ttd: f("ttd")?,
+            gru: f("gru")?,
+            cru: f("cru")?,
+            jct_mean: f("jct_mean")?,
+            jct_p50: f("jct_p50")?,
+            jct_p90: f("jct_p90")?,
+            jct_p99: f("jct_p99")?,
+            jct_min: f("jct_min")?,
+            jct_max: f("jct_max")?,
+            completed: v.get("completed").as_usize().unwrap_or(0),
+            rounds: v.get("rounds").as_u64().unwrap_or(0),
+            change_fraction: v.get("change_fraction").as_f64().unwrap_or(0.0),
+            sched_wall_secs: v.get("sched_wall_secs").as_f64().unwrap_or(0.0),
+            sched_wall_per_round: v
+                .get("sched_wall_per_round")
+                .as_f64()
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+/// Full JSONL (with timing), one compact record per line.
+pub fn to_jsonl(records: &[ScenarioRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json(true).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Deterministic JSONL: timing fields dropped, byte-identical across
+/// worker counts and repeated runs of the same spec.
+pub fn canonical_jsonl(records: &[ScenarioRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json(false).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse JSONL produced by [`to_jsonl`] / [`canonical_jsonl`] (timing
+/// fields are optional and default to zero).
+pub fn parse_jsonl(text: &str) -> Result<Vec<ScenarioRecord>, String> {
+    let mut records = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        records
+            .push(ScenarioRecord::from_json(&v)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(records)
+}
+
+/// Write the full JSONL summaries to `path`.
+pub fn write_jsonl(path: &Path, records: &[ScenarioRecord]) -> io::Result<()> {
+    std::fs::write(path, to_jsonl(records))
+}
+
+/// Load summaries back for re-aggregation (`hadar sweep --from <file>`).
+pub fn load_jsonl(path: &Path) -> Result<Vec<ScenarioRecord>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_jsonl(&text)
+}
+
+/// Run-level metadata written next to the summaries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunManifest {
+    pub sweep: String,
+    pub scenarios: usize,
+    pub workers: usize,
+    /// End-to-end sweep wall time (seconds).
+    pub wall_secs: f64,
+    /// Sum of per-scenario scheduler wall time (seconds).
+    pub sched_wall_secs_total: f64,
+}
+
+impl RunManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("sweep", self.sweep.as_str())
+            .set("scenarios", self.scenarios)
+            .set("workers", self.workers)
+            .set("wall_secs", self.wall_secs)
+            .set("sched_wall_secs_total", self.sched_wall_secs_total)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        Ok(RunManifest {
+            sweep: v
+                .get("sweep")
+                .as_str()
+                .ok_or("manifest: 'sweep' must be a string")?
+                .to_string(),
+            scenarios: v.get("scenarios").as_usize().unwrap_or(0),
+            workers: v.get("workers").as_usize().unwrap_or(0),
+            wall_secs: v.get("wall_secs").as_f64().unwrap_or(0.0),
+            sched_wall_secs_total: v
+                .get("sched_wall_secs_total")
+                .as_f64()
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(scheduler: &str, ttd: f64) -> ScenarioRecord {
+        ScenarioRecord {
+            id: format!("{scheduler}/sim60/trace8@0.1/slot360/seed7"),
+            scheduler: scheduler.into(),
+            cluster: "sim60".into(),
+            workload: "trace8@0.1".into(),
+            slot_secs: 360.0,
+            seed: 7,
+            ttd,
+            gru: 0.8,
+            cru: 0.9,
+            jct_mean: 100.0,
+            jct_p50: 90.0,
+            jct_p90: 150.0,
+            jct_p99: 180.0,
+            jct_min: 10.0,
+            jct_max: 200.0,
+            completed: 8,
+            rounds: 12,
+            change_fraction: 0.5,
+            sched_wall_secs: 0.123,
+            sched_wall_per_round: 0.01,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let r = record("hadar", 1234.5);
+        let back = ScenarioRecord::from_json(&r.to_json(true)).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn canonical_drops_timing_but_parses_back() {
+        let r = record("gavel", 999.0);
+        let line = canonical_jsonl(&[r.clone()]);
+        assert!(!line.contains("sched_wall"));
+        let back = parse_jsonl(&line).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].ttd, r.ttd);
+        assert_eq!(back[0].sched_wall_secs, 0.0);
+    }
+
+    #[test]
+    fn jsonl_roundtrips_multiple_records() {
+        let records = vec![record("hadar", 10.0), record("gavel", 20.0)];
+        let text = to_jsonl(&records);
+        assert_eq!(text.lines().count(), 2);
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_lines() {
+        assert!(parse_jsonl("{not json}\n").is_err());
+        assert!(parse_jsonl("{\"id\":\"x\"}\n").is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let m = RunManifest {
+            sweep: "demo16".into(),
+            scenarios: 16,
+            workers: 8,
+            wall_secs: 1.5,
+            sched_wall_secs_total: 0.4,
+        };
+        assert_eq!(RunManifest::from_json(&m.to_json()).unwrap(), m);
+    }
+}

@@ -1,0 +1,35 @@
+//! `expt` — declarative, multi-threaded experiment sweeps (the repo's
+//! experiment engine).
+//!
+//! The paper's evaluation is a grid: five schedulers x trace sizes x slot
+//! lengths x cluster specs x workload mixes (Figs. 3-12). Instead of one
+//! bespoke serial loop per figure, a sweep is *data*:
+//!
+//! * [`spec`] — [`spec::SweepSpec`] declares the grid (scheduler names x
+//!   cluster presets x workloads x slot lengths x seeds) and expands it
+//!   into [`spec::ScenarioSpec`]s via a deterministic cartesian product.
+//!   Specs load from / save to JSON through [`crate::util::json`].
+//! * [`runner`] — executes scenarios on a `std::thread` worker pool (one
+//!   `sim::engine::run` / `sim::hadare_engine::run` per scenario), with
+//!   per-scenario seeds and result ordering that is independent of thread
+//!   interleaving.
+//! * [`artifact`] — per-scenario JSONL summaries (TTD, JCT percentiles,
+//!   GRU/CRU, scheduling wall time) plus a run manifest, and a loader to
+//!   re-aggregate a finished sweep without re-running it.
+//! * [`report`] — cross-scenario comparison tables (speedup vs a baseline
+//!   scheduler, utilisation deltas) rendered through [`crate::util::table`].
+//!
+//! `figures::trace_eval`, `figures::slots`, and `figures::physical` all
+//! express their grids as sweeps and run through [`runner`], so the
+//! multi-scenario figures scale with the available cores. The `hadar
+//! sweep` CLI subcommand exposes the same machinery on arbitrary spec
+//! files (see `docs/expt.md`).
+
+pub mod artifact;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use artifact::{RunManifest, ScenarioRecord};
+pub use runner::{run_scenario, run_sweep, ScenarioResult};
+pub use spec::{ClusterRef, ScenarioSpec, SweepSpec, WorkloadSpec};

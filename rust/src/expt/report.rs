@@ -1,0 +1,173 @@
+//! Cross-scenario comparison reports over sweep artifacts.
+//!
+//! Scenarios are grouped by everything except the scheduler (cluster,
+//! workload, slot, seed); within each group every scheduler is compared to
+//! a chosen baseline: TTD speedup (`baseline_ttd / ttd`, >1 is faster) and
+//! utilisation deltas in percentage points. A per-scheduler summary table
+//! aggregates the mean speedup and deltas across groups.
+
+use crate::expt::artifact::ScenarioRecord;
+use crate::util::stats;
+use crate::util::table::{human_time, Table};
+use std::collections::BTreeMap;
+
+/// Group key: scenario identity minus the scheduler.
+fn group_key(r: &ScenarioRecord) -> String {
+    format!("{}/{}/slot{}/seed{}", r.cluster, r.workload, r.slot_secs, r.seed)
+}
+
+/// Render the per-scenario comparison plus a per-scheduler summary.
+/// Groups with no `baseline` record show `-` in the speedup column.
+pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
+    let mut base_ttd: BTreeMap<String, f64> = BTreeMap::new();
+    let mut base_gru: BTreeMap<String, f64> = BTreeMap::new();
+    let mut base_cru: BTreeMap<String, f64> = BTreeMap::new();
+    for r in records {
+        if r.scheduler == baseline {
+            let k = group_key(r);
+            base_ttd.insert(k.clone(), r.ttd);
+            base_gru.insert(k.clone(), r.gru);
+            base_cru.insert(k, r.cru);
+        }
+    }
+
+    let speedup_hdr = format!("TTD vs {baseline}");
+    let mut t = Table::new(&[
+        "scenario",
+        "scheduler",
+        "TTD",
+        speedup_hdr.as_str(),
+        "GRU",
+        "dGRU",
+        "CRU",
+        "dCRU",
+        "sched ms/round",
+    ]);
+    // Per-scheduler accumulators for the summary table.
+    let mut speedups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut dgrus: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut dcrus: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records {
+        let k = group_key(r);
+        let speedup = base_ttd.get(&k).map(|&b| b / r.ttd.max(1e-12));
+        let dgru = base_gru.get(&k).map(|&b| (r.gru - b) * 100.0);
+        let dcru = base_cru.get(&k).map(|&b| (r.cru - b) * 100.0);
+        if let Some(s) = speedup {
+            speedups.entry(r.scheduler.clone()).or_default().push(s);
+        }
+        if let Some(d) = dgru {
+            dgrus.entry(r.scheduler.clone()).or_default().push(d);
+        }
+        if let Some(d) = dcru {
+            dcrus.entry(r.scheduler.clone()).or_default().push(d);
+        }
+        t.row(&[
+            k,
+            r.scheduler.clone(),
+            human_time(r.ttd),
+            speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", r.gru * 100.0),
+            dgru.map(|d| format!("{d:+.1}pp"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", r.cru * 100.0),
+            dcru.map(|d| format!("{d:+.1}pp"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.3}", r.sched_wall_per_round * 1e3),
+        ]);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "sweep comparison — {} scenarios, baseline: {baseline}\n",
+        records.len()
+    ));
+    out.push_str(&t.render());
+
+    let mut s = Table::new(&[
+        "scheduler",
+        "groups",
+        format!("mean TTD speedup vs {baseline}").as_str(),
+        "mean dGRU",
+        "mean dCRU",
+    ]);
+    for (sched, sp) in &speedups {
+        let dg = dgrus.get(sched).map(|v| stats::mean(v)).unwrap_or(0.0);
+        let dc = dcrus.get(sched).map(|v| stats::mean(v)).unwrap_or(0.0);
+        s.row(&[
+            sched.clone(),
+            format!("{}", sp.len()),
+            format!("{:.2}x", stats::mean(sp)),
+            format!("{dg:+.1}pp"),
+            format!("{dc:+.1}pp"),
+        ]);
+    }
+    out.push_str("\nper-scheduler summary (mean across groups)\n");
+    out.push_str(&s.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(scheduler: &str, seed: u64, ttd: f64, gru: f64)
+              -> ScenarioRecord {
+        ScenarioRecord {
+            id: format!("{scheduler}/c/w/slot360/seed{seed}"),
+            scheduler: scheduler.into(),
+            cluster: "c".into(),
+            workload: "w".into(),
+            slot_secs: 360.0,
+            seed,
+            ttd,
+            gru,
+            cru: gru,
+            jct_mean: ttd / 2.0,
+            jct_p50: ttd / 2.0,
+            jct_p90: ttd,
+            jct_p99: ttd,
+            jct_min: 1.0,
+            jct_max: ttd,
+            completed: 4,
+            rounds: 10,
+            change_fraction: 0.1,
+            sched_wall_secs: 0.0,
+            sched_wall_per_round: 0.0,
+        }
+    }
+
+    #[test]
+    fn baseline_rows_are_unity_and_others_scaled() {
+        let records = vec![
+            record("gavel", 7, 200.0, 0.5),
+            record("hadar", 7, 100.0, 0.6),
+        ];
+        let out = render(&records, "gavel");
+        assert!(out.contains("1.00x"), "{out}");
+        assert!(out.contains("2.00x"), "{out}");
+        assert!(out.contains("+10.0pp"), "{out}");
+        assert!(out.contains("per-scheduler summary"), "{out}");
+    }
+
+    #[test]
+    fn missing_baseline_shows_dash() {
+        let records = vec![record("hadar", 7, 100.0, 0.6)];
+        let out = render(&records, "gavel");
+        assert!(out.contains(" - "), "{out}");
+    }
+
+    #[test]
+    fn summary_averages_across_seeds() {
+        let records = vec![
+            record("gavel", 1, 100.0, 0.5),
+            record("hadar", 1, 50.0, 0.5),
+            record("gavel", 2, 100.0, 0.5),
+            record("hadar", 2, 25.0, 0.5),
+        ];
+        let out = render(&records, "gavel");
+        // Mean of 2.0x and 4.0x speedups.
+        assert!(out.contains("3.00x"), "{out}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Multi-threaded sweep execution.
+//!
+//! Scenarios are independent simulations, so the runner fans them out over
+//! a `std::thread` worker pool (sized to the available parallelism unless
+//! overridden). Work is handed out through a shared atomic cursor and
+//! results come back over a channel tagged with the scenario index, so the
+//! returned vector's order — and therefore every artifact and report built
+//! from it — is the spec's expansion order regardless of how threads
+//! interleave. Each scenario is seeded from its own spec, so a 1-worker
+//! and an N-worker run of the same sweep produce identical `SimResult`s.
+
+use crate::expt::spec::{ScenarioSpec, SweepSpec};
+use crate::jobs::queue::JobQueue;
+use crate::sched;
+use crate::sim::engine::{self, SimResult};
+use crate::sim::hadare_engine;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// One scenario's spec together with its full simulation result.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub spec: ScenarioSpec,
+    pub result: SimResult,
+}
+
+/// Worker count used when the caller passes `0`.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The pool size [`run_scenarios`] actually uses for `requested` workers
+/// over `n` scenarios (`0` = all cores) — exposed so callers recording
+/// run metadata report the same number.
+pub fn effective_workers(requested: usize, n: usize) -> usize {
+    let w = if requested == 0 { default_workers() } else { requested };
+    w.clamp(1, n.max(1))
+}
+
+/// Run a single scenario to completion.
+///
+/// `hadare` is special-cased onto [`hadare_engine::run`] (it schedules
+/// forked copies onto whole nodes, which the generic engine cannot
+/// express); every other scheduler goes through [`sched::by_name`] and the
+/// generic [`engine::run`]. Timelines are not recorded — sweeps only keep
+/// summary metrics.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<SimResult, String> {
+    let cluster = spec.cluster.resolve()?;
+    let jobs = spec.workload.build_jobs(&cluster, spec.seed)?;
+    if spec.scheduler.eq_ignore_ascii_case("hadare") {
+        Ok(hadare_engine::run(&jobs, &cluster, &spec.sim, None).sim)
+    } else {
+        let mut scheduler = sched::by_name(&spec.scheduler)?;
+        let mut queue = JobQueue::new();
+        for j in jobs {
+            queue.admit(j);
+        }
+        Ok(engine::run(
+            &mut queue,
+            scheduler.as_mut(),
+            &cluster,
+            &spec.sim,
+            false,
+        ))
+    }
+}
+
+/// Expand `spec` and run every scenario on `workers` threads (`0` = all
+/// cores). Results come back in expansion order.
+pub fn run_sweep(spec: &SweepSpec, workers: usize)
+                 -> Result<Vec<ScenarioResult>, String> {
+    run_scenarios(&spec.expand(), workers)
+}
+
+/// Run an explicit scenario list on `workers` threads (`0` = all cores).
+/// The output order matches the input order independent of thread
+/// interleaving; the first failing scenario aborts the sweep with its id.
+pub fn run_scenarios(scenarios: &[ScenarioSpec], workers: usize)
+                     -> Result<Vec<ScenarioResult>, String> {
+    let n = scenarios.len();
+    let workers = effective_workers(workers, n);
+
+    let mut slots: Vec<Option<Result<SimResult, String>>> =
+        (0..n).map(|_| None).collect();
+
+    if workers <= 1 {
+        for (i, s) in scenarios.iter().enumerate() {
+            let out = run_scenario(s);
+            let failed = out.is_err();
+            slots[i] = Some(out);
+            if failed {
+                break;
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        // First failure stops workers from claiming further scenarios
+        // (already-running ones finish); queued scenarios stay `None`.
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<(usize, Result<SimResult, String>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let stop = &stop;
+                scope.spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    let out = run_scenario(&scenarios[i]);
+                    if out.is_err() {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (i, out) in rx {
+                slots[i] = Some(out);
+            }
+        });
+    }
+
+    let mut results = Vec::with_capacity(n);
+    for (spec, slot) in scenarios.iter().zip(slots) {
+        match slot {
+            Some(Ok(res)) => results.push(ScenarioResult {
+                spec: spec.clone(),
+                result: res,
+            }),
+            Some(Err(e)) => {
+                return Err(format!("scenario {}: {e}", spec.id()))
+            }
+            // Never claimed: an earlier scenario failed first.
+            None => {
+                return Err(format!(
+                    "scenario {}: not run (an earlier scenario failed)",
+                    spec.id()
+                ))
+            }
+        }
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expt::spec::{ClusterRef, WorkloadSpec};
+    use crate::sim::engine::SimConfig;
+
+    fn tiny_spec(scheduler: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            scheduler: scheduler.into(),
+            cluster: ClusterRef::Preset("motivational".into()),
+            workload: WorkloadSpec::Trace {
+                n_jobs: 4,
+                max_gpus: 2,
+                all_at_start: true,
+                hours_scale: 0.05,
+            },
+            seed: 3,
+            sim: SimConfig::default(),
+        }
+    }
+
+    #[test]
+    fn scenario_runs_and_completes_jobs() {
+        let res = run_scenario(&tiny_spec("hadar")).unwrap();
+        assert_eq!(res.jct.len(), 4);
+        assert!(res.ttd > 0.0);
+        assert!(res.gru > 0.0 && res.gru <= 1.0);
+    }
+
+    #[test]
+    fn hadare_routes_through_forking_engine() {
+        let spec = ScenarioSpec {
+            scheduler: "hadare".into(),
+            cluster: ClusterRef::Preset("aws5".into()),
+            workload: WorkloadSpec::Mix {
+                name: "M-1".into(),
+                epochs_scale: 0.2,
+            },
+            seed: 0,
+            sim: SimConfig {
+                slot_secs: 90.0,
+                ..Default::default()
+            },
+        };
+        let res = run_scenario(&spec).unwrap();
+        assert_eq!(res.jct.len(), 1);
+    }
+
+    #[test]
+    fn unknown_scheduler_is_a_clear_error() {
+        let err = run_scenario(&tiny_spec("bogus")).unwrap_err();
+        assert!(err.contains("unknown scheduler"), "{err}");
+    }
+
+    #[test]
+    fn parallel_matches_serial_and_preserves_order() {
+        let scenarios: Vec<ScenarioSpec> = ["yarn-cs", "gavel", "hadar"]
+            .iter()
+            .flat_map(|s| {
+                let mut a = tiny_spec(s);
+                let mut b = tiny_spec(s);
+                a.seed = 3;
+                b.seed = 5;
+                [a, b]
+            })
+            .collect();
+        let serial = run_scenarios(&scenarios, 1).unwrap();
+        let parallel = run_scenarios(&scenarios, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.spec.id(), b.spec.id());
+            assert_eq!(a.result.ttd, b.result.ttd);
+            assert_eq!(a.result.gru, b.result.gru);
+            assert_eq!(a.result.cru, b.result.cru);
+            assert_eq!(a.result.jct, b.result.jct);
+        }
+    }
+}

@@ -1,0 +1,700 @@
+//! Declarative scenario / sweep specifications.
+//!
+//! A [`SweepSpec`] names the axes of an experiment grid; [`SweepSpec::expand`]
+//! takes the cartesian product into concrete [`ScenarioSpec`]s in a stable
+//! order (cluster, workload, slot, seed, scheduler — scheduler innermost so
+//! the existing figures' row orders are preserved). Specs round-trip
+//! through the repo's own [`crate::util::json`], so sweeps can be loaded
+//! from a JSON file (`hadar sweep --spec grid.json`).
+
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::job::Job;
+use crate::sim::engine::SimConfig;
+use crate::trace::philly::{generate, TraceConfig};
+use crate::trace::workload::{materialize, physical_jobs};
+use crate::util::json::{self, Json};
+
+/// A cluster, either by preset name (`"sim60"`, `"aws5"`, `"testbed5"`,
+/// `"motivational"`, `"scaled:<nodes_per_type>x<gpus_per_node>"`) or as an
+/// inline [`ClusterSpec`] JSON object.
+#[derive(Clone, Debug)]
+pub enum ClusterRef {
+    Preset(String),
+    Inline(ClusterSpec),
+}
+
+impl ClusterRef {
+    /// Stable label used in scenario ids and artifact records.
+    pub fn label(&self) -> String {
+        match self {
+            ClusterRef::Preset(name) => name.clone(),
+            ClusterRef::Inline(c) => c.name.clone(),
+        }
+    }
+
+    /// Materialise the actual cluster.
+    pub fn resolve(&self) -> Result<ClusterSpec, String> {
+        match self {
+            ClusterRef::Preset(name) => preset(name),
+            ClusterRef::Inline(c) => Ok(c.clone()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClusterRef::Preset(name) => Json::Str(name.clone()),
+            ClusterRef::Inline(c) => c.to_json(),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Str(name) => {
+                // Validate eagerly so bad spec files fail at parse time.
+                preset(name)?;
+                Ok(ClusterRef::Preset(name.clone()))
+            }
+            Json::Obj(_) => Ok(ClusterRef::Inline(ClusterSpec::from_json(v)?)),
+            _ => Err("cluster: expected a preset name or an inline cluster \
+                      object"
+                .into()),
+        }
+    }
+}
+
+/// Resolve a cluster preset name.
+pub fn preset(name: &str) -> Result<ClusterSpec, String> {
+    match name {
+        "sim60" => Ok(ClusterSpec::sim60()),
+        "aws5" => Ok(ClusterSpec::aws5()),
+        "testbed5" => Ok(ClusterSpec::testbed5()),
+        "motivational" => Ok(ClusterSpec::motivational()),
+        other => {
+            if let Some(rest) = other.strip_prefix("scaled:") {
+                if let Some((a, b)) = rest.split_once('x') {
+                    let npt: usize = a
+                        .parse()
+                        .map_err(|_| format!("bad scaled preset '{other}'"))?;
+                    let gpn: usize = b
+                        .parse()
+                        .map_err(|_| format!("bad scaled preset '{other}'"))?;
+                    if npt == 0 || gpn == 0 {
+                        return Err(format!("bad scaled preset '{other}'"));
+                    }
+                    return Ok(ClusterSpec::scaled(npt, gpn));
+                }
+            }
+            Err(format!(
+                "unknown cluster preset '{other}' (known: sim60, aws5, \
+                 testbed5, motivational, scaled:<n>x<g>)"
+            ))
+        }
+    }
+}
+
+/// What jobs a scenario runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    /// Philly-shaped synthetic trace (Figs. 3-5): `trace::philly::generate`
+    /// + `trace::workload::materialize`, with the optional epoch scaling
+    /// the trace figures use for fast runs.
+    Trace {
+        n_jobs: usize,
+        max_gpus: usize,
+        all_at_start: bool,
+        hours_scale: f64,
+    },
+    /// Physical workload mix `M-1` … `M-12` (Figs. 8-12):
+    /// `trace::workload::physical_jobs`.
+    Mix { name: String, epochs_scale: f64 },
+}
+
+impl WorkloadSpec {
+    /// Stable label used in scenario ids and artifact records.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Trace {
+                n_jobs,
+                max_gpus,
+                all_at_start,
+                hours_scale,
+            } => {
+                let arrivals = if *all_at_start { "" } else { "+poisson" };
+                format!("trace{n_jobs}x{max_gpus}@{hours_scale}{arrivals}")
+            }
+            // Bare mix name at the paper's scale (what the figures use);
+            // a non-default scale must show up so ids stay unique.
+            WorkloadSpec::Mix { name, epochs_scale } => {
+                if *epochs_scale == 1.0 {
+                    name.clone()
+                } else {
+                    format!("{name}@{epochs_scale}")
+                }
+            }
+        }
+    }
+
+    /// Build the scenario's job list (deterministic in `seed`).
+    pub fn build_jobs(&self, cluster: &ClusterSpec, seed: u64)
+                      -> Result<Vec<Job>, String> {
+        match self {
+            WorkloadSpec::Trace {
+                n_jobs,
+                max_gpus,
+                all_at_start,
+                hours_scale,
+            } => {
+                let trace = generate(&TraceConfig {
+                    n_jobs: *n_jobs,
+                    seed,
+                    all_at_start: *all_at_start,
+                    max_gpus: *max_gpus,
+                    ..Default::default()
+                });
+                let mut jobs = materialize(&trace, cluster, seed);
+                if *hours_scale != 1.0 {
+                    for j in &mut jobs {
+                        j.epochs = ((j.epochs as f64 * hours_scale).ceil()
+                            as u64)
+                            .max(1);
+                    }
+                }
+                Ok(jobs)
+            }
+            WorkloadSpec::Mix { name, epochs_scale } => {
+                physical_jobs(name, cluster, *epochs_scale)
+                    .ok_or_else(|| format!("unknown workload mix '{name}'"))
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkloadSpec::Trace {
+                n_jobs,
+                max_gpus,
+                all_at_start,
+                hours_scale,
+            } => Json::obj()
+                .set("kind", "trace")
+                .set("n_jobs", *n_jobs)
+                .set("max_gpus", *max_gpus)
+                .set("all_at_start", *all_at_start)
+                .set("hours_scale", *hours_scale),
+            WorkloadSpec::Mix { name, epochs_scale } => Json::obj()
+                .set("kind", "mix")
+                .set("name", name.as_str())
+                .set("epochs_scale", *epochs_scale),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        match v.get("kind").as_str() {
+            Some("trace") => Ok(WorkloadSpec::Trace {
+                n_jobs: v
+                    .get("n_jobs")
+                    .as_usize()
+                    .ok_or("trace workload: 'n_jobs' must be a number")?,
+                max_gpus: v.get("max_gpus").as_usize().unwrap_or(8),
+                all_at_start: v.get("all_at_start").as_bool().unwrap_or(true),
+                hours_scale: v.get("hours_scale").as_f64().unwrap_or(1.0),
+            }),
+            Some("mix") => {
+                let name = v
+                    .get("name")
+                    .as_str()
+                    .ok_or("mix workload: 'name' must be a string")?
+                    .to_string();
+                // Fail at parse time, not scenarios deep into a sweep.
+                if crate::trace::workload::mix(&name).is_none() {
+                    return Err(format!("unknown workload mix '{name}'"));
+                }
+                Ok(WorkloadSpec::Mix {
+                    name,
+                    epochs_scale: v.get("epochs_scale").as_f64().unwrap_or(1.0),
+                })
+            }
+            _ => Err("workload: 'kind' must be \"trace\" or \"mix\"".into()),
+        }
+    }
+}
+
+// ----------------------------------------------------------- SimConfig JSON
+
+/// Emit a [`SimConfig`] (used by sweep specs and artifact manifests).
+pub fn sim_to_json(cfg: &SimConfig) -> Json {
+    Json::obj()
+        .set("slot_secs", cfg.slot_secs)
+        .set("restart_overhead", cfg.restart_overhead)
+        .set("max_rounds", cfg.max_rounds)
+        .set("horizon", cfg.horizon)
+}
+
+/// Parse a [`SimConfig`], taking missing fields from `base`.
+pub fn sim_from_json(v: &Json, base: SimConfig) -> SimConfig {
+    SimConfig {
+        slot_secs: v.get("slot_secs").as_f64().unwrap_or(base.slot_secs),
+        restart_overhead: v
+            .get("restart_overhead")
+            .as_f64()
+            .unwrap_or(base.restart_overhead),
+        max_rounds: v.get("max_rounds").as_u64().unwrap_or(base.max_rounds),
+        horizon: v.get("horizon").as_f64().unwrap_or(base.horizon),
+    }
+}
+
+// -------------------------------------------------------------- ScenarioSpec
+
+/// One fully-specified simulation scenario. `sim.slot_secs` is
+/// authoritative (the sweep's slot axis writes into it).
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub scheduler: String,
+    pub cluster: ClusterRef,
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+    pub sim: SimConfig,
+}
+
+impl ScenarioSpec {
+    /// Stable, human-readable unique id within a sweep.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/slot{}/seed{}",
+            self.scheduler,
+            self.cluster.label(),
+            self.workload.label(),
+            self.sim.slot_secs,
+            self.seed
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheduler", self.scheduler.as_str())
+            .set("cluster", self.cluster.to_json())
+            .set("workload", self.workload.to_json())
+            .set("seed", self.seed)
+            .set("sim", sim_to_json(&self.sim))
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let scheduler = v
+            .get("scheduler")
+            .as_str()
+            .ok_or("scenario: 'scheduler' must be a string")?
+            .to_string();
+        if !crate::sched::is_known(&scheduler) {
+            return Err(format!("unknown scheduler '{scheduler}'"));
+        }
+        Ok(ScenarioSpec {
+            scheduler,
+            cluster: ClusterRef::from_json(v.get("cluster"))?,
+            workload: WorkloadSpec::from_json(v.get("workload"))?,
+            seed: v.get("seed").as_u64().unwrap_or(42),
+            sim: sim_from_json(v.get("sim"), SimConfig::default()),
+        })
+    }
+}
+
+// ----------------------------------------------------------------- SweepSpec
+
+/// A declarative experiment grid: the cartesian product of every axis.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub schedulers: Vec<String>,
+    pub clusters: Vec<ClusterRef>,
+    pub workloads: Vec<WorkloadSpec>,
+    /// Slot lengths `L` (seconds); each writes into `base.slot_secs`.
+    pub slots_secs: Vec<f64>,
+    pub seeds: Vec<u64>,
+    /// Base simulation config (slot overridden per scenario).
+    pub base: SimConfig,
+}
+
+impl SweepSpec {
+    /// Number of scenarios `expand` will produce.
+    pub fn n_scenarios(&self) -> usize {
+        self.schedulers.len()
+            * self.clusters.len()
+            * self.workloads.len()
+            * self.slots_secs.len()
+            * self.seeds.len()
+    }
+
+    /// Cartesian expansion in a stable order: cluster, workload, slot,
+    /// seed, scheduler (innermost) — the nesting the hand-rolled figure
+    /// loops used, so refactored figures keep their row order.
+    pub fn expand(&self) -> Vec<ScenarioSpec> {
+        let mut out = Vec::with_capacity(self.n_scenarios());
+        for cluster in &self.clusters {
+            for workload in &self.workloads {
+                for &slot in &self.slots_secs {
+                    for &seed in &self.seeds {
+                        for sched in &self.schedulers {
+                            let mut sim = self.base;
+                            sim.slot_secs = slot;
+                            out.push(ScenarioSpec {
+                                scheduler: sched.clone(),
+                                cluster: cluster.clone(),
+                                workload: workload.clone(),
+                                seed,
+                                sim,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Built-in demonstration grid: the four generic schedulers over a
+    /// scaled-down Philly trace on `sim60`, two slot lengths x two seeds —
+    /// a 16-scenario sweep that finishes in seconds (`hadar sweep` with no
+    /// `--spec`, and the `sweep_throughput` bench).
+    pub fn demo() -> SweepSpec {
+        SweepSpec {
+            name: "demo16".into(),
+            schedulers: crate::sched::SCHEDULER_NAMES
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            clusters: vec![ClusterRef::Preset("sim60".into())],
+            workloads: vec![WorkloadSpec::Trace {
+                n_jobs: 60,
+                max_gpus: 8,
+                all_at_start: true,
+                hours_scale: 0.2,
+            }],
+            slots_secs: vec![180.0, 360.0],
+            seeds: vec![7, 11],
+            base: SimConfig {
+                slot_secs: 360.0,
+                restart_overhead: 10.0,
+                max_rounds: 50_000,
+                horizon: 30.0 * 24.0 * 3600.0,
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set(
+                "schedulers",
+                Json::Arr(
+                    self.schedulers
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "clusters",
+                Json::Arr(self.clusters.iter().map(|c| c.to_json()).collect()),
+            )
+            .set(
+                "workloads",
+                Json::Arr(
+                    self.workloads.iter().map(|w| w.to_json()).collect(),
+                ),
+            )
+            .set("slots_secs", self.slots_secs.clone())
+            .set(
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()),
+            )
+            .set("sim", sim_to_json(&self.base))
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let base = sim_from_json(v.get("sim"), SimConfig::default());
+        let schedulers: Vec<String> = v
+            .get("schedulers")
+            .as_arr()
+            .ok_or("sweep: 'schedulers' must be an array")?
+            .iter()
+            .map(|s| {
+                let name = s
+                    .as_str()
+                    .ok_or("sweep: scheduler names must be strings")?;
+                if !crate::sched::is_known(name) {
+                    return Err(format!(
+                        "unknown scheduler '{name}' (known: yarn-cs, \
+                         tiresias, gavel, hadar, hadare)"
+                    ));
+                }
+                Ok(name.to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let clusters: Vec<ClusterRef> = v
+            .get("clusters")
+            .as_arr()
+            .ok_or("sweep: 'clusters' must be an array")?
+            .iter()
+            .map(ClusterRef::from_json)
+            .collect::<Result<_, _>>()?;
+        let workloads: Vec<WorkloadSpec> = v
+            .get("workloads")
+            .as_arr()
+            .ok_or("sweep: 'workloads' must be an array")?
+            .iter()
+            .map(WorkloadSpec::from_json)
+            .collect::<Result<_, _>>()?;
+        let slots_secs: Vec<f64> = match v.get("slots_secs").as_arr() {
+            Some(a) => a
+                .iter()
+                .map(|s| {
+                    s.as_f64().ok_or_else(|| {
+                        "sweep: 'slots_secs' must be numbers".to_string()
+                    })
+                })
+                .collect::<Result<_, _>>()?,
+            None => vec![base.slot_secs],
+        };
+        let seeds: Vec<u64> = match v.get("seeds").as_arr() {
+            Some(a) => a
+                .iter()
+                .map(|s| {
+                    s.as_u64().ok_or_else(|| {
+                        "sweep: 'seeds' must be integers".to_string()
+                    })
+                })
+                .collect::<Result<_, _>>()?,
+            None => vec![42],
+        };
+        if schedulers.is_empty()
+            || clusters.is_empty()
+            || workloads.is_empty()
+            || slots_secs.is_empty()
+            || seeds.is_empty()
+        {
+            return Err("sweep: 'schedulers', 'clusters', 'workloads', \
+                        'slots_secs', and 'seeds' must be non-empty"
+                .into());
+        }
+        Ok(SweepSpec {
+            name: v.get("name").as_str().unwrap_or("sweep").to_string(),
+            schedulers,
+            clusters,
+            workloads,
+            slots_secs,
+            seeds,
+            base,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(preset("sim60").unwrap().total_gpus(), 60);
+        assert_eq!(preset("aws5").unwrap().total_gpus(), 5);
+        assert_eq!(preset("scaled:2x4").unwrap().total_gpus(), 2 * 4 * 3);
+        assert!(preset("nope").is_err());
+        assert!(preset("scaled:0x4").is_err());
+        assert!(preset("scaled:abc").is_err());
+    }
+
+    #[test]
+    fn demo_grid_is_16_scenarios_with_unique_ids() {
+        let spec = SweepSpec::demo();
+        assert_eq!(spec.n_scenarios(), 16);
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 16);
+        let mut ids: Vec<String> = scenarios.iter().map(|s| s.id()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "scenario ids must be unique");
+    }
+
+    #[test]
+    fn expansion_order_is_stable_and_scheduler_innermost() {
+        let spec = SweepSpec::demo();
+        let a = spec.expand();
+        let b = spec.expand();
+        assert!(a.iter().zip(&b).all(|(x, y)| x.id() == y.id()));
+        // Scheduler varies fastest.
+        assert_eq!(a[0].scheduler, "yarn-cs");
+        assert_eq!(a[1].scheduler, "tiresias");
+        assert_eq!(a[2].scheduler, "gavel");
+        assert_eq!(a[3].scheduler, "hadar");
+        // Then seed.
+        assert_eq!(a[0].seed, 7);
+        assert_eq!(a[4].seed, 11);
+        // Then slot.
+        assert_eq!(a[0].sim.slot_secs, 180.0);
+        assert_eq!(a[8].sim.slot_secs, 360.0);
+    }
+
+    #[test]
+    fn sweep_json_roundtrip() {
+        let spec = SweepSpec::demo();
+        let text = spec.to_json().pretty();
+        let back = SweepSpec::parse(&text).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.n_scenarios(), spec.n_scenarios());
+        let ids_a: Vec<String> =
+            spec.expand().iter().map(|s| s.id()).collect();
+        let ids_b: Vec<String> =
+            back.expand().iter().map(|s| s.id()).collect();
+        assert_eq!(ids_a, ids_b);
+        assert_eq!(back.base.max_rounds, spec.base.max_rounds);
+        assert_eq!(back.base.horizon, spec.base.horizon);
+    }
+
+    #[test]
+    fn scenario_json_roundtrip_with_inline_cluster() {
+        let s = ScenarioSpec {
+            scheduler: "hadar".into(),
+            cluster: ClusterRef::Inline(ClusterSpec::testbed5()),
+            workload: WorkloadSpec::Mix {
+                name: "M-5".into(),
+                epochs_scale: 1.0,
+            },
+            seed: 9,
+            sim: SimConfig::default(),
+        };
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.id(), s.id());
+        assert_eq!(back.cluster.resolve().unwrap().total_gpus(), 5);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(SweepSpec::parse("{}").is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["nope"],
+                "workloads":[{"kind":"mix","name":"M-1"}]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"bogus"}]}"#
+        )
+        .is_err());
+        // Typos in scheduler / mix names fail at parse time, not after
+        // half the sweep has run.
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadarr"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-99"}]}"#
+        )
+        .is_err());
+        // Explicitly empty axes must not silently expand to 0 scenarios.
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}],"seeds":[]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}],"slots_secs":[]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn trace_labels_distinguish_every_field() {
+        let base = WorkloadSpec::Trace {
+            n_jobs: 100,
+            max_gpus: 4,
+            all_at_start: true,
+            hours_scale: 1.0,
+        };
+        let more_gpus = WorkloadSpec::Trace {
+            n_jobs: 100,
+            max_gpus: 8,
+            all_at_start: true,
+            hours_scale: 1.0,
+        };
+        let poisson = WorkloadSpec::Trace {
+            n_jobs: 100,
+            max_gpus: 4,
+            all_at_start: false,
+            hours_scale: 1.0,
+        };
+        let scaled = WorkloadSpec::Trace {
+            n_jobs: 100,
+            max_gpus: 4,
+            all_at_start: true,
+            hours_scale: 0.5,
+        };
+        let labels = [
+            base.label(),
+            more_gpus.label(),
+            poisson.label(),
+            scaled.label(),
+        ];
+        for i in 0..labels.len() {
+            for j in (i + 1)..labels.len() {
+                assert_ne!(labels[i], labels[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_workload_builds_scaled_jobs() {
+        let cluster = preset("sim60").unwrap();
+        let full = WorkloadSpec::Trace {
+            n_jobs: 20,
+            max_gpus: 8,
+            all_at_start: true,
+            hours_scale: 1.0,
+        };
+        let scaled = WorkloadSpec::Trace {
+            n_jobs: 20,
+            max_gpus: 8,
+            all_at_start: true,
+            hours_scale: 0.2,
+        };
+        let a = full.build_jobs(&cluster, 42).unwrap();
+        let b = scaled.build_jobs(&cluster, 42).unwrap();
+        assert_eq!(a.len(), 20);
+        assert_eq!(b.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(y.epochs,
+                       ((x.epochs as f64 * 0.2).ceil() as u64).max(1));
+        }
+    }
+
+    #[test]
+    fn mix_labels_stay_bare_at_paper_scale() {
+        let paper = WorkloadSpec::Mix {
+            name: "M-5".into(),
+            epochs_scale: 1.0,
+        };
+        let scaled = WorkloadSpec::Mix {
+            name: "M-5".into(),
+            epochs_scale: 0.5,
+        };
+        // Figures key their cells on the bare mix name.
+        assert_eq!(paper.label(), "M-5");
+        assert_ne!(paper.label(), scaled.label());
+    }
+
+    #[test]
+    fn mix_workload_rejects_unknown_mix() {
+        let cluster = preset("aws5").unwrap();
+        let w = WorkloadSpec::Mix {
+            name: "M-99".into(),
+            epochs_scale: 1.0,
+        };
+        assert!(w.build_jobs(&cluster, 0).is_err());
+    }
+}

@@ -2,13 +2,11 @@
 //! Gavel / Hadar / HadarE over the seven workload mixes (M-1 … M-12) on
 //! both five-node clusters (AWS and the lab testbed), in virtual time.
 
-use crate::cluster::spec::ClusterSpec;
-use crate::jobs::queue::JobQueue;
-use crate::sched;
-use crate::sim::engine::{self, SimConfig, SimResult};
-use crate::sim::hadare_engine;
+use crate::expt::runner;
+use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use crate::sim::engine::SimConfig;
 use crate::sim::metrics::Metrics;
-use crate::trace::workload::{physical_jobs, MIX_NAMES};
+use crate::trace::workload::MIX_NAMES;
 use crate::util::stats;
 use crate::util::table::{ratio, Table};
 
@@ -36,40 +34,45 @@ pub fn sim_cfg(slot_secs: f64) -> SimConfig {
     }
 }
 
-/// Run one (cluster, mix, scheduler) cell.
-pub fn run_cell(cluster: &ClusterSpec, mix: &str, scheduler: &str,
-                slot_secs: f64) -> SimResult {
-    let jobs = physical_jobs(mix, cluster, 1.0).expect("known mix");
-    let cfg = sim_cfg(slot_secs);
-    if scheduler == "hadare" {
-        hadare_engine::run(&jobs, cluster, &cfg, None).sim
-    } else {
-        let mut queue = JobQueue::new();
-        for j in &jobs {
-            queue.admit(j.clone());
-        }
-        let mut s = sched::by_name(scheduler).expect("known scheduler");
-        engine::run(&mut queue, s.as_mut(), cluster, &cfg, true)
+/// The Figs. 8-10 grid as a declarative sweep: 2 clusters x 7 mixes x
+/// 3 schedulers at one slot length.
+pub fn sweep_spec(slot_secs: f64) -> SweepSpec {
+    SweepSpec {
+        name: "physical".into(),
+        schedulers: SCHEDULERS.iter().map(|s| s.to_string()).collect(),
+        clusters: vec![
+            ClusterRef::Preset("aws5".into()),
+            ClusterRef::Preset("testbed5".into()),
+        ],
+        workloads: MIX_NAMES
+            .iter()
+            .map(|m| WorkloadSpec::Mix {
+                name: m.to_string(),
+                epochs_scale: 1.0,
+            })
+            .collect(),
+        slots_secs: vec![slot_secs],
+        seeds: vec![0],
+        base: sim_cfg(slot_secs),
     }
 }
 
-/// Full grid for Figs. 8-10 at the paper's default 360 s slot.
+/// Full grid for Figs. 8-10 at the paper's default 360 s slot, executed in
+/// parallel by the `expt` runner.
 pub fn run(slot_secs: f64) -> Physical {
-    let mut cells = Vec::new();
-    for cluster in [ClusterSpec::aws5(), ClusterSpec::testbed5()] {
-        for mix in MIX_NAMES {
-            for s in SCHEDULERS {
-                let res = run_cell(&cluster, mix, s, slot_secs);
-                cells.push(Cell {
-                    cluster: cluster.name.clone(),
-                    mix: mix.to_string(),
-                    scheduler: s.to_string(),
-                    metrics: Metrics::from_result(&res),
-                });
-            }
-        }
+    let results =
+        runner::run_sweep(&sweep_spec(slot_secs), 0).expect("sweep runs");
+    Physical {
+        cells: results
+            .iter()
+            .map(|r| Cell {
+                cluster: r.spec.cluster.label(),
+                mix: r.spec.workload.label(),
+                scheduler: r.spec.scheduler.clone(),
+                metrics: Metrics::from_result(&r.result),
+            })
+            .collect(),
     }
-    Physical { cells }
 }
 
 pub fn get<'a>(p: &'a Physical, cluster: &str, mix: &str, sched: &str)

@@ -2,8 +2,9 @@
 //! {90, 180, 360, 720} seconds for HadarE (Fig. 11) and Hadar (Fig. 12)
 //! over the workload mixes on both clusters.
 
-use crate::cluster::spec::ClusterSpec;
-use crate::figures::physical::run_cell;
+use crate::expt::runner;
+use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use crate::figures::physical;
 use crate::trace::workload::MIX_NAMES;
 use crate::util::table::Table;
 
@@ -16,20 +17,45 @@ pub struct SlotSweep {
     pub cells: Vec<(String, String, f64, f64)>,
 }
 
-pub fn run(scheduler: &str) -> SlotSweep {
-    let mut cells = Vec::new();
-    for cluster in [ClusterSpec::aws5(), ClusterSpec::testbed5()] {
-        for mix in MIX_NAMES {
-            for &slot in &SLOTS {
-                let res = run_cell(&cluster, mix, scheduler, slot);
-                cells.push((cluster.name.clone(), mix.to_string(), slot,
-                            res.gru));
-            }
-        }
+/// The Figs. 11-12 grid as a declarative sweep: one scheduler over
+/// 2 clusters x 7 mixes x 4 slot lengths.
+pub fn sweep_spec(scheduler: &str) -> SweepSpec {
+    SweepSpec {
+        name: format!("slots_{scheduler}"),
+        schedulers: vec![scheduler.to_string()],
+        clusters: vec![
+            ClusterRef::Preset("aws5".into()),
+            ClusterRef::Preset("testbed5".into()),
+        ],
+        workloads: MIX_NAMES
+            .iter()
+            .map(|m| WorkloadSpec::Mix {
+                name: m.to_string(),
+                epochs_scale: 1.0,
+            })
+            .collect(),
+        slots_secs: SLOTS.to_vec(),
+        seeds: vec![0],
+        base: physical::sim_cfg(SLOTS[0]),
     }
+}
+
+pub fn run(scheduler: &str) -> SlotSweep {
+    let results =
+        runner::run_sweep(&sweep_spec(scheduler), 0).expect("sweep runs");
     SlotSweep {
         scheduler: scheduler.to_string(),
-        cells,
+        cells: results
+            .iter()
+            .map(|r| {
+                (
+                    r.spec.cluster.label(),
+                    r.spec.workload.label(),
+                    r.spec.sim.slot_secs,
+                    r.result.gru,
+                )
+            })
+            .collect(),
     }
 }
 

@@ -2,13 +2,11 @@
 //! utilisation and completion CDF / TTD of the four schedulers over a
 //! Philly-shaped 480-job trace on the 60-GPU simulated cluster.
 
-use crate::cluster::spec::ClusterSpec;
-use crate::jobs::queue::JobQueue;
+use crate::expt::runner;
+use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
 use crate::sched;
-use crate::sim::engine::{self, SimConfig, SimResult};
+use crate::sim::engine::{SimConfig, SimResult};
 use crate::sim::metrics::{completion_cdf, Metrics};
-use crate::trace::philly::{generate, TraceConfig};
-use crate::trace::workload::materialize;
 use crate::util::table::{ratio, Chart, Table};
 
 #[derive(Clone, Copy, Debug)]
@@ -35,40 +33,41 @@ pub struct TraceEval {
     pub results: Vec<(String, SimResult)>,
 }
 
-pub fn run(cfg: &TraceEvalConfig) -> TraceEval {
-    let cluster = ClusterSpec::sim60();
-    let trace = generate(&TraceConfig {
-        n_jobs: cfg.n_jobs,
-        seed: cfg.seed,
-        all_at_start: true,
-        max_gpus: 8,
-        ..Default::default()
-    });
-    let sim_cfg = SimConfig {
-        slot_secs: cfg.slot_secs,
-        restart_overhead: 10.0,
-        max_rounds: 50_000,
-        horizon: 30.0 * 24.0 * 3600.0,
-    };
-    let mut results = Vec::new();
-    for name in sched::SCHEDULER_NAMES {
-        let mut jobs = materialize(&trace, &cluster, cfg.seed);
-        if cfg.hours_scale != 1.0 {
-            for j in &mut jobs {
-                j.epochs =
-                    ((j.epochs as f64 * cfg.hours_scale).ceil() as u64).max(1);
-            }
-        }
-        let mut queue = JobQueue::new();
-        for j in jobs {
-            queue.admit(j);
-        }
-        let mut s = sched::by_name(name).unwrap();
-        let res = engine::run(&mut queue, s.as_mut(), &cluster, &sim_cfg,
-                              false);
-        results.push((name.to_string(), res));
+/// The Figs. 3-4 grid as a declarative sweep: four schedulers over one
+/// Philly-shaped trace on `sim60` (scheduler is the only populated axis).
+pub fn sweep_spec(cfg: &TraceEvalConfig) -> SweepSpec {
+    SweepSpec {
+        name: "trace_eval".into(),
+        schedulers: sched::SCHEDULER_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        clusters: vec![ClusterRef::Preset("sim60".into())],
+        workloads: vec![WorkloadSpec::Trace {
+            n_jobs: cfg.n_jobs,
+            max_gpus: 8,
+            all_at_start: true,
+            hours_scale: cfg.hours_scale,
+        }],
+        slots_secs: vec![cfg.slot_secs],
+        seeds: vec![cfg.seed],
+        base: SimConfig {
+            slot_secs: cfg.slot_secs,
+            restart_overhead: 10.0,
+            max_rounds: 50_000,
+            horizon: 30.0 * 24.0 * 3600.0,
+        },
     }
-    TraceEval { results }
+}
+
+pub fn run(cfg: &TraceEvalConfig) -> TraceEval {
+    let results = runner::run_sweep(&sweep_spec(cfg), 0).expect("sweep runs");
+    TraceEval {
+        results: results
+            .into_iter()
+            .map(|r| (r.spec.scheduler.clone(), r.result))
+            .collect(),
+    }
 }
 
 fn get<'a>(te: &'a TraceEval, name: &str) -> &'a SimResult {

@@ -19,6 +19,9 @@
 //! * [`cluster`], [`jobs`], [`trace`] — the modelled world: GPU types,
 //!   nodes, jobs, throughput matrices, Philly-like traces, workload mixes.
 //! * [`forking`] — HadarE's Job Forker and Job Tracker (paper §V).
+//! * [`expt`] — declarative experiment sweeps: a scenario grid spec, a
+//!   multi-threaded runner, JSONL artifacts, and comparison reports (the
+//!   `hadar sweep` subcommand; the multi-scenario figures run through it).
 //! * [`figures`] — one driver per paper table/figure (see DESIGN.md's
 //!   experiment index), shared by examples and benches.
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, stats, tables,
@@ -26,6 +29,7 @@
 
 pub mod cluster;
 pub mod exec;
+pub mod expt;
 pub mod figures;
 pub mod forking;
 pub mod jobs;

@@ -8,6 +8,7 @@
 //!   rounds      Fig. 6 Hadar vs HadarE round timelines
 //!   physical    Figs. 8-10 mixes grid
 //!   slots       Figs. 11-12 slot-time sweeps
+//!   sweep       declarative multi-threaded scenario sweeps (expt)
 //!   train       end-to-end real-training emulation + Table IV
 //!   bench-info  where each figure's bench target lives
 
@@ -36,6 +37,21 @@ fn app() -> App {
         .command(
             Command::new("slots", "Figs. 11-12 slot-time sweeps")
                 .opt("scheduler", Some("hadare"), "hadare or hadar"),
+        )
+        .command(
+            Command::new(
+                "sweep",
+                "declarative scenario sweeps: parallel grid -> JSONL + report",
+            )
+            .opt("spec", Some(""),
+                 "sweep spec JSON file (empty = built-in 16-scenario demo)")
+            .opt("workers", Some("0"), "worker threads (0 = all cores)")
+            .opt("out", Some("sweep-out"), "artifact output directory")
+            .opt("baseline", Some("gavel"),
+                 "baseline scheduler for the comparison report")
+            .opt("from", Some(""),
+                 "re-aggregate an existing summaries.jsonl (skips running)")
+            .switch("dry-run", "print the expanded scenario grid and exit"),
         )
         .command(
             Command::new("train", "end-to-end real-training emulation (Table IV)")
@@ -68,6 +84,74 @@ fn cmd_scale(args: &Args) {
     }
     let pts = hadar::figures::fig5::run(&scales);
     println!("{}", hadar::figures::fig5::render(&pts));
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use hadar::expt::{artifact, report, runner, spec::SweepSpec};
+
+    let baseline = args.get_str("baseline");
+
+    // Re-aggregation path: load existing artifacts, render, done.
+    let from = args.get_str("from");
+    if !from.is_empty() {
+        let records = artifact::load_jsonl(std::path::Path::new(&from))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!("{}", report::render(&records, &baseline));
+        return Ok(());
+    }
+
+    let path = args.get_str("spec");
+    let spec = if path.is_empty() {
+        SweepSpec::demo()
+    } else {
+        let text = std::fs::read_to_string(&path)?;
+        SweepSpec::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+    };
+    let scenarios = spec.expand();
+    println!("sweep '{}': {} scenarios", spec.name, scenarios.len());
+    if args.flag("dry-run") {
+        for s in &scenarios {
+            println!("  {}", s.id());
+        }
+        return Ok(());
+    }
+
+    let workers =
+        runner::effective_workers(args.get_usize("workers"), scenarios.len());
+    let t0 = std::time::Instant::now();
+    let results = runner::run_scenarios(&scenarios, workers)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let records: Vec<artifact::ScenarioRecord> =
+        results.iter().map(artifact::ScenarioRecord::from_run).collect();
+
+    let out = args.get_str("out");
+    std::fs::create_dir_all(&out)?;
+    let summaries = format!("{out}/summaries.jsonl");
+    artifact::write_jsonl(std::path::Path::new(&summaries), &records)?;
+    let manifest = artifact::RunManifest {
+        sweep: spec.name.clone(),
+        scenarios: records.len(),
+        workers,
+        wall_secs: wall,
+        sched_wall_secs_total: records
+            .iter()
+            .map(|r| r.sched_wall_secs)
+            .sum(),
+    };
+    std::fs::write(
+        format!("{out}/manifest.json"),
+        manifest.to_json().pretty(),
+    )?;
+
+    println!("{}", report::render(&records, &baseline));
+    println!(
+        "wrote {summaries} + {out}/manifest.json ({} scenarios, {} workers, \
+         {wall:.2}s)",
+        records.len(),
+        workers
+    );
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -126,6 +210,12 @@ fn main() {
             "slots" => {
                 let s = hadar::figures::slots::run(&args.get_str("scheduler"));
                 println!("{}", hadar::figures::slots::render(&s));
+            }
+            "sweep" => {
+                if let Err(e) = cmd_sweep(&args) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
             }
             "train" => {
                 if let Err(e) = cmd_train(&args) {

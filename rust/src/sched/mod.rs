@@ -49,14 +49,37 @@ pub trait Scheduler {
 }
 
 /// Construct a scheduler by name (CLI surface).
-pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+///
+/// `hadare` is deliberately *not* constructible here: it schedules forked
+/// copies onto whole nodes through the Job Tracker, which the generic
+/// round engine cannot drive — run it via [`crate::sim::hadare_engine`]
+/// or the `expt` sweep runner (which routes it there automatically).
+/// Unknown names get an error listing the known schedulers.
+pub fn by_name(name: &str) -> Result<Box<dyn Scheduler>, String> {
     match name.to_ascii_lowercase().as_str() {
-        "hadar" => Some(Box::new(hadar::Hadar::new())),
-        "gavel" => Some(Box::new(gavel::Gavel::new())),
-        "tiresias" => Some(Box::new(tiresias::Tiresias::new())),
-        "yarn-cs" | "yarn" => Some(Box::new(yarn_cs::YarnCs::new())),
-        _ => None,
+        "hadar" => Ok(Box::new(hadar::Hadar::new())),
+        "gavel" => Ok(Box::new(gavel::Gavel::new())),
+        "tiresias" => Ok(Box::new(tiresias::Tiresias::new())),
+        "yarn-cs" | "yarn" => Ok(Box::new(yarn_cs::YarnCs::new())),
+        "hadare" => Err("hadare schedules forked job copies onto whole \
+                         nodes and requires the forking engine; run it via \
+                         sim::hadare_engine::run or the expt sweep runner"
+            .into()),
+        other => Err(format!(
+            "unknown scheduler '{other}' (known: yarn-cs, tiresias, gavel, \
+             hadar, hadare)"
+        )),
     }
+}
+
+/// Whether `name` names any scheduler — including `hadare`, which only
+/// the forking engine can run (see [`by_name`]). Lets spec parsers reject
+/// typos before a sweep starts burning CPU.
+pub fn is_known(name: &str) -> bool {
+    matches!(
+        name.to_ascii_lowercase().as_str(),
+        "hadar" | "gavel" | "tiresias" | "yarn-cs" | "yarn" | "hadare"
+    )
 }
 
 /// All baseline names, in the paper's comparison order.

@@ -1,0 +1,112 @@
+//! End-to-end tests for the `expt` sweep subsystem: grid expansion,
+//! JSON round-trips, runner determinism across worker counts, and the
+//! artifact/report pipeline.
+
+use hadar::expt::artifact::{self, ScenarioRecord};
+use hadar::expt::report;
+use hadar::expt::runner;
+use hadar::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use hadar::sim::engine::SimConfig;
+
+/// A fast sweep: 2 schedulers x 2 seeds x 2 slots on the 6-GPU
+/// motivational cluster with a tiny trace (8 scenarios, sub-second).
+fn tiny_sweep() -> SweepSpec {
+    SweepSpec {
+        name: "tiny".into(),
+        schedulers: vec!["yarn-cs".into(), "hadar".into()],
+        clusters: vec![ClusterRef::Preset("motivational".into())],
+        workloads: vec![WorkloadSpec::Trace {
+            n_jobs: 6,
+            max_gpus: 2,
+            all_at_start: true,
+            hours_scale: 0.05,
+        }],
+        slots_secs: vec![180.0, 360.0],
+        seeds: vec![3, 4],
+        base: SimConfig::default(),
+    }
+}
+
+#[test]
+fn grid_expansion_is_the_full_cartesian_product() {
+    let spec = tiny_sweep();
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2 * 2 * 2);
+    assert_eq!(scenarios.len(), spec.n_scenarios());
+    let mut ids: Vec<String> = scenarios.iter().map(|s| s.id()).collect();
+    let n = ids.len();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+}
+
+#[test]
+fn spec_roundtrips_through_json_file_format() {
+    let spec = tiny_sweep();
+    let text = spec.to_json().pretty();
+    let back = SweepSpec::parse(&text).unwrap();
+    let ids_a: Vec<String> = spec.expand().iter().map(|s| s.id()).collect();
+    let ids_b: Vec<String> = back.expand().iter().map(|s| s.id()).collect();
+    assert_eq!(ids_a, ids_b);
+}
+
+#[test]
+fn sweep_is_deterministic_across_worker_counts() {
+    let spec = tiny_sweep();
+    let r2 = runner::run_sweep(&spec, 2).unwrap();
+    let r8 = runner::run_sweep(&spec, 8).unwrap();
+    let rec2: Vec<ScenarioRecord> =
+        r2.iter().map(ScenarioRecord::from_run).collect();
+    let rec8: Vec<ScenarioRecord> =
+        r8.iter().map(ScenarioRecord::from_run).collect();
+    let a = artifact::canonical_jsonl(&rec2);
+    let b = artifact::canonical_jsonl(&rec8);
+    assert_eq!(a.lines().count(), spec.n_scenarios());
+    assert_eq!(a, b, "2-worker and 8-worker sweeps must emit byte-identical \
+                      canonical JSONL");
+}
+
+#[test]
+fn artifacts_roundtrip_and_report_renders() {
+    let spec = tiny_sweep();
+    let results = runner::run_sweep(&spec, 0).unwrap();
+    let records: Vec<ScenarioRecord> =
+        results.iter().map(ScenarioRecord::from_run).collect();
+
+    // JSONL round-trip (the re-aggregation path of `hadar sweep --from`).
+    let text = artifact::to_jsonl(&records);
+    let back = artifact::parse_jsonl(&text).unwrap();
+    assert_eq!(back, records);
+
+    // Every scenario completed its whole workload.
+    for r in &records {
+        assert_eq!(r.completed, 6, "{}", r.id);
+        assert!(r.ttd > 0.0);
+        assert!(r.gru > 0.0 && r.gru <= 1.0);
+        assert!(r.jct_p50 <= r.jct_p90 && r.jct_p90 <= r.jct_p99);
+        assert!(r.jct_min <= r.jct_p50 && r.jct_p99 <= r.jct_max + 1e-9);
+    }
+
+    // The comparison report covers both schedulers against the baseline.
+    let out = report::render(&records, "yarn-cs");
+    assert!(out.contains("hadar"));
+    assert!(out.contains("yarn-cs"));
+    assert!(out.contains("per-scheduler summary"));
+}
+
+#[test]
+fn figure_sweeps_reproduce_the_serial_grids() {
+    // The refactored figures route through the parallel runner; their
+    // specs must still describe the exact historical grids.
+    let te = hadar::figures::trace_eval::sweep_spec(
+        &hadar::figures::trace_eval::TraceEvalConfig::default(),
+    );
+    assert_eq!(te.n_scenarios(), 4); // four schedulers
+    assert_eq!(te.base.max_rounds, 50_000);
+
+    let ph = hadar::figures::physical::sweep_spec(360.0);
+    assert_eq!(ph.n_scenarios(), 2 * 7 * 3);
+
+    let sl = hadar::figures::slots::sweep_spec("hadare");
+    assert_eq!(sl.n_scenarios(), 2 * 7 * 4);
+}
