@@ -1,0 +1,814 @@
+//! Cluster event timeline — dynamic clusters for the simulators.
+//!
+//! Real GPU datacenters are not static: nodes drain for maintenance, fail
+//! and leave, or join as capacity grows (the dominant operational reality
+//! in the Helios characterisation; an open challenge in the Gao et al.
+//! scheduling survey). This module adds that dimension to the otherwise
+//! static [`ClusterSpec`]:
+//!
+//! * [`ClusterEvent`] / [`EventKind`] — one timed change: a node **join**,
+//!   a permanent **leave**, a **maintenance** window (drain + automatic
+//!   rejoin), or a per-pool **capacity change**.
+//! * [`EventTimeline`] — an ordered event list, JSON-loadable (the file
+//!   format behind `hadar simulate --events <file>` and the sweep specs'
+//!   `events` axis; schema in `docs/simulation.md`).
+//! * [`ChurnConfig`] / [`generate_churn`] — a seeded, deterministic churn
+//!   generator, so sweeps can compare schedulers under *identical* random
+//!   event traces.
+//! * [`ClusterTimeline`] — the event-aware cluster view the engines drive:
+//!   it owns the *current* [`ClusterSpec`] and applies due events at round
+//!   boundaries, reporting which nodes were drained/shrunk so the engine
+//!   can preempt (and charge the checkpoint-restart overhead to) exactly
+//!   the jobs placed there.
+//!
+//! Timing semantics: engines apply events at the first round boundary at
+//! or after `at` (the simulator is round-based; nothing changes mid-slot).
+//! Availability accounting (`SimResult::anu`) uses the application time.
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::node::Node;
+use crate::cluster::spec::ClusterSpec;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What happens to the cluster at one instant.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A new node joins the cluster. Its id must not collide with a node
+    /// currently present.
+    Join(Node),
+    /// A node leaves permanently (decommission or unrecovered failure).
+    Leave {
+        /// Id of the departing node.
+        node: usize,
+    },
+    /// Scheduled maintenance: the node drains at the event time and
+    /// rejoins `duration` seconds later with its spec intact.
+    Maintenance {
+        /// Id of the node being drained.
+        node: usize,
+        /// Downtime in seconds (must be > 0).
+        duration: f64,
+    },
+    /// Set the capacity of one `(node, GPU type)` pool to `count`
+    /// (0 removes the pool — e.g. a failed device or a partial upgrade).
+    SetCapacity {
+        /// Id of the affected node.
+        node: usize,
+        /// GPU type whose pool changes.
+        gpu: GpuType,
+        /// New capacity `c_h^r` (absolute, not a delta).
+        count: usize,
+    },
+}
+
+/// One timed cluster event.
+#[derive(Clone, Debug)]
+pub struct ClusterEvent {
+    /// Simulation time in seconds at which the event takes effect.
+    pub at: f64,
+    /// The change itself.
+    pub kind: EventKind,
+}
+
+/// An ordered stream of cluster events (the empty timeline reproduces the
+/// static-cluster behaviour exactly).
+#[derive(Clone, Debug, Default)]
+pub struct EventTimeline {
+    /// Label used in scenario ids and reports.
+    pub name: String,
+    /// The events; [`EventTimeline::resolve`] sorts by time, so callers
+    /// may append in any order.
+    pub events: Vec<ClusterEvent>,
+}
+
+/// A maintenance-free event ready for the engines ([`EventKind`] with
+/// `Maintenance` expanded into a `Leave` + a later `Join`).
+#[derive(Clone, Debug)]
+pub enum ResolvedKind {
+    /// A node (re)joins with this spec.
+    Join(Node),
+    /// A node drains/leaves.
+    Leave {
+        /// Id of the departing node.
+        node: usize,
+    },
+    /// One `(node, GPU type)` pool is resized to `count`.
+    SetCapacity {
+        /// Id of the affected node.
+        node: usize,
+        /// GPU type whose pool changes.
+        gpu: GpuType,
+        /// New capacity (absolute).
+        count: usize,
+    },
+}
+
+/// One resolved, time-ordered event.
+#[derive(Clone, Debug)]
+pub struct ResolvedEvent {
+    /// Simulation time in seconds.
+    pub at: f64,
+    /// The change (maintenance already expanded).
+    pub kind: ResolvedKind,
+}
+
+impl EventTimeline {
+    /// The empty timeline (a static cluster).
+    pub fn empty() -> Self {
+        EventTimeline::default()
+    }
+
+    /// Whether the timeline holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append one event (any time order; `resolve` sorts).
+    pub fn push(&mut self, at: f64, kind: EventKind) {
+        self.events.push(ClusterEvent { at, kind });
+    }
+
+    /// Validate against `initial` and expand into a time-ordered,
+    /// maintenance-free list: every referenced node must exist at its
+    /// event time, joins must not collide with live ids, and maintenance
+    /// windows rejoin with the node's spec as of the drain (including any
+    /// earlier capacity changes).
+    pub fn resolve(&self, initial: &ClusterSpec)
+                   -> Result<Vec<ResolvedEvent>, String> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(format!("event {i}: bad time {}", e.at));
+            }
+            if let EventKind::Maintenance { duration, .. } = e.kind {
+                if !duration.is_finite() || duration <= 0.0 {
+                    return Err(format!(
+                        "event {i}: maintenance duration must be > 0, got \
+                         {duration}"
+                    ));
+                }
+            }
+        }
+        // Stable time order (original index breaks ties).
+        let mut order: Vec<usize> = (0..self.events.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.events[a]
+                .at
+                .partial_cmp(&self.events[b].at)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+
+        // Specs of the nodes currently in the cluster.
+        let mut known: BTreeMap<usize, Node> = initial
+            .nodes
+            .iter()
+            .map(|n| (n.id, n.clone()))
+            .collect();
+        // Maintenance rejoins not yet emitted: (rejoin time, node spec).
+        let mut pending: Vec<(f64, Node)> = Vec::new();
+        let mut out: Vec<ResolvedEvent> = Vec::new();
+
+        for &i in &order {
+            let e = &self.events[i];
+            flush_rejoins(e.at, &mut pending, &mut known, &mut out)?;
+            match &e.kind {
+                EventKind::Join(node) => {
+                    if known.contains_key(&node.id) {
+                        return Err(format!(
+                            "join at t={}: node id {} already present",
+                            e.at, node.id
+                        ));
+                    }
+                    known.insert(node.id, node.clone());
+                    out.push(ResolvedEvent {
+                        at: e.at,
+                        kind: ResolvedKind::Join(node.clone()),
+                    });
+                }
+                EventKind::Leave { node } => {
+                    known.remove(node).ok_or_else(|| {
+                        format!(
+                            "leave at t={}: node {} not in cluster",
+                            e.at, node
+                        )
+                    })?;
+                    out.push(ResolvedEvent {
+                        at: e.at,
+                        kind: ResolvedKind::Leave { node: *node },
+                    });
+                }
+                EventKind::Maintenance { node, duration } => {
+                    let spec = known.remove(node).ok_or_else(|| {
+                        format!(
+                            "maintenance at t={}: node {} not in cluster",
+                            e.at, node
+                        )
+                    })?;
+                    out.push(ResolvedEvent {
+                        at: e.at,
+                        kind: ResolvedKind::Leave { node: *node },
+                    });
+                    pending.push((e.at + duration, spec));
+                }
+                EventKind::SetCapacity { node, gpu, count } => {
+                    let spec = known.get_mut(node).ok_or_else(|| {
+                        format!(
+                            "set_capacity at t={}: node {} not in cluster",
+                            e.at, node
+                        )
+                    })?;
+                    if *count == 0 {
+                        spec.gpus.remove(gpu);
+                    } else {
+                        spec.gpus.insert(*gpu, *count);
+                    }
+                    out.push(ResolvedEvent {
+                        at: e.at,
+                        kind: ResolvedKind::SetCapacity {
+                            node: *node,
+                            gpu: *gpu,
+                            count: *count,
+                        },
+                    });
+                }
+            }
+        }
+        flush_rejoins(f64::INFINITY, &mut pending, &mut known, &mut out)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------- JSON I/O
+
+    /// Emit the timeline as JSON (see `docs/simulation.md` for the schema).
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let base = Json::obj().set("at", e.at);
+                match &e.kind {
+                    EventKind::Join(node) => base
+                        .set("kind", "join")
+                        .set("node", node.to_json()),
+                    EventKind::Leave { node } => {
+                        base.set("kind", "leave").set("node", *node)
+                    }
+                    EventKind::Maintenance { node, duration } => base
+                        .set("kind", "maintenance")
+                        .set("node", *node)
+                        .set("duration", *duration),
+                    EventKind::SetCapacity { node, gpu, count } => base
+                        .set("kind", "set_capacity")
+                        .set("node", *node)
+                        .set("gpu", gpu.name())
+                        .set("count", *count),
+                }
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("events", Json::Arr(events))
+    }
+
+    /// Parse a timeline from its JSON object form.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let name = v.get("name").as_str().unwrap_or("events").to_string();
+        let mut events = Vec::new();
+        for (i, ev) in v
+            .get("events")
+            .as_arr()
+            .ok_or("events: 'events' must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let at = ev
+                .get("at")
+                .as_f64()
+                .ok_or_else(|| format!("event {i}: 'at' must be a number"))?;
+            let kind = match ev.get("kind").as_str() {
+                Some("join") => {
+                    let nv = ev.get("node");
+                    if nv.get("id").as_usize().is_none() {
+                        return Err(format!(
+                            "event {i}: join 'node' needs an explicit 'id'"
+                        ));
+                    }
+                    EventKind::Join(Node::from_json(nv, 0)?)
+                }
+                Some("leave") => EventKind::Leave {
+                    node: ev.get("node").as_usize().ok_or_else(|| {
+                        format!("event {i}: 'node' must be an id")
+                    })?,
+                },
+                Some("maintenance") => EventKind::Maintenance {
+                    node: ev.get("node").as_usize().ok_or_else(|| {
+                        format!("event {i}: 'node' must be an id")
+                    })?,
+                    duration: ev.get("duration").as_f64().ok_or_else(
+                        || format!("event {i}: 'duration' must be a number"),
+                    )?,
+                },
+                Some("set_capacity") => EventKind::SetCapacity {
+                    node: ev.get("node").as_usize().ok_or_else(|| {
+                        format!("event {i}: 'node' must be an id")
+                    })?,
+                    gpu: ev
+                        .get("gpu")
+                        .as_str()
+                        .and_then(GpuType::from_name)
+                        .ok_or_else(|| {
+                            format!("event {i}: unknown 'gpu' type")
+                        })?,
+                    count: ev.get("count").as_usize().ok_or_else(|| {
+                        format!("event {i}: 'count' must be an integer")
+                    })?,
+                },
+                other => {
+                    return Err(format!(
+                        "event {i}: 'kind' must be join/leave/maintenance/\
+                         set_capacity, got {other:?}"
+                    ))
+                }
+            };
+            events.push(ClusterEvent { at, kind });
+        }
+        Ok(EventTimeline { name, events })
+    }
+
+    /// Parse a timeline from JSON text (the `--events <file>` format).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+/// Emit every pending maintenance rejoin due by `upto`, in time order
+/// (helper of [`EventTimeline::resolve`]).
+fn flush_rejoins(upto: f64, pending: &mut Vec<(f64, Node)>,
+                 known: &mut BTreeMap<usize, Node>,
+                 out: &mut Vec<ResolvedEvent>) -> Result<(), String> {
+    pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    while !pending.is_empty() && pending[0].0 <= upto {
+        let (rt, node) = pending.remove(0);
+        if known.contains_key(&node.id) {
+            return Err(format!(
+                "maintenance rejoin at t={rt}: node id {} already present",
+                node.id
+            ));
+        }
+        known.insert(node.id, node.clone());
+        out.push(ResolvedEvent {
+            at: rt,
+            kind: ResolvedKind::Join(node),
+        });
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ churn generator
+
+/// Seeded random-churn parameters: disruptions arrive as a Poisson process
+/// and hit a uniformly-chosen live node; most are maintenance windows,
+/// a fraction are permanent leaves. The generator never drains the last
+/// live node, and the same `(cluster, config)` always yields the same
+/// timeline — sweeps compare schedulers under identical churn.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnConfig {
+    /// Generator seed (also part of the scenario label).
+    pub seed: u64,
+    /// Mean seconds between disruption events (exponential).
+    pub mean_interval_secs: f64,
+    /// Shortest maintenance downtime (uniform draw lower bound).
+    pub min_down_secs: f64,
+    /// Longest maintenance downtime (uniform draw upper bound).
+    pub max_down_secs: f64,
+    /// Fraction of disruptions that are permanent leaves (0.0..=1.0).
+    pub leave_fraction: f64,
+    /// Stop generating events after this many seconds.
+    pub horizon_secs: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            seed: 7,
+            mean_interval_secs: 2.0 * 3600.0,
+            min_down_secs: 600.0,
+            max_down_secs: 3600.0,
+            leave_fraction: 0.1,
+            horizon_secs: 24.0 * 3600.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Emit as JSON (the sweep specs' `{"kind": "churn", ...}` form, sans
+    /// the `kind` tag).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seed", self.seed)
+            .set("mean_interval_secs", self.mean_interval_secs)
+            .set("min_down_secs", self.min_down_secs)
+            .set("max_down_secs", self.max_down_secs)
+            .set("leave_fraction", self.leave_fraction)
+            .set("horizon_secs", self.horizon_secs)
+    }
+
+    /// Parse from JSON, defaulting missing fields; validates ranges.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let d = ChurnConfig::default();
+        let cfg = ChurnConfig {
+            seed: v.get("seed").as_u64().unwrap_or(d.seed),
+            mean_interval_secs: v
+                .get("mean_interval_secs")
+                .as_f64()
+                .unwrap_or(d.mean_interval_secs),
+            min_down_secs: v
+                .get("min_down_secs")
+                .as_f64()
+                .unwrap_or(d.min_down_secs),
+            max_down_secs: v
+                .get("max_down_secs")
+                .as_f64()
+                .unwrap_or(d.max_down_secs),
+            leave_fraction: v
+                .get("leave_fraction")
+                .as_f64()
+                .unwrap_or(d.leave_fraction),
+            horizon_secs: v
+                .get("horizon_secs")
+                .as_f64()
+                .unwrap_or(d.horizon_secs),
+        };
+        if cfg.mean_interval_secs <= 0.0 || !cfg.mean_interval_secs.is_finite()
+        {
+            return Err("churn: 'mean_interval_secs' must be > 0".into());
+        }
+        if cfg.min_down_secs <= 0.0 || cfg.max_down_secs < cfg.min_down_secs {
+            return Err(
+                "churn: need 0 < min_down_secs <= max_down_secs".into()
+            );
+        }
+        if !(0.0..=1.0).contains(&cfg.leave_fraction) {
+            return Err("churn: 'leave_fraction' must be in [0, 1]".into());
+        }
+        if cfg.horizon_secs <= 0.0 || !cfg.horizon_secs.is_finite() {
+            return Err("churn: 'horizon_secs' must be > 0".into());
+        }
+        Ok(cfg)
+    }
+}
+
+/// Generate a deterministic churn timeline for `cluster` (see
+/// [`ChurnConfig`]). The result always resolves against `cluster`.
+pub fn generate_churn(cluster: &ClusterSpec, cfg: &ChurnConfig)
+                      -> EventTimeline {
+    let mut rng = Rng::new(cfg.seed ^ 0xC1_0D_5E_ED);
+    let mut live: Vec<usize> = cluster.nodes.iter().map(|n| n.id).collect();
+    // (rejoin time, node id) for in-flight maintenance windows.
+    let mut pending: Vec<(f64, usize)> = Vec::new();
+    let mut timeline = EventTimeline {
+        name: format!("churn-s{}", cfg.seed),
+        events: Vec::new(),
+    };
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(1.0 / cfg.mean_interval_secs);
+        if !(t < cfg.horizon_secs) {
+            break;
+        }
+        // Nodes whose maintenance finished by now are live again.
+        pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        while !pending.is_empty() && pending[0].0 <= t {
+            let (_, id) = pending.remove(0);
+            live.push(id);
+        }
+        if live.len() <= 1 {
+            continue; // never drain the last live node
+        }
+        let idx = rng.below(live.len() as u64) as usize;
+        let node = live.swap_remove(idx);
+        if rng.f64() < cfg.leave_fraction {
+            timeline.push(t, EventKind::Leave { node });
+        } else {
+            let duration =
+                rng.range_f(cfg.min_down_secs, cfg.max_down_secs);
+            timeline.push(t, EventKind::Maintenance { node, duration });
+            pending.push((t + duration, node));
+        }
+    }
+    timeline
+}
+
+// ------------------------------------------------------- event-aware view
+
+/// Outcome of [`ClusterTimeline::advance_to`].
+#[derive(Clone, Debug, Default)]
+pub struct AdvanceOutcome {
+    /// Nodes that drained or shrank — jobs placed there must be preempted.
+    /// Joins and capacity *increases* never appear here.
+    pub affected: BTreeSet<usize>,
+    /// Whether total capacity changed (availability accounting boundary).
+    pub capacity_changed: bool,
+}
+
+/// The engines' event-aware cluster view: the *current* [`ClusterSpec`]
+/// plus the resolved events not yet applied. Schedulers are handed
+/// [`ClusterTimeline::cluster`] each round, so they always see the live
+/// cluster rather than the simulation's starting spec.
+#[derive(Clone, Debug)]
+pub struct ClusterTimeline {
+    current: ClusterSpec,
+    events: Vec<ResolvedEvent>,
+    next: usize,
+    applied: u64,
+}
+
+impl ClusterTimeline {
+    /// Build the view; fails if the timeline does not resolve against
+    /// `initial` (unknown node ids, colliding joins, bad durations).
+    pub fn new(initial: &ClusterSpec, timeline: &EventTimeline)
+               -> Result<Self, String> {
+        Ok(ClusterTimeline {
+            current: initial.clone(),
+            events: timeline.resolve(initial)?,
+            next: 0,
+            applied: 0,
+        })
+    }
+
+    /// The cluster as of the last `advance_to` call.
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.current
+    }
+
+    /// Events applied so far.
+    pub fn events_applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Apply every event with `at <= now` (round-boundary semantics) and
+    /// report which nodes lost capacity.
+    pub fn advance_to(&mut self, now: f64) -> AdvanceOutcome {
+        let mut out = AdvanceOutcome::default();
+        while self.next < self.events.len()
+            && self.events[self.next].at <= now
+        {
+            let ev = self.events[self.next].clone();
+            match ev.kind {
+                ResolvedKind::Join(node) => {
+                    self.current.add_node(node);
+                    out.capacity_changed = true;
+                }
+                ResolvedKind::Leave { node } => {
+                    if self.current.remove_node(node).is_some() {
+                        out.affected.insert(node);
+                        out.capacity_changed = true;
+                    }
+                }
+                ResolvedKind::SetCapacity { node, gpu, count } => {
+                    if let Some(old) =
+                        self.current.set_capacity(node, gpu, count)
+                    {
+                        if count < old {
+                            out.affected.insert(node);
+                        }
+                        if count != old {
+                            out.capacity_changed = true;
+                        }
+                    }
+                }
+            }
+            self.applied += 1;
+            self.next += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::PcieGen;
+
+    fn duo() -> ClusterSpec {
+        ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "v", &[(GpuType::V100, 2)], PcieGen::Gen3),
+                Node::new(1, "p", &[(GpuType::P100, 2)], PcieGen::Gen3),
+            ],
+        )
+    }
+
+    #[test]
+    fn empty_timeline_resolves_to_nothing() {
+        let t = EventTimeline::empty();
+        assert!(t.is_empty());
+        assert!(t.resolve(&duo()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_covers_all_kinds() {
+        let mut t = EventTimeline {
+            name: "mix".into(),
+            events: Vec::new(),
+        };
+        t.push(
+            100.0,
+            EventKind::Join(Node::new(5, "new", &[(GpuType::T4, 1)],
+                                      PcieGen::Gen4)),
+        );
+        t.push(200.0, EventKind::Leave { node: 0 });
+        t.push(
+            300.0,
+            EventKind::Maintenance { node: 1, duration: 60.0 },
+        );
+        t.push(
+            400.0,
+            EventKind::SetCapacity {
+                node: 5,
+                gpu: GpuType::T4,
+                count: 2,
+            },
+        );
+        let back = EventTimeline::parse(&t.to_json().pretty()).unwrap();
+        assert_eq!(back.name, "mix");
+        assert_eq!(back.events.len(), 4);
+        assert!(matches!(back.events[0].kind, EventKind::Join(ref n)
+                         if n.id == 5 && n.pcie == PcieGen::Gen4));
+        assert!(matches!(back.events[2].kind,
+                         EventKind::Maintenance { node: 1, duration }
+                         if duration == 60.0));
+        // Resolves against the duo cluster (join 5, leave 0, maint 1, …).
+        assert!(back.resolve(&duo()).is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_events() {
+        assert!(EventTimeline::parse("{}").is_err());
+        assert!(EventTimeline::parse(
+            r#"{"events": [{"at": 1, "kind": "explode"}]}"#
+        )
+        .is_err());
+        assert!(EventTimeline::parse(
+            r#"{"events": [{"kind": "leave", "node": 0}]}"#
+        )
+        .is_err());
+        // Join without an explicit node id.
+        assert!(EventTimeline::parse(
+            r#"{"events": [{"at": 1, "kind": "join",
+                            "node": {"gpus": {"T4": 1}}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn maintenance_expands_to_leave_then_join_in_time_order() {
+        let mut t = EventTimeline::empty();
+        t.push(100.0, EventKind::Maintenance { node: 0, duration: 50.0 });
+        t.push(500.0, EventKind::Leave { node: 1 });
+        let r = t.resolve(&duo()).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(matches!(r[0].kind, ResolvedKind::Leave { node: 0 }));
+        assert_eq!(r[0].at, 100.0);
+        assert!(matches!(r[1].kind, ResolvedKind::Join(ref n) if n.id == 0));
+        assert_eq!(r[1].at, 150.0);
+        assert!(matches!(r[2].kind, ResolvedKind::Leave { node: 1 }));
+        // Non-decreasing times.
+        assert!(r.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn resolve_rejects_inconsistent_references() {
+        // Unknown node.
+        let mut t = EventTimeline::empty();
+        t.push(10.0, EventKind::Leave { node: 9 });
+        assert!(t.resolve(&duo()).is_err());
+        // Double leave.
+        let mut t = EventTimeline::empty();
+        t.push(10.0, EventKind::Leave { node: 0 });
+        t.push(20.0, EventKind::Leave { node: 0 });
+        assert!(t.resolve(&duo()).is_err());
+        // Join colliding with a live id.
+        let mut t = EventTimeline::empty();
+        t.push(
+            10.0,
+            EventKind::Join(Node::new(1, "dup", &[(GpuType::T4, 1)],
+                                      PcieGen::Gen3)),
+        );
+        assert!(t.resolve(&duo()).is_err());
+        // Negative time / non-positive duration.
+        let mut t = EventTimeline::empty();
+        t.push(-1.0, EventKind::Leave { node: 0 });
+        assert!(t.resolve(&duo()).is_err());
+        let mut t = EventTimeline::empty();
+        t.push(1.0, EventKind::Maintenance { node: 0, duration: 0.0 });
+        assert!(t.resolve(&duo()).is_err());
+    }
+
+    #[test]
+    fn capacity_changes_carry_into_maintenance_rejoin() {
+        let mut t = EventTimeline::empty();
+        t.push(
+            10.0,
+            EventKind::SetCapacity {
+                node: 0,
+                gpu: GpuType::V100,
+                count: 1,
+            },
+        );
+        t.push(20.0, EventKind::Maintenance { node: 0, duration: 30.0 });
+        let r = t.resolve(&duo()).unwrap();
+        // set_capacity, leave, rejoin — the rejoin spec has the new count.
+        let ResolvedKind::Join(ref n) = r[2].kind else {
+            panic!("expected rejoin, got {:?}", r[2]);
+        };
+        assert_eq!(n.capacity(GpuType::V100), 1);
+    }
+
+    #[test]
+    fn churn_generator_is_deterministic_and_resolvable() {
+        let cluster = ClusterSpec::sim60();
+        let cfg = ChurnConfig {
+            seed: 11,
+            mean_interval_secs: 1800.0,
+            horizon_secs: 12.0 * 3600.0,
+            ..Default::default()
+        };
+        let a = generate_churn(&cluster, &cfg);
+        let b = generate_churn(&cluster, &cfg);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(!a.is_empty(), "12h at 30min mean interval yields events");
+        assert!(a.resolve(&cluster).is_ok());
+        let c = generate_churn(
+            &cluster,
+            &ChurnConfig { seed: 12, ..cfg },
+        );
+        assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+        // All events inside the horizon.
+        assert!(a.events.iter().all(|e| e.at < cfg.horizon_secs));
+    }
+
+    #[test]
+    fn churn_never_drains_the_last_node() {
+        let single = ClusterSpec::new(
+            "one",
+            vec![Node::new(0, "n", &[(GpuType::V100, 1)], PcieGen::Gen3)],
+        );
+        let t = generate_churn(
+            &single,
+            &ChurnConfig {
+                seed: 3,
+                mean_interval_secs: 60.0,
+                horizon_secs: 3600.0,
+                leave_fraction: 1.0,
+                ..Default::default()
+            },
+        );
+        assert!(t.is_empty(), "a 1-node cluster is never drained");
+    }
+
+    #[test]
+    fn cluster_timeline_applies_events_and_reports_affected_nodes() {
+        let mut t = EventTimeline::empty();
+        t.push(100.0, EventKind::Leave { node: 0 });
+        t.push(
+            200.0,
+            EventKind::Join(Node::new(7, "new", &[(GpuType::T4, 4)],
+                                      PcieGen::Gen3)),
+        );
+        t.push(
+            300.0,
+            EventKind::SetCapacity {
+                node: 1,
+                gpu: GpuType::P100,
+                count: 1,
+            },
+        );
+        let mut view = ClusterTimeline::new(&duo(), &t).unwrap();
+        assert_eq!(view.cluster().total_gpus(), 4);
+
+        let o = view.advance_to(50.0);
+        assert!(o.affected.is_empty() && !o.capacity_changed);
+
+        let o = view.advance_to(100.0);
+        assert!(o.affected.contains(&0));
+        assert!(o.capacity_changed);
+        assert_eq!(view.cluster().total_gpus(), 2);
+
+        // Join grows capacity but never preempts.
+        let o = view.advance_to(200.0);
+        assert!(o.affected.is_empty());
+        assert!(o.capacity_changed);
+        assert_eq!(view.cluster().total_gpus(), 6);
+
+        // Capacity shrink marks the node affected.
+        let o = view.advance_to(1e9);
+        assert!(o.affected.contains(&1));
+        assert_eq!(view.cluster().total_gpus(), 5);
+        assert_eq!(view.events_applied(), 3);
+    }
+}

@@ -10,17 +10,26 @@
 /// A GPU model. `Ord` derives a stable type index used across matrices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GpuType {
+    /// NVIDIA V100 (the simulated cluster's fast tier).
     V100,
+    /// NVIDIA P100 (mid tier).
     P100,
+    /// NVIDIA K80 (slow tier).
     K80,
+    /// NVIDIA T4 (AWS g4dn / lab testbed).
     T4,
+    /// NVIDIA Titan RTX (lab testbed).
     TitanRtx,
+    /// NVIDIA T400 (lab testbed's slowest card).
     T400,
+    /// NVIDIA RTX 3090 (lab testbed's fastest card).
     Rtx3090,
+    /// NVIDIA RTX A2000 (lab testbed).
     RtxA2000,
 }
 
 impl GpuType {
+    /// Every catalogued type, in stable index order.
     pub const ALL: [GpuType; 8] = [
         GpuType::V100,
         GpuType::P100,
@@ -32,6 +41,7 @@ impl GpuType {
         GpuType::RtxA2000,
     ];
 
+    /// Canonical display/JSON name.
     pub fn name(&self) -> &'static str {
         match self {
             GpuType::V100 => "V100",
@@ -45,6 +55,7 @@ impl GpuType {
         }
     }
 
+    /// Case-insensitive lookup by [`GpuType::name`].
     pub fn from_name(s: &str) -> Option<GpuType> {
         GpuType::ALL.iter().copied().find(|g| {
             g.name().eq_ignore_ascii_case(s)
@@ -90,7 +101,9 @@ impl GpuType {
 /// PCIe generation of a host; Eq. (10)'s `pcie_scaling` term.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PcieGen {
+    /// PCIe 3.0 (x16 ≈ 16 GB/s).
     Gen3,
+    /// PCIe 4.0 (double Gen3 bandwidth).
     Gen4,
 }
 

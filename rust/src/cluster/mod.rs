@@ -1,12 +1,18 @@
-//! The modelled cluster: GPU catalogue, nodes, cluster specs, and the
-//! per-round allocation state shared by all schedulers.
+//! The modelled cluster: GPU catalogue, nodes, cluster specs, the
+//! per-round allocation state shared by all schedulers, and the event
+//! timeline that makes clusters dynamic (joins, drains, capacity changes).
 
+pub mod events;
 pub mod gpu;
 pub mod node;
 pub mod spec;
 pub mod state;
 
+pub use events::{
+    generate_churn, ChurnConfig, ClusterEvent, ClusterTimeline,
+    EventKind, EventTimeline,
+};
 pub use gpu::{GpuType, PcieGen};
-pub use node::Node;
+pub use node::{Node, MAX_NODE_ID};
 pub use spec::ClusterSpec;
 pub use state::{Assignment, ClusterState};

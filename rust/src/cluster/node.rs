@@ -1,19 +1,30 @@
 //! Cluster nodes (machines/servers): per-type GPU capacities `c_h^r`.
 
 use crate::cluster::gpu::{GpuType, PcieGen};
+use crate::util::json::Json;
 use std::collections::BTreeMap;
+
+/// Largest node id accepted from untrusted input (cluster files, `join`
+/// cluster events). The per-round allocation state is dense in the
+/// largest live id, so an absurd id would cost memory proportional to it
+/// every scheduling round — reject it at parse time instead.
+pub const MAX_NODE_ID: usize = 65_535;
 
 /// One machine `h` with capacity `c_h^r` for each GPU type `r`.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Stable node id `h`; ids need not be contiguous (nodes can leave).
     pub id: usize,
+    /// Human-readable machine name (e.g. `"p3.2xlarge"`).
     pub name: String,
     /// `c_h^r`: capacity per GPU type (most real nodes carry one type).
     pub gpus: BTreeMap<GpuType, usize>,
+    /// PCIe generation of the host (Eq. 10's `pcie_scaling` term).
     pub pcie: PcieGen,
 }
 
 impl Node {
+    /// Build a node from `(type, count)` capacity pairs.
     pub fn new(id: usize, name: &str, gpus: &[(GpuType, usize)],
                pcie: PcieGen) -> Self {
         Node {
@@ -24,10 +35,12 @@ impl Node {
         }
     }
 
+    /// Capacity `c_h^r` for one GPU type (0 if the type is absent).
     pub fn capacity(&self, r: GpuType) -> usize {
         self.gpus.get(&r).copied().unwrap_or(0)
     }
 
+    /// Total GPUs across all types on this node.
     pub fn total_gpus(&self) -> usize {
         self.gpus.values().sum()
     }
@@ -38,6 +51,58 @@ impl Node {
             .iter()
             .max_by_key(|(_, &c)| c)
             .map(|(&g, _)| g)
+    }
+
+    /// Emit as a JSON object (the `nodes` entries of a cluster file and
+    /// the `node` payload of a `join` cluster event share this format).
+    pub fn to_json(&self) -> Json {
+        let mut gpus = Json::obj();
+        for (g, c) in &self.gpus {
+            gpus.insert(g.name(), *c);
+        }
+        Json::obj()
+            .set("id", self.id)
+            .set("name", self.name.as_str())
+            .set("gpus", gpus)
+            .set(
+                "pcie",
+                match self.pcie {
+                    PcieGen::Gen3 => "gen3",
+                    PcieGen::Gen4 => "gen4",
+                },
+            )
+    }
+
+    /// Parse a node object; `fallback_id`/`fallback name` cover cluster
+    /// files that omit them (event files must spell the id out — see
+    /// [`crate::cluster::events`]).
+    pub fn from_json(v: &Json, fallback_id: usize) -> Result<Self, String> {
+        let gpus_obj = v
+            .get("gpus")
+            .as_obj()
+            .ok_or("node: 'gpus' must be an object")?;
+        let mut gpus = Vec::new();
+        for (gname, count) in gpus_obj {
+            let g = GpuType::from_name(gname)
+                .ok_or_else(|| format!("unknown gpu type '{gname}'"))?;
+            gpus.push((g, count.as_usize().ok_or("gpu count must be int")?));
+        }
+        let pcie = match v.get("pcie").as_str() {
+            Some("gen4") => PcieGen::Gen4,
+            _ => PcieGen::Gen3,
+        };
+        let id = v.get("id").as_usize().unwrap_or(fallback_id);
+        if id > MAX_NODE_ID {
+            return Err(format!(
+                "node id {id} exceeds the maximum {MAX_NODE_ID}"
+            ));
+        }
+        Ok(Node::new(
+            id,
+            v.get("name").as_str().unwrap_or(&format!("node{id}")),
+            &gpus,
+            pcie,
+        ))
     }
 }
 
@@ -53,5 +118,44 @@ mod tests {
         assert_eq!(n.capacity(GpuType::T4), 0);
         assert_eq!(n.total_gpus(), 6);
         assert_eq!(n.primary_gpu(), Some(GpuType::V100));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let n = Node::new(3, "dell", &[(GpuType::Rtx3090, 1)], PcieGen::Gen4);
+        let back = Node::from_json(&n.to_json(), 0).unwrap();
+        assert_eq!(back.id, 3);
+        assert_eq!(back.name, "dell");
+        assert_eq!(back.capacity(GpuType::Rtx3090), 1);
+        assert_eq!(back.pcie, PcieGen::Gen4);
+    }
+
+    #[test]
+    fn from_json_applies_fallbacks_and_rejects_bad_types() {
+        let v = crate::util::json::parse(r#"{"gpus": {"T4": 2}}"#).unwrap();
+        let n = Node::from_json(&v, 7).unwrap();
+        assert_eq!(n.id, 7);
+        assert_eq!(n.name, "node7");
+        let bad =
+            crate::util::json::parse(r#"{"gpus": {"NotAGpu": 1}}"#).unwrap();
+        assert!(Node::from_json(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_absurd_node_ids() {
+        // The allocation state is dense in the largest id; a huge id from
+        // a cluster file or join event must fail at parse time, not OOM
+        // the simulator.
+        let v = crate::util::json::parse(
+            r#"{"id": 1000000000, "gpus": {"T4": 1}}"#,
+        )
+        .unwrap();
+        let err = Node::from_json(&v, 0).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        let ok = crate::util::json::parse(
+            &format!(r#"{{"id": {MAX_NODE_ID}, "gpus": {{"T4": 1}}}}"#),
+        )
+        .unwrap();
+        assert!(Node::from_json(&ok, 0).is_ok());
     }
 }

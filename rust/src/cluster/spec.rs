@@ -6,13 +6,20 @@ use crate::cluster::node::Node;
 use crate::util::json::{self, Json};
 
 /// A full cluster: the set of nodes plus derived views.
+///
+/// Under a [`crate::cluster::events::ClusterTimeline`] this is a *snapshot*:
+/// nodes join and leave between rounds, so node ids need not stay
+/// contiguous — always address nodes by id, not by index.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
+    /// Cluster label (preset name or the JSON file's `name`).
     pub name: String,
+    /// The machines currently in the cluster.
     pub nodes: Vec<Node>,
 }
 
 impl ClusterSpec {
+    /// Build a cluster from a node list.
     pub fn new(name: &str, nodes: Vec<Node>) -> Self {
         ClusterSpec {
             name: name.to_string(),
@@ -103,8 +110,43 @@ impl ClusterSpec {
         ClusterSpec::new("scaled", nodes)
     }
 
+    /// Total GPUs across all nodes and types.
     pub fn total_gpus(&self) -> usize {
         self.nodes.iter().map(|n| n.total_gpus()).sum()
+    }
+
+    /// The node with this id, if present.
+    pub fn node(&self, id: usize) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    /// Add a node (cluster-event `join`). The caller guarantees the id is
+    /// not already present ([`crate::cluster::events::EventTimeline::resolve`]
+    /// validates this for event streams).
+    pub fn add_node(&mut self, node: Node) {
+        self.nodes.push(node);
+    }
+
+    /// Remove a node by id (cluster-event `leave`/drain), returning its
+    /// spec so maintenance windows can restore it.
+    pub fn remove_node(&mut self, id: usize) -> Option<Node> {
+        let idx = self.nodes.iter().position(|n| n.id == id)?;
+        Some(self.nodes.remove(idx))
+    }
+
+    /// Set one `(node, type)` pool to `count` GPUs (cluster-event
+    /// `set_capacity`; 0 removes the pool). Returns the pool's previous
+    /// capacity, or `None` if the node is absent.
+    pub fn set_capacity(&mut self, id: usize, gpu: GpuType, count: usize)
+                        -> Option<usize> {
+        let n = self.nodes.iter_mut().find(|n| n.id == id)?;
+        let old = n.gpus.get(&gpu).copied().unwrap_or(0);
+        if count == 0 {
+            n.gpus.remove(&gpu);
+        } else {
+            n.gpus.insert(gpu, count);
+        }
+        Some(old)
     }
 
     /// GPU types present, in stable order.
@@ -125,33 +167,16 @@ impl ClusterSpec {
 
     // ------------------------------------------------------------- JSON I/O
 
+    /// Emit as a JSON object (the inline-cluster format of sweep specs).
     pub fn to_json(&self) -> Json {
-        let nodes: Vec<Json> = self
-            .nodes
-            .iter()
-            .map(|n| {
-                let mut gpus = Json::obj();
-                for (g, c) in &n.gpus {
-                    gpus.insert(g.name(), *c);
-                }
-                Json::obj()
-                    .set("id", n.id)
-                    .set("name", n.name.as_str())
-                    .set("gpus", gpus)
-                    .set(
-                        "pcie",
-                        match n.pcie {
-                            PcieGen::Gen3 => "gen3",
-                            PcieGen::Gen4 => "gen4",
-                        },
-                    )
-            })
-            .collect();
+        let nodes: Vec<Json> =
+            self.nodes.iter().map(|n| n.to_json()).collect();
         Json::obj()
             .set("name", self.name.as_str())
             .set("nodes", Json::Arr(nodes))
     }
 
+    /// Parse a cluster object; node `id`/`name` default to the list index.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let name = v.get("name").as_str().unwrap_or("custom").to_string();
         let mut nodes = Vec::new();
@@ -162,26 +187,7 @@ impl ClusterSpec {
             .iter()
             .enumerate()
         {
-            let gpus_obj = nv
-                .get("gpus")
-                .as_obj()
-                .ok_or("node: 'gpus' must be an object")?;
-            let mut gpus = Vec::new();
-            for (gname, count) in gpus_obj {
-                let g = GpuType::from_name(gname)
-                    .ok_or_else(|| format!("unknown gpu type '{gname}'"))?;
-                gpus.push((g, count.as_usize().ok_or("gpu count must be int")?));
-            }
-            let pcie = match nv.get("pcie").as_str() {
-                Some("gen4") => PcieGen::Gen4,
-                _ => PcieGen::Gen3,
-            };
-            nodes.push(Node::new(
-                nv.get("id").as_usize().unwrap_or(i),
-                nv.get("name").as_str().unwrap_or(&format!("node{i}")),
-                &gpus,
-                pcie,
-            ));
+            nodes.push(Node::from_json(nv, i)?);
         }
         if nodes.is_empty() {
             return Err("cluster has no nodes".into());
@@ -189,6 +195,7 @@ impl ClusterSpec {
         Ok(ClusterSpec { name, nodes })
     }
 
+    /// Parse a cluster from JSON text.
     pub fn parse(text: &str) -> Result<Self, String> {
         let v = json::parse(text).map_err(|e| e.to_string())?;
         Self::from_json(&v)
@@ -235,6 +242,25 @@ mod tests {
         assert_eq!(c2.nodes.len(), c.nodes.len());
         assert_eq!(c2.total_gpus(), c.total_gpus());
         assert_eq!(c2.gpu_types(), c.gpu_types());
+    }
+
+    #[test]
+    fn event_mutators_add_remove_and_resize() {
+        let mut c = ClusterSpec::motivational();
+        assert_eq!(c.total_gpus(), 6);
+        let gone = c.remove_node(0).unwrap();
+        assert_eq!(gone.capacity(GpuType::V100), 2);
+        assert_eq!(c.total_gpus(), 4);
+        assert!(c.node(0).is_none());
+        assert!(c.remove_node(0).is_none());
+        c.add_node(gone);
+        assert_eq!(c.total_gpus(), 6);
+        assert_eq!(c.set_capacity(1, GpuType::P100, 1), Some(3));
+        assert_eq!(c.capacity_of(GpuType::P100), 1);
+        assert_eq!(c.set_capacity(2, GpuType::K80, 0), Some(1));
+        assert_eq!(c.capacity_of(GpuType::K80), 0);
+        assert!(!c.gpu_types().contains(&GpuType::K80));
+        assert_eq!(c.set_capacity(99, GpuType::K80, 1), None);
     }
 
     #[test]

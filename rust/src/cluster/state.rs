@@ -21,9 +21,13 @@ fn tix(g: GpuType) -> usize {
 /// One allocation entry: `w_{jh}^r` GPUs of type `r` on node `h` for job `j`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Assignment {
+    /// The job holding the GPUs.
     pub job: JobId,
+    /// Node id `h`.
     pub node: usize,
+    /// GPU type `r`.
     pub gpu: GpuType,
+    /// Workers `w_{jh}^r`.
     pub count: usize,
 }
 
@@ -43,6 +47,9 @@ pub struct ClusterState {
 }
 
 impl ClusterState {
+    /// Fresh all-free state for one cluster snapshot. Rebuilt every round
+    /// by the schedulers, so dynamic clusters (node churn) need no special
+    /// handling here — missing node ids simply have zero capacity.
     pub fn new(spec: &ClusterSpec) -> Self {
         let n = spec
             .nodes
@@ -70,11 +77,13 @@ impl ClusterState {
         }
     }
 
+    /// One past the largest node id (iteration bound; ids may be sparse).
     #[inline]
     pub fn n_nodes(&self) -> usize {
         self.capacity.len()
     }
 
+    /// Capacity `c_h^r` (0 for unknown nodes/types).
     #[inline]
     pub fn capacity(&self, node: usize, gpu: GpuType) -> usize {
         self.capacity
@@ -92,6 +101,7 @@ impl ClusterState {
             .unwrap_or(0)
     }
 
+    /// Free GPUs in one `(node, type)` pool.
     #[inline]
     pub fn free(&self, node: usize, gpu: GpuType) -> usize {
         self.capacity(node, gpu) - self.allocated(node, gpu)
@@ -103,16 +113,19 @@ impl ClusterState {
         self.free_by_type[tix(gpu)] as usize
     }
 
+    /// Free GPUs across the whole cluster — O(1).
     #[inline]
     pub fn total_free(&self) -> usize {
         self.total_free_count as usize
     }
 
+    /// Total GPUs in this snapshot — O(1).
     #[inline]
     pub fn total_capacity(&self) -> usize {
         self.total_capacity_count as usize
     }
 
+    /// Allocated GPUs across the whole cluster — O(1).
     #[inline]
     pub fn total_allocated(&self) -> usize {
         (self.total_capacity_count - self.total_free_count) as usize
@@ -178,10 +191,12 @@ impl ClusterState {
         freed
     }
 
+    /// All live assignments, in allocation order.
     pub fn assignments(&self) -> &[Assignment] {
         &self.assignments
     }
 
+    /// One job's live assignments.
     pub fn assignments_of(&self, job: JobId) -> Vec<Assignment> {
         self.assignments
             .iter()

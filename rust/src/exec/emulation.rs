@@ -27,15 +27,19 @@ pub fn corpus_seed(cfg_seed: u64, job: crate::jobs::job::JobId) -> u64 {
     cfg_seed ^ (job.0 << 4) ^ 0xDA7A
 }
 
+/// Emulation parameters: the virtual schedule plus the real-training knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct EmulationConfig {
+    /// The virtual round engine's parameters.
     pub sim: SimConfig,
     /// Virtual-step -> real-step down-sampling (e.g. 0.02 = 1 real step
     /// per 50 virtual iterations).
     pub steps_scale: f64,
     /// Cap on real steps per (job, round) so emulation stays tractable.
     pub max_real_steps_per_round: u64,
+    /// SGD learning rate for the real steps.
     pub lr: f32,
+    /// Seed for parameter init and data streams.
     pub seed: u64,
 }
 
@@ -58,17 +62,23 @@ impl Default for EmulationConfig {
 
 /// A really-trained model at the end of an emulated run.
 pub struct TrainedModel {
+    /// The job this model belongs to.
     pub job: JobId,
+    /// Lowered variant name that was trained.
     pub variant: String,
+    /// Final parameters + momenta.
     pub state: ModelState,
     /// (cumulative real step, loss) curve.
     pub losses: Vec<(u64, f32)>,
+    /// Real steps this job executed.
     pub real_steps: u64,
 }
 
 /// Emulation outcome: scheduling metrics + genuinely trained models.
 pub struct EmulationResult {
+    /// The virtual schedule's metrics.
     pub sim: SimResult,
+    /// One trained model per job.
     pub models: Vec<TrainedModel>,
     /// Total real train steps executed through PJRT.
     pub total_real_steps: u64,
@@ -87,6 +97,7 @@ pub struct ExecutablePool<'m> {
 }
 
 impl<'m> ExecutablePool<'m> {
+    /// Pool over one manifest with a fresh PJRT client.
     pub fn new(manifest: &'m Manifest) -> Result<Self> {
         Ok(ExecutablePool {
             runtime: Runtime::cpu()?,
@@ -95,16 +106,19 @@ impl<'m> ExecutablePool<'m> {
         })
     }
 
+    /// The pool's PJRT runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
 
+    /// Variant lookup with a pool-level error.
     pub fn variant(&self, name: &str) -> Result<&Variant> {
         self.manifest
             .variant(name)
             .ok_or_else(|| anyhow!("variant '{name}' not in manifest"))
     }
 
+    /// The compiled train-step for a variant (compiled on first use).
     pub fn train_step(&mut self, variant: &str) -> Result<&TrainStep> {
         if !self.train.contains_key(variant) {
             let v = self

@@ -20,8 +20,11 @@ use std::collections::BTreeMap;
 /// One Table IV row.
 #[derive(Clone, Debug)]
 pub struct QualityRow {
+    /// The job compared.
     pub job: JobId,
+    /// Its catalogued model.
     pub model: DlModel,
+    /// Which quality metric the row reports.
     pub metric: QualityMetric,
     /// Value under HadarE (forking).
     pub forking: f64,
@@ -39,8 +42,10 @@ impl QualityRow {
     }
 }
 
+/// All Table IV rows.
 #[derive(Clone, Debug, Default)]
 pub struct QualityReport {
+    /// One row per compared job.
     pub rows: Vec<QualityRow>,
 }
 

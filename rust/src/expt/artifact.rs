@@ -22,26 +22,47 @@ use std::path::Path;
 /// One scenario's summary: identity + the paper's reporting metrics.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioRecord {
+    /// Scenario id ([`crate::expt::spec::ScenarioSpec::id`]).
     pub id: String,
+    /// Scheduler name.
     pub scheduler: String,
+    /// Cluster label.
     pub cluster: String,
+    /// Workload label.
     pub workload: String,
+    /// Slot length `L` (seconds).
     pub slot_secs: f64,
+    /// Workload seed.
     pub seed: u64,
+    /// Cluster-events label (`"none"` for static clusters).
+    pub events: String,
     /// Total time duration (makespan), seconds.
     pub ttd: f64,
-    /// Whole-makespan busy fraction (Fig. 3's GRU).
+    /// Whole-makespan busy fraction over nominal capacity (Fig. 3's GRU).
     pub gru: f64,
     /// Busy time over allocated slots (§VI CRU).
     pub cru: f64,
+    /// Availability-normalised utilisation (== `gru` on static clusters).
+    pub anu: f64,
+    /// Mean job completion time (seconds).
     pub jct_mean: f64,
+    /// Median JCT.
     pub jct_p50: f64,
+    /// 90th-percentile JCT.
     pub jct_p90: f64,
+    /// 99th-percentile JCT.
     pub jct_p99: f64,
+    /// Fastest JCT.
     pub jct_min: f64,
+    /// Slowest JCT.
     pub jct_max: f64,
+    /// Jobs that finished.
     pub completed: usize,
+    /// Rounds executed.
     pub rounds: u64,
+    /// Jobs force-preempted by node drains / capacity shrinks.
+    pub preemptions: u64,
+    /// Fraction of rounds whose plan changed.
     pub change_fraction: f64,
     /// Wall-clock seconds inside `Scheduler::schedule` (non-deterministic).
     pub sched_wall_secs: f64,
@@ -50,6 +71,7 @@ pub struct ScenarioRecord {
 }
 
 impl ScenarioRecord {
+    /// Summarise one finished scenario.
     pub fn from_run(run: &ScenarioResult) -> Self {
         let res = &run.result;
         let jcts: Vec<f64> = res.jct.values().copied().collect();
@@ -65,9 +87,11 @@ impl ScenarioRecord {
             workload: run.spec.workload.label(),
             slot_secs: run.spec.sim.slot_secs,
             seed: run.spec.seed,
+            events: run.spec.events.label(),
             ttd: res.ttd,
             gru: res.gru,
             cru: res.cru,
+            anu: res.anu,
             jct_mean: stats::mean(&jcts),
             jct_p50: stats::percentile(&jcts, 50.0),
             jct_p90: stats::percentile(&jcts, 90.0),
@@ -76,6 +100,7 @@ impl ScenarioRecord {
             jct_max,
             completed: res.jct.len(),
             rounds: res.rounds,
+            preemptions: res.preemptions,
             change_fraction: res.change_fraction,
             sched_wall_secs: res.sched_wall_secs,
             sched_wall_per_round: res.sched_wall_per_round,
@@ -92,9 +117,11 @@ impl ScenarioRecord {
             .set("workload", self.workload.as_str())
             .set("slot_secs", self.slot_secs)
             .set("seed", self.seed)
+            .set("events", self.events.as_str())
             .set("ttd", self.ttd)
             .set("gru", self.gru)
             .set("cru", self.cru)
+            .set("anu", self.anu)
             .set("jct_mean", self.jct_mean)
             .set("jct_p50", self.jct_p50)
             .set("jct_p90", self.jct_p90)
@@ -103,6 +130,7 @@ impl ScenarioRecord {
             .set("jct_max", self.jct_max)
             .set("completed", self.completed)
             .set("rounds", self.rounds)
+            .set("preemptions", self.preemptions)
             .set("change_fraction", self.change_fraction);
         if include_timing {
             v.insert("sched_wall_secs", self.sched_wall_secs);
@@ -111,12 +139,16 @@ impl ScenarioRecord {
         v
     }
 
+    /// Parse a record; `events`, `anu`, and `preemptions` default for
+    /// JSONL written before the dynamic-cluster metrics existed (static
+    /// clusters, where `anu == gru`).
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let f = |key: &str| -> Result<f64, String> {
             v.get(key)
                 .as_f64()
                 .ok_or_else(|| format!("record: '{key}' must be a number"))
         };
+        let gru = f("gru")?;
         Ok(ScenarioRecord {
             id: v
                 .get("id")
@@ -132,9 +164,11 @@ impl ScenarioRecord {
             workload: v.get("workload").as_str().unwrap_or("?").to_string(),
             slot_secs: f("slot_secs")?,
             seed: v.get("seed").as_u64().unwrap_or(0),
+            events: v.get("events").as_str().unwrap_or("none").to_string(),
             ttd: f("ttd")?,
-            gru: f("gru")?,
+            gru,
             cru: f("cru")?,
+            anu: v.get("anu").as_f64().unwrap_or(gru),
             jct_mean: f("jct_mean")?,
             jct_p50: f("jct_p50")?,
             jct_p90: f("jct_p90")?,
@@ -143,6 +177,7 @@ impl ScenarioRecord {
             jct_max: f("jct_max")?,
             completed: v.get("completed").as_usize().unwrap_or(0),
             rounds: v.get("rounds").as_u64().unwrap_or(0),
+            preemptions: v.get("preemptions").as_u64().unwrap_or(0),
             change_fraction: v.get("change_fraction").as_f64().unwrap_or(0.0),
             sched_wall_secs: v.get("sched_wall_secs").as_f64().unwrap_or(0.0),
             sched_wall_per_round: v
@@ -206,8 +241,11 @@ pub fn load_jsonl(path: &Path) -> Result<Vec<ScenarioRecord>, String> {
 /// Run-level metadata written next to the summaries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunManifest {
+    /// Sweep name.
     pub sweep: String,
+    /// Scenarios executed.
     pub scenarios: usize,
+    /// Worker threads used.
     pub workers: usize,
     /// End-to-end sweep wall time (seconds).
     pub wall_secs: f64,
@@ -216,6 +254,7 @@ pub struct RunManifest {
 }
 
 impl RunManifest {
+    /// Emit as JSON.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("sweep", self.sweep.as_str())
@@ -225,6 +264,7 @@ impl RunManifest {
             .set("sched_wall_secs_total", self.sched_wall_secs_total)
     }
 
+    /// Parse from JSON.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         Ok(RunManifest {
             sweep: v
@@ -255,9 +295,11 @@ mod tests {
             workload: "trace8@0.1".into(),
             slot_secs: 360.0,
             seed: 7,
+            events: "none".into(),
             ttd,
             gru: 0.8,
             cru: 0.9,
+            anu: 0.8,
             jct_mean: 100.0,
             jct_p50: 90.0,
             jct_p90: 150.0,
@@ -266,10 +308,29 @@ mod tests {
             jct_max: 200.0,
             completed: 8,
             rounds: 12,
+            preemptions: 0,
             change_fraction: 0.5,
             sched_wall_secs: 0.123,
             sched_wall_per_round: 0.01,
         }
+    }
+
+    #[test]
+    fn legacy_records_without_event_fields_still_parse() {
+        // JSONL written before the dynamic-cluster metrics: no events /
+        // anu / preemptions keys.
+        let line = r#"{"id":"hadar/c/w/slot360/seed1","scheduler":"hadar",
+            "cluster":"c","workload":"w","slot_secs":360,"seed":1,
+            "ttd":100.0,"gru":0.7,"cru":0.8,"jct_mean":50.0,
+            "jct_p50":50.0,"jct_p90":80.0,"jct_p99":90.0,"jct_min":10.0,
+            "jct_max":95.0,"completed":4,"rounds":9,
+            "change_fraction":0.2}"#
+            .replace('\n', " ");
+        let recs = parse_jsonl(&format!("{line}\n")).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].events, "none");
+        assert_eq!(recs[0].anu, 0.7, "anu defaults to gru");
+        assert_eq!(recs[0].preemptions, 0);
     }
 
     #[test]

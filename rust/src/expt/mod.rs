@@ -6,9 +6,12 @@
 //! bespoke serial loop per figure, a sweep is *data*:
 //!
 //! * [`spec`] — [`spec::SweepSpec`] declares the grid (scheduler names x
-//!   cluster presets x workloads x slot lengths x seeds) and expands it
-//!   into [`spec::ScenarioSpec`]s via a deterministic cartesian product.
-//!   Specs load from / save to JSON through [`crate::util::json`].
+//!   cluster presets x workloads x cluster-event timelines x slot lengths
+//!   x seeds) and expands it into [`spec::ScenarioSpec`]s via a
+//!   deterministic cartesian product. Specs load from / save to JSON
+//!   through [`crate::util::json`]. The events axis
+//!   ([`spec::EventsRef`]) replays node churn — explicit timelines or
+//!   seeded generators — identically under every scheduler.
 //! * [`runner`] — executes scenarios on a `std::thread` worker pool (one
 //!   `sim::engine::run` / `sim::hadare_engine::run` per scenario), with
 //!   per-scenario seeds and result ordering that is independent of thread
@@ -32,4 +35,4 @@ pub mod spec;
 
 pub use artifact::{RunManifest, ScenarioRecord};
 pub use runner::{run_scenario, run_sweep, ScenarioResult};
-pub use spec::{ClusterRef, ScenarioSpec, SweepSpec, WorkloadSpec};
+pub use spec::{ClusterRef, EventsRef, ScenarioSpec, SweepSpec, WorkloadSpec};

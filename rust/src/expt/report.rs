@@ -1,19 +1,33 @@
 //! Cross-scenario comparison reports over sweep artifacts.
 //!
 //! Scenarios are grouped by everything except the scheduler (cluster,
-//! workload, slot, seed); within each group every scheduler is compared to
-//! a chosen baseline: TTD speedup (`baseline_ttd / ttd`, >1 is faster) and
-//! utilisation deltas in percentage points. A per-scheduler summary table
-//! aggregates the mean speedup and deltas across groups.
+//! workload, events, slot, seed); within each group every scheduler is
+//! compared to a chosen baseline: TTD speedup (`baseline_ttd / ttd`, >1 is
+//! faster) and utilisation deltas in percentage points. Runs under an
+//! event timeline additionally report the availability-normalised
+//! utilisation (ANU) and drain-preemption counts — the churn-comparison
+//! view: the same event trace replayed under every scheduler in the
+//! group. A per-scheduler summary table aggregates the mean speedup and
+//! deltas across groups.
 
 use crate::expt::artifact::ScenarioRecord;
 use crate::util::stats;
 use crate::util::table::{human_time, Table};
 use std::collections::BTreeMap;
 
-/// Group key: scenario identity minus the scheduler.
+/// Group key: scenario identity minus the scheduler. The events label is
+/// part of the identity — schedulers are only compared under the same
+/// churn trace.
 fn group_key(r: &ScenarioRecord) -> String {
-    format!("{}/{}/slot{}/seed{}", r.cluster, r.workload, r.slot_secs, r.seed)
+    let base = format!(
+        "{}/{}/slot{}/seed{}",
+        r.cluster, r.workload, r.slot_secs, r.seed
+    );
+    if r.events == "none" {
+        base
+    } else {
+        format!("{base}/{}", r.events)
+    }
 }
 
 /// Render the per-scenario comparison plus a per-scheduler summary.
@@ -41,6 +55,8 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
         "dGRU",
         "CRU",
         "dCRU",
+        "ANU",
+        "preempt",
         "sched ms/round",
     ]);
     // Per-scheduler accumulators for the summary table.
@@ -74,6 +90,8 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
             format!("{:.1}%", r.cru * 100.0),
             dcru.map(|d| format!("{d:+.1}pp"))
                 .unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", r.anu * 100.0),
+            format!("{}", r.preemptions),
             format!("{:.3}", r.sched_wall_per_round * 1e3),
         ]);
     }
@@ -121,9 +139,11 @@ mod tests {
             workload: "w".into(),
             slot_secs: 360.0,
             seed,
+            events: "none".into(),
             ttd,
             gru,
             cru: gru,
+            anu: gru,
             jct_mean: ttd / 2.0,
             jct_p50: ttd / 2.0,
             jct_p90: ttd,
@@ -132,6 +152,7 @@ mod tests {
             jct_max: ttd,
             completed: 4,
             rounds: 10,
+            preemptions: 0,
             change_fraction: 0.1,
             sched_wall_secs: 0.0,
             sched_wall_per_round: 0.0,
@@ -156,6 +177,30 @@ mod tests {
         let records = vec![record("hadar", 7, 100.0, 0.6)];
         let out = render(&records, "gavel");
         assert!(out.contains(" - "), "{out}");
+    }
+
+    #[test]
+    fn events_label_separates_comparison_groups() {
+        // A churn run must not be compared against a static-cluster
+        // baseline: different event traces are different experiments.
+        let base = record("gavel", 1, 100.0, 0.5);
+        let mut churned = record("hadar", 1, 50.0, 0.5);
+        churned.events = "churn-s7-i7200".into();
+        let out = render(&[base, churned], "gavel");
+        // The hadar row has no baseline in its (churn) group.
+        let hadar_line = out
+            .lines()
+            .find(|l| l.contains("hadar"))
+            .expect("hadar row");
+        assert!(hadar_line.contains("churn-s7"), "{hadar_line}");
+        assert!(hadar_line.contains(" - "), "{hadar_line}");
+        // Same trace on both sides compares normally.
+        let mut base2 = record("gavel", 1, 100.0, 0.5);
+        base2.events = "churn-s7-i7200".into();
+        let mut churned2 = record("hadar", 1, 50.0, 0.5);
+        churned2.events = "churn-s7-i7200".into();
+        let out = render(&[base2, churned2], "gavel");
+        assert!(out.contains("2.00x"), "{out}");
     }
 
     #[test]

@@ -20,7 +20,9 @@ use std::sync::mpsc;
 /// One scenario's spec together with its full simulation result.
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
+    /// The scenario that ran.
     pub spec: ScenarioSpec,
+    /// Its simulation outcome.
     pub result: SimResult,
 }
 
@@ -41,29 +43,35 @@ pub fn effective_workers(requested: usize, n: usize) -> usize {
 
 /// Run a single scenario to completion.
 ///
-/// `hadare` is special-cased onto [`hadare_engine::run`] (it schedules
-/// forked copies onto whole nodes, which the generic engine cannot
-/// express); every other scheduler goes through [`sched::by_name`] and the
-/// generic [`engine::run`]. Timelines are not recorded — sweeps only keep
-/// summary metrics.
+/// `hadare` is special-cased onto [`hadare_engine::run_with_events`] (it
+/// schedules forked copies onto whole nodes, which the generic engine
+/// cannot express); every other scheduler goes through [`sched::by_name`]
+/// and the generic [`engine::run_with_events`]. The scenario's `events`
+/// axis is materialised here — a churn generator expands against the
+/// resolved cluster, so every scheduler in a sweep replays the identical
+/// trace. Timelines are not recorded — sweeps only keep summary metrics.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<SimResult, String> {
     let cluster = spec.cluster.resolve()?;
     let jobs = spec.workload.build_jobs(&cluster, spec.seed)?;
+    let events = spec.events.build(&cluster)?;
     if spec.scheduler.eq_ignore_ascii_case("hadare") {
-        Ok(hadare_engine::run(&jobs, &cluster, &spec.sim, None).sim)
+        Ok(hadare_engine::run_with_events(&jobs, &cluster, &events,
+                                          &spec.sim, None)?
+            .sim)
     } else {
         let mut scheduler = sched::by_name(&spec.scheduler)?;
         let mut queue = JobQueue::new();
         for j in jobs {
             queue.admit(j);
         }
-        Ok(engine::run(
+        engine::run_with_events(
             &mut queue,
             scheduler.as_mut(),
             &cluster,
+            &events,
             &spec.sim,
             false,
-        ))
+        )
     }
 }
 
@@ -154,7 +162,8 @@ pub fn run_scenarios(scenarios: &[ScenarioSpec], workers: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::expt::spec::{ClusterRef, WorkloadSpec};
+    use crate::cluster::events::ChurnConfig;
+    use crate::expt::spec::{ClusterRef, EventsRef, WorkloadSpec};
     use crate::sim::engine::SimConfig;
 
     fn tiny_spec(scheduler: &str) -> ScenarioSpec {
@@ -169,6 +178,7 @@ mod tests {
             },
             seed: 3,
             sim: SimConfig::default(),
+            events: EventsRef::None,
         }
     }
 
@@ -194,9 +204,32 @@ mod tests {
                 slot_secs: 90.0,
                 ..Default::default()
             },
+            events: EventsRef::None,
         };
         let res = run_scenario(&spec).unwrap();
         assert_eq!(res.jct.len(), 1);
+    }
+
+    #[test]
+    fn churn_scenarios_are_deterministic_per_spec() {
+        // The churn generator expands inside run_scenario, so repeated
+        // runs of the same spec see the identical event trace.
+        let mut spec = tiny_spec("hadar");
+        spec.events = EventsRef::Churn(ChurnConfig {
+            seed: 5,
+            mean_interval_secs: 900.0,
+            min_down_secs: 300.0,
+            max_down_secs: 900.0,
+            leave_fraction: 0.0,
+            horizon_secs: 4.0 * 3600.0,
+        });
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&spec).unwrap();
+        assert_eq!(a.ttd, b.ttd);
+        assert_eq!(a.anu, b.anu);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.events_applied, b.events_applied);
+        assert_eq!(a.jct, b.jct);
     }
 
     #[test]

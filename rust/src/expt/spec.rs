@@ -2,11 +2,19 @@
 //!
 //! A [`SweepSpec`] names the axes of an experiment grid; [`SweepSpec::expand`]
 //! takes the cartesian product into concrete [`ScenarioSpec`]s in a stable
-//! order (cluster, workload, slot, seed, scheduler — scheduler innermost so
-//! the existing figures' row orders are preserved). Specs round-trip
-//! through the repo's own [`crate::util::json`], so sweeps can be loaded
-//! from a JSON file (`hadar sweep --spec grid.json`).
+//! order (cluster, workload, events, slot, seed, scheduler — scheduler
+//! innermost so the existing figures' row orders are preserved). Specs
+//! round-trip through the repo's own [`crate::util::json`], so sweeps can
+//! be loaded from a JSON file (`hadar sweep --spec grid.json`).
+//!
+//! The `events` axis makes the cluster *dynamic*: each entry is either an
+//! explicit [`EventTimeline`] or a seeded [`ChurnConfig`] generator, so a
+//! sweep can replay every scheduler against the same churn trace (see
+//! `docs/simulation.md`).
 
+use crate::cluster::events::{
+    generate_churn, ChurnConfig, EventTimeline,
+};
 use crate::cluster::spec::ClusterSpec;
 use crate::jobs::job::Job;
 use crate::sim::engine::SimConfig;
@@ -19,7 +27,9 @@ use crate::util::json::{self, Json};
 /// inline [`ClusterSpec`] JSON object.
 #[derive(Clone, Debug)]
 pub enum ClusterRef {
+    /// A named preset (resolved by [`preset`]).
     Preset(String),
+    /// A fully-specified inline cluster.
     Inline(ClusterSpec),
 }
 
@@ -40,6 +50,7 @@ impl ClusterRef {
         }
     }
 
+    /// Emit as JSON (a preset name string or an inline cluster object).
     pub fn to_json(&self) -> Json {
         match self {
             ClusterRef::Preset(name) => Json::Str(name.clone()),
@@ -47,6 +58,7 @@ impl ClusterRef {
         }
     }
 
+    /// Parse from JSON; preset names are validated eagerly.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         match v {
             Json::Str(name) => {
@@ -99,14 +111,23 @@ pub enum WorkloadSpec {
     /// + `trace::workload::materialize`, with the optional epoch scaling
     /// the trace figures use for fast runs.
     Trace {
+        /// Number of trace jobs.
         n_jobs: usize,
+        /// Cap on requested gang sizes.
         max_gpus: usize,
+        /// All jobs at t=0 (paper §IV-A) vs Poisson arrivals.
         all_at_start: bool,
+        /// Scale on job GPU-hours (1.0 = paper magnitude).
         hours_scale: f64,
     },
     /// Physical workload mix `M-1` … `M-12` (Figs. 8-12):
     /// `trace::workload::physical_jobs`.
-    Mix { name: String, epochs_scale: f64 },
+    Mix {
+        /// Mix name (`"M-1"` … `"M-12"`).
+        name: String,
+        /// Scale on job epochs (1.0 = paper magnitude).
+        epochs_scale: f64,
+    },
 }
 
 impl WorkloadSpec {
@@ -168,6 +189,7 @@ impl WorkloadSpec {
         }
     }
 
+    /// Emit as JSON (tagged by `kind`).
     pub fn to_json(&self) -> Json {
         match self {
             WorkloadSpec::Trace {
@@ -188,6 +210,7 @@ impl WorkloadSpec {
         }
     }
 
+    /// Parse from JSON; workload names are validated eagerly.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         match v.get("kind").as_str() {
             Some("trace") => Ok(WorkloadSpec::Trace {
@@ -215,6 +238,90 @@ impl WorkloadSpec {
                 })
             }
             _ => Err("workload: 'kind' must be \"trace\" or \"mix\"".into()),
+        }
+    }
+}
+
+// ------------------------------------------------------------- EventsRef
+
+/// What cluster events a scenario runs under: nothing (a static cluster),
+/// an explicit [`EventTimeline`], or a seeded [`ChurnConfig`] generator
+/// (expanded against the scenario's resolved cluster at run time, so the
+/// same spec entry yields the *identical* trace for every scheduler).
+#[derive(Clone, Debug)]
+pub enum EventsRef {
+    /// Static cluster (the default; scenario ids stay unchanged).
+    None,
+    /// Explicit event list.
+    Inline(EventTimeline),
+    /// Deterministic seeded churn generator.
+    Churn(ChurnConfig),
+}
+
+impl EventsRef {
+    /// Stable label used in scenario ids and artifact records. Churn
+    /// labels encode *every* generator field, so two churn entries in one
+    /// sweep never collide to the same scenario id / report group unless
+    /// they really are the same trace.
+    pub fn label(&self) -> String {
+        match self {
+            EventsRef::None => "none".into(),
+            EventsRef::Inline(t) => {
+                if t.name.is_empty() {
+                    format!("ev{}", t.events.len())
+                } else {
+                    t.name.clone()
+                }
+            }
+            EventsRef::Churn(c) => format!(
+                "churn-s{}-i{}-d{}-{}-l{}-h{}",
+                c.seed,
+                c.mean_interval_secs,
+                c.min_down_secs,
+                c.max_down_secs,
+                c.leave_fraction,
+                c.horizon_secs
+            ),
+        }
+    }
+
+    /// Materialise the timeline for one resolved cluster.
+    pub fn build(&self, cluster: &ClusterSpec)
+                 -> Result<EventTimeline, String> {
+        match self {
+            EventsRef::None => Ok(EventTimeline::empty()),
+            EventsRef::Inline(t) => Ok(t.clone()),
+            EventsRef::Churn(c) => Ok(generate_churn(cluster, c)),
+        }
+    }
+
+    /// Emit as JSON (`"none"`, a tagged timeline, or a tagged generator).
+    pub fn to_json(&self) -> Json {
+        match self {
+            EventsRef::None => Json::Str("none".into()),
+            EventsRef::Inline(t) => t.to_json().set("kind", "timeline"),
+            EventsRef::Churn(c) => c.to_json().set("kind", "churn"),
+        }
+    }
+
+    /// Parse from JSON; `null`/missing means a static cluster.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Null => Ok(EventsRef::None),
+            Json::Str(s) if s == "none" => Ok(EventsRef::None),
+            Json::Obj(_) => match v.get("kind").as_str() {
+                Some("timeline") => {
+                    Ok(EventsRef::Inline(EventTimeline::from_json(v)?))
+                }
+                Some("churn") => {
+                    Ok(EventsRef::Churn(ChurnConfig::from_json(v)?))
+                }
+                other => Err(format!(
+                    "events: 'kind' must be \"timeline\" or \"churn\", \
+                     got {other:?}"
+                )),
+            },
+            _ => Err("events: expected \"none\" or an object".into()),
         }
     }
 }
@@ -249,26 +356,41 @@ pub fn sim_from_json(v: &Json, base: SimConfig) -> SimConfig {
 /// authoritative (the sweep's slot axis writes into it).
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
+    /// Scheduler name (see [`crate::sched::by_name`]; `hadare` routes
+    /// through the forking engine).
     pub scheduler: String,
+    /// The cluster to simulate on.
     pub cluster: ClusterRef,
+    /// The jobs to run.
     pub workload: WorkloadSpec,
+    /// Workload seed (trace generation / materialisation).
     pub seed: u64,
+    /// Engine parameters (`slot_secs` set by the sweep's slot axis).
     pub sim: SimConfig,
+    /// Cluster events the scenario runs under.
+    pub events: EventsRef,
 }
 
 impl ScenarioSpec {
-    /// Stable, human-readable unique id within a sweep.
+    /// Stable, human-readable unique id within a sweep. Static-cluster
+    /// scenarios keep the historical five-part form; an events axis
+    /// appends its label.
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "{}/{}/{}/slot{}/seed{}",
             self.scheduler,
             self.cluster.label(),
             self.workload.label(),
             self.sim.slot_secs,
             self.seed
-        )
+        );
+        match &self.events {
+            EventsRef::None => base,
+            e => format!("{base}/{}", e.label()),
+        }
     }
 
+    /// Emit as JSON.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("scheduler", self.scheduler.as_str())
@@ -276,8 +398,10 @@ impl ScenarioSpec {
             .set("workload", self.workload.to_json())
             .set("seed", self.seed)
             .set("sim", sim_to_json(&self.sim))
+            .set("events", self.events.to_json())
     }
 
+    /// Parse from JSON (missing `events` means a static cluster).
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let scheduler = v
             .get("scheduler")
@@ -293,6 +417,7 @@ impl ScenarioSpec {
             workload: WorkloadSpec::from_json(v.get("workload"))?,
             seed: v.get("seed").as_u64().unwrap_or(42),
             sim: sim_from_json(v.get("sim"), SimConfig::default()),
+            events: EventsRef::from_json(v.get("events"))?,
         })
     }
 }
@@ -302,13 +427,20 @@ impl ScenarioSpec {
 /// A declarative experiment grid: the cartesian product of every axis.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
+    /// Sweep label (artifact manifests, reports).
     pub name: String,
+    /// Scheduler-name axis.
     pub schedulers: Vec<String>,
+    /// Cluster axis.
     pub clusters: Vec<ClusterRef>,
+    /// Workload axis.
     pub workloads: Vec<WorkloadSpec>,
     /// Slot lengths `L` (seconds); each writes into `base.slot_secs`.
     pub slots_secs: Vec<f64>,
+    /// Workload-seed axis.
     pub seeds: Vec<u64>,
+    /// Cluster-events axis (`[EventsRef::None]` = the static grid).
+    pub events: Vec<EventsRef>,
     /// Base simulation config (slot overridden per scenario).
     pub base: SimConfig,
 }
@@ -319,29 +451,33 @@ impl SweepSpec {
         self.schedulers.len()
             * self.clusters.len()
             * self.workloads.len()
+            * self.events.len()
             * self.slots_secs.len()
             * self.seeds.len()
     }
 
-    /// Cartesian expansion in a stable order: cluster, workload, slot,
-    /// seed, scheduler (innermost) — the nesting the hand-rolled figure
-    /// loops used, so refactored figures keep their row order.
+    /// Cartesian expansion in a stable order: cluster, workload, events,
+    /// slot, seed, scheduler (innermost) — the nesting the hand-rolled
+    /// figure loops used, so refactored figures keep their row order.
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         let mut out = Vec::with_capacity(self.n_scenarios());
         for cluster in &self.clusters {
             for workload in &self.workloads {
-                for &slot in &self.slots_secs {
-                    for &seed in &self.seeds {
-                        for sched in &self.schedulers {
-                            let mut sim = self.base;
-                            sim.slot_secs = slot;
-                            out.push(ScenarioSpec {
-                                scheduler: sched.clone(),
-                                cluster: cluster.clone(),
-                                workload: workload.clone(),
-                                seed,
-                                sim,
-                            });
+                for events in &self.events {
+                    for &slot in &self.slots_secs {
+                        for &seed in &self.seeds {
+                            for sched in &self.schedulers {
+                                let mut sim = self.base;
+                                sim.slot_secs = slot;
+                                out.push(ScenarioSpec {
+                                    scheduler: sched.clone(),
+                                    cluster: cluster.clone(),
+                                    workload: workload.clone(),
+                                    seed,
+                                    sim,
+                                    events: events.clone(),
+                                });
+                            }
                         }
                     }
                 }
@@ -370,6 +506,7 @@ impl SweepSpec {
             }],
             slots_secs: vec![180.0, 360.0],
             seeds: vec![7, 11],
+            events: vec![EventsRef::None],
             base: SimConfig {
                 slot_secs: 360.0,
                 restart_overhead: 10.0,
@@ -379,6 +516,7 @@ impl SweepSpec {
         }
     }
 
+    /// Emit the grid as JSON (the `hadar sweep --spec` file format).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("name", self.name.as_str())
@@ -406,9 +544,15 @@ impl SweepSpec {
                 "seeds",
                 Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()),
             )
+            .set(
+                "events",
+                Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+            )
             .set("sim", sim_to_json(&self.base))
     }
 
+    /// Parse a grid from JSON; `slots_secs`, `seeds`, and `events` are
+    /// optional axes (defaulting to one static-cluster entry).
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let base = sim_from_json(v.get("sim"), SimConfig::default());
         let schedulers: Vec<String> = v
@@ -465,14 +609,23 @@ impl SweepSpec {
                 .collect::<Result<_, _>>()?,
             None => vec![42],
         };
+        let events: Vec<EventsRef> = match v.get("events").as_arr() {
+            Some(a) => a
+                .iter()
+                .map(EventsRef::from_json)
+                .collect::<Result<_, _>>()?,
+            None => vec![EventsRef::None],
+        };
         if schedulers.is_empty()
             || clusters.is_empty()
             || workloads.is_empty()
             || slots_secs.is_empty()
             || seeds.is_empty()
+            || events.is_empty()
         {
             return Err("sweep: 'schedulers', 'clusters', 'workloads', \
-                        'slots_secs', and 'seeds' must be non-empty"
+                        'slots_secs', 'seeds', and 'events' must be \
+                        non-empty"
                 .into());
         }
         Ok(SweepSpec {
@@ -482,10 +635,12 @@ impl SweepSpec {
             workloads,
             slots_secs,
             seeds,
+            events,
             base,
         })
     }
 
+    /// Parse a grid from JSON text.
     pub fn parse(text: &str) -> Result<Self, String> {
         let v = json::parse(text).map_err(|e| e.to_string())?;
         Self::from_json(&v)
@@ -565,10 +720,120 @@ mod tests {
             },
             seed: 9,
             sim: SimConfig::default(),
+            events: EventsRef::None,
         };
         let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back.id(), s.id());
         assert_eq!(back.cluster.resolve().unwrap().total_gpus(), 5);
+    }
+
+    #[test]
+    fn events_axis_multiplies_grid_and_labels_ids() {
+        let mut spec = SweepSpec::demo();
+        spec.events = vec![
+            EventsRef::None,
+            EventsRef::Churn(ChurnConfig::default()),
+        ];
+        assert_eq!(spec.n_scenarios(), 32);
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 32);
+        let mut ids: Vec<String> =
+            scenarios.iter().map(|s| s.id()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "ids stay unique across the events axis");
+        // Static scenarios keep the historical id shape; churn scenarios
+        // append the generator label.
+        assert!(scenarios
+            .iter()
+            .any(|s| matches!(s.events, EventsRef::None)
+                 && s.id().ends_with(&format!("seed{}", s.seed))));
+        assert!(scenarios
+            .iter()
+            .any(|s| s.id().contains("churn-s7")));
+    }
+
+    #[test]
+    fn events_axis_roundtrips_through_json() {
+        let mut timeline = EventTimeline {
+            name: "drill".into(),
+            events: Vec::new(),
+        };
+        timeline.push(
+            3600.0,
+            crate::cluster::events::EventKind::Maintenance {
+                node: 0,
+                duration: 1800.0,
+            },
+        );
+        let mut spec = SweepSpec::demo();
+        spec.events = vec![
+            EventsRef::None,
+            EventsRef::Inline(timeline),
+            EventsRef::Churn(ChurnConfig {
+                seed: 3,
+                ..Default::default()
+            }),
+        ];
+        let back = SweepSpec::parse(&spec.to_json().pretty()).unwrap();
+        assert_eq!(back.n_scenarios(), spec.n_scenarios());
+        let labels_a: Vec<String> =
+            spec.events.iter().map(|e| e.label()).collect();
+        let labels_b: Vec<String> =
+            back.events.iter().map(|e| e.label()).collect();
+        assert_eq!(labels_a, labels_b);
+        let ids_a: Vec<String> =
+            spec.expand().iter().map(|s| s.id()).collect();
+        let ids_b: Vec<String> =
+            back.expand().iter().map(|s| s.id()).collect();
+        assert_eq!(ids_a, ids_b);
+    }
+
+    #[test]
+    fn churn_labels_distinguish_every_generator_field() {
+        let base = ChurnConfig::default();
+        let variants = [
+            base,
+            ChurnConfig { seed: base.seed + 1, ..base },
+            ChurnConfig { mean_interval_secs: 1.0 + base.mean_interval_secs,
+                          ..base },
+            ChurnConfig { min_down_secs: 1.0 + base.min_down_secs, ..base },
+            ChurnConfig { max_down_secs: 1.0 + base.max_down_secs, ..base },
+            ChurnConfig { leave_fraction: 0.5, ..base },
+            ChurnConfig { horizon_secs: 1.0 + base.horizon_secs, ..base },
+        ];
+        let labels: Vec<String> = variants
+            .iter()
+            .map(|c| EventsRef::Churn(*c).label())
+            .collect();
+        for i in 0..labels.len() {
+            for j in (i + 1)..labels.len() {
+                assert_ne!(labels[i], labels[j],
+                           "configs {i}/{j} collide: {}", labels[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_events_entries_are_rejected() {
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}],
+                "events":[{"kind":"explode"}]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}],
+                "events":[{"kind":"churn","mean_interval_secs":-5}]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse(
+            r#"{"schedulers":["hadar"],"clusters":["aws5"],
+                "workloads":[{"kind":"mix","name":"M-1"}],"events":[]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Churn-scenario comparison: every generic scheduler replayed against
+//! one *identical* cluster-event trace (node joins, drains, maintenance
+//! windows, capacity changes) over one trace workload.
+//!
+//! This is the dynamic-cluster counterpart of the Figs. 3-4 evaluation:
+//! the static reproduction cannot express elastic capacity or failure
+//! resilience, so this driver reports — per scheduler under the same
+//! churn — completion counts, TTD, the nominal GRU, the
+//! availability-normalised utilisation (ANU: busy GPU-seconds over the
+//! GPU-seconds that actually existed), and drain-preemption counts.
+//! Exposed as `hadar simulate --events <file>`.
+
+use crate::cluster::events::EventTimeline;
+use crate::expt::artifact::ScenarioRecord;
+use crate::expt::runner;
+use crate::expt::spec::{ClusterRef, EventsRef, ScenarioSpec, WorkloadSpec};
+use crate::sched;
+use crate::sim::engine::SimConfig;
+use crate::util::table::{human_time, ratio, Table};
+
+/// Workload/cluster knobs for the churn comparison (the event trace comes
+/// separately, from a file or a generator).
+#[derive(Clone, Debug)]
+pub struct ChurnEvalConfig {
+    /// Cluster preset name (see [`crate::expt::spec::preset`]).
+    pub cluster: String,
+    /// Number of trace jobs.
+    pub n_jobs: usize,
+    /// Cap on requested gang sizes.
+    pub max_gpus: usize,
+    /// Trace seed.
+    pub seed: u64,
+    /// Slot length `L` (seconds).
+    pub slot_secs: f64,
+    /// Scale on job GPU-hours (1.0 = paper magnitude).
+    pub hours_scale: f64,
+}
+
+impl Default for ChurnEvalConfig {
+    fn default() -> Self {
+        ChurnEvalConfig {
+            cluster: "sim60".into(),
+            n_jobs: 60,
+            max_gpus: 4,
+            seed: 42,
+            slot_secs: 360.0,
+            hours_scale: 0.2,
+        }
+    }
+}
+
+/// The comparison outcome: one summary record per scheduler, all under
+/// the same event trace.
+pub struct ChurnEval {
+    /// The event trace's label.
+    pub timeline: String,
+    /// Per-scheduler records, in [`sched::SCHEDULER_NAMES`] order.
+    pub records: Vec<ScenarioRecord>,
+}
+
+/// Run every generic scheduler under `events` on the configured workload
+/// (all cores).
+pub fn run(cfg: &ChurnEvalConfig, events: &EventTimeline)
+           -> Result<ChurnEval, String> {
+    let scenarios: Vec<ScenarioSpec> = sched::SCHEDULER_NAMES
+        .iter()
+        .map(|s| ScenarioSpec {
+            scheduler: s.to_string(),
+            cluster: ClusterRef::Preset(cfg.cluster.clone()),
+            workload: WorkloadSpec::Trace {
+                n_jobs: cfg.n_jobs,
+                max_gpus: cfg.max_gpus,
+                all_at_start: true,
+                hours_scale: cfg.hours_scale,
+            },
+            seed: cfg.seed,
+            sim: SimConfig {
+                slot_secs: cfg.slot_secs,
+                ..Default::default()
+            },
+            events: EventsRef::Inline(events.clone()),
+        })
+        .collect();
+    let results = runner::run_scenarios(&scenarios, 0)?;
+    Ok(ChurnEval {
+        timeline: if events.name.is_empty() {
+            format!("{} events", events.events.len())
+        } else {
+            events.name.clone()
+        },
+        records: results.iter().map(ScenarioRecord::from_run).collect(),
+    })
+}
+
+/// Render the churn-comparison table.
+pub fn render(ev: &ChurnEval) -> String {
+    let hadar_ttd = ev
+        .records
+        .iter()
+        .find(|r| r.scheduler == "hadar")
+        .map(|r| r.ttd);
+    let mut out = format!(
+        "churn comparison — identical event trace '{}' under every \
+         scheduler\n",
+        ev.timeline
+    );
+    let mut t = Table::new(&[
+        "scheduler",
+        "done",
+        "TTD",
+        "vs hadar",
+        "GRU (nominal)",
+        "ANU (available)",
+        "CRU",
+        "preempt",
+    ]);
+    for r in &ev.records {
+        t.row(&[
+            r.scheduler.clone(),
+            format!("{}", r.completed),
+            human_time(r.ttd),
+            hadar_ttd
+                .map(|h| ratio(r.ttd, h))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", r.gru * 100.0),
+            format!("{:.1}%", r.anu * 100.0),
+            format!("{:.1}%", r.cru * 100.0),
+            format!("{}", r.preemptions),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "ANU normalises by the capacity that actually existed over time; \
+         GRU by the nominal (initial) capacity.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::events::EventKind;
+
+    fn small_cfg() -> ChurnEvalConfig {
+        ChurnEvalConfig {
+            cluster: "motivational".into(),
+            n_jobs: 4,
+            max_gpus: 2,
+            seed: 3,
+            slot_secs: 360.0,
+            hours_scale: 0.05,
+        }
+    }
+
+    #[test]
+    fn identical_trace_compares_all_schedulers() {
+        let mut events = EventTimeline {
+            name: "drill".into(),
+            events: Vec::new(),
+        };
+        // The P100 node goes down for two slots early on.
+        events.push(
+            360.0,
+            EventKind::Maintenance { node: 1, duration: 720.0 },
+        );
+        let ev = run(&small_cfg(), &events).unwrap();
+        assert_eq!(ev.records.len(), sched::SCHEDULER_NAMES.len());
+        for r in &ev.records {
+            assert_eq!(r.completed, 4, "{} under churn", r.scheduler);
+            assert_eq!(r.events, "drill");
+            // Capacity only ever shrinks: ANU >= GRU.
+            assert!(r.anu >= r.gru - 1e-12, "{}", r.scheduler);
+            assert!(r.anu <= 1.0 + 1e-9, "{}", r.scheduler);
+        }
+        let out = render(&ev);
+        for s in sched::SCHEDULER_NAMES {
+            assert!(out.contains(s), "{out}");
+        }
+        assert!(out.contains("preempt"), "{out}");
+        assert!(out.contains("drill"), "{out}");
+    }
+
+    #[test]
+    fn empty_timeline_reduces_to_the_static_comparison() {
+        let ev = run(&small_cfg(), &EventTimeline::empty()).unwrap();
+        for r in &ev.records {
+            assert_eq!(r.preemptions, 0);
+            assert!((r.anu - r.gru).abs() < 1e-12, "{}", r.scheduler);
+        }
+    }
+}

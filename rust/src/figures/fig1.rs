@@ -36,11 +36,15 @@ pub fn jobs() -> Vec<Job> {
         .collect()
 }
 
+/// The motivational head-to-head results.
 pub struct Fig1 {
+    /// Gavel's run (job-level, single-type gangs).
     pub gavel: SimResult,
+    /// Hadar's run (task-level, mixed-type gangs).
     pub hadar: SimResult,
 }
 
+/// Run both schedulers over the §II-A example.
 pub fn run() -> Fig1 {
     let cluster = ClusterSpec::motivational();
     let cfg = SimConfig {
@@ -62,6 +66,7 @@ pub fn run() -> Fig1 {
     }
 }
 
+/// Render the round-by-round Fig. 1 tables.
 pub fn render(f: &Fig1) -> String {
     let mut out = String::new();
     for (name, res) in [("Gavel", &f.gavel), ("Hadar", &f.hadar)] {

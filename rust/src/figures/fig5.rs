@@ -12,12 +12,18 @@ use crate::trace::workload::materialize;
 use crate::util::table::Table;
 use std::time::Instant;
 
+/// One scalability measurement at a given active-job count.
 #[derive(Clone, Debug)]
 pub struct Fig5Point {
+    /// Active jobs (and proportional cluster size).
     pub jobs: usize,
+    /// Hadar's mean per-round decision time (ms).
     pub hadar_ms: f64,
+    /// Hadar's decision time in incremental mode (ms).
     pub hadar_incremental_ms: f64,
+    /// Gavel's mean per-round decision time (ms).
     pub gavel_ms: f64,
+    /// Fraction of incremental rounds that changed allocations.
     pub change_fraction: f64,
 }
 
@@ -81,6 +87,7 @@ pub fn run(scales: &[usize]) -> Vec<Fig5Point> {
     out
 }
 
+/// Render the Fig. 5 scaling table.
 pub fn render(points: &[Fig5Point]) -> String {
     let mut t = Table::new(&["jobs", "Hadar (ms)", "Hadar-incr (ms)",
                              "Gavel (ms)"]);

@@ -9,11 +9,15 @@ use crate::sim::hadare_engine;
 use crate::trace::workload::physical_jobs;
 use crate::util::table::Table;
 
+/// The Fig. 6 occupancy comparison.
 pub struct Fig6 {
+    /// Hadar's run (idle nodes when jobs < nodes).
     pub hadar: SimResult,
+    /// HadarE's run (forking keeps every node busy).
     pub hadare: SimResult,
 }
 
+/// Run the M-3 mix on the testbed under both engines.
 pub fn run() -> Fig6 {
     let cluster = ClusterSpec::testbed5();
     let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
@@ -33,6 +37,7 @@ pub fn run() -> Fig6 {
     Fig6 { hadar, hadare }
 }
 
+/// Render the round-by-round occupancy tables.
 pub fn render(f: &Fig6) -> String {
     let mut out = String::new();
     for (name, res) in [("Hadar", &f.hadar), ("HadarE", &f.hadare)] {

@@ -1,6 +1,9 @@
 //! Experiment drivers — one per paper table/figure (see DESIGN.md's
-//! experiment index). Shared by `examples/` and `rust/benches/`.
+//! experiment index), plus the dynamic-cluster churn comparison that the
+//! paper's static setup cannot express. Shared by `examples/` and
+//! `rust/benches/`.
 
+pub mod churn;
 pub mod fig1;
 pub mod fig5;
 pub mod fig6;

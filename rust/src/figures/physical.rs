@@ -3,7 +3,7 @@
 //! both five-node clusters (AWS and the lab testbed), in virtual time.
 
 use crate::expt::runner;
-use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use crate::expt::spec::{ClusterRef, EventsRef, SweepSpec, WorkloadSpec};
 use crate::sim::engine::SimConfig;
 use crate::sim::metrics::Metrics;
 use crate::trace::workload::MIX_NAMES;
@@ -13,18 +13,26 @@ use crate::util::table::{ratio, Table};
 /// One (cluster, mix, scheduler) measurement.
 #[derive(Clone, Debug)]
 pub struct Cell {
+    /// Cluster label (`"aws5"` / `"testbed5"`).
     pub cluster: String,
+    /// Workload mix name (`"M-1"` … `"M-12"`).
     pub mix: String,
+    /// Scheduler name.
     pub scheduler: String,
+    /// The run's summary metrics.
     pub metrics: Metrics,
 }
 
+/// The full Figs. 8-10 grid.
 pub struct Physical {
+    /// All `(cluster, mix, scheduler)` measurements.
     pub cells: Vec<Cell>,
 }
 
+/// Schedulers of the physical-cluster comparison, in figure order.
 pub const SCHEDULERS: [&str; 3] = ["gavel", "hadar", "hadare"];
 
+/// The §VI engine parameters at a given slot length.
 pub fn sim_cfg(slot_secs: f64) -> SimConfig {
     SimConfig {
         slot_secs,
@@ -53,6 +61,7 @@ pub fn sweep_spec(slot_secs: f64) -> SweepSpec {
             .collect(),
         slots_secs: vec![slot_secs],
         seeds: vec![0],
+        events: vec![EventsRef::None],
         base: sim_cfg(slot_secs),
     }
 }
@@ -75,6 +84,7 @@ pub fn run(slot_secs: f64) -> Physical {
     }
 }
 
+/// Look up one grid cell's metrics (panics if absent — figure internals).
 pub fn get<'a>(p: &'a Physical, cluster: &str, mix: &str, sched: &str)
                -> &'a Metrics {
     &p.cells

@@ -3,15 +3,18 @@
 //! over the workload mixes on both clusters.
 
 use crate::expt::runner;
-use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use crate::expt::spec::{ClusterRef, EventsRef, SweepSpec, WorkloadSpec};
 use crate::figures::physical;
 use crate::trace::workload::MIX_NAMES;
 use crate::util::table::Table;
 
+/// The slot lengths of Figs. 11-12 (seconds).
 pub const SLOTS: [f64; 4] = [90.0, 180.0, 360.0, 720.0];
 
+/// The Figs. 11-12 results for one scheduler.
 #[derive(Clone, Debug)]
 pub struct SlotSweep {
+    /// Scheduler swept (`"hadare"` or `"hadar"`).
     pub scheduler: String,
     /// (cluster, mix, slot, cru)
     pub cells: Vec<(String, String, f64, f64)>,
@@ -36,10 +39,12 @@ pub fn sweep_spec(scheduler: &str) -> SweepSpec {
             .collect(),
         slots_secs: SLOTS.to_vec(),
         seeds: vec![0],
+        events: vec![EventsRef::None],
         base: physical::sim_cfg(SLOTS[0]),
     }
 }
 
+/// Run the Figs. 11-12 sweep on all cores.
 pub fn run(scheduler: &str) -> SlotSweep {
     let results =
         runner::run_sweep(&sweep_spec(scheduler), 0).expect("sweep runs");
@@ -59,6 +64,7 @@ pub fn run(scheduler: &str) -> SlotSweep {
     }
 }
 
+/// The CRU-maximising slot length for one `(cluster, mix)` cell.
 pub fn best_slot(s: &SlotSweep, cluster: &str, mix: &str) -> f64 {
     s.cells
         .iter()
@@ -68,6 +74,7 @@ pub fn best_slot(s: &SlotSweep, cluster: &str, mix: &str) -> f64 {
         .unwrap_or(0.0)
 }
 
+/// Render the Fig. 11 / Fig. 12 tables.
 pub fn render(s: &SlotSweep) -> String {
     let mut out = String::new();
     for cluster in ["aws5", "testbed5"] {

@@ -14,13 +14,19 @@ use crate::trace::workload::physical_jobs;
 use crate::util::table::Table;
 use anyhow::Result;
 
+/// The Table IV comparison plus its runs' headline numbers.
 pub struct Table4 {
+    /// Per-job quality rows (forking vs no forking).
     pub report: QualityReport,
+    /// HadarE's virtual makespan (seconds).
     pub hadare_ttd: f64,
+    /// Hadar's virtual makespan (seconds).
     pub hadar_ttd: f64,
+    /// Real PJRT train steps executed across both runs.
     pub real_steps: u64,
 }
 
+/// Run both emulations over the M-5 mix and evaluate quality.
 pub fn run(manifest: &Manifest, cfg: &EmulationConfig) -> Result<Table4> {
     let cluster = ClusterSpec::testbed5();
     let jobs = physical_jobs("M-5", &cluster, 1.0).expect("M-5");
@@ -39,6 +45,7 @@ pub fn run(manifest: &Manifest, cfg: &EmulationConfig) -> Result<Table4> {
     })
 }
 
+/// Render the Table IV quality table.
 pub fn render(t4: &Table4) -> String {
     let mut t = Table::new(&["Training Job", "Forking (HadarE)",
                              "No Forking (Hadar)", "Metric", "winner"]);

@@ -3,16 +3,20 @@
 //! Philly-shaped 480-job trace on the 60-GPU simulated cluster.
 
 use crate::expt::runner;
-use crate::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use crate::expt::spec::{ClusterRef, EventsRef, SweepSpec, WorkloadSpec};
 use crate::sched;
 use crate::sim::engine::{SimConfig, SimResult};
 use crate::sim::metrics::{completion_cdf, Metrics};
 use crate::util::table::{ratio, Chart, Table};
 
+/// Knobs for the Figs. 3-4 trace evaluation.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceEvalConfig {
+    /// Number of trace jobs (paper: 480).
     pub n_jobs: usize,
+    /// Trace seed.
     pub seed: u64,
+    /// Slot length `L` (seconds).
     pub slot_secs: f64,
     /// Scale on job GPU-hours (1.0 = paper magnitude; smaller runs faster).
     pub hours_scale: f64,
@@ -29,7 +33,9 @@ impl Default for TraceEvalConfig {
     }
 }
 
+/// The Figs. 3-4 results, one entry per scheduler.
 pub struct TraceEval {
+    /// `(scheduler name, result)` in comparison order.
     pub results: Vec<(String, SimResult)>,
 }
 
@@ -51,6 +57,7 @@ pub fn sweep_spec(cfg: &TraceEvalConfig) -> SweepSpec {
         }],
         slots_secs: vec![cfg.slot_secs],
         seeds: vec![cfg.seed],
+        events: vec![EventsRef::None],
         base: SimConfig {
             slot_secs: cfg.slot_secs,
             restart_overhead: 10.0,
@@ -60,6 +67,7 @@ pub fn sweep_spec(cfg: &TraceEvalConfig) -> SweepSpec {
     }
 }
 
+/// Run the Figs. 3-4 sweep on all cores.
 pub fn run(cfg: &TraceEvalConfig) -> TraceEval {
     let results = runner::run_sweep(&sweep_spec(cfg), 0).expect("sweep runs");
     TraceEval {

@@ -5,6 +5,7 @@ use crate::jobs::model::DlModel;
 use crate::trace::workload::{mix, MIX_NAMES};
 use crate::util::table::Table;
 
+/// Render Table II (trace-driven evaluation workloads).
 pub fn render_table2() -> String {
     let mut t = Table::new(&["Training Job", "Model", "Dataset", "Size"]);
     for m in DlModel::TABLE2 {
@@ -18,6 +19,7 @@ pub fn render_table2() -> String {
     format!("Table II — trace-driven evaluation workloads\n{}", t.render())
 }
 
+/// Render Table III (physical-cluster workloads + mix notation).
 pub fn render_table3() -> String {
     let mut t = Table::new(&["Training Job", "Model", "Dataset", "Size"]);
     for m in DlModel::TABLE3 {

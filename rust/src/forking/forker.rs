@@ -16,20 +16,24 @@ pub struct ForkIds {
 }
 
 impl ForkIds {
+    /// Id of copy `i` (1-based) of `parent` — the paper's formula.
     pub fn copy_id(&self, parent: JobId, i: u64) -> JobId {
         debug_assert!(i >= 1);
         debug_assert!(parent.0 < self.max_job_count);
         JobId(self.max_job_count * i + parent.0)
     }
 
+    /// Parent of a copy id.
     pub fn parent_of(&self, copy: JobId) -> JobId {
         JobId(copy.0 % self.max_job_count)
     }
 
+    /// The copy's index `i` (1-based).
     pub fn copy_index(&self, copy: JobId) -> u64 {
         copy.0 / self.max_job_count
     }
 
+    /// Whether the id lies in a copy band (vs a parent id).
     pub fn is_copy(&self, id: JobId) -> bool {
         id.0 >= self.max_job_count
     }

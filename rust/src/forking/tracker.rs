@@ -26,6 +26,7 @@ impl ParentProgress {
     /// Relative tolerance for float step accumulation across copies.
     const EPS: f64 = 1e-9;
 
+    /// Steps left (0 within float tolerance of completion).
     pub fn remaining(&self) -> f64 {
         let rem = self.total_steps - self.done_steps;
         if rem <= Self::EPS * self.total_steps.max(1.0) {
@@ -35,6 +36,7 @@ impl ParentProgress {
         }
     }
 
+    /// Whether the parent aggregated all its steps.
     pub fn is_complete(&self) -> bool {
         self.remaining() <= 0.0
     }
@@ -43,11 +45,13 @@ impl ParentProgress {
 /// The Job Tracker.
 #[derive(Clone, Debug)]
 pub struct JobTracker {
+    /// Copy-id arithmetic shared with the forker.
     pub ids: ForkIds,
     parents: BTreeMap<JobId, ParentProgress>,
 }
 
 impl JobTracker {
+    /// Empty tracker over the given id scheme.
     pub fn new(ids: ForkIds) -> Self {
         JobTracker {
             ids,
@@ -71,10 +75,12 @@ impl JobTracker {
         );
     }
 
+    /// One parent's progress.
     pub fn parent(&self, id: JobId) -> Option<&ParentProgress> {
         self.parents.get(&id)
     }
 
+    /// All registered parents in id order.
     pub fn parents(&self) -> impl Iterator<Item = (&JobId, &ParentProgress)> {
         self.parents.iter()
     }
@@ -98,6 +104,7 @@ impl JobTracker {
         parent
     }
 
+    /// Whether the (parent of) `id` finished all its steps.
     pub fn is_parent_complete(&self, id: JobId) -> bool {
         let parent = self.resolve(id);
         self.parents
@@ -106,6 +113,7 @@ impl JobTracker {
             .unwrap_or(false)
     }
 
+    /// Whether every registered parent completed.
     pub fn all_complete(&self) -> bool {
         self.parents.values().all(|p| p.is_complete())
     }

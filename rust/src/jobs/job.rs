@@ -18,8 +18,11 @@ impl std::fmt::Display for JobId {
 /// Lifecycle state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobStatus {
+    /// Waiting for an allocation (including after a drain preemption).
     Queued,
+    /// Held an allocation in the last scheduled round.
     Running,
+    /// All `E_j * N_j` iterations done.
     Completed,
 }
 
@@ -28,7 +31,9 @@ pub enum JobStatus {
 /// per-GPU-type throughput row `X_j^r` (iterations/second).
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// Job id `j`.
     pub id: JobId,
+    /// The DL model being trained (Tables II/III catalogue).
     pub model: DlModel,
     /// `a_j` (seconds).
     pub arrival: f64,
@@ -42,6 +47,7 @@ pub struct Job {
     pub throughput: BTreeMap<GpuType, f64>,
     /// Completed iterations so far (monotone).
     pub progress: f64,
+    /// Lifecycle state.
     pub status: JobStatus,
     /// `f_j` once complete (seconds).
     pub finish_time: Option<f64>,
@@ -52,6 +58,8 @@ pub struct Job {
 }
 
 impl Job {
+    /// Build a job with an empty throughput row (fill it with
+    /// [`Job::set_throughput`] or `jobs::throughput::throughput_row`).
     pub fn new(id: u64, model: DlModel, arrival: f64, gpus: usize,
                epochs: u64, iters_per_epoch: u64) -> Self {
         Job {
@@ -75,6 +83,7 @@ impl Job {
         (self.epochs * self.iters_per_epoch) as f64
     }
 
+    /// Iterations left (0 within float tolerance of completion).
     pub fn remaining_iters(&self) -> f64 {
         let rem = self.total_iters() - self.progress;
         // Relative tolerance: float progress accumulation across rounds.
@@ -85,6 +94,7 @@ impl Job {
         }
     }
 
+    /// Whether all iterations are done.
     pub fn is_complete(&self) -> bool {
         self.remaining_iters() <= 0.0
     }
@@ -94,6 +104,7 @@ impl Job {
         self.throughput.get(&gpu).copied().unwrap_or(0.0)
     }
 
+    /// Set `X_j^r` for one GPU type.
     pub fn set_throughput(&mut self, gpu: GpuType, iters_per_sec: f64) {
         self.throughput.insert(gpu, iters_per_sec);
     }
@@ -104,6 +115,7 @@ impl Job {
         self.throughput.values().cloned().fold(0.0, f64::max)
     }
 
+    /// Slowest positive single-GPU throughput.
     pub fn min_throughput(&self) -> f64 {
         self.throughput
             .values()
@@ -119,6 +131,7 @@ impl Job {
             / (self.gpus_requested as f64 * self.max_throughput())
     }
 
+    /// Worst-case runtime `t_j^max` (see [`Job::t_min`]).
     pub fn t_max(&self) -> f64 {
         self.total_iters()
             / (self.gpus_requested as f64 * self.min_throughput())

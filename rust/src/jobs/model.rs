@@ -14,16 +14,22 @@ use crate::cluster::gpu::GpuType;
 /// XL 60-100 GPU-hours).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum SizeClass {
+    /// Small: 0-1 GPU-hours.
     S,
+    /// Medium: 1-10 GPU-hours.
     M,
+    /// Large: 10-50 GPU-hours.
     L,
+    /// Extra-large: 60-100 GPU-hours.
     XL,
 }
 
 impl SizeClass {
+    /// All classes, smallest first.
     pub const ALL: [SizeClass; 4] =
         [SizeClass::S, SizeClass::M, SizeClass::L, SizeClass::XL];
 
+    /// Short class name (`"S"` … `"XL"`).
     pub fn name(&self) -> &'static str {
         match self {
             SizeClass::S => "S",
@@ -66,16 +72,24 @@ pub enum QualityMetric {
 /// The DL models of Tables II & III.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DlModel {
-    ResNet50,    // Image Classification / ImageNet (XL)     — Table II
-    ResNet18,    // Image Classification / CIFAR-10 (S)      — IC
-    Lstm,        // Language Modeling / Wikitext-2 (L)       — LM
-    CycleGan,    // Image-to-Image / monet2photo (M)         — Table II
-    Transformer, // Language Translation / Multi30k (L)      — LT
-    Recoder,     // Recommendation / ML-20M (XL)             — RS
-    MiMa,        // Weather prediction / Mesonet+HRRR (M)    — MM
+    /// Image Classification / ImageNet (XL) — Table II.
+    ResNet50,
+    /// Image Classification / CIFAR-10 (S) — code IC.
+    ResNet18,
+    /// Language Modeling / Wikitext-2 (L) — code LM.
+    Lstm,
+    /// Image-to-Image / monet2photo (M) — Table II.
+    CycleGan,
+    /// Language Translation / Multi30k (L) — code LT.
+    Transformer,
+    /// Recommendation / ML-20M (XL) — code RS.
+    Recoder,
+    /// Weather prediction / Mesonet+HRRR (M) — code MM.
+    MiMa,
 }
 
 impl DlModel {
+    /// Every catalogued model.
     pub const ALL: [DlModel; 7] = [
         DlModel::ResNet50,
         DlModel::ResNet18,
@@ -104,6 +118,7 @@ impl DlModel {
         DlModel::MiMa,
     ];
 
+    /// Display name (paper spelling).
     pub fn name(&self) -> &'static str {
         match self {
             DlModel::ResNet50 => "ResNet-50",
@@ -130,6 +145,7 @@ impl DlModel {
         }
     }
 
+    /// Training task column of Tables II/III.
     pub fn task(&self) -> &'static str {
         match self {
             DlModel::ResNet50 | DlModel::ResNet18 => "Image Classification",
@@ -141,6 +157,7 @@ impl DlModel {
         }
     }
 
+    /// Dataset column of Tables II/III.
     pub fn dataset(&self) -> &'static str {
         match self {
             DlModel::ResNet50 => "ImageNet",
@@ -153,6 +170,7 @@ impl DlModel {
         }
     }
 
+    /// GPU-hour size class.
     pub fn size_class(&self) -> SizeClass {
         match self {
             DlModel::ResNet50 => SizeClass::XL,

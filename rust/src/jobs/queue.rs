@@ -11,10 +11,12 @@ pub struct JobQueue {
 }
 
 impl JobQueue {
+    /// Empty queue.
     pub fn new() -> Self {
         JobQueue::default()
     }
 
+    /// Admit a job (panics on duplicate ids — admission bug).
     pub fn admit(&mut self, job: Job) {
         assert!(
             !self.jobs.contains_key(&job.id),
@@ -24,26 +26,32 @@ impl JobQueue {
         self.jobs.insert(job.id, job);
     }
 
+    /// Look up a job.
     pub fn get(&self, id: JobId) -> Option<&Job> {
         self.jobs.get(&id)
     }
 
+    /// Look up a job mutably.
     pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
         self.jobs.get_mut(&id)
     }
 
+    /// Number of jobs ever admitted.
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
 
+    /// Whether no job was admitted yet.
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }
 
+    /// All jobs in id order.
     pub fn iter(&self) -> impl Iterator<Item = &Job> {
         self.jobs.values()
     }
 
+    /// All jobs in id order, mutably.
     pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Job> {
         self.jobs.values_mut()
     }
@@ -58,12 +66,14 @@ impl JobQueue {
             .collect()
     }
 
+    /// Whether every admitted job completed.
     pub fn all_complete(&self) -> bool {
         self.jobs
             .values()
             .all(|j| j.status == JobStatus::Completed)
     }
 
+    /// The completed jobs, in id order.
     pub fn completed(&self) -> Vec<&Job> {
         self.jobs
             .values()

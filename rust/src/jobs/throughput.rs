@@ -60,6 +60,7 @@ pub struct OnlineEstimator {
 }
 
 impl OnlineEstimator {
+    /// Estimator with EMA factor `alpha` for new measurements.
     pub fn new(alpha: f64) -> Self {
         OnlineEstimator {
             estimates: BTreeMap::new(),
@@ -87,6 +88,7 @@ impl OnlineEstimator {
         *self.samples.entry((model, gpu)).or_insert(0) += 1;
     }
 
+    /// Measurements folded in for one `(model, gpu)` key.
     pub fn sample_count(&self, model: DlModel, gpu: GpuType) -> usize {
         self.samples.get(&(model, gpu)).copied().unwrap_or(0)
     }

@@ -9,7 +9,11 @@
 //! * [`sched`] — the paper's contribution: the Hadar primal-dual/DP
 //!   scheduler (Algorithms 1-2), the Gavel/Tiresias/YARN-CS baselines, and
 //!   the HadarE forking scheduler.
-//! * [`sim`] — discrete-time trace-driven simulator (paper §IV).
+//! * [`sim`] — discrete-time trace-driven simulator (paper §IV), with
+//!   dynamic-cluster support: both engines replay a
+//!   [`cluster::events::EventTimeline`] (node joins, drains, maintenance
+//!   windows, capacity changes), preempting jobs on drained nodes and
+//!   reporting availability-normalised utilisation.
 //! * [`exec`] — physical-cluster *emulation*: virtual-clock heterogeneous
 //!   nodes running **real** training steps through the PJRT runtime
 //!   (paper §VI), including HadarE's aggregate + consolidate loop.
@@ -17,7 +21,9 @@
 //!   `python/compile/aot.py` and executes them via the `xla` crate's PJRT
 //!   CPU client. Python never runs on this path.
 //! * [`cluster`], [`jobs`], [`trace`] — the modelled world: GPU types,
-//!   nodes, jobs, throughput matrices, Philly-like traces, workload mixes.
+//!   nodes, jobs, throughput matrices, Philly-like traces, workload
+//!   mixes, and the cluster event timeline ([`cluster::events`]) plus its
+//!   seeded churn generator.
 //! * [`forking`] — HadarE's Job Forker and Job Tracker (paper §V).
 //! * [`expt`] — declarative experiment sweeps: a scenario grid spec, a
 //!   multi-threaded runner, JSONL artifacts, and comparison reports (the
@@ -26,6 +32,13 @@
 //!   experiment index), shared by examples and benches.
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, stats, tables,
 //!   property-test + bench harnesses).
+//!
+//! Prose documentation lives in `docs/`: `docs/architecture.md` (layer
+//! map), `docs/schedulers.md` (implementation ↔ paper equations),
+//! `docs/simulation.md` (round loop, overhead accounting, event
+//! timelines), and `docs/expt.md` (the sweep engine).
+
+#![warn(missing_docs)]
 
 pub mod cluster;
 pub mod exec;

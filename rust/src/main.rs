@@ -3,7 +3,8 @@
 //! Subcommands map onto the paper's experiments (see DESIGN.md):
 //!   workloads   Tables II/III
 //!   motivate    Fig. 1 motivational example
-//!   simulate    trace-driven simulation, Figs. 3-4
+//!   simulate    trace-driven simulation, Figs. 3-4; with --events, the
+//!               dynamic-cluster churn comparison
 //!   scale       Fig. 5 scheduling-time scalability
 //!   rounds      Fig. 6 Hadar vs HadarE round timelines
 //!   physical    Figs. 8-10 mixes grid
@@ -23,7 +24,12 @@ fn app() -> App {
                 .opt("jobs", Some("480"), "number of trace jobs")
                 .opt("seed", Some("42"), "trace seed")
                 .opt("slot", Some("360"), "slot length in seconds")
-                .opt("hours-scale", Some("1.0"), "scale on job GPU-hours"),
+                .opt("hours-scale", Some("1.0"), "scale on job GPU-hours")
+                .opt("events", Some(""),
+                     "cluster event timeline JSON; runs the churn-scenario \
+                      comparison instead of Figs. 3-4")
+                .opt("cluster", Some("sim60"),
+                     "cluster preset for the churn comparison"),
         )
         .command(
             Command::new("scale", "Fig. 5 scheduling-time scalability")
@@ -62,7 +68,27 @@ fn app() -> App {
         .command(Command::new("bench-info", "map figures/tables to bench targets"))
 }
 
-fn cmd_simulate(args: &Args) {
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let events_path = args.get_str("events");
+    if !events_path.is_empty() {
+        // Dynamic-cluster mode: replay the event trace under every
+        // scheduler and print the churn-comparison table.
+        let text = std::fs::read_to_string(&events_path)?;
+        let timeline = hadar::cluster::events::EventTimeline::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{events_path}: {e}"))?;
+        let cfg = hadar::figures::churn::ChurnEvalConfig {
+            cluster: args.get_str("cluster"),
+            n_jobs: args.get_usize("jobs"),
+            seed: args.get_u64("seed"),
+            slot_secs: args.get_f64("slot"),
+            hours_scale: args.get_f64("hours-scale"),
+            ..Default::default()
+        };
+        let ev = hadar::figures::churn::run(&cfg, &timeline)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!("{}", hadar::figures::churn::render(&ev));
+        return Ok(());
+    }
     let cfg = hadar::figures::trace_eval::TraceEvalConfig {
         n_jobs: args.get_usize("jobs"),
         seed: args.get_u64("seed"),
@@ -72,6 +98,7 @@ fn cmd_simulate(args: &Args) {
     let te = hadar::figures::trace_eval::run(&cfg);
     println!("{}", hadar::figures::trace_eval::render_fig3(&te));
     println!("{}", hadar::figures::trace_eval::render_fig4(&te));
+    Ok(())
 }
 
 fn cmd_scale(args: &Args) {
@@ -195,7 +222,12 @@ fn main() {
                 let f = hadar::figures::fig1::run();
                 println!("{}", hadar::figures::fig1::render(&f));
             }
-            "simulate" => cmd_simulate(&args),
+            "simulate" => {
+                if let Err(e) = cmd_simulate(&args) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
             "scale" => cmd_scale(&args),
             "rounds" => {
                 let f = hadar::figures::fig6::run();

@@ -8,7 +8,9 @@ use std::path::{Path, PathBuf};
 /// How a parameter is initialised (mirrors `model.init_params`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Init {
+    /// All ones (layer-norm gains).
     Ones,
+    /// All zeros (biases, momenta).
     Zeros,
     /// Gaussian with the given stddev.
     Normal(f64),
@@ -17,12 +19,16 @@ pub enum Init {
 /// One flat parameter slot.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
+    /// Parameter name (e.g. `"layer0.ln1.g"`).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Initialisation rule.
     pub init: Init,
 }
 
 impl ParamSpec {
+    /// Number of elements.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -31,15 +37,25 @@ impl ParamSpec {
 /// One lowered model variant.
 #[derive(Clone, Debug)]
 pub struct Variant {
+    /// Variant name (`"tiny"`, `"small"`, …).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Batch size.
     pub batch: usize,
+    /// Total parameter count (sanity check against `params`).
     pub param_count: usize,
+    /// Flat parameter slots, in executable argument order.
     pub params: Vec<ParamSpec>,
+    /// Path to the train-step HLO text.
     pub train_hlo: PathBuf,
+    /// Path to the eval-step HLO text.
     pub eval_hlo: PathBuf,
 }
 
@@ -53,7 +69,9 @@ impl Variant {
 /// The whole manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory (HLO paths are relative to it).
     pub dir: PathBuf,
+    /// Variants by name.
     pub variants: BTreeMap<String, Variant>,
 }
 
@@ -67,6 +85,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON; `dir` anchors the HLO paths.
     pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
         let v = json::parse(text).map_err(|e| e.to_string())?;
         if v.get("format").as_usize() != Some(1) {
@@ -134,6 +153,7 @@ impl Manifest {
         Ok(Manifest { dir, variants })
     }
 
+    /// Look up a variant by name.
     pub fn variant(&self, name: &str) -> Option<&Variant> {
         self.variants.get(name)
     }

@@ -19,24 +19,31 @@ pub struct Runtime {
 /// (loss, P params, P momenta)` as one HLO module (fwd + bwd + SGD fused).
 pub struct TrainStep {
     exe: xla::PjRtLoadedExecutable,
+    /// Parameter slot count `P`.
     pub n_params: usize,
+    /// Batch size of the lowered module.
     pub batch: usize,
+    /// Sequence length of the lowered module.
     pub seq: usize,
 }
 
 /// A compiled eval-step: `(tokens, P params) -> (loss, accuracy)`.
 pub struct EvalStep {
     exe: xla::PjRtLoadedExecutable,
+    /// Parameter slot count `P`.
     pub n_params: usize,
 }
 
 /// Model state held as host literals between steps.
 pub struct ModelState {
+    /// Parameter tensors, in manifest order.
     pub params: Vec<xla::Literal>,
+    /// SGD momentum tensors, matching `params`.
     pub momenta: Vec<xla::Literal>,
 }
 
 impl Runtime {
+    /// Create the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         Ok(Runtime {
             client: xla::PjRtClient::cpu()
@@ -44,6 +51,7 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

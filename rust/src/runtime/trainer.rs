@@ -59,11 +59,17 @@ impl Corpus {
 
 /// One model under training: state + its data stream.
 pub struct Trainer {
+    /// Parameters + momenta.
     pub state: ModelState,
+    /// The job's data distribution.
     pub corpus: Corpus,
+    /// Batch-sampling stream.
     pub rng: Rng,
+    /// Real steps executed so far.
     pub steps_done: u64,
+    /// (cumulative step, loss) curve.
     pub losses: Vec<(u64, f32)>,
+    /// SGD learning rate.
     pub lr: f32,
 }
 

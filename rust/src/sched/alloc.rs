@@ -13,20 +13,24 @@ pub struct JobAllocation {
 }
 
 impl JobAllocation {
+    /// Empty allocation.
     pub fn new() -> Self {
         JobAllocation::default()
     }
 
+    /// Add `count` GPUs of `gpu` on `node` (0 is a no-op).
     pub fn add(&mut self, node: usize, gpu: GpuType, count: usize) {
         if count > 0 {
             *self.slots.entry((node, gpu)).or_insert(0) += count;
         }
     }
 
+    /// Total workers `Σ w_{jh}^r` in this allocation.
     pub fn total_gpus(&self) -> usize {
         self.slots.values().sum()
     }
 
+    /// Whether nothing was allocated.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
@@ -49,6 +53,7 @@ impl JobAllocation {
         nodes
     }
 
+    /// Expand into per-pool [`Assignment`]s for `job`.
     pub fn assignments(&self, job: JobId) -> Vec<Assignment> {
         self.slots
             .iter()
@@ -67,28 +72,34 @@ impl JobAllocation {
 /// the schedulers: present jobs get exactly `W_j` GPUs).
 #[derive(Clone, Debug, Default)]
 pub struct RoundPlan {
+    /// Job -> allocation (absent = nothing this round).
     pub allocations: BTreeMap<JobId, JobAllocation>,
 }
 
 impl RoundPlan {
+    /// Empty plan.
     pub fn new() -> Self {
         RoundPlan::default()
     }
 
+    /// Record a job's allocation (empty allocations are dropped).
     pub fn insert(&mut self, job: JobId, alloc: JobAllocation) {
         if !alloc.is_empty() {
             self.allocations.insert(job, alloc);
         }
     }
 
+    /// The job's allocation this round, if any.
     pub fn get(&self, job: JobId) -> Option<&JobAllocation> {
         self.allocations.get(&job)
     }
 
+    /// Jobs that received GPUs, in id order.
     pub fn scheduled_jobs(&self) -> Vec<JobId> {
         self.allocations.keys().copied().collect()
     }
 
+    /// Total GPUs handed out this round.
     pub fn total_gpus(&self) -> usize {
         self.allocations.values().map(|a| a.total_gpus()).sum()
     }

@@ -19,6 +19,7 @@ use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::{RoundCtx, Scheduler};
 use std::collections::BTreeMap;
 
+/// The Gavel baseline (see module docs).
 pub struct Gavel {
     /// Rounds of service received per (job, GPU type) — Gavel's priority
     /// denominator tracks how much of each type a job has already had.
@@ -32,6 +33,7 @@ impl Default for Gavel {
 }
 
 impl Gavel {
+    /// Fresh scheduler with no service history.
     pub fn new() -> Self {
         Gavel {
             rounds_received: BTreeMap::new(),

@@ -2,7 +2,8 @@
 //! (Algorithms 1 and 2).
 //!
 //! Each round, Hadar prices every (node, GPU-type) pool with the
-//! exponential dual price (Eq. 5, [`price`]) and solves Eq. (8): choose a
+//! exponential dual price (Eq. 5, [`crate::sched::price`]) and solves
+//! Eq. (8): choose a
 //! subset of queued jobs and task-level allocations minimising priced
 //! resource cost (equivalently maximising total payoff
 //! `φ_j = U_j − Σ k·w`), subject to capacity (1d) and gang all-or-nothing
@@ -70,19 +71,28 @@ impl Default for HadarConfig {
 /// allocations" observation).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HadarStats {
+    /// Scheduling rounds served.
     pub rounds: u64,
+    /// Rounds whose plan differed from the previous round's.
     pub rounds_with_change: u64,
+    /// Rounds solved by the exact select/skip DP.
     pub dp_invocations: u64,
+    /// Rounds solved by the payoff-density greedy (queue > `dp_job_cap`).
     pub greedy_invocations: u64,
+    /// DP memo hits.
     pub memo_hits: u64,
+    /// DP memo misses.
     pub memo_misses: u64,
 }
 
+/// The Hadar scheduler (Algorithms 1 and 2; see module docs).
 pub struct Hadar {
+    /// Tunables (see [`HadarConfig`]).
     pub cfg: HadarConfig,
     /// FIND_ALLOC line 23: GPU types sorted by `X_j^r` once per job.
     type_order: BTreeMap<JobId, Vec<GpuType>>,
     prev_plan: RoundPlan,
+    /// Decision statistics, updated every round.
     pub stats: HadarStats,
 }
 
@@ -93,10 +103,12 @@ impl Default for Hadar {
 }
 
 impl Hadar {
+    /// Hadar with the paper-default [`HadarConfig`].
     pub fn new() -> Self {
         Hadar::with_config(HadarConfig::default())
     }
 
+    /// Hadar with explicit tunables (the ablation benches use this).
     pub fn with_config(cfg: HadarConfig) -> Self {
         Hadar {
             cfg,
@@ -456,6 +468,14 @@ impl Scheduler for Hadar {
         }
         self.prev_plan = plan.clone();
         plan
+    }
+
+    /// Drain preemption: forget the job's previous allocation so
+    /// incremental mode does not try to carry a placement onto hardware
+    /// that left the cluster. The throughput-order cache stays — the job
+    /// itself is unchanged and will be rescheduled.
+    fn preempt(&mut self, job: JobId) {
+        self.prev_plan.allocations.remove(&job);
     }
 }
 

@@ -23,12 +23,14 @@ use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::RoundCtx;
 use std::collections::BTreeMap;
 
+/// The HadarE whole-node planner (see module docs).
 pub struct HadarE {
     /// Copies per job (usually = node count; Theorem 3's maximum).
     pub copies: u64,
 }
 
 impl HadarE {
+    /// Planner with a per-parent copy budget.
     pub fn new(copies: u64) -> Self {
         HadarE { copies }
     }

@@ -27,14 +27,20 @@ pub struct RoundCtx<'a> {
     pub slot_secs: f64,
     /// Horizon `T` for the utility lower bound in Eq. (7).
     pub horizon: f64,
+    /// All jobs, across their whole lifecycle.
     pub queue: &'a JobQueue,
     /// Arrived, incomplete jobs (waiting set `Q`).
     pub active: &'a [JobId],
+    /// The cluster **as of this round**. Under a cluster event timeline
+    /// (node joins/drains, capacity changes — see
+    /// [`crate::cluster::events`]) this changes between rounds, so
+    /// schedulers must not cache node inventories across calls.
     pub cluster: &'a ClusterSpec,
 }
 
 /// A round-based cluster scheduler.
 pub trait Scheduler {
+    /// Stable scheduler name (CLI surface, result records).
     fn name(&self) -> &'static str;
 
     /// Decide the allocations for this round. Implementations must respect
@@ -46,6 +52,12 @@ pub trait Scheduler {
     fn preemptive(&self) -> bool {
         true
     }
+
+    /// The engine force-preempted this job (its node drained or shrank in
+    /// a cluster event). Schedulers that pin allocations across rounds
+    /// must drop theirs here — the placement no longer exists, and the
+    /// job is back in the waiting set. Stateless schedulers ignore this.
+    fn preempt(&mut self, _job: JobId) {}
 }
 
 /// Construct a scheduler by name (CLI surface).

@@ -16,7 +16,9 @@ use std::collections::BTreeMap;
 /// Per-GPU-type utility bounds (Eqs. (6)-(7)).
 #[derive(Clone, Debug)]
 pub struct PriceBounds {
+    /// `U_max^r`: best-case per-unit utility per type (Eq. 6).
     pub u_max: BTreeMap<GpuType, f64>,
+    /// `U_min^r`: admission floor per type (Eq. 7, scaled by `1/4η`).
     pub u_min: BTreeMap<GpuType, f64>,
 }
 
@@ -82,10 +84,12 @@ pub struct PriceTable {
 }
 
 impl PriceTable {
+    /// Price table over the given bounds.
     pub fn new(bounds: PriceBounds) -> Self {
         PriceTable { bounds }
     }
 
+    /// The bounds this table prices with.
     pub fn bounds(&self) -> &PriceBounds {
         &self.bounds
     }

@@ -17,6 +17,7 @@ use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::{RoundCtx, Scheduler};
 use std::collections::BTreeMap;
 
+/// The Tiresias baseline (see module docs).
 pub struct Tiresias {
     /// Attained service in GPU-seconds.
     attained: BTreeMap<JobId, f64>,
@@ -31,6 +32,7 @@ impl Default for Tiresias {
 }
 
 impl Tiresias {
+    /// Fresh scheduler with the one-hour queue threshold.
     pub fn new() -> Self {
         Tiresias {
             attained: BTreeMap::new(),

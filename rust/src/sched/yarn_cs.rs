@@ -12,8 +12,10 @@ use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::{RoundCtx, Scheduler};
 use std::collections::BTreeMap;
 
+/// The YARN capacity-scheduler baseline (see module docs).
 pub struct YarnCs {
-    /// Allocations pinned at admission; released only on completion.
+    /// Allocations pinned at admission; released only on completion (or a
+    /// forced drain preemption).
     running: BTreeMap<JobId, JobAllocation>,
 }
 
@@ -24,6 +26,7 @@ impl Default for YarnCs {
 }
 
 impl YarnCs {
+    /// Fresh scheduler with no pinned allocations.
     pub fn new() -> Self {
         YarnCs {
             running: BTreeMap::new(),
@@ -78,6 +81,13 @@ impl Scheduler for YarnCs {
 
     fn preemptive(&self) -> bool {
         false
+    }
+
+    /// Even the non-preemptive baseline loses a placement when its node
+    /// drains: drop the pin so the job re-queues (FIFO) instead of
+    /// re-asserting GPUs that no longer exist.
+    fn preempt(&mut self, job: JobId) {
+        self.running.remove(&job);
     }
 
     fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {

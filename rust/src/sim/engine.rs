@@ -7,7 +7,16 @@
 //! allocation"), advances progress with the bottleneck-throughput rule
 //! (Eq. 1b — all workers run at the slowest device's pace), and records
 //! utilisation/time metrics.
+//!
+//! With a [`crate::cluster::events::EventTimeline`] (via
+//! [`run_with_events`]) the cluster is *dynamic*: due events apply at each
+//! round boundary, jobs on drained/shrunk nodes are preempted (their next
+//! placement pays the checkpoint-restart overhead) and re-queued, the
+//! scheduler sees the current cluster every round, and
+//! [`SimResult::anu`] reports utilisation normalised by the capacity that
+//! was actually *available* over time rather than the nominal capacity.
 
+use crate::cluster::events::{ClusterTimeline, EventTimeline};
 use crate::cluster::spec::ClusterSpec;
 use crate::jobs::job::{JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
@@ -16,6 +25,7 @@ use crate::sched::{RoundCtx, Scheduler};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Engine parameters shared by the generic and HadarE round engines.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
     /// Round/slot length `L` in seconds (paper default: 6 minutes).
@@ -43,6 +53,7 @@ impl Default for SimConfig {
 /// real-training replay in `exec`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundJob {
+    /// GPUs allocated to the job this round.
     pub gpus: usize,
     /// Remaining iterations at round start.
     pub remaining_before: f64,
@@ -55,20 +66,25 @@ pub struct RoundJob {
 /// One round's record, enough to redraw Fig. 1 / Fig. 6 style timelines.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// Round number (0-based).
     pub round: u64,
+    /// Virtual time at round start (seconds).
     pub start: f64,
+    /// Per-job accounting (only when timelines are recorded).
     pub jobs: BTreeMap<JobId, RoundJob>,
     /// Busy GPU-seconds this round (excludes restart overhead).
     pub busy_gpu_secs: f64,
     /// GPU-seconds *allocated* this round (scheduled jobs x slot).
     pub alloc_gpu_secs: f64,
-    /// Total GPU-seconds available this round.
+    /// Total GPU-seconds available this round (tracks the *current*
+    /// cluster under an event timeline).
     pub avail_gpu_secs: f64,
 }
 
 /// Simulation outcome + metrics inputs.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Name of the scheduler that produced this run.
     pub scheduler: String,
     /// Total time duration (makespan), seconds.
     pub ttd: f64,
@@ -77,34 +93,87 @@ pub struct SimResult {
     /// Completion instants `f_j` (for the Fig. 4 CDF).
     pub finish_times: Vec<f64>,
     /// Aggregate GPU resource utilisation in [0, 1]: busy time over
-    /// total capacity x makespan (Fig. 3's GRU).
+    /// *nominal* (initial) capacity x makespan (Fig. 3's GRU).
     pub gru: f64,
     /// Cluster resource utilisation in [0, 1]: busy time over *allocated*
     /// node-slots (the paper's §VI CRU — idle/unallocated nodes don't
     /// enter the denominator, wasted slot tails and restarts do).
     pub cru: f64,
+    /// Availability-normalised utilisation in [0, 1]: busy GPU-seconds
+    /// over the GPU-seconds actually *available* (the capacity step
+    /// function integrated over the makespan). Equal to [`SimResult::gru`]
+    /// on a static cluster; the honest utilisation figure under node
+    /// churn, where nominal capacity overstates what schedulers could use.
+    pub anu: f64,
+    /// Rounds executed.
     pub rounds: u64,
+    /// Jobs force-preempted by node drains / capacity shrinks.
+    pub preemptions: u64,
+    /// Cluster events applied over the run.
+    pub events_applied: u64,
     /// Wall-clock seconds spent inside `Scheduler::schedule`.
     pub sched_wall_secs: f64,
     /// Mean wall-clock per scheduling round (Fig. 5's y-axis).
     pub sched_wall_per_round: f64,
+    /// Per-round records (empty unless requested).
     pub timeline: Vec<RoundRecord>,
     /// Fraction of rounds whose plan differed from the previous round's.
     pub change_fraction: f64,
 }
 
-/// Run one scheduler over one workload. `record_timeline` keeps per-round
-/// records (disable for the 2048-job scalability sweeps).
+/// Integrate a capacity step function over `[0, ttd]` — the ANU
+/// denominator. `segments` holds `(start time, capacity in GPUs)` entries,
+/// first at t=0; used by both round engines.
+pub(crate) fn integrate_capacity(segments: &[(f64, f64)], ttd: f64) -> f64 {
+    let mut total = 0.0;
+    for (i, &(t0, gpus)) in segments.iter().enumerate() {
+        let t1 = segments
+            .get(i + 1)
+            .map(|&(t, _)| t)
+            .unwrap_or(ttd)
+            .min(ttd);
+        let t0 = t0.min(ttd);
+        if t1 > t0 {
+            total += gpus * (t1 - t0);
+        }
+    }
+    total
+}
+
+/// Run one scheduler over one workload on a *static* cluster.
+/// `record_timeline` keeps per-round records (disable for the 2048-job
+/// scalability sweeps).
 pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
            cluster: &ClusterSpec, cfg: &SimConfig, record_timeline: bool)
            -> SimResult {
-    let total_gpus = cluster.total_gpus() as f64;
+    run_with_events(queue, scheduler, cluster, &EventTimeline::empty(), cfg,
+                    record_timeline)
+        .expect("the empty event timeline always resolves")
+}
+
+/// Run one scheduler over one workload under a cluster event timeline.
+///
+/// Due events apply at round boundaries: jobs whose previous allocation
+/// touches a drained or shrunk node are preempted (the scheduler is told
+/// via [`Scheduler::preempt`], the job goes back to `Queued`, and its next
+/// placement pays the checkpoint-restart overhead — it changed
+/// allocation), and every round's [`RoundCtx`] carries the *current*
+/// cluster. Fails only if `events` does not resolve against `cluster`.
+pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
+                       cluster: &ClusterSpec, events: &EventTimeline,
+                       cfg: &SimConfig, record_timeline: bool)
+                       -> Result<SimResult, String> {
+    let mut view = ClusterTimeline::new(cluster, events)?;
+    let nominal_gpus = cluster.total_gpus() as f64;
     let mut now = 0.0;
     let mut round = 0u64;
     let mut busy_total = 0.0;
     let mut alloc_total = 0.0;
     // (round start, allocated gpu-secs) — kept even without timelines.
     let mut alloc_log: Vec<(f64, f64)> = Vec::new();
+    // Capacity step function (segment start, available GPUs) for ANU.
+    let mut avail_log: Vec<(f64, f64)> = vec![(0.0, nominal_gpus)];
+    let mut preemptions = 0u64;
     let mut last_finish: f64 = 0.0;
     let mut prev_plan = RoundPlan::new();
     let mut sched_wall = 0.0;
@@ -112,6 +181,39 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
     let mut changed_rounds = 0u64;
 
     while !queue.all_complete() && round < cfg.max_rounds {
+        // Apply cluster events due by this round boundary.
+        let change = view.advance_to(now);
+        if change.capacity_changed {
+            avail_log.push((now, view.cluster().total_gpus() as f64));
+        }
+        if !change.affected.is_empty() {
+            // Preempt exactly the jobs whose last-round allocation touches
+            // a drained/shrunk node; they re-queue and pay the restart
+            // overhead on their next placement. Stale entries of jobs
+            // that already completed are dropped without counting — no
+            // running work was disturbed.
+            let hit: Vec<JobId> = prev_plan
+                .allocations
+                .iter()
+                .filter(|(_, a)| {
+                    a.slots.keys().any(|(h, _)| change.affected.contains(h))
+                })
+                .map(|(&id, _)| id)
+                .collect();
+            for id in hit {
+                prev_plan.allocations.remove(&id);
+                let live =
+                    queue.get(id).map_or(false, |j| !j.is_complete());
+                if live {
+                    scheduler.preempt(id);
+                    if let Some(job) = queue.get_mut(id) {
+                        job.status = JobStatus::Queued;
+                    }
+                    preemptions += 1;
+                }
+            }
+        }
+
         let active = queue.active_at(now);
         if active.is_empty() {
             // Idle until the next arrival.
@@ -131,7 +233,7 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 horizon: cfg.horizon,
                 queue,
                 active: &active,
-                cluster,
+                cluster: view.cluster(),
             };
             let t0 = Instant::now();
             let plan = scheduler.schedule(&ctx);
@@ -148,7 +250,8 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
             jobs: BTreeMap::new(),
             busy_gpu_secs: 0.0,
             alloc_gpu_secs: 0.0,
-            avail_gpu_secs: total_gpus * cfg.slot_secs,
+            avail_gpu_secs: view.cluster().total_gpus() as f64
+                * cfg.slot_secs,
         };
 
         for (&id, alloc) in &plan.allocations {
@@ -222,13 +325,14 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         }
     }
     finish_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    SimResult {
+    let avail_total = integrate_capacity(&avail_log, ttd);
+    Ok(SimResult {
         scheduler: scheduler.name().to_string(),
         ttd,
         jct,
         finish_times,
         gru: if ttd > 0.0 {
-            busy_total / (total_gpus * ttd)
+            busy_total / (nominal_gpus * ttd)
         } else {
             0.0
         },
@@ -237,7 +341,14 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         } else {
             0.0
         },
+        anu: if avail_total > 0.0 {
+            busy_total / avail_total
+        } else {
+            0.0
+        },
         rounds: round,
+        preemptions,
+        events_applied: view.events_applied(),
         sched_wall_secs: sched_wall,
         sched_wall_per_round: if round > 0 {
             sched_wall / round as f64
@@ -250,7 +361,7 @@ pub fn run(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         } else {
             0.0
         },
-    }
+    })
 }
 
 fn plan_differs(a: &RoundPlan, b: &RoundPlan) -> bool {
@@ -337,6 +448,132 @@ mod tests {
         for rec in &res.timeline {
             assert!(rec.busy_gpu_secs <= rec.avail_gpu_secs + 1e-9);
         }
+    }
+
+    #[test]
+    fn static_cluster_has_anu_equal_gru_and_no_preemptions() {
+        let cluster = ClusterSpec::motivational();
+        let mut q = mk_queue(3, 2);
+        let res = run(&mut q, &mut sched::hadar::Hadar::new(), &cluster,
+                      &SimConfig::default(), false);
+        assert!((res.anu - res.gru).abs() < 1e-12,
+                "anu {} vs gru {}", res.anu, res.gru);
+        assert_eq!(res.preemptions, 0);
+        assert_eq!(res.events_applied, 0);
+    }
+
+    use crate::cluster::events::{EventKind, EventTimeline};
+    use crate::cluster::gpu::PcieGen;
+    use crate::cluster::node::Node;
+
+    /// Two nodes, one GPU type each: node 0 = 2x V100, node 1 = 2x P100.
+    fn duo_cluster() -> ClusterSpec {
+        ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "v", &[(GpuType::V100, 2)], PcieGen::Gen3),
+                Node::new(1, "p", &[(GpuType::P100, 2)], PcieGen::Gen3),
+            ],
+        )
+    }
+
+    /// 2-GPU gang at 1 iter/s per GPU on either type (rate 2 it/s).
+    fn duo_job(id: u64, epochs: u64) -> Job {
+        let mut j = Job::new(id, DlModel::Lstm, 0.0, 2, epochs, 100);
+        j.set_throughput(GpuType::V100, 1.0);
+        j.set_throughput(GpuType::P100, 1.0);
+        j
+    }
+
+    #[test]
+    fn node_drain_preempts_only_jobs_on_that_node_and_charges_once() {
+        // YARN-CS pins J0 on the V100 node and J1 on the P100 node; the
+        // V100 node drains at the first round boundary. Exactly J0 is
+        // preempted; it pays the 10 s restart exactly once when re-placed.
+        let cluster = duo_cluster();
+        let mut q = JobQueue::new();
+        q.admit(duo_job(0, 50)); // 5000 iters
+        q.admit(duo_job(1, 14)); // 1400 iters
+        let mut events = EventTimeline::empty();
+        events.push(360.0, EventKind::Leave { node: 0 });
+        let mut sched = sched::yarn_cs::YarnCs::new();
+        let res = run_with_events(&mut q, &mut sched, &cluster, &events,
+                                  &SimConfig::default(), true)
+            .unwrap();
+
+        assert!(q.all_complete(), "both jobs complete after the drain");
+        assert_eq!(res.preemptions, 1, "only the job on the drained node");
+        assert_eq!(res.events_applied, 1);
+        // J1 never moves off node 1.
+        for rec in &res.timeline {
+            if let Some(rj) = rec.jobs.get(&JobId(1)) {
+                assert_eq!(rj.node, 1, "round {}", rec.round);
+            }
+        }
+        // Round 1: J0 is preempted and cannot be placed (P100 full).
+        let r1 = &res.timeline[1];
+        assert!(!r1.jobs.contains_key(&JobId(0)));
+        assert!(r1.jobs.contains_key(&JobId(1)));
+        // Round 2: J0 re-placed, paying the restart overhead once —
+        // (360 - 10) s x 2 GPUs x 1 it/s = 700 iterations…
+        let r2 = &res.timeline[2];
+        assert!((r2.jobs[&JobId(0)].progressed - 700.0).abs() < 1e-6,
+                "restart overhead charged on re-placement: {:?}", r2);
+        assert_eq!(r2.jobs[&JobId(0)].node, 1);
+        // …and round 3 runs the full slot: charged exactly once.
+        let r3 = &res.timeline[3];
+        assert!((r3.jobs[&JobId(0)].progressed - 720.0).abs() < 1e-6,
+                "no second overhead charge: {:?}", r3);
+        // Availability-normalised utilisation beats the nominal figure
+        // once half the cluster is gone.
+        assert!(res.anu > res.gru, "anu {} vs gru {}", res.anu, res.gru);
+        assert!(res.anu <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn node_join_expands_capacity_mid_run() {
+        let cluster = ClusterSpec::new(
+            "solo",
+            vec![Node::new(0, "v", &[(GpuType::V100, 1)], PcieGen::Gen3)],
+        );
+        let mk = |id: u64| {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, 3, 100);
+            j.set_throughput(GpuType::V100, 1.0);
+            j.set_throughput(GpuType::P100, 1.0);
+            j
+        };
+        let mut q = JobQueue::new();
+        q.admit(mk(0));
+        q.admit(mk(1));
+        let mut events = EventTimeline::empty();
+        events.push(
+            360.0,
+            EventKind::Join(Node::new(1, "p-new", &[(GpuType::P100, 1)],
+                                      PcieGen::Gen3)),
+        );
+        let mut sched = sched::yarn_cs::YarnCs::new();
+        let res = run_with_events(&mut q, &mut sched, &cluster, &events,
+                                  &SimConfig::default(), true)
+            .unwrap();
+        assert!(q.all_complete());
+        assert_eq!(res.events_applied, 1);
+        assert_eq!(res.preemptions, 0, "joins never preempt");
+        assert!((res.timeline[0].avail_gpu_secs - 360.0).abs() < 1e-9);
+        assert!((res.timeline[1].avail_gpu_secs - 720.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_event_timeline_is_a_clear_error() {
+        let cluster = duo_cluster();
+        let mut q = JobQueue::new();
+        q.admit(duo_job(0, 1));
+        let mut events = EventTimeline::empty();
+        events.push(10.0, EventKind::Leave { node: 42 });
+        let err = run_with_events(&mut q, &mut sched::hadar::Hadar::new(),
+                                  &cluster, &events, &SimConfig::default(),
+                                  false)
+            .unwrap_err();
+        assert!(err.contains("not in cluster"), "{err}");
     }
 
     #[test]

@@ -7,31 +7,48 @@ use crate::util::stats;
 /// Summary of one run in the paper's reporting vocabulary.
 #[derive(Clone, Debug)]
 pub struct Metrics {
+    /// Scheduler that produced the run.
     pub scheduler: String,
-    /// GPU resource utilisation (busy / capacity x makespan, Fig. 3).
+    /// GPU resource utilisation (busy / nominal capacity x makespan,
+    /// Fig. 3).
     pub gru: f64,
     /// Cluster resource utilisation (busy / allocated slots, §VI).
     pub cru: f64,
+    /// Availability-normalised utilisation (busy / *available*
+    /// GPU-seconds) — equals `gru` on a static cluster; the honest figure
+    /// under node churn.
+    pub anu: f64,
     /// Total time duration (makespan), seconds.
     pub ttd: f64,
+    /// Mean job completion time (seconds).
     pub jct_mean: f64,
+    /// Fastest job completion time (seconds).
     pub jct_min: f64,
+    /// Slowest job completion time (seconds).
     pub jct_max: f64,
     /// Time by which 50% of jobs completed (Fig. 4's gray line).
     pub median_completion: f64,
+    /// Jobs that finished.
     pub completed: usize,
+    /// Rounds executed.
     pub rounds: u64,
+    /// Drain/shrink preemptions from cluster events.
+    pub preemptions: u64,
+    /// Mean scheduling wall-clock per round (seconds).
     pub sched_wall_per_round: f64,
+    /// Fraction of rounds whose plan changed.
     pub change_fraction: f64,
 }
 
 impl Metrics {
+    /// Summarise one simulation result.
     pub fn from_result(res: &SimResult) -> Self {
         let jcts: Vec<f64> = res.jct.values().copied().collect();
         Metrics {
             scheduler: res.scheduler.clone(),
             gru: res.gru,
             cru: res.cru,
+            anu: res.anu,
             ttd: res.ttd,
             jct_mean: stats::mean(&jcts),
             jct_min: if jcts.is_empty() { 0.0 } else { stats::min(&jcts) },
@@ -39,6 +56,7 @@ impl Metrics {
             median_completion: stats::percentile(&res.finish_times, 50.0),
             completed: res.jct.len(),
             rounds: res.rounds,
+            preemptions: res.preemptions,
             sched_wall_per_round: res.sched_wall_per_round,
             change_fraction: res.change_fraction,
         }
@@ -74,7 +92,10 @@ mod tests {
             finish_times: vec![100.0, 400.0],
             gru: 0.8,
             cru: 0.9,
+            anu: 0.85,
             rounds: 4,
+            preemptions: 2,
+            events_applied: 3,
             sched_wall_secs: 0.04,
             sched_wall_per_round: 0.01,
             timeline: vec![],
@@ -89,6 +110,8 @@ mod tests {
         assert_eq!(m.jct_min, 100.0);
         assert_eq!(m.jct_max, 300.0);
         assert_eq!(m.completed, 2);
+        assert_eq!(m.anu, 0.85);
+        assert_eq!(m.preemptions, 2);
         assert!(m.median_completion >= 100.0);
     }
 

@@ -1,10 +1,16 @@
 //! Discrete-time simulation (paper §IV) and the HadarE forked-round engine
-//! (paper §V), plus derived metrics.
+//! (paper §V), plus derived metrics. Both engines also run under a
+//! [`crate::cluster::events::EventTimeline`] (node joins, drains,
+//! maintenance windows, capacity changes) via their `run_with_events`
+//! entry points.
 
 pub mod engine;
 pub mod hadare_engine;
 pub mod metrics;
 
-pub use engine::{run, RoundRecord, SimConfig, SimResult};
-pub use hadare_engine::{run as run_hadare, CopyWork, HadarESimResult};
+pub use engine::{run, run_with_events, RoundRecord, SimConfig, SimResult};
+pub use hadare_engine::{
+    run as run_hadare, run_with_events as run_hadare_with_events, CopyWork,
+    HadarESimResult,
+};
 pub use metrics::{completion_cdf, Metrics};

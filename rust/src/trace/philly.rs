@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 /// One trace record (before materialisation into a `Job`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TraceJob {
+    /// Trace-local job id.
     pub id: u64,
     /// Submission time in seconds from trace start.
     pub submit: f64,
@@ -29,13 +30,16 @@ pub struct TraceJob {
     pub gpus: usize,
     /// Total demand in GPU-hours (drives E_j * N_j via throughput).
     pub gpu_hours: f64,
+    /// GPU-hour size class (paper §IV-A buckets).
     pub class: SizeClass,
 }
 
 /// Generator configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceConfig {
+    /// Number of jobs to generate.
     pub n_jobs: usize,
+    /// Generator seed.
     pub seed: u64,
     /// All jobs at t=0 (paper §IV-A) vs Poisson arrivals over the window.
     pub all_at_start: bool,
@@ -68,6 +72,7 @@ const CLASS_WEIGHTS: [(SizeClass, f64); 4] = [
 /// Power-of-two gang-size weights (1 GPU dominates).
 const GPU_WEIGHTS: [(usize, f64); 4] = [(1, 0.70), (2, 0.15), (4, 0.10), (8, 0.05)];
 
+/// Generate a Philly-shaped trace (deterministic in `cfg.seed`).
 pub fn generate(cfg: &TraceConfig) -> Vec<TraceJob> {
     let mut rng = Rng::new(cfg.seed);
     let mut jobs = Vec::with_capacity(cfg.n_jobs);

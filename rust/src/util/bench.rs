@@ -10,13 +10,16 @@
 use crate::util::stats::Summary;
 use std::time::Instant;
 
+/// One named measurement: warmup runs, timed runs, a summary line.
 pub struct Bencher {
+    /// Label printed in the summary line.
     pub name: String,
     warmup: usize,
     iters: usize,
 }
 
 impl Bencher {
+    /// Bencher with 1 warmup and 5 measured iterations.
     pub fn new(name: &str) -> Self {
         Bencher {
             name: name.to_string(),
@@ -25,11 +28,13 @@ impl Bencher {
         }
     }
 
+    /// Set the warmup iteration count.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup = n;
         self
     }
 
+    /// Set the measured iteration count.
     pub fn iters(mut self, n: usize) -> Self {
         self.iters = n;
         self

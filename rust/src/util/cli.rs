@@ -21,12 +21,15 @@ struct Opt {
 /// One (sub)command: a set of options plus metadata.
 #[derive(Clone, Debug)]
 pub struct Command {
+    /// Subcommand name (first argv token).
     pub name: String,
+    /// One-line description for `--help`.
     pub about: String,
     opts: Vec<Opt>,
 }
 
 impl Command {
+    /// Command with no options yet.
     pub fn new(name: &str, about: &str) -> Self {
         Command {
             name: name.to_string(),
@@ -82,14 +85,18 @@ impl Command {
 pub struct Args {
     values: BTreeMap<String, String>,
     switches: BTreeMap<String, bool>,
+    /// Tokens that were not `--options`.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Option value if provided (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Option value; panics if absent (required options are checked at
+    /// parse time, so this is a programming error).
     pub fn get_str(&self, name: &str) -> String {
         self.values
             .get(name)
@@ -97,24 +104,28 @@ impl Args {
             .unwrap_or_else(|| panic!("missing required --{name}"))
     }
 
+    /// Option value parsed as `usize`.
     pub fn get_usize(&self, name: &str) -> usize {
         self.get_str(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer"))
     }
 
+    /// Option value parsed as `u64`.
     pub fn get_u64(&self, name: &str) -> u64 {
         self.get_str(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be an integer"))
     }
 
+    /// Option value parsed as `f64`.
     pub fn get_f64(&self, name: &str) -> f64 {
         self.get_str(name)
             .parse()
             .unwrap_or_else(|_| panic!("--{name} must be a number"))
     }
 
+    /// Whether a boolean switch was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
     }
@@ -122,11 +133,14 @@ impl Args {
 
 /// Top-level application: subcommands + dispatch.
 pub struct App {
+    /// Program name (usage headers).
     pub name: String,
+    /// One-line description for the overview.
     pub about: String,
     commands: Vec<Command>,
 }
 
+/// What an argv parse produced.
 pub enum Parsed {
     /// (command name, parsed args)
     Run(String, Args),
@@ -137,6 +151,7 @@ pub enum Parsed {
 }
 
 impl App {
+    /// App with no commands yet.
     pub fn new(name: &str, about: &str) -> Self {
         App {
             name: name.to_string(),
@@ -145,6 +160,7 @@ impl App {
         }
     }
 
+    /// Register a subcommand.
     pub fn command(mut self, cmd: Command) -> Self {
         self.commands.push(cmd);
         self

@@ -13,17 +13,26 @@ use std::fmt;
 /// (reports diff cleanly across runs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input.
     pub offset: usize,
 }
 
@@ -38,6 +47,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ------------------------------------------------------------ accessors
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -45,14 +55,17 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Numeric value truncated to `u64`.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|n| n as u64)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -60,6 +73,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -67,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Array contents, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -74,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -101,6 +117,7 @@ impl Json {
 
     // ---------------------------------------------------------- construction
 
+    /// Fresh empty object (builder root).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -116,6 +133,7 @@ impl Json {
         self
     }
 
+    /// In-place field insertion (panics on non-objects — builder misuse).
     pub fn insert(&mut self, key: &str, val: impl Into<Json>) {
         match self {
             Json::Obj(o) => {
@@ -265,6 +283,7 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 
 // ------------------------------------------------------------------ parsing
 
+/// Parse a complete JSON document (trailing content is an error).
 pub fn parse(input: &str) -> Result<Json, JsonError> {
     let bytes = input.as_bytes();
     let mut p = Parser { bytes, pos: 0 };

@@ -2,24 +2,32 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Verbosity levels, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// Progress messages (the default level).
     Info = 2,
+    /// Diagnostic detail.
     Debug = 3,
 }
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(2); // Info by default
 
+/// Set the global verbosity threshold.
 pub fn set_level(level: Level) {
     VERBOSITY.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` are currently emitted.
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= VERBOSITY.load(Ordering::Relaxed)
 }
 
+/// Emit one message to stderr if the level is enabled.
 pub fn log(level: Level, msg: &str) {
     if enabled(level) {
         let tag = match level {
@@ -32,21 +40,26 @@ pub fn log(level: Level, msg: &str) {
     }
 }
 
+/// Log at Info level with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($t)*)) }
 }
 
+/// Log at Warn level with `format!` syntax (trailing underscore:
+/// `warn` collides with the built-in lint attribute namespace).
 #[macro_export]
 macro_rules! warn_ {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($t)*)) }
 }
 
+/// Log at Debug level with `format!` syntax.
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($t)*)) }
 }
 
+/// Log at Error level with `format!` syntax.
 #[macro_export]
 macro_rules! error {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, &format!($($t)*)) }

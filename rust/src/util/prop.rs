@@ -10,7 +10,9 @@ use crate::util::rng::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Copy)]
 pub struct Config {
+    /// Random cases to generate.
     pub cases: usize,
+    /// Generator seed (printed on failure for reproduction).
     pub seed: u64,
 }
 

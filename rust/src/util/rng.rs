@@ -41,6 +41,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -172,6 +173,7 @@ pub struct ZipfTable {
 }
 
 impl ZipfTable {
+    /// Table over `n` ranks with exponent `s`.
     pub fn new(n: usize, s: f64) -> Self {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;
@@ -186,6 +188,7 @@ impl ZipfTable {
         ZipfTable { cdf }
     }
 
+    /// Draw one rank (0-based).
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
         match self

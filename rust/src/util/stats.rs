@@ -36,14 +36,17 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Minimum (`inf` for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (`-inf` for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -71,14 +74,20 @@ pub fn quantile_of_completion(samples: &[f64], f: f64) -> f64 {
 /// Running summary for streaming measurements (bench harness).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Samples seen.
     pub n: usize,
+    /// Running sum.
     pub sum: f64,
+    /// Running sum of squares.
     pub sum_sq: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary {
             n: 0,
@@ -89,6 +98,7 @@ impl Summary {
         }
     }
 
+    /// Fold in one sample.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -97,6 +107,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Mean of the samples so far (0 if none).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -105,6 +116,7 @@ impl Summary {
         }
     }
 
+    /// Population standard deviation of the samples so far.
     pub fn stddev(&self) -> f64 {
         if self.n < 2 {
             return 0.0;

@@ -10,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given header row.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -17,17 +18,20 @@ impl Table {
         }
     }
 
+    /// Append one row (panics on arity mismatch with the header).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Append one row of `Display` values.
     pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
         let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
         self.row(&cells)
     }
 
+    /// Render the aligned ASCII table.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> =
@@ -65,13 +69,17 @@ impl Table {
 /// A labelled (x, y) series rendered as a unicode line chart — stands in for
 /// the paper's figures in terminal output.
 pub struct Chart {
+    /// Chart title line.
     pub title: String,
+    /// X-axis label.
     pub x_label: String,
+    /// Y-axis label.
     pub y_label: String,
     series: Vec<(String, Vec<(f64, f64)>)>,
 }
 
 impl Chart {
+    /// Empty chart with labels.
     pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
         Chart {
             title: title.to_string(),
@@ -81,6 +89,7 @@ impl Chart {
         }
     }
 
+    /// Add one named `(x, y)` series.
     pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
         self.series.push((name.to_string(), points));
         self

@@ -2,10 +2,11 @@
 //! JSON round-trips, runner determinism across worker counts, and the
 //! artifact/report pipeline.
 
+use hadar::cluster::events::ChurnConfig;
 use hadar::expt::artifact::{self, ScenarioRecord};
 use hadar::expt::report;
 use hadar::expt::runner;
-use hadar::expt::spec::{ClusterRef, SweepSpec, WorkloadSpec};
+use hadar::expt::spec::{ClusterRef, EventsRef, SweepSpec, WorkloadSpec};
 use hadar::sim::engine::SimConfig;
 
 /// A fast sweep: 2 schedulers x 2 seeds x 2 slots on the 6-GPU
@@ -23,8 +24,28 @@ fn tiny_sweep() -> SweepSpec {
         }],
         slots_secs: vec![180.0, 360.0],
         seeds: vec![3, 4],
+        events: vec![EventsRef::None],
         base: SimConfig::default(),
     }
+}
+
+/// The tiny sweep with a seeded-churn events axis: maintenance-only (the
+/// cluster always recovers, so every job completes) over one slot/seed.
+fn churn_sweep() -> SweepSpec {
+    let mut spec = tiny_sweep();
+    spec.name = "tiny-churn".into();
+    spec.schedulers = vec!["gavel".into(), "hadar".into()];
+    spec.slots_secs = vec![360.0];
+    spec.seeds = vec![3];
+    spec.events = vec![EventsRef::Churn(ChurnConfig {
+        seed: 5,
+        mean_interval_secs: 600.0,
+        min_down_secs: 300.0,
+        max_down_secs: 900.0,
+        leave_fraction: 0.0,
+        horizon_secs: 2.0 * 3600.0,
+    })];
+    spec
 }
 
 #[test]
@@ -92,6 +113,34 @@ fn artifacts_roundtrip_and_report_renders() {
     assert!(out.contains("hadar"));
     assert!(out.contains("yarn-cs"));
     assert!(out.contains("per-scheduler summary"));
+}
+
+#[test]
+fn event_seed_sweeps_are_byte_identical_across_worker_counts() {
+    // The churn generator expands per scenario from its own seed, so the
+    // same event trace replays under every scheduler and worker count:
+    // canonical JSONL must match byte for byte.
+    let spec = churn_sweep();
+    let r1 = runner::run_sweep(&spec, 1).unwrap();
+    let r4 = runner::run_sweep(&spec, 4).unwrap();
+    let rec1: Vec<ScenarioRecord> =
+        r1.iter().map(ScenarioRecord::from_run).collect();
+    let rec4: Vec<ScenarioRecord> =
+        r4.iter().map(ScenarioRecord::from_run).collect();
+    let a = artifact::canonical_jsonl(&rec1);
+    let b = artifact::canonical_jsonl(&rec4);
+    assert_eq!(a, b, "same event seed must give byte-identical sweeps");
+    // The summaries carry the dynamic-cluster metrics.
+    for r in &rec1 {
+        assert_eq!(r.events, "churn-s5-i600-d300-900-l0-h7200");
+        assert!(r.anu > 0.0 && r.anu <= 1.0 + 1e-9, "{}", r.id);
+        assert_eq!(r.completed, 6, "{}: churn must not lose jobs", r.id);
+    }
+    // Both schedulers saw the identical trace, so the comparison report
+    // groups them together.
+    let out = report::render(&rec1, "gavel");
+    assert!(out.contains("churn-s5-i600-d300-900-l0-h7200"), "{out}");
+    assert!(out.contains("1.00x"), "baseline row present: {out}");
 }
 
 #[test]
