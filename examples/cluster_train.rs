@@ -7,7 +7,7 @@
 //!   attention/FFN kernels (lowered inside the same HLO).
 //!
 //! Prints per-job loss curves, scheduling metrics, and the Table IV
-//! inference-quality comparison. Results are recorded in EXPERIMENTS.md.
+//! inference-quality comparison.
 //!
 //! Run: `make artifacts && cargo run --release --example cluster_train`
 //! (pass `--steps-scale 0.02` to train longer.)
@@ -106,7 +106,7 @@ fn main() -> anyhow::Result<()> {
     };
     println!("{}", table4::render(&t4));
 
-    // Summary table for EXPERIMENTS.md.
+    // Summary table.
     let mut t = Table::new(&["metric", "HadarE", "Hadar", "ratio"]);
     t.row(&[
         "virtual TTD (s)".into(),

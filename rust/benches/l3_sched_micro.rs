@@ -1,6 +1,12 @@
 //! Microbenchmarks of the L3 scheduler hot path (the §Perf targets):
-//! one Hadar scheduling decision at several queue sizes, FIND_ALLOC-level
-//! throughput, and the HadarE round planner.
+//! the zero-clone Hadar solver vs the frozen pre-optimisation reference
+//! on both solve paths (exact DP at queue ≤ `dp_job_cap`, payoff-density
+//! greedy at 100-1000 jobs) over `sim60` and the ~256-node synthetic
+//! cluster, plus raw Hadar decision latency and the HadarE round planner.
+//!
+//! The comparison section is the bench behind the ≥5x DP-path claim in
+//! `docs/performance.md`; the same suite is exported as a JSON artifact by
+//! `hadar bench --json` (BENCH_sched.json).
 //!
 //! Run: `cargo bench --bench l3_sched_micro`
 
@@ -8,6 +14,7 @@ use hadar::cluster::spec::ClusterSpec;
 use hadar::forking::forker::ForkIds;
 use hadar::forking::tracker::JobTracker;
 use hadar::jobs::queue::JobQueue;
+use hadar::sched::bench as schedbench;
 use hadar::sched::hadar::{Hadar, HadarConfig};
 use hadar::sched::hadare::HadarE;
 use hadar::sched::{RoundCtx, Scheduler};
@@ -16,7 +23,28 @@ use hadar::trace::workload::{materialize, physical_jobs};
 use hadar::util::bench::{section, Bencher};
 
 fn main() {
-    section("L3 microbench — Hadar decision latency");
+    section("L3 microbench — reference vs zero-clone solver");
+    let results = schedbench::run_suite(false);
+    print!("{}", schedbench::render(&results));
+    for r in &results {
+        assert!(r.plans_equal, "{}: plans diverged", r.name);
+    }
+    let dp_min = results
+        .iter()
+        .filter(|r| r.path == "dp")
+        .map(|r| r.speedup)
+        .fold(f64::INFINITY, f64::min);
+    let greedy_min = results
+        .iter()
+        .filter(|r| r.path == "greedy")
+        .map(|r| r.speedup)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "worst-case speedup: dp {dp_min:.2}x, greedy {greedy_min:.2}x \
+         (target: dp >= 5x, greedy >= 1x)"
+    );
+
+    section("L3 microbench — Hadar decision latency (optimised)");
     for &n in &[16usize, 64, 256, 1024] {
         let nodes_per_type = (n / 12).max(1);
         let cluster = ClusterSpec::scaled(nodes_per_type, 4);

@@ -110,6 +110,30 @@ impl ClusterSpec {
         ClusterSpec::new("scaled", nodes)
     }
 
+    /// ~256-node synthetic cluster for the scheduler microbenches
+    /// (`benches/l3_sched_micro.rs`, `hadar bench`): 64 nodes each of
+    /// V100/P100/K80/T4, 4 GPUs per node — 256 nodes, 1024 GPUs. Big
+    /// enough that per-call slot-list rebuilds and per-branch state clones
+    /// dominate the solve, which is exactly what the zero-clone hot path
+    /// is measured against (see `docs/performance.md`).
+    pub fn synthetic256() -> Self {
+        let mut nodes = Vec::new();
+        let types = [GpuType::V100, GpuType::P100, GpuType::K80, GpuType::T4];
+        let mut id = 0;
+        for &t in &types {
+            for i in 0..64 {
+                nodes.push(Node::new(
+                    id,
+                    &format!("{}-{}", t.name().to_lowercase(), i),
+                    &[(t, 4)],
+                    PcieGen::Gen3,
+                ));
+                id += 1;
+            }
+        }
+        ClusterSpec::new("synthetic256", nodes)
+    }
+
     /// Total GPUs across all nodes and types.
     pub fn total_gpus(&self) -> usize {
         self.nodes.iter().map(|n| n.total_gpus()).sum()
@@ -224,6 +248,14 @@ mod tests {
             assert!(c.nodes.iter().all(|n| n.total_gpus() == 1));
         }
         assert_eq!(ClusterSpec::testbed5().gpu_types().len(), 5);
+    }
+
+    #[test]
+    fn synthetic256_matches_its_name() {
+        let c = ClusterSpec::synthetic256();
+        assert_eq!(c.nodes.len(), 256);
+        assert_eq!(c.total_gpus(), 1024);
+        assert_eq!(c.gpu_types().len(), 4);
     }
 
     #[test]

@@ -1,11 +1,22 @@
 //! Per-round allocation state: `γ_h^r(t)` (allocated counts) against
-//! capacities `c_h^r`, with the allocate/release bookkeeping all schedulers
+//! capacities `c_h^r`, with the allocate/undo bookkeeping all schedulers
 //! share.
 //!
-//! §Perf note: storage is dense `[node][type]` arrays rather than maps —
-//! `find_alloc` scans every (node, type) pool for every queued job, so pool
-//! lookup is the hottest load in the Fig. 5 scalability path (see
-//! EXPERIMENTS.md §Perf for the before/after).
+//! §Perf note: storage is dense `[node][type]` arrays rather than maps,
+//! and the three quantities the Hadar DP hammers are all maintained
+//! *incrementally* (see `docs/performance.md` for the hot-path map and
+//! the before/after numbers):
+//!
+//! * [`ClusterState::digest`] — a Zobrist-style rolling digest (XOR of
+//!   per-`(node, type, count)` keys) updated O(1) per allocate/undo,
+//!   replacing an O(nodes × types) FNV rescan per DP memo probe;
+//! * [`ClusterState::free_slots_of_type`] — a per-type bucket index over
+//!   free counts, so `FIND_ALLOC` iterates candidate pools in
+//!   most-free-first order without rebuilding + sorting a slot list per
+//!   call;
+//! * [`ClusterState::checkpoint`] / [`ClusterState::rewind`] — O(1)-per-
+//!   assignment undo, so the DP explores select branches by mutating one
+//!   state instead of cloning the whole struct at every node.
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::spec::ClusterSpec;
@@ -16,6 +27,21 @@ const NTYPES: usize = GpuType::ALL.len();
 #[inline]
 fn tix(g: GpuType) -> usize {
     g as usize
+}
+
+/// Zobrist key for one `(node, type, allocated-count)` cell, generated
+/// procedurally (splitmix64 finaliser over the packed cell id) instead of
+/// from a precomputed table — same statistical quality, no per-cluster
+/// setup cost. The digest of a state is the XOR of the keys of every
+/// pool's current count, so changing one pool's count is two XORs.
+#[inline]
+fn zkey(node: usize, t: usize, count: usize) -> u64 {
+    // count < 2^16 (u16 storage), t < 2^8: the packed id is collision-free.
+    let cell = ((node as u64) << 24) | ((t as u64) << 16) | count as u64;
+    let mut z = cell.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// One allocation entry: `w_{jh}^r` GPUs of type `r` on node `h` for job `j`.
@@ -31,6 +57,12 @@ pub struct Assignment {
     pub count: usize,
 }
 
+/// Checkpoint token for [`ClusterState::rewind`]: the assignment-log length
+/// at the time of [`ClusterState::checkpoint`]. Opaque on purpose — only
+/// meaningful against the state that produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StateMark(usize);
+
 /// Mutable view of the cluster within a scheduling round.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
@@ -42,8 +74,17 @@ pub struct ClusterState {
     free_by_type: [i64; NTYPES],
     total_free_count: i64,
     total_capacity_count: i64,
-    /// Live assignments for introspection/release.
+    /// Live assignments in allocation order — doubles as the undo log for
+    /// [`ClusterState::rewind`].
     assignments: Vec<Assignment>,
+    /// Zobrist rolling digest over all pools with capacity (incrementally
+    /// maintained; see [`zkey`]).
+    zobrist: u64,
+    /// Per-type free-slot buckets: `slot_index[t][f]` holds the ids (sorted
+    /// ascending) of nodes with exactly `f` free type-`t` GPUs, for
+    /// `f >= 1`. Bucket 0 stays empty — fully-allocated pools leave the
+    /// index entirely.
+    slot_index: Vec<Vec<Vec<u32>>>,
 }
 
 impl ClusterState {
@@ -67,6 +108,27 @@ impl ClusterState {
                 total += c as i64;
             }
         }
+        // Seed the rolling digest and the free-slot buckets from the
+        // all-free position (O(nodes × types), once per round).
+        let mut zobrist = 0u64;
+        let mut slot_index: Vec<Vec<Vec<u32>>> = Vec::with_capacity(NTYPES);
+        for t in 0..NTYPES {
+            let max_cap = capacity
+                .iter()
+                .map(|row| row[t] as usize)
+                .max()
+                .unwrap_or(0);
+            let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_cap + 1];
+            for (h, row) in capacity.iter().enumerate() {
+                let c = row[t] as usize;
+                if c > 0 {
+                    zobrist ^= zkey(h, t, 0);
+                    buckets[c].push(h as u32);
+                }
+            }
+            // Nodes were visited in id order, so each bucket is sorted.
+            slot_index.push(buckets);
+        }
         ClusterState {
             allocated: vec![[0u16; NTYPES]; n],
             capacity,
@@ -74,6 +136,8 @@ impl ClusterState {
             total_free_count: total,
             total_capacity_count: total,
             assignments: Vec::new(),
+            zobrist,
+            slot_index,
         }
     }
 
@@ -131,7 +195,7 @@ impl ClusterState {
         (self.total_capacity_count - self.total_free_count) as usize
     }
 
-    /// All (node, type, free) triples with free > 0.
+    /// All (node, type, free) triples with free > 0, node-major.
     pub fn free_slots(&self) -> Vec<(usize, GpuType, usize)> {
         let mut out = Vec::new();
         for (h, (cap, alloc)) in
@@ -146,10 +210,57 @@ impl ClusterState {
         out
     }
 
+    /// `(node, free)` pairs with free type-`gpu` GPUs, most-free first and
+    /// node-id ascending within equal free counts — the order `FIND_ALLOC`
+    /// fills spread allocations in. Served from the incrementally
+    /// maintained bucket index: no per-call rebuild, no sort.
+    pub fn free_slots_of_type(
+        &self,
+        gpu: GpuType,
+    ) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.slot_index[tix(gpu)]
+            .iter()
+            .enumerate()
+            .rev()
+            .flat_map(|(f, bucket)| {
+                bucket.iter().map(move |&h| (h as usize, f))
+            })
+    }
+
     /// Whether every GPU in the cluster is allocated — O(1).
     #[inline]
     pub fn is_full(&self) -> bool {
         self.total_free_count == 0
+    }
+
+    /// Shift one pool's allocated count by `delta` (positive = allocate),
+    /// maintaining the per-type totals, the Zobrist digest, and the
+    /// free-slot buckets. Callers guarantee the result stays within
+    /// `[0, capacity]`.
+    fn shift_pool(&mut self, node: usize, t: usize, delta: i64) {
+        let cap = self.capacity[node][t] as usize;
+        let old = self.allocated[node][t] as usize;
+        let new = (old as i64 + delta) as usize;
+        debug_assert!(new <= cap, "pool over/underflow");
+        self.allocated[node][t] = new as u16;
+        self.free_by_type[t] -= delta;
+        self.total_free_count -= delta;
+        self.zobrist ^= zkey(node, t, old) ^ zkey(node, t, new);
+        let (old_free, new_free) = (cap - old, cap - new);
+        if old_free > 0 {
+            let bucket = &mut self.slot_index[t][old_free];
+            let i = bucket
+                .binary_search(&(node as u32))
+                .expect("indexed node present in its free bucket");
+            bucket.remove(i);
+        }
+        if new_free > 0 {
+            let bucket = &mut self.slot_index[t][new_free];
+            let i = bucket
+                .binary_search(&(node as u32))
+                .expect_err("node cannot already sit in the target bucket");
+            bucket.insert(i, node as u32);
+        }
     }
 
     /// Record an allocation. Panics if capacity is exceeded (scheduler bug —
@@ -165,29 +276,42 @@ impl ClusterState {
             a.count,
             free
         );
-        self.allocated[a.node][tix(a.gpu)] += a.count as u16;
-        self.free_by_type[tix(a.gpu)] -= a.count as i64;
-        self.total_free_count -= a.count as i64;
+        self.shift_pool(a.node, tix(a.gpu), a.count as i64);
         self.assignments.push(a);
+    }
+
+    /// Snapshot the current position of the assignment log. Pair with
+    /// [`ClusterState::rewind`] to undo everything allocated since — the
+    /// zero-clone select-branch pattern of the Hadar DP.
+    #[inline]
+    pub fn checkpoint(&self) -> StateMark {
+        StateMark(self.assignments.len())
+    }
+
+    /// Undo every allocation made after `mark`, restoring counts, totals,
+    /// digest, and free-slot buckets exactly (see the round-trip property
+    /// test in `rust/tests/prop_invariants.rs`). O(assignments undone).
+    pub fn rewind(&mut self, mark: StateMark) {
+        debug_assert!(mark.0 <= self.assignments.len(), "stale mark");
+        while self.assignments.len() > mark.0 {
+            let a = self.assignments.pop().expect("log longer than mark");
+            self.shift_pool(a.node, tix(a.gpu), -(a.count as i64));
+        }
     }
 
     /// Release every assignment of one job; returns how many GPUs freed.
     pub fn release_job(&mut self, job: JobId) -> usize {
         let mut freed = 0;
-        let allocated = &mut self.allocated;
-        let free_by_type = &mut self.free_by_type;
-        let total_free = &mut self.total_free_count;
-        self.assignments.retain(|a| {
+        let mut kept = Vec::with_capacity(self.assignments.len());
+        for a in std::mem::take(&mut self.assignments) {
             if a.job == job {
-                allocated[a.node][tix(a.gpu)] -= a.count as u16;
-                free_by_type[tix(a.gpu)] += a.count as i64;
-                *total_free += a.count as i64;
+                self.shift_pool(a.node, tix(a.gpu), -(a.count as i64));
                 freed += a.count;
-                false
             } else {
-                true
+                kept.push(a);
             }
-        });
+        }
+        self.assignments = kept;
         freed
     }
 
@@ -231,17 +355,13 @@ impl ClusterState {
         nodes
     }
 
-    /// Fast digest of the free state (DP memo key). FNV-1a over the dense
-    /// allocation rows.
+    /// Digest of the free state (DP memo key) — O(1). The Zobrist rolling
+    /// digest is updated on every allocate/rewind/release, so equal digests
+    /// mean equal `γ` matrices (modulo the usual 64-bit collision odds,
+    /// same as any hashed memo key).
+    #[inline]
     pub fn digest(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for row in &self.allocated {
-            for &a in row {
-                h ^= a as u64;
-                h = h.wrapping_mul(0x1000_0000_01b3);
-            }
-        }
-        h
+        self.zobrist
     }
 }
 
@@ -310,5 +430,62 @@ mod tests {
         assert_ne!(d0, s.digest());
         s.release_job(JobId(1));
         assert_eq!(d0, s.digest());
+    }
+
+    #[test]
+    fn checkpoint_rewind_round_trips() {
+        let mut s = state();
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::P100, count: 1 });
+        let d1 = s.digest();
+        let free1 = s.free(1, GpuType::P100);
+        let mark = s.checkpoint();
+        s.allocate(Assignment { job: JobId(2), node: 0, gpu: GpuType::V100, count: 2 });
+        s.allocate(Assignment { job: JobId(2), node: 1, gpu: GpuType::P100, count: 2 });
+        assert_ne!(s.digest(), d1);
+        s.rewind(mark);
+        assert_eq!(s.digest(), d1);
+        assert_eq!(s.free(1, GpuType::P100), free1);
+        assert_eq!(s.free(0, GpuType::V100), 2);
+        assert_eq!(s.assignments().len(), 1);
+        assert_eq!(s.total_allocated(), 1);
+    }
+
+    #[test]
+    fn slot_index_orders_most_free_first_with_node_tiebreak() {
+        // motivational: node 0 = 2x V100, node 1 = 3x P100, node 2 = 1x K80.
+        let mut s = state();
+        assert_eq!(
+            s.free_slots_of_type(GpuType::P100).collect::<Vec<_>>(),
+            vec![(1, 3)]
+        );
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::P100, count: 1 });
+        assert_eq!(
+            s.free_slots_of_type(GpuType::P100).collect::<Vec<_>>(),
+            vec![(1, 2)]
+        );
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::P100, count: 2 });
+        assert!(s.free_slots_of_type(GpuType::P100).next().is_none());
+        s.release_job(JobId(1));
+        assert_eq!(
+            s.free_slots_of_type(GpuType::P100).collect::<Vec<_>>(),
+            vec![(1, 3)]
+        );
+    }
+
+    #[test]
+    fn slot_index_matches_rebuild_on_wider_cluster() {
+        // sim60: 5 nodes per type, 4 GPUs each — exercise ties + ordering.
+        let mut s = ClusterState::new(&ClusterSpec::sim60());
+        s.allocate(Assignment { job: JobId(7), node: 1, gpu: GpuType::V100, count: 3 });
+        s.allocate(Assignment { job: JobId(7), node: 3, gpu: GpuType::V100, count: 1 });
+        let got: Vec<(usize, usize)> =
+            s.free_slots_of_type(GpuType::V100).collect();
+        // Rebuild the old way: stable sort by free desc over node order.
+        let mut want: Vec<(usize, usize)> = (0..s.n_nodes())
+            .map(|h| (h, s.free(h, GpuType::V100)))
+            .filter(|&(_, f)| f > 0)
+            .collect();
+        want.sort_by(|a, b| b.1.cmp(&a.1));
+        assert_eq!(got, want);
     }
 }

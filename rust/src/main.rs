@@ -11,6 +11,7 @@
 //!   slots       Figs. 11-12 slot-time sweeps
 //!   sweep       declarative multi-threaded scenario sweeps (expt)
 //!   train       end-to-end real-training emulation + Table IV
+//!   bench       scheduler hot-path microbench -> BENCH_sched.json
 //!   bench-info  where each figure's bench target lives
 
 use hadar::util::cli::{App, Args, Command, Parsed};
@@ -64,6 +65,16 @@ fn app() -> App {
                 .opt("mix", Some("M-5"), "workload mix (M-1..M-12)")
                 .opt("steps-scale", Some("0.01"), "virtual->real step ratio")
                 .opt("seed", Some("42"), "emulation seed"),
+        )
+        .command(
+            Command::new(
+                "bench",
+                "scheduler hot-path microbench: optimised vs reference solver",
+            )
+            .opt("out", Some("BENCH_sched.json"),
+                 "artifact path written with --json")
+            .switch("json", "write the BENCH_sched.json artifact")
+            .switch("quick", "CI smoke profile: fewer cases and iterations"),
         )
         .command(Command::new("bench-info", "map figures/tables to bench targets"))
 }
@@ -181,6 +192,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use hadar::sched::bench;
+    let quick = args.flag("quick");
+    let results = bench::run_suite(quick);
+    print!("{}", bench::render(&results));
+    if args.flag("json") {
+        let out = args.get_str("out");
+        std::fs::write(&out, bench::to_json(&results, quick).pretty())?;
+        println!("wrote {out}");
+    }
+    // A divergence is a solver bug, not a perf number — fail loudly so CI
+    // smoke runs catch it even without the property tests.
+    if let Some(bad) = results.iter().find(|r| !r.plans_equal) {
+        anyhow::bail!("{}: reference and optimised plans diverged", bad.name);
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     use hadar::exec::emulation::*;
     use hadar::sim::engine::SimConfig;
@@ -251,6 +280,12 @@ fn main() {
             }
             "train" => {
                 if let Err(e) = cmd_train(&args) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            "bench" => {
+                if let Err(e) = cmd_bench(&args) {
                     eprintln!("error: {e:#}");
                     std::process::exit(1);
                 }

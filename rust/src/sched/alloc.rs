@@ -1,15 +1,184 @@
 //! Round plans: what a scheduler returns for one scheduling round.
+//!
+//! §Perf note: [`JobAllocation`] used to wrap a `BTreeMap`, which
+//! heap-allocates a tree node per pool touched — and Hadar's `FIND_ALLOC`
+//! builds a fresh candidate allocation per (job, node) pair per DP node.
+//! [`SlotMap`] keeps the same sorted-map semantics in an inline array
+//! (spilling to a `Vec` only past [`SlotMap::INLINE`] pools, i.e. only for
+//! unusually scattered gangs), so candidate generation allocates nothing
+//! on the common path. See `docs/performance.md`.
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::state::Assignment;
 use crate::jobs::job::JobId;
 use std::collections::BTreeMap;
 
+/// One `(node, gpu-type) -> count` entry of a [`SlotMap`].
+type SlotEntry = ((usize, GpuType), usize);
+
+/// A small sorted map from `(node, gpu type)` to GPU count, stored inline.
+///
+/// Drop-in replacement for the `BTreeMap` that used to back
+/// [`JobAllocation::slots`]: entries are kept sorted by key, iteration
+/// order and item types match `BTreeMap::iter`/`keys`, and equality is by
+/// entry content. The first [`SlotMap::INLINE`] pools live in a fixed
+/// array; only allocations spanning more pools than that touch the heap.
+#[derive(Clone)]
+pub struct SlotMap {
+    /// Live entries in `inline` when `spill` is empty.
+    len: usize,
+    /// Inline storage, sorted by key; entries at `len..` are padding.
+    inline: [SlotEntry; SlotMap::INLINE],
+    /// Overflow storage: when non-empty it holds *all* entries (sorted)
+    /// and `inline`/`len` are ignored.
+    spill: Vec<SlotEntry>,
+}
+
+const PAD: SlotEntry = ((0, GpuType::V100), 0);
+
+impl SlotMap {
+    /// Pools stored without heap allocation. Eight covers every gang the
+    /// evaluation clusters produce (a spread 8-GPU gang on single-GPU
+    /// nodes); larger gangs spill and still work.
+    pub const INLINE: usize = 8;
+
+    /// Empty map.
+    pub fn new() -> Self {
+        SlotMap {
+            len: 0,
+            inline: [PAD; SlotMap::INLINE],
+            spill: Vec::new(),
+        }
+    }
+
+    /// Sorted live entries.
+    #[inline]
+    fn entries(&self) -> &[SlotEntry] {
+        if self.spill.is_empty() {
+            &self.inline[..self.len]
+        } else {
+            &self.spill
+        }
+    }
+
+    /// Add `count` to the entry for `key`, inserting it in sorted position
+    /// if new.
+    fn add(&mut self, key: (usize, GpuType), count: usize) {
+        if !self.spill.is_empty() {
+            match self.spill.binary_search_by(|e| e.0.cmp(&key)) {
+                Ok(i) => self.spill[i].1 += count,
+                Err(i) => self.spill.insert(i, (key, count)),
+            }
+            return;
+        }
+        let live = &self.inline[..self.len];
+        match live.binary_search_by(|e| e.0.cmp(&key)) {
+            Ok(i) => self.inline[i].1 += count,
+            Err(i) => {
+                if self.len < SlotMap::INLINE {
+                    // Shift the tail right and drop the new entry in.
+                    self.inline.copy_within(i..self.len, i + 1);
+                    self.inline[i] = (key, count);
+                    self.len += 1;
+                } else {
+                    // Inline storage exhausted: spill everything.
+                    let mut v = self.inline.to_vec();
+                    v.insert(i, (key, count));
+                    self.spill = v;
+                    self.len = 0;
+                }
+            }
+        }
+    }
+
+    /// Number of pools with an entry.
+    pub fn len(&self) -> usize {
+        self.entries().len()
+    }
+
+    /// Whether no pool has an entry.
+    pub fn is_empty(&self) -> bool {
+        self.entries().is_empty()
+    }
+
+    /// Iterate entries in key order, `BTreeMap::iter`-style items.
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, GpuType), &usize)> {
+        self.entries().iter().map(|e| (&e.0, &e.1))
+    }
+
+    /// Iterate keys in order, `BTreeMap::keys`-style items.
+    pub fn keys(&self) -> impl Iterator<Item = &(usize, GpuType)> {
+        self.entries().iter().map(|e| &e.0)
+    }
+
+    /// Iterate counts in key order.
+    pub fn values(&self) -> impl Iterator<Item = &usize> {
+        self.entries().iter().map(|e| &e.1)
+    }
+
+    /// The count for one pool, if present.
+    pub fn get(&self, key: &(usize, GpuType)) -> Option<&usize> {
+        let entries = self.entries();
+        entries
+            .binary_search_by(|e| e.0.cmp(key))
+            .ok()
+            .map(|i| &entries[i].1)
+    }
+}
+
+impl Default for SlotMap {
+    fn default() -> Self {
+        SlotMap::new()
+    }
+}
+
+impl PartialEq for SlotMap {
+    fn eq(&self, other: &Self) -> bool {
+        self.entries() == other.entries()
+    }
+}
+
+impl std::fmt::Debug for SlotMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_map()
+            .entries(self.entries().iter().map(|e| (e.0, e.1)))
+            .finish()
+    }
+}
+
+impl<'a> IntoIterator for &'a SlotMap {
+    type Item = (&'a (usize, GpuType), &'a usize);
+    type IntoIter = SlotMapIter<'a>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        SlotMapIter {
+            entries: self.entries(),
+            pos: 0,
+        }
+    }
+}
+
+/// Borrowing iterator over a [`SlotMap`] (the `for (&k, &v) in &map` form).
+pub struct SlotMapIter<'a> {
+    entries: &'a [SlotEntry],
+    pos: usize,
+}
+
+impl<'a> Iterator for SlotMapIter<'a> {
+    type Item = (&'a (usize, GpuType), &'a usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let e = self.entries.get(self.pos)?;
+        self.pos += 1;
+        Some((&e.0, &e.1))
+    }
+}
+
 /// The allocation decided for one job in one round: its `w_{jh}^r` entries.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct JobAllocation {
     /// (node, gpu type) -> count.
-    pub slots: BTreeMap<(usize, GpuType), usize>,
+    pub slots: SlotMap,
 }
 
 impl JobAllocation {
@@ -21,7 +190,7 @@ impl JobAllocation {
     /// Add `count` GPUs of `gpu` on `node` (0 is a no-op).
     pub fn add(&mut self, node: usize, gpu: GpuType, count: usize) {
         if count > 0 {
-            *self.slots.entry((node, gpu)).or_insert(0) += count;
+            self.slots.add((node, gpu), count);
         }
     }
 
@@ -53,7 +222,7 @@ impl JobAllocation {
         nodes
     }
 
-    /// Expand into per-pool [`Assignment`]s for `job`.
+    /// Expand into per-pool [`Assignment`]s for `job`, in key order.
     pub fn assignments(&self, job: JobId) -> Vec<Assignment> {
         self.slots
             .iter()
@@ -134,5 +303,45 @@ mod tests {
         plan.insert(JobId(2), a);
         assert_eq!(plan.scheduled_jobs(), vec![JobId(2)]);
         assert_eq!(plan.total_gpus(), 1);
+    }
+
+    #[test]
+    fn slot_map_stays_sorted_and_spills() {
+        let mut m = SlotMap::new();
+        // Insert in reverse node order across more pools than fit inline.
+        for h in (0..SlotMap::INLINE + 3).rev() {
+            m.add((h, GpuType::V100), h + 1);
+        }
+        assert_eq!(m.len(), SlotMap::INLINE + 3);
+        let keys: Vec<usize> = m.keys().map(|&(h, _)| h).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "iteration stays key-ordered after spill");
+        assert_eq!(m.get(&(4, GpuType::V100)), Some(&5));
+        assert_eq!(m.get(&(4, GpuType::K80)), None);
+        // Accumulation still works post-spill.
+        m.add((4, GpuType::V100), 10);
+        assert_eq!(m.get(&(4, GpuType::V100)), Some(&15));
+    }
+
+    #[test]
+    fn slot_map_matches_btreemap_semantics() {
+        let mut m = SlotMap::new();
+        let mut b: BTreeMap<(usize, GpuType), usize> = BTreeMap::new();
+        let pairs = [
+            (3, GpuType::K80, 1),
+            (0, GpuType::V100, 2),
+            (3, GpuType::P100, 4),
+            (0, GpuType::V100, 1),
+            (1, GpuType::T4, 3),
+        ];
+        for &(h, g, c) in &pairs {
+            m.add((h, g), c);
+            *b.entry((h, g)).or_insert(0) += c;
+        }
+        let got: Vec<_> = m.iter().map(|(&k, &v)| (k, v)).collect();
+        let want: Vec<_> = b.iter().map(|(&k, &v)| (k, v)).collect();
+        assert_eq!(got, want);
+        assert_eq!(m.len(), b.len());
     }
 }

@@ -1,0 +1,219 @@
+//! Scheduler hot-path microbench: the zero-clone solver
+//! ([`crate::sched::hadar`]) timed against the frozen pre-optimisation
+//! baseline ([`crate::sched::reference`]), on both solve paths (exact DP
+//! at queue ≤ `dp_job_cap`, payoff-density greedy at 100-1000 jobs) and
+//! two clusters (`sim60`, `synthetic256`).
+//!
+//! Shared by the `hadar bench` CLI subcommand (which emits
+//! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
+//! `docs/performance.md`) and `benches/l3_sched_micro.rs`. Every
+//! measurement also cross-checks that both solvers produced the *same
+//! plan* — a broken equivalence shows up in the artifact, not just in the
+//! property tests.
+
+use crate::cluster::spec::ClusterSpec;
+use crate::jobs::queue::JobQueue;
+use crate::sched::hadar::Hadar;
+use crate::sched::reference::RefHadar;
+use crate::sched::{RoundCtx, RoundPlan, Scheduler};
+use crate::trace::philly::{generate, TraceConfig};
+use crate::trace::workload::materialize;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One measured comparison: a (cluster, queue size) point on one solve
+/// path, with the reference and optimised per-decision latencies.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    /// Case label, e.g. `dp_sim60_12jobs`.
+    pub name: String,
+    /// `"dp"` or `"greedy"` — which solve path the queue size triggers.
+    pub path: &'static str,
+    /// Cluster preset name.
+    pub cluster: String,
+    /// Queued jobs in the decision.
+    pub jobs: usize,
+    /// Reference (pre-optimisation) decision latency, best-of-N ms.
+    pub ref_ms: f64,
+    /// Optimised decision latency, best-of-N ms.
+    pub opt_ms: f64,
+    /// `ref_ms / opt_ms`.
+    pub speedup: f64,
+    /// Whether both solvers returned identical [`RoundPlan`]s.
+    pub plans_equal: bool,
+}
+
+/// Queue sizes per path. `quick` is the CI smoke profile: one point per
+/// (path, cluster), a couple of iterations — seconds, not minutes.
+fn case_grid(quick: bool) -> Vec<(&'static str, ClusterSpec, usize)> {
+    let mut grid = Vec::new();
+    let dp_sizes: &[usize] = if quick { &[8] } else { &[8, 12] };
+    let greedy_sizes: &[usize] =
+        if quick { &[100] } else { &[100, 400, 1000] };
+    let clusters: [fn() -> ClusterSpec; 2] =
+        [ClusterSpec::sim60, ClusterSpec::synthetic256];
+    for mk in clusters {
+        for &n in dp_sizes {
+            grid.push(("dp", mk(), n));
+        }
+        for &n in greedy_sizes {
+            grid.push(("greedy", mk(), n));
+        }
+    }
+    grid
+}
+
+/// Deterministic queue for one case: a Philly-flavoured trace, everything
+/// arrived at t=0 so the decision sees the whole queue.
+fn case_queue(cluster: &ClusterSpec, n_jobs: usize) -> JobQueue {
+    let trace = generate(&TraceConfig {
+        n_jobs,
+        seed: 3,
+        all_at_start: true,
+        max_gpus: 4,
+        ..Default::default()
+    });
+    let mut queue = JobQueue::new();
+    for j in materialize(&trace, cluster, 3) {
+        queue.admit(j);
+    }
+    queue
+}
+
+/// Best-of-`iters` wall time of one scheduling decision, fresh scheduler
+/// per iteration (cold per-job caches — the honest per-round cost).
+/// Returns (best ms, the last plan).
+fn time_decision(
+    iters: usize,
+    mut mk: impl FnMut() -> Box<dyn Scheduler>,
+    ctx: &RoundCtx,
+) -> (f64, RoundPlan) {
+    let mut best = f64::INFINITY;
+    let mut plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let mut s = mk();
+        let t0 = Instant::now();
+        plan = s.schedule(ctx);
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    (best, plan)
+}
+
+/// Run the full comparison suite. `quick` trims the grid and iteration
+/// counts for CI smoke runs.
+pub fn run_suite(quick: bool) -> Vec<CaseResult> {
+    let iters = if quick { 3 } else { 7 };
+    let mut out = Vec::new();
+    for (path, cluster, n_jobs) in case_grid(quick) {
+        let queue = case_queue(&cluster, n_jobs);
+        let active = queue.active_at(0.0);
+        let ctx = RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 1e7,
+            queue: &queue,
+            active: &active,
+            cluster: &cluster,
+        };
+        let (ref_ms, ref_plan) =
+            time_decision(iters, || Box::new(RefHadar::new()), &ctx);
+        let (opt_ms, opt_plan) =
+            time_decision(iters, || Box::new(Hadar::new()), &ctx);
+        out.push(CaseResult {
+            name: format!("{path}_{}_{n_jobs}jobs", cluster.name),
+            path,
+            cluster: cluster.name.clone(),
+            jobs: n_jobs,
+            ref_ms,
+            opt_ms,
+            speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            plans_equal: ref_plan.allocations == opt_plan.allocations,
+        });
+    }
+    out
+}
+
+/// Human-readable comparison table.
+pub fn render(results: &[CaseResult]) -> String {
+    let mut out = String::from(
+        "case                            path    jobs    ref ms    opt ms  \
+         speedup  plans\n",
+    );
+    for r in results {
+        out.push_str(&format!(
+            "{:<30} {:>6} {:>7} {:>9.3} {:>9.3} {:>7.2}x  {}\n",
+            r.name,
+            r.path,
+            r.jobs,
+            r.ref_ms,
+            r.opt_ms,
+            r.speedup,
+            if r.plans_equal { "equal" } else { "DIFFER" },
+        ));
+    }
+    out
+}
+
+/// The `BENCH_sched.json` document: suite metadata + one object per case.
+pub fn to_json(results: &[CaseResult], quick: bool) -> Json {
+    let cases: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("name", r.name.as_str())
+                .set("path", r.path)
+                .set("cluster", r.cluster.as_str())
+                .set("jobs", r.jobs)
+                .set("ref_ms", r.ref_ms)
+                .set("opt_ms", r.opt_ms)
+                .set("speedup", r.speedup)
+                .set("plans_equal", r.plans_equal)
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "sched")
+        .set("quick", quick)
+        .set("cases", Json::Arr(cases))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_covers_both_paths_and_agrees() {
+        let results = run_suite(true);
+        assert!(results.iter().any(|r| r.path == "dp"));
+        assert!(results.iter().any(|r| r.path == "greedy"));
+        assert!(results.iter().any(|r| r.cluster == "synthetic256"));
+        for r in &results {
+            assert!(r.plans_equal, "{}: plans diverged", r.name);
+            assert!(r.ref_ms >= 0.0 && r.opt_ms >= 0.0);
+        }
+        let table = render(&results);
+        assert!(table.contains("speedup"));
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        let results = vec![CaseResult {
+            name: "dp_sim60_8jobs".into(),
+            path: "dp",
+            cluster: "sim60".into(),
+            jobs: 8,
+            ref_ms: 1.5,
+            opt_ms: 0.3,
+            speedup: 5.0,
+            plans_equal: true,
+        }];
+        let text = to_json(&results, true).pretty();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").as_str(), Some("sched"));
+        assert_eq!(v.get("quick").as_bool(), Some(true));
+        let case = v.get("cases").at(0);
+        assert_eq!(case.get("jobs").as_usize(), Some(8));
+        assert_eq!(case.get("plans_equal").as_bool(), Some(true));
+        assert_eq!(case.get("speedup").as_f64(), Some(5.0));
+    }
+}

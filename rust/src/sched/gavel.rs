@@ -114,6 +114,13 @@ impl Scheduler for Gavel {
         "gavel"
     }
 
+    /// Completion: drop the job's per-type service counters — priorities
+    /// only ever consult live jobs, and on long traces the map would
+    /// otherwise grow with every job ever admitted.
+    fn job_completed(&mut self, job: JobId) {
+        self.rounds_received.retain(|&(id, _), _| id != job);
+    }
+
     fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
         let jobs: Vec<&Job> = ctx
             .active
@@ -261,6 +268,21 @@ mod tests {
             .collect();
         assert_eq!(second_v100.len(), 1);
         assert_ne!(first_v100[0], second_v100[0], "service rotates");
+    }
+
+    #[test]
+    fn job_completed_drops_service_history() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 2));
+        queue.admit(mk_job(2, 2));
+        let active = vec![JobId(1), JobId(2)];
+        let mut g = Gavel::new();
+        let _ = g.schedule(&ctx(&queue, &active, &cluster));
+        assert!(g.rounds_received.keys().any(|&(id, _)| id == JobId(1)));
+        g.job_completed(JobId(1));
+        assert!(!g.rounds_received.keys().any(|&(id, _)| id == JobId(1)));
+        assert!(g.rounds_received.keys().any(|&(id, _)| id == JobId(2)));
     }
 
     #[test]

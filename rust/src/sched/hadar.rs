@@ -22,6 +22,19 @@
 //! * Incremental mode (§IV-B "Scalability") keeps running jobs'
 //!   allocations and only places newcomers, tracking how many rounds
 //!   actually changed allocations (the paper reports ~30%).
+//!
+//! §Perf: the solver is zero-clone (see `docs/performance.md`). The DP
+//! runs on one `&mut ClusterState` with allocate → recurse →
+//! [`ClusterState::rewind`]; memo keys use the state's O(1) Zobrist
+//! digest; memo values are `(gpus, payoff, take)` scalars with the winning
+//! plan reconstructed by one replay pass instead of sub-plan `Vec`s cloned
+//! at every hit; and `FIND_ALLOC` walks the state's incrementally
+//! maintained free-slot index instead of rebuilding + sorting per-type
+//! slot lists per call. The pre-optimisation solver is preserved verbatim
+//! in [`crate::sched::reference`] — a property test
+//! (`rust/tests/prop_equivalence.rs`) pins this implementation to it
+//! plan-for-plan, and `benches/l3_sched_micro.rs` + `hadar bench` measure
+//! the gap.
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::state::ClusterState;
@@ -79,11 +92,15 @@ pub struct HadarStats {
     pub dp_invocations: u64,
     /// Rounds solved by the payoff-density greedy (queue > `dp_job_cap`).
     pub greedy_invocations: u64,
-    /// DP memo hits.
+    /// DP memo hits (includes the replay pass's revisits).
     pub memo_hits: u64,
     /// DP memo misses.
     pub memo_misses: u64,
 }
+
+/// One DP memo value: GPUs utilised and payoff from this subproblem on,
+/// plus whether the select branch won (enough to replay the plan).
+type DpEntry = (usize, f64, bool);
 
 /// The Hadar scheduler (Algorithms 1 and 2; see module docs).
 pub struct Hadar {
@@ -118,25 +135,46 @@ impl Hadar {
         }
     }
 
+    /// Compute-or-get one job's descending-throughput type order. A free
+    /// function over the cache field (rather than a `&mut self` method) so
+    /// `find_alloc` can hold the returned slice while still reading other
+    /// fields of `self`.
+    fn cached_type_order<'a>(
+        cache: &'a mut BTreeMap<JobId, Vec<GpuType>>,
+        job: &Job,
+    ) -> &'a [GpuType] {
+        cache
+            .entry(job.id)
+            .or_insert_with(|| {
+                let mut types: Vec<GpuType> = job
+                    .throughput
+                    .iter()
+                    .filter(|(_, &x)| x > 0.0)
+                    .map(|(&g, _)| g)
+                    .collect();
+                // total_cmp: NaN throughputs are filtered above, but a
+                // total order keeps a malformed row from panicking
+                // mid-round.
+                types.sort_by(|a, b| {
+                    job.throughput_on(*b).total_cmp(&job.throughput_on(*a))
+                });
+                types
+            })
+            .as_slice()
+    }
+
     /// GPU types by descending job throughput (cached for the job's
-    /// lifetime — the O(R·H log H) sort in Theorem 1 happens once).
-    fn sorted_types(&mut self, job: &Job) -> Vec<GpuType> {
-        if let Some(t) = self.type_order.get(&job.id) {
-            return t.clone();
-        }
-        let mut types: Vec<GpuType> = job
-            .throughput
-            .iter()
-            .filter(|(_, &x)| x > 0.0)
-            .map(|(&g, _)| g)
-            .collect();
-        types.sort_by(|a, b| {
-            job.throughput_on(*b)
-                .partial_cmp(&job.throughput_on(*a))
-                .unwrap()
-        });
-        self.type_order.insert(job.id, types.clone());
-        types
+    /// lifetime — the O(R·H log H) sort in Theorem 1 happens once; the
+    /// engines drop the entry via [`Scheduler::job_completed`]). Hands out
+    /// a borrow of the cached slice — no per-call clone.
+    pub fn sorted_types(&mut self, job: &Job) -> &[GpuType] {
+        Self::cached_type_order(&mut self.type_order, job)
+    }
+
+    /// Entries currently held by the per-job type-order cache (bounded-
+    /// memory regression tests).
+    pub fn type_cache_len(&self) -> usize {
+        self.type_order.len()
     }
 
     /// Payoff of a candidate allocation: `U_j(est. completion) − priced
@@ -170,37 +208,23 @@ impl Hadar {
     fn find_alloc(&mut self, job: &Job, state: &ClusterState,
                   prices: &PriceTable, now: f64)
                   -> Option<(JobAllocation, f64)> {
+        let cfg = self.cfg;
         let w = job.gpus_requested.max(1);
-        let types = self.sorted_types(job);
+        let types = Self::cached_type_order(&mut self.type_order, job);
         if types.is_empty() {
             return None;
         }
         let mut best: Option<(JobAllocation, f64)> = None;
-        let min_eff = self.cfg.min_efficiency;
         let mut consider = |alloc: JobAllocation, cost: f64, comm: f64| {
             if alloc.total_gpus() != w {
                 return;
             }
-            let p = Self::payoff(job, &alloc, cost, comm, now, min_eff);
+            let p = Self::payoff(job, &alloc, cost, comm, now,
+                                 cfg.min_efficiency);
             if p > 0.0 && best.as_ref().map_or(true, |(_, bp)| p > *bp) {
                 best = Some((alloc, p));
             }
         };
-
-        // §Perf: per-type free-slot lists (node, free) sorted by free desc,
-        // built ONCE per FIND_ALLOC call and shared by the spread and mixed
-        // candidate generators below.
-        let per_type_slots: Vec<Vec<(usize, usize)>> = types
-            .iter()
-            .map(|&g| {
-                let mut slots: Vec<(usize, usize)> = (0..state.n_nodes())
-                    .map(|h| (h, state.free(h, g)))
-                    .filter(|&(_, f)| f > 0)
-                    .collect();
-                slots.sort_by(|a, b| b.1.cmp(&a.1));
-                slots
-            })
-            .collect();
 
         // --- packed candidates: all W_j workers on a single node, fastest
         // types first (Algorithm 2 line 24).
@@ -208,7 +232,7 @@ impl Hadar {
             let mut alloc = JobAllocation::new();
             let mut cost = 0.0;
             let mut need = w;
-            for &g in &types {
+            for &g in types {
                 if need == 0 {
                     break;
                 }
@@ -224,17 +248,18 @@ impl Hadar {
             }
         }
 
-        // --- spread candidates (line 25). Two flavours:
-        // (a) pure-type: all workers on the job's k-th fastest type,
-        // filled from nodes with most free first (fewest nodes used).
-        for (ti, &g) in types.iter().enumerate() {
+        // --- spread candidates (line 25), filled most-free-node first
+        // from the state's per-type free-slot index (§Perf: no per-call
+        // slot-list rebuild or sort). Two flavours:
+        // (a) pure-type: all workers on the job's k-th fastest type.
+        for &g in types {
             if state.free_of_type(g) < w {
                 continue;
             }
             let mut alloc = JobAllocation::new();
             let mut cost = 0.0;
             let mut need = w;
-            for &(h, free) in &per_type_slots[ti] {
+            for (h, free) in state.free_slots_of_type(g) {
                 if need == 0 {
                     break;
                 }
@@ -244,7 +269,7 @@ impl Hadar {
                 need -= take;
             }
             let nodes_used = alloc.nodes().len();
-            let comm = self.comm_cost(job, nodes_used, now);
+            let comm = Self::comm_cost(&cfg, job, nodes_used);
             consider(alloc, cost, comm);
         }
 
@@ -255,11 +280,11 @@ impl Hadar {
             let mut alloc = JobAllocation::new();
             let mut cost = 0.0;
             let mut need = w;
-            for (ti, &g) in types.iter().enumerate() {
+            for &g in types {
                 if need == 0 {
                     break;
                 }
-                for &(h, free) in &per_type_slots[ti] {
+                for (h, free) in state.free_slots_of_type(g) {
                     if need == 0 {
                         break;
                     }
@@ -271,7 +296,7 @@ impl Hadar {
             }
             if need == 0 {
                 let nodes_used = alloc.nodes().len();
-                let comm = self.comm_cost(job, nodes_used, now);
+                let comm = Self::comm_cost(&cfg, job, nodes_used);
                 consider(alloc, cost, comm);
             }
         }
@@ -281,22 +306,17 @@ impl Hadar {
 
     /// Non-consolidated communication cost (Algorithm 2 line 27): a
     /// utility-proportional penalty per extra node crossed.
-    fn comm_cost(&self, job: &Job, nodes_used: usize, _now: f64) -> f64 {
+    fn comm_cost(cfg: &HadarConfig, job: &Job, nodes_used: usize) -> f64 {
         if nodes_used <= 1 {
             return 0.0;
         }
-        self.cfg.comm_factor * (nodes_used - 1) as f64
-            * job.utility(job.t_min())
+        cfg.comm_factor * (nodes_used - 1) as f64 * job.utility(job.t_min())
     }
 
-    /// Digest of γ over all (node, type) pools — the DP memo key.
-    #[inline]
-    fn digest(state: &ClusterState) -> u64 {
-        state.digest()
-    }
-
-    /// Algorithm 2's DP: explore select/skip for each queued job,
-    /// memoised; returns the best sub-plan from `idx` on.
+    /// Algorithm 2's DP: explore select/skip for each queued job on ONE
+    /// mutable state (allocate → recurse → rewind), memoised on
+    /// (job index, Zobrist digest); returns `(gpus, payoff, take)` for the
+    /// subproblem starting at `idx`.
     ///
     /// Branches are compared **work-conservation first** (GPUs utilised),
     /// then by payoff. Comparing on payoff alone would let the skip branch
@@ -304,47 +324,75 @@ impl Hadar {
     /// fast node to a faster job always "pays" more this round — whereas
     /// the paper's Hadar explicitly minimises the number of GPUs left
     /// unused (§IV-B) and resolves contention through the prices.
-    #[allow(clippy::too_many_arguments)]
-    fn dp(&mut self, idx: usize, jobs: &[&Job], state: &ClusterState,
+    fn dp(&mut self, idx: usize, jobs: &[&Job], state: &mut ClusterState,
           prices: &PriceTable, now: f64,
-          memo: &mut HashMap<(usize, u64),
-                             (usize, f64, Vec<(JobId, JobAllocation)>)>)
-          -> (usize, f64, Vec<(JobId, JobAllocation)>) {
+          memo: &mut HashMap<(usize, u64), DpEntry>) -> DpEntry {
         if idx >= jobs.len() || state.is_full() {
-            return (0, 0.0, Vec::new());
+            return (0, 0.0, false);
         }
-        let key = (idx, Self::digest(state));
-        if let Some(hit) = memo.get(&key) {
+        let key = (idx, state.digest());
+        if let Some(&hit) = memo.get(&key) {
             self.stats.memo_hits += 1;
-            return hit.clone();
+            return hit;
         }
         self.stats.memo_misses += 1;
 
         // Skip branch (line 15).
-        let mut best = self.dp(idx + 1, jobs, state, prices, now, memo);
+        let skip = self.dp(idx + 1, jobs, state, prices, now, memo);
+        let mut best = (skip.0, skip.1, false);
 
         // Select branch (line 14): only if FIND_ALLOC yields positive payoff.
         if let Some((alloc, payoff)) =
             self.find_alloc(jobs[idx], state, prices, now)
         {
-            let mut st = state.clone();
+            let mark = state.checkpoint();
             for a in alloc.assignments(jobs[idx].id) {
-                st.allocate(a);
+                state.allocate(a);
             }
-            let (rest_gpus, rest_pay, mut rest_plan) =
-                self.dp(idx + 1, jobs, &st, prices, now, memo);
+            let (rest_gpus, rest_pay, _) =
+                self.dp(idx + 1, jobs, state, prices, now, memo);
+            state.rewind(mark);
             let gpus = rest_gpus + alloc.total_gpus();
             let pay = payoff + rest_pay;
             if gpus > best.0 || (gpus == best.0 && pay > best.1) {
-                rest_plan.push((jobs[idx].id, alloc));
-                best = (gpus, pay, rest_plan);
+                best = (gpus, pay, true);
             }
         }
 
         if memo.len() < self.cfg.dp_memo_cap {
-            memo.insert(key, best.clone());
+            memo.insert(key, best);
         }
         best
+    }
+
+    /// Run the DP and materialise its plan by replaying the take/skip
+    /// decisions from the memo (mostly hits; a capped-out memo just
+    /// recomputes the missing subproblems). Replay re-derives each taken
+    /// job's allocation with `find_alloc` — deterministic given the same
+    /// state — and commits it, so the plan is rebuilt exactly once instead
+    /// of sub-plan vectors being cloned at every memo store/hit.
+    fn dp_plan(&mut self, jobs: &[&Job], state: &mut ClusterState,
+               prices: &PriceTable, now: f64)
+               -> Vec<(JobId, JobAllocation)> {
+        let mut memo: HashMap<(usize, u64), DpEntry> = HashMap::new();
+        let mut plan = Vec::new();
+        for idx in 0..jobs.len() {
+            if state.is_full() {
+                break;
+            }
+            let (_, _, take) =
+                self.dp(idx, jobs, state, prices, now, &mut memo);
+            if take {
+                let (alloc, _) = self
+                    .find_alloc(jobs[idx], state, prices, now)
+                    .expect("take decision implies a feasible candidate");
+                for a in alloc.assignments(jobs[idx].id) {
+                    state.allocate(a);
+                }
+                plan.push((jobs[idx].id, alloc));
+            }
+        }
+        plan
     }
 
     /// Large-queue path: payoff-density greedy (utility per requested GPU,
@@ -358,7 +406,12 @@ impl Hadar {
                 / jobs[a].gpus_requested.max(1) as f64;
             let db = jobs[b].utility(jobs[b].t_min())
                 / jobs[b].gpus_requested.max(1) as f64;
-            db.partial_cmp(&da).unwrap()
+            // total_cmp: a NaN density (e.g. a NaN job weight) must not
+            // panic the round. Note total_cmp orders positive NaN above
+            // +inf, so a NaN-density job sorts *first* here — harmless,
+            // because payoff() rejects NaN payoffs (p > 0.0 is false) and
+            // the job simply fails to place.
+            db.total_cmp(&da)
         });
         let mut out = Vec::new();
         for i in order {
@@ -378,6 +431,7 @@ impl Hadar {
     }
 
     /// Drop the per-job type cache for completed jobs (bounded memory).
+    /// Called by the engines through [`Scheduler::job_completed`].
     pub fn forget_job(&mut self, id: JobId) {
         self.type_order.remove(&id);
     }
@@ -437,20 +491,16 @@ impl Scheduler for Hadar {
         // time) so the order — and therefore the job->node matching — is
         // stable across rounds: re-sorting on remaining time makes jobs
         // swap nodes mid-flight and pay checkpoint-restart every round.
+        // total_cmp, not partial_cmp().unwrap(): a degenerate job (zero
+        // throughput row -> infinite/NaN t_min) must not panic the round.
         pending.sort_by(|a, b| {
-            b.t_min()
-                .partial_cmp(&a.t_min())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
+            b.t_min().total_cmp(&a.t_min()).then(a.id.cmp(&b.id))
         });
 
         let chosen: Vec<(JobId, JobAllocation)> =
             if pending.len() <= self.cfg.dp_job_cap {
                 self.stats.dp_invocations += 1;
-                let mut memo = HashMap::new();
-                let (_, _, sub) =
-                    self.dp(0, &pending, &state, &prices, ctx.now, &mut memo);
-                sub
+                self.dp_plan(&pending, &mut state, &prices, ctx.now)
             } else {
                 self.stats.greedy_invocations += 1;
                 self.greedy(&pending, &mut state, &prices, ctx.now)
@@ -475,6 +525,14 @@ impl Scheduler for Hadar {
     /// that left the cluster. The throughput-order cache stays — the job
     /// itself is unchanged and will be rescheduled.
     fn preempt(&mut self, job: JobId) {
+        self.prev_plan.allocations.remove(&job);
+    }
+
+    /// Completion: drop the job's type-order cache entry and any previous
+    /// allocation — neither is needed again, and on long traces the cache
+    /// would otherwise grow with every job ever admitted.
+    fn job_completed(&mut self, job: JobId) {
+        self.forget_job(job);
         self.prev_plan.allocations.remove(&job);
     }
 }
@@ -622,5 +680,66 @@ mod tests {
         let mut hadar = Hadar::new();
         let plan = hadar.schedule(&ctx(&queue, &[], &cluster));
         assert!(plan.scheduled_jobs().is_empty());
+    }
+
+    #[test]
+    fn job_completed_drops_caches() {
+        let cluster = ClusterSpec::motivational();
+        let queue = motivational_jobs();
+        let active: Vec<JobId> = vec![JobId(1), JobId(2), JobId(3)];
+        let mut hadar = Hadar::new();
+        let _ = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(hadar.type_cache_len(), 3);
+        hadar.job_completed(JobId(2));
+        assert_eq!(hadar.type_cache_len(), 2);
+        assert!(hadar.prev_plan.get(JobId(2)).is_none());
+    }
+
+    #[test]
+    fn nan_weight_on_greedy_path_does_not_panic() {
+        // Regression: the greedy ordering used partial_cmp().unwrap(),
+        // which panicked the round as soon as one job's payoff density was
+        // NaN (e.g. a NaN utility weight). total_cmp must survive it and
+        // still schedule the well-formed jobs.
+        let cluster = ClusterSpec::sim60();
+        let mut queue = JobQueue::new();
+        for id in 0..20u64 {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, 2, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            if id == 7 {
+                j.weight = f64::NAN;
+            }
+            queue.admit(j);
+        }
+        let active: Vec<JobId> = (0..20).map(JobId).collect();
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(hadar.stats.greedy_invocations, 1);
+        assert!(plan.scheduled_jobs().len() >= 19);
+    }
+
+    #[test]
+    fn nan_and_zero_throughput_rows_are_never_scheduled() {
+        // A NaN throughput entry must be treated like "unusable type", and
+        // an all-zero row like "cannot run anywhere" — no panic either way.
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        let mut j_nan = Job::new(1, DlModel::Lstm, 0.0, 2, 2, 100);
+        j_nan.set_throughput(GpuType::V100, f64::NAN);
+        queue.admit(j_nan);
+        let mut j_zero = Job::new(2, DlModel::Lstm, 0.0, 2, 2, 100);
+        j_zero.set_throughput(GpuType::V100, 0.0);
+        queue.admit(j_zero);
+        let mut j_ok = Job::new(3, DlModel::Lstm, 0.0, 2, 2, 100);
+        j_ok.set_throughput(GpuType::V100, 40.0);
+        queue.admit(j_ok);
+        let active = vec![JobId(1), JobId(2), JobId(3)];
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none());
+        assert!(plan.get(JobId(2)).is_none());
+        assert!(plan.get(JobId(3)).is_some());
     }
 }

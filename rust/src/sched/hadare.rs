@@ -35,6 +35,14 @@ impl HadarE {
         HadarE { copies }
     }
 
+    /// Completion notification from the forking engine — the counterpart
+    /// of [`crate::sched::Scheduler::job_completed`] for the whole-node
+    /// planner. The planner keeps no per-parent caches today (every round
+    /// is planned from the tracker's live state), so this is a no-op; it
+    /// exists so both engines speak the same completion protocol and any
+    /// future per-parent planner state has one place to be dropped.
+    pub fn job_completed(&mut self, _parent: JobId) {}
+
     /// Assign nodes to parent jobs for this round.
     ///
     /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on node

@@ -4,10 +4,12 @@
 //! drive them identically.
 
 pub mod alloc;
+pub mod bench;
 pub mod gavel;
 pub mod hadar;
 pub mod hadare;
 pub mod price;
+pub mod reference;
 pub mod tiresias;
 pub mod yarn_cs;
 
@@ -58,6 +60,13 @@ pub trait Scheduler {
     /// must drop theirs here — the placement no longer exists, and the
     /// job is back in the waiting set. Stateless schedulers ignore this.
     fn preempt(&mut self, _job: JobId) {}
+
+    /// The job finished: drop any per-job state (type-order caches,
+    /// attained-service counters, pinned allocations). Both round engines
+    /// call this exactly once per completion, so per-job caches stay
+    /// bounded by the *live* job count on long traces instead of growing
+    /// with every job ever admitted. Stateless schedulers ignore this.
+    fn job_completed(&mut self, _job: JobId) {}
 }
 
 /// Construct a scheduler by name (CLI surface).

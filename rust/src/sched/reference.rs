@@ -1,0 +1,418 @@
+//! **Reference Hadar** — the pre-optimisation solver, frozen.
+//!
+//! This is the clone-based implementation of Algorithms 1-2 exactly as it
+//! stood before the zero-clone rework of [`crate::sched::hadar`]:
+//!
+//! * every DP select branch **clones the whole [`ClusterState`]**;
+//! * the memo stores and re-clones a full sub-plan
+//!   `Vec<(JobId, JobAllocation)>` per entry;
+//! * the memo key recomputes an **FNV digest over every (node, type)
+//!   pool** at every DP node;
+//! * `FIND_ALLOC` **rebuilds and re-sorts** per-type free-slot lists on
+//!   every invocation.
+//!
+//! It exists for two jobs and must not be "improved":
+//!
+//! 1. **Equivalence oracle** — `rust/tests/prop_equivalence.rs` drives it
+//!    and the optimised solver over seeded random (cluster, queue)
+//!    scenarios (including incremental mode and drain preemption) and
+//!    requires identical [`RoundPlan`]s round for round.
+//! 2. **Baseline for the perf claim** — `benches/l3_sched_micro.rs` and
+//!    `hadar bench --json` time it against the optimised solver; the
+//!    before/after gap is the number `docs/performance.md` tracks.
+//!
+//! Deliberate deviations from the historical code: float comparators use
+//! `total_cmp` instead of `partial_cmp().unwrap()` (so a degenerate input
+//! fails a comparison test rather than panicking the oracle; ordering is
+//! identical for non-NaN keys), and the digest is computed locally
+//! because [`ClusterState`] now maintains a Zobrist digest instead of
+//! offering an FNV rescan.
+//!
+//! Measurement caveat: this solver runs on the *current* [`ClusterState`],
+//! so its `state.clone()` per select branch also copies the free-slot
+//! bucket index, and its `allocate()` calls pay the Zobrist/bucket
+//! maintenance the historical state did not have. `ref_ms` in
+//! `BENCH_sched.json` therefore slightly *overstates* the historical
+//! baseline's cost (the maintenance is small next to the clones, rescans,
+//! and re-sorts this module preserves, but compare `speedup` with that
+//! grain of salt — see `docs/performance.md`).
+
+use crate::cluster::gpu::GpuType;
+use crate::cluster::state::ClusterState;
+use crate::jobs::job::{Job, JobId};
+use crate::sched::alloc::{JobAllocation, RoundPlan};
+use crate::sched::hadar::HadarConfig;
+use crate::sched::price::{PriceBounds, PriceTable};
+use crate::sched::{RoundCtx, Scheduler};
+use std::collections::{BTreeMap, HashMap};
+
+/// The frozen pre-optimisation Hadar (see module docs).
+pub struct RefHadar {
+    /// Tunables — same knobs as the optimised solver.
+    pub cfg: HadarConfig,
+    type_order: BTreeMap<JobId, Vec<GpuType>>,
+    prev_plan: RoundPlan,
+}
+
+impl Default for RefHadar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RefHadar {
+    /// Reference solver with the paper-default [`HadarConfig`].
+    pub fn new() -> Self {
+        RefHadar::with_config(HadarConfig::default())
+    }
+
+    /// Reference solver with explicit tunables (must match the optimised
+    /// instance it is compared against).
+    pub fn with_config(cfg: HadarConfig) -> Self {
+        RefHadar {
+            cfg,
+            type_order: BTreeMap::new(),
+            prev_plan: RoundPlan::new(),
+        }
+    }
+
+    /// Historical `sorted_types`: clones the cached Vec on every call.
+    fn sorted_types(&mut self, job: &Job) -> Vec<GpuType> {
+        if let Some(t) = self.type_order.get(&job.id) {
+            return t.clone();
+        }
+        let mut types: Vec<GpuType> = job
+            .throughput
+            .iter()
+            .filter(|(_, &x)| x > 0.0)
+            .map(|(&g, _)| g)
+            .collect();
+        types.sort_by(|a, b| {
+            job.throughput_on(*b).total_cmp(&job.throughput_on(*a))
+        });
+        self.type_order.insert(job.id, types.clone());
+        types
+    }
+
+    fn payoff(job: &Job, alloc: &JobAllocation, cost: f64, comm: f64,
+              now: f64, min_efficiency: f64) -> f64 {
+        let x_min = alloc
+            .gpu_types()
+            .iter()
+            .map(|&g| job.throughput_on(g))
+            .fold(f64::INFINITY, f64::min);
+        if !x_min.is_finite() || x_min <= 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        if x_min < min_efficiency * job.max_throughput() {
+            return f64::NEG_INFINITY;
+        }
+        let rate = alloc.total_gpus() as f64 * x_min;
+        let est_duration = (now - job.arrival) + job.remaining_iters() / rate;
+        job.utility(est_duration.max(job.t_min())) - cost - comm
+    }
+
+    /// Historical FIND_ALLOC: rebuilds + sorts per-type slot lists on
+    /// every call.
+    fn find_alloc(&mut self, job: &Job, state: &ClusterState,
+                  prices: &PriceTable, now: f64)
+                  -> Option<(JobAllocation, f64)> {
+        let w = job.gpus_requested.max(1);
+        let types = self.sorted_types(job);
+        if types.is_empty() {
+            return None;
+        }
+        let mut best: Option<(JobAllocation, f64)> = None;
+        let min_eff = self.cfg.min_efficiency;
+        let mut consider = |alloc: JobAllocation, cost: f64, comm: f64| {
+            if alloc.total_gpus() != w {
+                return;
+            }
+            let p = Self::payoff(job, &alloc, cost, comm, now, min_eff);
+            if p > 0.0 && best.as_ref().map_or(true, |(_, bp)| p > *bp) {
+                best = Some((alloc, p));
+            }
+        };
+
+        // Per-call (node, free) lists sorted by free desc — the rebuild
+        // the optimised solver's slot index eliminates.
+        let per_type_slots: Vec<Vec<(usize, usize)>> = types
+            .iter()
+            .map(|&g| {
+                let mut slots: Vec<(usize, usize)> = (0..state.n_nodes())
+                    .map(|h| (h, state.free(h, g)))
+                    .filter(|&(_, f)| f > 0)
+                    .collect();
+                slots.sort_by(|a, b| b.1.cmp(&a.1));
+                slots
+            })
+            .collect();
+
+        // Packed candidates.
+        for node in 0..state.n_nodes() {
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for &g in &types {
+                if need == 0 {
+                    break;
+                }
+                let take = state.free(node, g).min(need);
+                if take > 0 {
+                    cost += prices.marginal_cost(state, node, g, take);
+                    alloc.add(node, g, take);
+                    need -= take;
+                }
+            }
+            if need == 0 {
+                consider(alloc, cost, 0.0);
+            }
+        }
+
+        // Spread, pure-type.
+        for (ti, &g) in types.iter().enumerate() {
+            if state.free_of_type(g) < w {
+                continue;
+            }
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for &(h, free) in &per_type_slots[ti] {
+                if need == 0 {
+                    break;
+                }
+                let take = free.min(need);
+                cost += prices.marginal_cost(state, h, g, take);
+                alloc.add(h, g, take);
+                need -= take;
+            }
+            let nodes_used = alloc.nodes().len();
+            let comm = self.comm_cost(job, nodes_used);
+            consider(alloc, cost, comm);
+        }
+
+        // Spread, mixed-type.
+        {
+            let mut alloc = JobAllocation::new();
+            let mut cost = 0.0;
+            let mut need = w;
+            for (ti, &g) in types.iter().enumerate() {
+                if need == 0 {
+                    break;
+                }
+                for &(h, free) in &per_type_slots[ti] {
+                    if need == 0 {
+                        break;
+                    }
+                    let take = free.min(need);
+                    cost += prices.marginal_cost(state, h, g, take);
+                    alloc.add(h, g, take);
+                    need -= take;
+                }
+            }
+            if need == 0 {
+                let nodes_used = alloc.nodes().len();
+                let comm = self.comm_cost(job, nodes_used);
+                consider(alloc, cost, comm);
+            }
+        }
+
+        best
+    }
+
+    fn comm_cost(&self, job: &Job, nodes_used: usize) -> f64 {
+        if nodes_used <= 1 {
+            return 0.0;
+        }
+        self.cfg.comm_factor * (nodes_used - 1) as f64
+            * job.utility(job.t_min())
+    }
+
+    /// Historical memo key: FNV-1a rescan over every (node, type) pool.
+    fn fnv_digest(state: &ClusterState) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for node in 0..state.n_nodes() {
+            for &g in &GpuType::ALL {
+                h ^= state.allocated(node, g) as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Historical DP: clones the state per select branch and a full
+    /// sub-plan Vec per memo entry.
+    #[allow(clippy::type_complexity)]
+    fn dp(&mut self, idx: usize, jobs: &[&Job], state: &ClusterState,
+          prices: &PriceTable, now: f64,
+          memo: &mut HashMap<(usize, u64),
+                             (usize, f64, Vec<(JobId, JobAllocation)>)>)
+          -> (usize, f64, Vec<(JobId, JobAllocation)>) {
+        if idx >= jobs.len() || state.is_full() {
+            return (0, 0.0, Vec::new());
+        }
+        let key = (idx, Self::fnv_digest(state));
+        if let Some(hit) = memo.get(&key) {
+            return hit.clone();
+        }
+
+        // Skip branch.
+        let mut best = self.dp(idx + 1, jobs, state, prices, now, memo);
+
+        // Select branch.
+        if let Some((alloc, payoff)) =
+            self.find_alloc(jobs[idx], state, prices, now)
+        {
+            let mut st = state.clone();
+            for a in alloc.assignments(jobs[idx].id) {
+                st.allocate(a);
+            }
+            let (rest_gpus, rest_pay, mut rest_plan) =
+                self.dp(idx + 1, jobs, &st, prices, now, memo);
+            let gpus = rest_gpus + alloc.total_gpus();
+            let pay = payoff + rest_pay;
+            if gpus > best.0 || (gpus == best.0 && pay > best.1) {
+                rest_plan.push((jobs[idx].id, alloc));
+                best = (gpus, pay, rest_plan);
+            }
+        }
+
+        if memo.len() < self.cfg.dp_memo_cap {
+            memo.insert(key, best.clone());
+        }
+        best
+    }
+
+    /// Historical greedy (identical selection logic to the optimised one).
+    fn greedy(&mut self, jobs: &[&Job], state: &mut ClusterState,
+              prices: &PriceTable, now: f64)
+              -> Vec<(JobId, JobAllocation)> {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let da = jobs[a].utility(jobs[a].t_min())
+                / jobs[a].gpus_requested.max(1) as f64;
+            let db = jobs[b].utility(jobs[b].t_min())
+                / jobs[b].gpus_requested.max(1) as f64;
+            db.total_cmp(&da)
+        });
+        let mut out = Vec::new();
+        for i in order {
+            if state.is_full() {
+                break;
+            }
+            if let Some((alloc, _)) =
+                self.find_alloc(jobs[i], state, prices, now)
+            {
+                for a in alloc.assignments(jobs[i].id) {
+                    state.allocate(a);
+                }
+                out.push((jobs[i].id, alloc));
+            }
+        }
+        out
+    }
+}
+
+impl Scheduler for RefHadar {
+    fn name(&self) -> &'static str {
+        "hadar-ref"
+    }
+
+    fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        let jobs: Vec<&Job> = ctx
+            .active
+            .iter()
+            .filter_map(|&id| ctx.queue.get(id))
+            .filter(|j| !j.is_complete())
+            .collect();
+        if jobs.is_empty() {
+            self.prev_plan = RoundPlan::new();
+            return RoundPlan::new();
+        }
+
+        let gpu_types = ctx.cluster.gpu_types();
+        let bounds =
+            PriceBounds::from_jobs(&jobs, &gpu_types, ctx.horizon, self.cfg.eta);
+        let prices = PriceTable::new(bounds);
+        let mut state = ClusterState::new(ctx.cluster);
+        let mut plan = RoundPlan::new();
+
+        let mut pending: Vec<&Job> = Vec::new();
+        if self.cfg.incremental {
+            for job in &jobs {
+                if let Some(prev) = self.prev_plan.get(job.id) {
+                    let fits = prev.slots.iter().all(|(&(h, g), &c)| {
+                        state.free(h, g) >= c
+                    });
+                    if fits {
+                        for a in prev.assignments(job.id) {
+                            state.allocate(a);
+                        }
+                        plan.insert(job.id, prev.clone());
+                        continue;
+                    }
+                }
+                pending.push(job);
+            }
+        } else {
+            pending = jobs.clone();
+        }
+
+        pending.sort_by(|a, b| {
+            b.t_min().total_cmp(&a.t_min()).then(a.id.cmp(&b.id))
+        });
+
+        let chosen: Vec<(JobId, JobAllocation)> =
+            if pending.len() <= self.cfg.dp_job_cap {
+                let mut memo = HashMap::new();
+                let (_, _, sub) =
+                    self.dp(0, &pending, &state, &prices, ctx.now, &mut memo);
+                sub
+            } else {
+                self.greedy(&pending, &mut state, &prices, ctx.now)
+            };
+        for (id, alloc) in chosen {
+            plan.insert(id, alloc);
+        }
+
+        self.prev_plan = plan.clone();
+        plan
+    }
+
+    /// Drain preemption — identical contract to the optimised solver's.
+    fn preempt(&mut self, job: JobId) {
+        self.prev_plan.allocations.remove(&job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spec::ClusterSpec;
+    use crate::jobs::model::DlModel;
+    use crate::jobs::queue::JobQueue;
+
+    #[test]
+    fn reference_schedules_the_motivational_job() {
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        let mut j = Job::new(1, DlModel::ResNet18, 0.0, 3, 80, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        queue.admit(j);
+        let active = vec![JobId(1)];
+        let mut s = RefHadar::new();
+        let ctx = RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue: &queue,
+            active: &active,
+            cluster: &cluster,
+        };
+        let plan = s.schedule(&ctx);
+        assert_eq!(plan.get(JobId(1)).unwrap().total_gpus(), 3);
+    }
+}

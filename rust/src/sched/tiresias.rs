@@ -90,6 +90,13 @@ impl Scheduler for Tiresias {
         "tiresias"
     }
 
+    /// Completion: drop the job's attained-service counter — LAS never
+    /// consults finished jobs, and on long traces the map would otherwise
+    /// grow with every job ever admitted.
+    fn job_completed(&mut self, job: JobId) {
+        self.attained.remove(&job);
+    }
+
     fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
         let mut jobs: Vec<&Job> = ctx
             .active
@@ -198,6 +205,16 @@ mod tests {
         let plan = t.schedule(&ctx(&queue, &active, &cluster));
         assert!(plan.get(JobId(2)).is_some());
         assert!(plan.get(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn job_completed_drops_attained_service() {
+        let mut t = Tiresias::new();
+        t.record_service(JobId(1), 100.0);
+        t.record_service(JobId(2), 50.0);
+        t.job_completed(JobId(1));
+        assert_eq!(t.attained.len(), 1);
+        assert!(t.attained.contains_key(&JobId(2)));
     }
 
     #[test]

@@ -90,6 +90,12 @@ impl Scheduler for YarnCs {
         self.running.remove(&job);
     }
 
+    /// Completion: release the pin immediately (schedule() also sweeps
+    /// completed pins defensively at round start).
+    fn job_completed(&mut self, job: JobId) {
+        self.running.remove(&job);
+    }
+
     fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
         // Drop completed jobs from the pinned set.
         self.running.retain(|id, _| {

@@ -254,6 +254,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 * cfg.slot_secs,
         };
 
+        let mut completed_now: Vec<JobId> = Vec::new();
         for (&id, alloc) in &plan.allocations {
             let job = queue.get_mut(id).expect("plan references live job");
             if job.is_complete() {
@@ -296,7 +297,14 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 job.finish_time = Some(f);
                 job.status = JobStatus::Completed;
                 last_finish = last_finish.max(f);
+                completed_now.push(id);
             }
+        }
+        // Completion notifications: let stateful schedulers drop per-job
+        // caches (Hadar's type orders, Tiresias' attained service, YARN's
+        // pins) so they stay bounded by the live job count.
+        for id in completed_now {
+            scheduler.job_completed(id);
         }
 
         busy_total += rec.busy_gpu_secs;
@@ -574,6 +582,31 @@ mod tests {
                                   false)
             .unwrap_err();
         assert!(err.contains("not in cluster"), "{err}");
+    }
+
+    #[test]
+    fn hadar_type_cache_shrinks_as_jobs_complete() {
+        // Long trace: 30 jobs trickling in over ~an hour of virtual time.
+        // Without the job_completed notification the per-job type-order
+        // cache ends the run holding one entry per job ever admitted;
+        // with it, every completion is forgotten and the cache drains.
+        let cluster = ClusterSpec::sim60();
+        let mut q = JobQueue::new();
+        for id in 0..30u64 {
+            let mut j = Job::new(id, DlModel::Lstm, id as f64 * 120.0, 1,
+                                 2, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            q.admit(j);
+        }
+        let mut hadar = crate::sched::hadar::Hadar::new();
+        let res = run(&mut q, &mut hadar, &cluster, &SimConfig::default(),
+                      false);
+        assert!(q.all_complete());
+        assert!(res.rounds > 1);
+        assert_eq!(hadar.type_cache_len(), 0,
+                   "30 jobs admitted, all completed: cache must be empty");
     }
 
     #[test]

@@ -220,13 +220,17 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
                     busy_secs: busy,
                 });
                 new_binding.insert(node, copy);
-                // Parent finishing mid-slot: early finish.
+                // Parent finishing mid-slot: early finish. Notify the
+                // planner (same completion protocol as the generic
+                // engine's [`crate::sched::Scheduler::job_completed`]) so
+                // any per-parent planner state is dropped exactly once.
                 if tracker.is_parent_complete(*parent)
                     && !finish.contains_key(parent)
                 {
                     let f = now + overhead + busy;
                     finish.insert(*parent, f);
                     last_finish = last_finish.max(f);
+                    planner.job_completed(*parent);
                 }
             }
         }

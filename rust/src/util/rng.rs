@@ -4,7 +4,8 @@
 //! network; only the `xla` crate's vendored closure exists), so the
 //! simulator, trace generator, and parameter initialiser use this
 //! self-contained xoshiro256** implementation. Determinism is a feature:
-//! every experiment in EXPERIMENTS.md is reproducible from its seed.
+//! every experiment and bench (see `docs/performance.md`) is reproducible
+//! from its seed.
 
 /// xoshiro256** by Blackman & Vigna — fast, high-quality, 256-bit state.
 #[derive(Clone, Debug)]

@@ -1,0 +1,204 @@
+//! Plan equivalence: the zero-clone Hadar solver must return `RoundPlan`s
+//! **identical** to the frozen pre-optimisation reference
+//! (`sched::reference::RefHadar`) — same jobs selected, same pools, same
+//! counts — across seeded random (cluster, queue) scenarios, on both solve
+//! paths (exact DP and payoff-density greedy), in incremental mode, and
+//! through drain preemptions and completions. This is the non-negotiable
+//! gate on the perf rework: any divergence is a solver bug, not a tuning
+//! difference.
+
+use hadar::cluster::gpu::{GpuType, PcieGen};
+use hadar::cluster::node::Node;
+use hadar::cluster::spec::ClusterSpec;
+use hadar::jobs::job::{Job, JobId};
+use hadar::jobs::model::DlModel;
+use hadar::jobs::queue::JobQueue;
+use hadar::sched::hadar::{Hadar, HadarConfig};
+use hadar::sched::reference::RefHadar;
+use hadar::sched::{RoundCtx, RoundPlan, Scheduler};
+use hadar::util::prop::{check_no_shrink, Config};
+use hadar::util::rng::Rng;
+
+const TYPES: [GpuType; 4] =
+    [GpuType::V100, GpuType::P100, GpuType::K80, GpuType::T4];
+
+/// Random heterogeneous cluster: 3-8 nodes, one random type of 1-4 GPUs
+/// per node.
+fn gen_cluster(rng: &mut Rng) -> ClusterSpec {
+    let n = rng.range_u(3, 8) as usize;
+    let nodes = (0..n)
+        .map(|id| {
+            let t = *rng.choice(&TYPES);
+            let cap = rng.range_u(1, 4) as usize;
+            Node::new(id, &format!("n{id}"), &[(t, cap)], PcieGen::Gen3)
+        })
+        .collect();
+    ClusterSpec::new("rand", nodes)
+}
+
+/// Random job over the four bench types; some types are missing from some
+/// rows (heterogeneous support), all present entries are positive.
+fn gen_job(rng: &mut Rng, id: u64) -> Job {
+    let w = [1usize, 1, 2, 2, 3, 4][rng.below(6) as usize];
+    let epochs = rng.range_u(1, 8);
+    let mut j = Job::new(id, DlModel::Lstm, 0.0, w, epochs, 50);
+    let base = rng.range_f(5.0, 80.0);
+    for (i, &g) in TYPES.iter().enumerate() {
+        if i == 0 || rng.f64() < 0.8 {
+            j.set_throughput(g, base * rng.range_f(0.1, 1.0));
+        }
+    }
+    j
+}
+
+fn ctx<'a>(now: f64, queue: &'a JobQueue, active: &'a [JobId],
+           cluster: &'a ClusterSpec) -> RoundCtx<'a> {
+    RoundCtx {
+        round: 0,
+        now,
+        slot_secs: 360.0,
+        horizon: 1e7,
+        queue,
+        active,
+        cluster,
+    }
+}
+
+fn plans_equal(a: &RoundPlan, b: &RoundPlan) -> bool {
+    a.allocations == b.allocations
+}
+
+/// Single-round equivalence over ≥70 random scenarios, alternating the
+/// DP and greedy paths via a randomised `dp_job_cap`.
+#[test]
+fn prop_single_round_plans_identical() {
+    check_no_shrink(
+        Config { cases: 70, seed: 0x5EED1 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = gen_cluster(&mut rng);
+            let n_jobs = rng.range_u(1, 14);
+            let mut queue = JobQueue::new();
+            for id in 0..n_jobs {
+                queue.admit(gen_job(&mut rng, id));
+            }
+            let cfg = HadarConfig {
+                // Half the scenarios force the greedy path.
+                dp_job_cap: if rng.below(2) == 0 { 12 } else { 4 },
+                min_efficiency: if rng.below(2) == 0 { 0.0 } else { 0.1 },
+                ..Default::default()
+            };
+            let active = queue.active_at(0.0);
+            let mut opt = Hadar::with_config(cfg);
+            let mut reference = RefHadar::with_config(cfg);
+            let c = ctx(0.0, &queue, &active, &cluster);
+            let p_opt = opt.schedule(&c);
+            let p_ref = reference.schedule(&c);
+            if !plans_equal(&p_opt, &p_ref) {
+                return Err(format!(
+                    "plans diverged: opt {:?} vs ref {:?}",
+                    p_opt.allocations, p_ref.allocations
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multi-round equivalence over ≥50 random scenarios in **incremental
+/// mode**, with progress advancing between rounds, random **drain
+/// preemptions** (both solvers told identically, as the engine does),
+/// node removals, and completion notifications.
+#[test]
+fn prop_incremental_rounds_with_preemption_identical() {
+    check_no_shrink(
+        Config { cases: 50, seed: 0x5EED2 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cluster = gen_cluster(&mut rng);
+            let n_jobs = rng.range_u(2, 10);
+            let mut queue = JobQueue::new();
+            for id in 0..n_jobs {
+                queue.admit(gen_job(&mut rng, id));
+            }
+            let cfg = HadarConfig {
+                incremental: true,
+                dp_job_cap: if rng.below(2) == 0 { 12 } else { 3 },
+                ..Default::default()
+            };
+            let mut opt = Hadar::with_config(cfg);
+            let mut reference = RefHadar::with_config(cfg);
+            let slot = 360.0;
+
+            for round in 0..5u64 {
+                let now = round as f64 * slot;
+                let active = queue.active_at(now);
+                if active.is_empty() {
+                    break;
+                }
+                let (p_opt, p_ref) = {
+                    let c = ctx(now, &queue, &active, &cluster);
+                    (opt.schedule(&c), reference.schedule(&c))
+                };
+                if !plans_equal(&p_opt, &p_ref) {
+                    return Err(format!(
+                        "round {round}: plans diverged: opt {:?} vs ref {:?}",
+                        p_opt.allocations, p_ref.allocations
+                    ));
+                }
+
+                // Advance progress exactly as the engine's bottleneck rule
+                // does, and notify completions on both solvers.
+                let scheduled = p_opt.scheduled_jobs();
+                for &id in &scheduled {
+                    let alloc = p_opt.get(id).unwrap().clone();
+                    let job = queue.get_mut(id).unwrap();
+                    let x_min = alloc
+                        .gpu_types()
+                        .iter()
+                        .map(|&g| job.throughput_on(g))
+                        .fold(f64::INFINITY, f64::min);
+                    if x_min.is_finite() && x_min > 0.0 {
+                        job.progress += alloc.total_gpus() as f64
+                            * x_min
+                            * slot;
+                    }
+                    if job.is_complete() {
+                        opt.job_completed(id);
+                        reference.job_completed(id);
+                    }
+                }
+
+                // Random drain: drop a node and preempt the jobs whose
+                // current placement touched it — identically on both.
+                if rng.f64() < 0.35 && cluster.nodes.len() > 1 {
+                    let victim =
+                        cluster.nodes[rng.below(cluster.nodes.len() as u64)
+                            as usize]
+                            .id;
+                    cluster.remove_node(victim);
+                    for &id in &scheduled {
+                        let touches = p_opt
+                            .get(id)
+                            .map(|a| a.nodes().contains(&victim))
+                            .unwrap_or(false);
+                        if touches {
+                            opt.preempt(id);
+                            reference.preempt(id);
+                        }
+                    }
+                } else if rng.f64() < 0.3 {
+                    // Plain scheduler-side preemption of one random
+                    // scheduled job (the engine's drain path).
+                    if let Some(&id) = scheduled.first() {
+                        opt.preempt(id);
+                        reference.preempt(id);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

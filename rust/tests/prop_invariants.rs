@@ -4,7 +4,7 @@
 
 use hadar::cluster::gpu::GpuType;
 use hadar::cluster::spec::ClusterSpec;
-use hadar::cluster::state::ClusterState;
+use hadar::cluster::state::{Assignment, ClusterState};
 use hadar::jobs::job::{Job, JobId};
 use hadar::jobs::model::DlModel;
 use hadar::jobs::queue::JobQueue;
@@ -243,6 +243,104 @@ fn prop_hadar_never_uses_zero_throughput_types() {
                         ));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Everything observable about a [`ClusterState`]: the rolling digest, the
+/// totals, every pool's free count, the assignment log, and the per-type
+/// free-slot index iteration order.
+#[allow(clippy::type_complexity)]
+fn state_fingerprint(
+    s: &ClusterState,
+) -> (u64, usize, Vec<usize>, Vec<Assignment>, Vec<Vec<(usize, usize)>>) {
+    let mut frees = Vec::new();
+    for h in 0..s.n_nodes() {
+        for &g in &GpuType::ALL {
+            frees.push(s.free(h, g));
+        }
+    }
+    let index: Vec<Vec<(usize, usize)>> = GpuType::ALL
+        .iter()
+        .map(|&g| s.free_slots_of_type(g).collect())
+        .collect();
+    (s.digest(), s.total_free(), frees, s.assignments().to_vec(), index)
+}
+
+/// Allocate a random feasible assignment, if any pool has room.
+fn random_alloc(rng: &mut Rng, s: &mut ClusterState) {
+    let slots = s.free_slots();
+    if slots.is_empty() {
+        return;
+    }
+    let &(h, g, free) = rng.choice(&slots);
+    let count = rng.range_u(1, free as u64) as usize;
+    let job = JobId(rng.below(5));
+    s.allocate(Assignment { job, node: h, gpu: g, count });
+}
+
+/// Allocate/undo round-trips leave the state bit-identical: digest, free
+/// counts, totals, assignment log, and slot-index order all restore after
+/// `rewind`, after `release_job`, and after draining everything — across
+/// random clusters and random allocate/release/rewind walks. Also pins the
+/// incrementally maintained slot index to a from-scratch rebuild at every
+/// step (the zero-clone solver's correctness rests on both).
+#[test]
+fn prop_allocate_undo_round_trips_state() {
+    check_no_shrink(
+        Config { cases: 50, seed: 0xF66 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = match rng.below(3) {
+                0 => ClusterSpec::motivational(),
+                1 => ClusterSpec::sim60(),
+                _ => ClusterSpec::scaled(3, 2),
+            };
+            let mut s = ClusterState::new(&cluster);
+            let fresh = state_fingerprint(&s);
+            for _ in 0..30 {
+                match rng.below(3) {
+                    0 => random_alloc(&mut rng, &mut s),
+                    1 => {
+                        let _ = s.release_job(JobId(rng.below(5)));
+                    }
+                    _ => {
+                        // Checkpoint, a burst of allocations, rewind: the
+                        // DP's select-branch pattern must restore exactly.
+                        let before = state_fingerprint(&s);
+                        let mark = s.checkpoint();
+                        for _ in 0..rng.range_u(1, 4) {
+                            random_alloc(&mut rng, &mut s);
+                        }
+                        s.rewind(mark);
+                        if state_fingerprint(&s) != before {
+                            return Err("rewind did not restore".into());
+                        }
+                    }
+                }
+                // The slot index must always match a from-scratch rebuild
+                // (stable sort by free desc == node asc within ties).
+                for &g in &GpuType::ALL {
+                    let got: Vec<(usize, usize)> =
+                        s.free_slots_of_type(g).collect();
+                    let mut want: Vec<(usize, usize)> = (0..s.n_nodes())
+                        .map(|h| (h, s.free(h, g)))
+                        .filter(|&(_, f)| f > 0)
+                        .collect();
+                    want.sort_by(|a, b| b.1.cmp(&a.1));
+                    if got != want {
+                        return Err(format!("slot index drifted for {g:?}"));
+                    }
+                }
+            }
+            for j in 0..5 {
+                s.release_job(JobId(j));
+            }
+            if state_fingerprint(&s) != fresh {
+                return Err("drained state differs from fresh".into());
             }
             Ok(())
         },
