@@ -153,10 +153,10 @@ impl EventTimeline {
         // Stable time order (original index breaks ties).
         let mut order: Vec<usize> = (0..self.events.len()).collect();
         order.sort_by(|&a, &b| {
+            // total_cmp: a NaN timestamp must not panic validation.
             self.events[a]
                 .at
-                .partial_cmp(&self.events[b].at)
-                .unwrap()
+                .total_cmp(&self.events[b].at)
                 .then(a.cmp(&b))
         });
 
@@ -349,7 +349,7 @@ impl EventTimeline {
 fn flush_rejoins(upto: f64, pending: &mut Vec<(f64, Node)>,
                  known: &mut BTreeMap<usize, Node>,
                  out: &mut Vec<ResolvedEvent>) -> Result<(), String> {
-    pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0));
     while !pending.is_empty() && pending[0].0 <= upto {
         let (rt, node) = pending.remove(0);
         if known.contains_key(&node.id) {
@@ -480,7 +480,7 @@ pub fn generate_churn(cluster: &ClusterSpec, cfg: &ChurnConfig)
             break;
         }
         // Nodes whose maintenance finished by now are live again.
-        pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pending.sort_by(|a, b| a.0.total_cmp(&b.0));
         while !pending.is_empty() && pending[0].0 <= t {
             let (_, id) = pending.remove(0);
             live.push(id);

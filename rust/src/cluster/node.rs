@@ -53,6 +53,17 @@ impl Node {
             .map(|(&g, _)| g)
     }
 
+    /// The node's whole-GPU gang as `(type, count)` pools with capacity
+    /// `> 0`, in type order — exactly what a HadarE whole-node copy
+    /// occupies (see [`crate::sched::hadare`]). Empty pools (capacity 0
+    /// left behind by a `set_capacity` event) are skipped.
+    pub fn gang(&self) -> impl Iterator<Item = (GpuType, usize)> + '_ {
+        self.gpus
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(&g, &c)| (g, c))
+    }
+
     /// Emit as a JSON object (the `nodes` entries of a cluster file and
     /// the `node` payload of a `join` cluster event share this format).
     pub fn to_json(&self) -> Json {
@@ -118,6 +129,16 @@ mod tests {
         assert_eq!(n.capacity(GpuType::T4), 0);
         assert_eq!(n.total_gpus(), 6);
         assert_eq!(n.primary_gpu(), Some(GpuType::V100));
+        let gang: Vec<(GpuType, usize)> = n.gang().collect();
+        assert_eq!(gang, vec![(GpuType::V100, 4), (GpuType::K80, 2)]);
+    }
+
+    #[test]
+    fn gang_skips_zeroed_pools() {
+        let mut n = Node::new(0, "n0", &[(GpuType::V100, 4)], PcieGen::Gen3);
+        n.gpus.insert(GpuType::K80, 0); // set_capacity leftovers
+        let gang: Vec<(GpuType, usize)> = n.gang().collect();
+        assert_eq!(gang, vec![(GpuType::V100, 4)]);
     }
 
     #[test]

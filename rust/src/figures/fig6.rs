@@ -15,6 +15,10 @@ pub struct Fig6 {
     pub hadar: SimResult,
     /// HadarE's run (forking keeps every node busy).
     pub hadare: SimResult,
+    /// Total GPUs in the evaluated cluster (the occupancy denominator —
+    /// equal to the node count on the paper's single-GPU testbed, larger
+    /// on multi-GPU clusters where HadarE books whole-node gangs).
+    pub gpus: usize,
 }
 
 /// Run the M-3 mix on the testbed under both engines.
@@ -34,7 +38,11 @@ pub fn run() -> Fig6 {
     let hadar =
         engine::run(&mut queue, &mut Hadar::new(), &cluster, &cfg, true);
     let hadare = hadare_engine::run(&jobs, &cluster, &cfg, None).sim;
-    Fig6 { hadar, hadare }
+    Fig6 {
+        hadar,
+        hadare,
+        gpus: cluster.total_gpus(),
+    }
 }
 
 /// Render the round-by-round occupancy tables.
@@ -47,15 +55,15 @@ pub fn render(f: &Fig6) -> String {
             res.gru * 100.0,
             res.ttd
         ));
-        let mut t = Table::new(&["round", "jobs running", "nodes busy",
+        let mut t = Table::new(&["round", "jobs running", "gpus busy",
                                  "round CRU"]);
         for rec in res.timeline.iter().take(12) {
-            let nodes_busy: usize =
+            let gpus_busy: usize =
                 rec.jobs.values().map(|rj| rj.gpus).sum();
             t.row(&[
                 format!("R{}", rec.round + 1),
                 rec.jobs.len().to_string(),
-                format!("{nodes_busy}/5"),
+                format!("{gpus_busy}/{}", f.gpus),
                 format!("{:.0}%",
                         100.0 * rec.busy_gpu_secs / rec.avail_gpu_secs),
             ]);

@@ -69,7 +69,8 @@ pub fn best_slot(s: &SlotSweep, cluster: &str, mix: &str) -> f64 {
     s.cells
         .iter()
         .filter(|(c, m, _, _)| c == cluster && m == mix)
-        .max_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+        // total_cmp: never panic on a degenerate (NaN) CRU cell.
+        .max_by(|a, b| a.3.total_cmp(&b.3))
         .map(|&(_, _, slot, _)| slot)
         .unwrap_or(0.0)
 }

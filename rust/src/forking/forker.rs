@@ -39,11 +39,14 @@ impl ForkIds {
     }
 }
 
-/// Fork one parent into `copies` copy-jobs. Each copy requests a single
-/// node's worth of workers (1 GPU in the paper's §VI clusters) and starts
-/// with the parent's throughput row; its share of work is (re)assigned by
-/// the Job Tracker each round, so copies carry the *parent's* total length
-/// for utility purposes.
+/// Fork one parent into `copies` copy-jobs. Each copy occupies a single
+/// *whole node* when scheduled — the planner books every GPU of the host
+/// from the node spec, so `gpus_requested` is nominal (1, the paper's §VI
+/// single-GPU-node clusters) and ignored by the forking engine. Copies
+/// start with the parent's throughput row; their share of work is
+/// (re)assigned by the Job Tracker each round in proportion to gang
+/// throughput, so copies carry the *parent's* total length for utility
+/// purposes.
 pub fn fork(parent: &Job, copies: u64, ids: ForkIds) -> Vec<Job> {
     (1..=copies)
         .map(|i| {

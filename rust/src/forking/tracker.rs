@@ -119,10 +119,14 @@ impl JobTracker {
     }
 
     /// §V-B work division: split the parent's remaining steps across the
-    /// nodes assigned this round, proportionally to their throughputs
-    /// (iterations/sec of the parent's model on each node's GPU). The
-    /// shares are what each copy should complete in the next slot, capped
-    /// by slot capacity.
+    /// nodes assigned this round, proportionally to their **gang**
+    /// throughputs — iterations/sec of the parent's model on the whole
+    /// node ([`crate::sched::hadare::gang_throughput`]: bottleneck rule ×
+    /// sub-linear multi-GPU scaling; on single-GPU nodes this is the
+    /// per-GPU rate). A 4×K80 gang therefore draws a larger share than a
+    /// 1×K80 node, but *not* naively 4×. The shares are what each copy
+    /// should complete in the next slot, capped by the gang's slot
+    /// capacity `x·L`.
     pub fn divide_steps(&self, parent: JobId, node_throughputs: &[f64],
                         slot_secs: f64) -> Vec<f64> {
         let remaining = match self.parents.get(&parent) {
@@ -216,6 +220,18 @@ mod tests {
     fn zero_throughput_division_is_empty() {
         let t = tracker();
         assert_eq!(t.divide_steps(JobId(1), &[0.0, 0.0], 10.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn gang_weights_shift_shares_sublinearly() {
+        // A 4-GPU K80 gang at 0.9 marginal efficiency (rate 3.7x the
+        // single-GPU node) draws 3.7x the share — more than one node,
+        // less than a naive 4x.
+        let t = tracker();
+        let shares = t.divide_steps(JobId(1), &[37.0, 10.0], 1e9);
+        assert!((shares[0] / shares[1] - 3.7).abs() < 1e-9);
+        assert!(shares[0] / shares[1] < 4.0);
+        assert!((shares.iter().sum::<f64>() - 1000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -2,7 +2,12 @@
 //! ([`crate::sched::hadar`]) timed against the frozen pre-optimisation
 //! baseline ([`crate::sched::reference`]), on both solve paths (exact DP
 //! at queue ≤ `dp_job_cap`, payoff-density greedy at 100-1000 jobs) and
-//! two clusters (`sim60`, `synthetic256`).
+//! two clusters (`sim60`, `synthetic256`) — plus the **fork path**: the
+//! flat-table HadarE whole-node planner against the frozen
+//! [`crate::sched::reference::RefHadarE`] on a 60-node *single-GPU*
+//! cluster (the equivalence domain, so `plans_equal` stays meaningful;
+//! large copy-count rounds are exactly where the old per-candidate
+//! `BTreeMap` probes dominated).
 //!
 //! Shared by the `hadar bench` CLI subcommand (which emits
 //! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
@@ -12,9 +17,12 @@
 //! property tests.
 
 use crate::cluster::spec::ClusterSpec;
+use crate::forking::forker::ForkIds;
+use crate::forking::tracker::JobTracker;
 use crate::jobs::queue::JobQueue;
 use crate::sched::hadar::Hadar;
-use crate::sched::reference::RefHadar;
+use crate::sched::hadare::HadarE;
+use crate::sched::reference::{RefHadar, RefHadarE};
 use crate::sched::{RoundCtx, RoundPlan, Scheduler};
 use crate::trace::philly::{generate, TraceConfig};
 use crate::trace::workload::materialize;
@@ -99,6 +107,52 @@ fn time_decision(
     (best, plan)
 }
 
+/// 60 single-GPU nodes (20 per sim60 type) — the fork-path bench
+/// cluster. Single-GPU so the frozen `RefHadarE` and the gang planner
+/// must produce identical plans, keeping `plans_equal` a live check.
+fn fork_cluster() -> ClusterSpec {
+    let mut c = ClusterSpec::scaled(20, 1);
+    c.name = "sgl60".into();
+    c
+}
+
+/// Tracker over the case queue's jobs, each forked `copies` ways.
+fn fork_tracker(queue: &JobQueue, copies: u64) -> JobTracker {
+    let ids = ForkIds { max_job_count: 1024 };
+    let mut tracker = JobTracker::new(ids);
+    for j in queue.iter() {
+        tracker.register(
+            j.id,
+            j.total_iters(),
+            &(1..=copies).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+        );
+    }
+    tracker
+}
+
+/// Best-of-`iters` wall time of one HadarE `plan_round`, fresh planner
+/// per iteration. Returns (best ms, the last plan).
+fn time_hadare_decision(
+    iters: usize,
+    copies: u64,
+    use_reference: bool,
+    ctx: &RoundCtx,
+    tracker: &JobTracker,
+) -> (f64, RoundPlan) {
+    let mut best = f64::INFINITY;
+    let mut plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        plan = if use_reference {
+            RefHadarE::new(copies).plan_round(ctx, tracker)
+        } else {
+            HadarE::new(copies).plan_round(ctx, tracker)
+        };
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    (best, plan)
+}
+
 /// Run the full comparison suite. `quick` trims the grid and iteration
 /// counts for CI smoke runs.
 pub fn run_suite(quick: bool) -> Vec<CaseResult> {
@@ -123,6 +177,40 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
         out.push(CaseResult {
             name: format!("{path}_{}_{n_jobs}jobs", cluster.name),
             path,
+            cluster: cluster.name.clone(),
+            jobs: n_jobs,
+            ref_ms,
+            opt_ms,
+            speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            plans_equal: ref_plan.allocations == opt_plan.allocations,
+        });
+    }
+
+    // Fork path: HadarE whole-node planning, flat tables vs the frozen
+    // BTreeMap reference, at full copy budget (= node count).
+    let fork_sizes: &[usize] = if quick { &[16] } else { &[16, 64] };
+    for &n_jobs in fork_sizes {
+        let cluster = fork_cluster();
+        let copies = cluster.nodes.len() as u64;
+        let queue = case_queue(&cluster, n_jobs);
+        let tracker = fork_tracker(&queue, copies);
+        let active = queue.active_at(0.0);
+        let ctx = RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 1e7,
+            queue: &queue,
+            active: &active,
+            cluster: &cluster,
+        };
+        let (ref_ms, ref_plan) =
+            time_hadare_decision(iters, copies, true, &ctx, &tracker);
+        let (opt_ms, opt_plan) =
+            time_hadare_decision(iters, copies, false, &ctx, &tracker);
+        out.push(CaseResult {
+            name: format!("fork_{}_{n_jobs}jobs", cluster.name),
+            path: "fork",
             cluster: cluster.name.clone(),
             jobs: n_jobs,
             ref_ms,
@@ -186,6 +274,8 @@ mod tests {
         let results = run_suite(true);
         assert!(results.iter().any(|r| r.path == "dp"));
         assert!(results.iter().any(|r| r.path == "greedy"));
+        assert!(results.iter().any(|r| r.path == "fork"),
+                "hadare ref-vs-opt row present");
         assert!(results.iter().any(|r| r.cluster == "synthetic256"));
         for r in &results {
             assert!(r.plans_equal, "{}: plans diverged", r.name);

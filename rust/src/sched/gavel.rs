@@ -153,7 +153,10 @@ impl Scheduler for Gavel {
                 }
             }
         }
-        prios.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // total_cmp: a NaN priority (e.g. a NaN throughput row leaking
+        // into Y) must not panic the round; NaN sorts first and simply
+        // fails to place.
+        prios.sort_by(|a, b| b.0.total_cmp(&a.0));
 
         let mut state = ClusterState::new(ctx.cluster);
         let mut plan = RoundPlan::new();
@@ -300,5 +303,26 @@ mod tests {
                 .sum();
             assert!(demand <= 4.0 + 1e-9, "{r:?} over-subscribed: {demand}");
         }
+    }
+
+    #[test]
+    fn nan_throughput_job_is_skipped_without_panic() {
+        // NaN-comparator regression (mirrors hadar.rs's
+        // nan_and_zero_throughput_rows_are_never_scheduled): a NaN
+        // throughput row produces NaN Y entries; the priority sort must
+        // not panic and the malformed job simply fails to place.
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        let mut bad = mk_job(1, 2);
+        for g in GpuType::ALL {
+            bad.set_throughput(g, f64::NAN);
+        }
+        queue.admit(bad);
+        queue.admit(mk_job(2, 2));
+        let active = vec![JobId(1), JobId(2)];
+        let mut g = Gavel::new();
+        let plan = g.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none(), "NaN row never schedules");
+        assert!(plan.get(JobId(2)).is_some(), "well-formed job still runs");
     }
 }

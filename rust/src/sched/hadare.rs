@@ -3,8 +3,13 @@
 //! Every unfinished parent job has `n` forked copies (for an `n`-node
 //! cluster); each round HadarE assigns *whole nodes* to copies so that no
 //! node idles while any parent has work left (Theorem 3 / its corollary).
-//! Scheduling itself reuses Hadar's machinery over the copy queue with two
-//! extra constraints:
+//! A copy scheduled on node `h` occupies **every GPU of `h`** — the
+//! per-pool counts come from the node spec ([`Node::gang`]), not from a
+//! single representative slot, so on a multi-GPU cluster (`sim60`'s
+//! 15 × 4-GPU nodes) a round-0 plan covers all 60 GPUs, not 15.
+//!
+//! Scheduling reuses Hadar's machinery over the copy queue with two extra
+//! constraints:
 //!
 //! * at most one copy of a given parent per node (copies exist to run on
 //!   *separate* nodes);
@@ -12,27 +17,159 @@
 //!   is given a copy of the parent with the most remaining work that is
 //!   not yet on that node.
 //!
+//! ## Gang throughput
+//!
+//! A whole-node gang's rate ([`gang_throughput`]) follows the same rules
+//! Hadar applies to its gangs:
+//!
+//! * **bottleneck (Eq. 1b)** — every GPU in the gang advances at the
+//!   slowest *usable* type's pace; a node carrying any type the job
+//!   cannot run on (zero/NaN throughput) is unusable as a whole;
+//! * **`min_efficiency`** — same semantics as
+//!   [`crate::sched::hadar::HadarConfig::min_efficiency`]: a bottleneck
+//!   below that fraction of the job's best single-GPU throughput rejects
+//!   the node outright;
+//! * **sub-linear scaling** — each GPU beyond the first contributes only
+//!   [`GangConfig::marginal_efficiency`] of a full GPU (intra-node
+//!   data-parallel sync overhead, the within-node analogue of Hadar's
+//!   `comm_factor`), so a 4×K80 node is *not* naively 4× a 1×K80 node.
+//!
+//! On single-GPU nodes the gang rate degenerates to the per-GPU
+//! throughput exactly, which is why the pre-rework planner — frozen as
+//! [`crate::sched::reference::RefHadarE`] — is pinned plan-for-plan to
+//! this one on `aws5`/`testbed5` by `rust/tests/prop_equivalence.rs`.
+//!
+//! §Perf: `plan_round` follows the PR-3 zero-clone idiom — the per-round
+//! `BTreeMap`s (`node_load`, `copies_used`, `placed_on`) are flat
+//! `Vec`-indexed tables, the gang-throughput matrix is computed once per
+//! (parent, node) pair, and placement is a method instead of a
+//! seven-argument closure. `sched::bench` (`fork_*` cases) times it
+//! against the frozen reference.
+//!
 //! The engines call [`HadarE::plan_round`] with the tracker state; step
 //! division + aggregation + consolidation happen in the engine through the
 //! [`crate::forking::JobTracker`].
 
-use crate::cluster::gpu::GpuType;
+use crate::cluster::node::Node;
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId};
 use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::RoundCtx;
-use std::collections::BTreeMap;
+use std::cmp::Ordering;
+
+/// Knobs of the whole-node gang throughput model (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct GangConfig {
+    /// Fraction of a full GPU each GPU beyond the first contributes to
+    /// the gang rate: `rate = x_min · (1 + marginal_efficiency·(n−1))`.
+    /// `1.0` = perfectly linear scaling; the default models the intra-node
+    /// gradient-sync overhead of data-parallel training.
+    pub marginal_efficiency: f64,
+    /// Reject nodes whose bottleneck throughput is below this fraction of
+    /// the job's best single-GPU throughput — identical semantics to
+    /// [`crate::sched::hadar::HadarConfig::min_efficiency`].
+    pub min_efficiency: f64,
+}
+
+impl Default for GangConfig {
+    fn default() -> Self {
+        GangConfig {
+            marginal_efficiency: 0.9,
+            min_efficiency: 0.0,
+        }
+    }
+}
+
+/// Iterations/second of `job` when one forked copy occupies the whole of
+/// `node` (see the module docs for the model). Returns `0.0` when the
+/// node is unusable for the job: no GPUs, any pool with zero/NaN
+/// throughput (bottleneck all-or-nothing), or a bottleneck below the
+/// `min_efficiency` floor.
+pub fn gang_throughput(job: &Job, node: &Node, cfg: &GangConfig) -> f64 {
+    let mut n_gpus = 0usize;
+    let mut x_min = f64::INFINITY;
+    for (g, c) in node.gang() {
+        let x = job.throughput_on(g);
+        // NaN fails the `>` too: a malformed row makes the node unusable
+        // rather than poisoning the plan.
+        if !(x > 0.0) {
+            return 0.0;
+        }
+        x_min = x_min.min(x);
+        n_gpus += c;
+    }
+    if n_gpus == 0 || !x_min.is_finite() {
+        return 0.0;
+    }
+    if x_min < cfg.min_efficiency * job.max_throughput() {
+        return 0.0;
+    }
+    x_min * (1.0 + cfg.marginal_efficiency * (n_gpus - 1) as f64)
+}
 
 /// The HadarE whole-node planner (see module docs).
 pub struct HadarE {
     /// Copies per job (usually = node count; Theorem 3's maximum).
     pub copies: u64,
+    /// Gang throughput model (bottleneck + sub-linear scaling).
+    pub gang: GangConfig,
+}
+
+/// Per-round placement tables, flat `Vec`s indexed by parent/node
+/// *position* (node ids need not be contiguous under cluster events).
+/// This is the zero-clone replacement for the three `BTreeMap`s the
+/// pre-rework planner probed per candidate.
+struct Tables {
+    /// Node at index `hi` already hosts a copy this round.
+    node_busy: Vec<bool>,
+    /// Copies handed out so far per parent index.
+    copies_used: Vec<u64>,
+    /// `placed[pi * n_nodes + hi]`: parent `pi` already has a copy on
+    /// node `hi`.
+    placed: Vec<bool>,
+    /// Row stride of `placed`.
+    n_nodes: usize,
+}
+
+impl Tables {
+    fn new(n_parents: usize, n_nodes: usize) -> Self {
+        Tables {
+            node_busy: vec![false; n_nodes],
+            copies_used: vec![0; n_parents],
+            placed: vec![false; n_parents * n_nodes],
+            n_nodes,
+        }
+    }
+
+    /// Place the next copy of `pid` on `node`, occupying its whole gang.
+    fn place(&mut self, plan: &mut RoundPlan, tracker: &JobTracker,
+             pid: JobId, pi: usize, hi: usize, node: &Node) {
+        let i = self.copies_used[pi] + 1;
+        let copy = tracker.ids.copy_id(pid, i);
+        let mut alloc = JobAllocation::new();
+        for (g, c) in node.gang() {
+            alloc.add(node.id, g, c);
+        }
+        plan.insert(copy, alloc);
+        self.node_busy[hi] = true;
+        self.copies_used[pi] = i;
+        self.placed[pi * self.n_nodes + hi] = true;
+    }
 }
 
 impl HadarE {
-    /// Planner with a per-parent copy budget.
+    /// Planner with a per-parent copy budget and the default
+    /// [`GangConfig`].
     pub fn new(copies: u64) -> Self {
-        HadarE { copies }
+        HadarE {
+            copies,
+            gang: GangConfig::default(),
+        }
+    }
+
+    /// Planner with explicit gang-model knobs.
+    pub fn with_gang(copies: u64, gang: GangConfig) -> Self {
+        HadarE { copies, gang }
     }
 
     /// Completion notification from the forking engine — the counterpart
@@ -46,134 +183,128 @@ impl HadarE {
     /// Assign nodes to parent jobs for this round.
     ///
     /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on node
-    /// `h` means node `h` trains `p`'s model this slot. All single-GPU
-    /// nodes (the paper's §VI clusters) — one copy occupies one node.
+    /// `h` means node `h` trains `p`'s model this slot on **all** of its
+    /// GPUs (whole-node gang).
     pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
                       -> RoundPlan {
-        // Parents with work left, by remaining steps (desc).
+        // Parents with work left, by remaining steps (desc; total_cmp so
+        // a degenerate row cannot panic the round, stable sort keeps id
+        // order on ties).
         let mut parents: Vec<(JobId, f64)> = tracker
             .parents()
             .filter(|(_, p)| !p.is_complete())
             .map(|(&id, p)| (id, p.remaining()))
             .collect();
-        parents.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        parents.sort_by(|a, b| b.1.total_cmp(&a.1));
         let mut plan = RoundPlan::new();
         if parents.is_empty() {
             return plan;
         }
 
-        // Node inventory: (node id, gpu type) — single-GPU nodes.
-        let nodes: Vec<(usize, GpuType)> = ctx
+        // Node inventory: every node with at least one GPU.
+        let nodes: Vec<&Node> = ctx
             .cluster
             .nodes
             .iter()
-            .filter_map(|n| n.primary_gpu().map(|g| (n.id, g)))
+            .filter(|n| n.total_gpus() > 0)
             .collect();
+        if nodes.is_empty() {
+            return plan;
+        }
 
-        // Payoff of placing parent p on node (h, g): throughput-weighted
-        // urgency — remaining work × speed, the greedy core of Hadar's
-        // price argument specialised to whole-node slots.
-        let job_of = |id: JobId| -> Option<&Job> { ctx.queue.get(id) };
-        let mut node_load: BTreeMap<usize, bool> = BTreeMap::new();
-        let mut copies_used: BTreeMap<JobId, u64> = BTreeMap::new();
-        let mut placed_on: BTreeMap<(JobId, usize), bool> = BTreeMap::new();
+        let n_p = parents.len();
+        let n_h = nodes.len();
 
-        let place = |pid: JobId, h: usize, g: GpuType,
-                         plan: &mut RoundPlan,
-                         node_load: &mut BTreeMap<usize, bool>,
-                         copies_used: &mut BTreeMap<JobId, u64>,
-                         placed_on: &mut BTreeMap<(JobId, usize), bool>| {
-            let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
-            let copy = tracker.ids.copy_id(pid, i);
-            let mut alloc = JobAllocation::new();
-            alloc.add(h, g, 1);
-            plan.insert(copy, alloc);
-            node_load.insert(h, true);
-            copies_used.insert(pid, i);
-            placed_on.insert((pid, h), true);
-        };
+        // Gang-throughput matrix, row-major [pi * n_h + hi]; 0.0 marks an
+        // unusable (parent, node) pair. Computed once — the passes below
+        // only do flat indexed reads.
+        let mut xg = vec![0.0f64; n_p * n_h];
+        for (pi, &(pid, _)) in parents.iter().enumerate() {
+            if let Some(job) = ctx.queue.get(pid) {
+                for (hi, &node) in nodes.iter().enumerate() {
+                    xg[pi * n_h + hi] = gang_throughput(job, node, &self.gang);
+                }
+            }
+        }
+
+        let mut t = Tables::new(n_p, n_h);
 
         // Pass 0: fairness — every unfinished parent first gets its best
         // still-free node (longest-remaining parent picks first). Without
         // this, one long job hogs every fast node and serialises the rest,
         // which is exactly what HadarE exists to avoid (§V-A: copies of
-        // *all* jobs run concurrently).
-        for &(pid, _) in &parents {
-            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+        // *all* jobs run concurrently). Ties keep the last node in
+        // inventory order (the historical `max_by` semantics).
+        for pi in 0..n_p {
+            if t.copies_used[pi] >= self.copies {
                 continue;
             }
-            let best = nodes
-                .iter()
-                .filter(|&&(h, _)| !node_load.get(&h).unwrap_or(&false))
-                .filter_map(|&(h, g)| {
-                    job_of(pid).map(|j| (h, g, j.throughput_on(g)))
-                })
-                .filter(|&(_, _, x)| x > 0.0)
-                .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
-            if let Some((h, g, _)) = best {
-                place(pid, h, g, &mut plan, &mut node_load,
-                      &mut copies_used, &mut placed_on);
+            let mut best: Option<(usize, f64)> = None;
+            for hi in 0..n_h {
+                if t.node_busy[hi] {
+                    continue;
+                }
+                let x = xg[pi * n_h + hi];
+                if x > 0.0
+                    && best
+                        .map_or(true, |(_, bx)| {
+                            x.total_cmp(&bx) != Ordering::Less
+                        })
+                {
+                    best = Some((hi, x));
+                }
+            }
+            if let Some((hi, _)) = best {
+                t.place(&mut plan, tracker, parents[pi].0, pi, hi,
+                        nodes[hi]);
             }
         }
 
-        // Build all candidate (score, parent, node, gpu) tuples.
-        let mut cands: Vec<(f64, JobId, usize, GpuType)> = Vec::new();
-        for &(pid, remaining) in &parents {
-            if let Some(job) = job_of(pid) {
-                for &(h, g) in &nodes {
-                    let x = job.throughput_on(g);
-                    if x > 0.0 {
-                        // Urgency: how much of the remaining work this
-                        // node can burn this slot.
-                        let burn = (x * ctx.slot_secs).min(remaining);
-                        cands.push((burn, pid, h, g));
-                    }
+        // Build all candidate (burn, parent idx, node idx) tuples. Burn is
+        // the throughput-weighted urgency — how much of the remaining work
+        // this node's gang can complete this slot — the greedy core of
+        // Hadar's price argument specialised to whole-node slots.
+        let mut cands: Vec<(f64, u32, u32)> =
+            Vec::with_capacity(n_p * n_h);
+        for (pi, &(_, remaining)) in parents.iter().enumerate() {
+            for hi in 0..n_h {
+                let x = xg[pi * n_h + hi];
+                if x > 0.0 {
+                    let burn = (x * ctx.slot_secs).min(remaining);
+                    cands.push((burn, pi as u32, hi as u32));
                 }
             }
         }
-        cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        cands.sort_by(|a, b| b.0.total_cmp(&a.0));
 
         // Pass 1: payoff-greedy with the per-parent copy budget.
-        for &(_, pid, h, g) in &cands {
-            if *node_load.get(&h).unwrap_or(&false) {
+        for &(_, pi, hi) in &cands {
+            let (pi, hi) = (pi as usize, hi as usize);
+            if t.node_busy[hi]
+                || t.copies_used[pi] >= self.copies
+                || t.placed[pi * n_h + hi]
+            {
                 continue;
             }
-            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
-                continue;
-            }
-            if placed_on.contains_key(&(pid, h)) {
-                continue;
-            }
-            place(pid, h, g, &mut plan, &mut node_load, &mut copies_used,
-                  &mut placed_on);
+            t.place(&mut plan, tracker, parents[pi].0, pi, hi, nodes[hi]);
         }
 
         // Pass 2: work conservation — fill any idle node with the parent
         // owning the most remaining work not already on that node
         // (corollary to Theorem 3: no idle node before the last round).
-        for &(h, g) in &nodes {
-            if *node_load.get(&h).unwrap_or(&false) {
+        for hi in 0..n_h {
+            if t.node_busy[hi] {
                 continue;
             }
-            for &(pid, _) in &parents {
-                if placed_on.contains_key(&(pid, h)) {
+            for pi in 0..n_p {
+                if t.placed[pi * n_h + hi]
+                    || t.copies_used[pi] >= self.copies
+                {
                     continue;
                 }
-                if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
-                    continue;
-                }
-                let ok = job_of(pid)
-                    .map(|j| j.throughput_on(g) > 0.0)
-                    .unwrap_or(false);
-                if ok {
-                    let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
-                    let copy = tracker.ids.copy_id(pid, i);
-                    let mut alloc = JobAllocation::new();
-                    alloc.add(h, g, 1);
-                    plan.insert(copy, alloc);
-                    node_load.insert(h, true);
-                    copies_used.insert(pid, i);
-                    placed_on.insert((pid, h), true);
+                if xg[pi * n_h + hi] > 0.0 {
+                    t.place(&mut plan, tracker, parents[pi].0, pi, hi,
+                            nodes[hi]);
                     break;
                 }
             }
@@ -191,9 +322,10 @@ mod tests {
     use crate::jobs::queue::JobQueue;
     use crate::jobs::throughput;
     use crate::trace::workload::cluster_gpu_pcie;
+    use std::collections::BTreeMap;
 
-    fn setup(n_parents: u64) -> (ClusterSpec, JobQueue, JobTracker) {
-        let cluster = ClusterSpec::testbed5();
+    fn setup_on(cluster: ClusterSpec, n_parents: u64, copies: u64)
+                -> (ClusterSpec, JobQueue, JobTracker) {
         let pairs = cluster_gpu_pcie(&cluster);
         let mut queue = JobQueue::new();
         let ids = ForkIds { max_job_count: 100 };
@@ -204,11 +336,17 @@ mod tests {
             tracker.register(
                 j.id,
                 j.total_iters(),
-                &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+                &(1..=copies)
+                    .map(|i| ids.copy_id(j.id, i))
+                    .collect::<Vec<_>>(),
             );
             queue.admit(j);
         }
         (cluster, queue, tracker)
+    }
+
+    fn setup(n_parents: u64) -> (ClusterSpec, JobQueue, JobTracker) {
+        setup_on(ClusterSpec::testbed5(), n_parents, 5)
     }
 
     fn ctx<'a>(queue: &'a JobQueue, cluster: &'a ClusterSpec)
@@ -290,5 +428,95 @@ mod tests {
         let mut h = HadarE::new(5);
         let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
         assert!(plan.scheduled_jobs().is_empty());
+    }
+
+    #[test]
+    fn sim60_round0_plan_occupies_all_60_gpus() {
+        // The bugfix's acceptance criterion: on the 15-node × 4-GPU
+        // simulated cluster, a round-0 plan with unfinished parents
+        // covers every GPU, not one per node.
+        let (cluster, queue, tracker) =
+            setup_on(ClusterSpec::sim60(), 3, 15);
+        let mut h = HadarE::new(15);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.total_gpus(), 60, "whole-node gangs cover 60 GPUs");
+        assert_eq!(plan.scheduled_jobs().len(), 15, "one copy per node");
+        for (_, alloc) in &plan.allocations {
+            assert_eq!(alloc.total_gpus(), 4, "each copy takes a full node");
+            assert_eq!(alloc.nodes().len(), 1, "a copy never spans nodes");
+        }
+    }
+
+    #[test]
+    fn gang_throughput_is_sublinear_and_bottlenecked() {
+        use crate::cluster::gpu::{GpuType, PcieGen};
+        let mut j = Job::new(0, DlModel::MiMa, 0.0, 1, 1, 100);
+        j.set_throughput(GpuType::K80, 10.0);
+        j.set_throughput(GpuType::V100, 40.0);
+        let cfg = GangConfig {
+            marginal_efficiency: 0.9,
+            min_efficiency: 0.0,
+        };
+        let one = Node::new(0, "k1", &[(GpuType::K80, 1)], PcieGen::Gen3);
+        let four = Node::new(1, "k4", &[(GpuType::K80, 4)], PcieGen::Gen3);
+        let x1 = gang_throughput(&j, &one, &cfg);
+        let x4 = gang_throughput(&j, &four, &cfg);
+        assert!((x1 - 10.0).abs() < 1e-12, "single GPU = per-GPU rate");
+        assert!((x4 - 10.0 * 3.7).abs() < 1e-9, "4 GPUs at 0.9 marginal");
+        assert!(x4 < 4.0 * x1, "not naively 4x");
+        // Bottleneck all-or-nothing: a mixed node with one unusable type
+        // is unusable as a whole.
+        let mut k80_only = j.clone();
+        k80_only.throughput.remove(&GpuType::V100);
+        let mixed = Node::new(
+            2,
+            "mix",
+            &[(GpuType::K80, 2), (GpuType::V100, 2)],
+            PcieGen::Gen3,
+        );
+        assert_eq!(gang_throughput(&k80_only, &mixed, &cfg), 0.0);
+        // min_efficiency floor rejects the slow node for a V100-anchored
+        // job: 10 < 0.5 * 40.
+        let strict = GangConfig {
+            marginal_efficiency: 0.9,
+            min_efficiency: 0.5,
+        };
+        assert_eq!(gang_throughput(&j, &four, &strict), 0.0);
+    }
+
+    #[test]
+    fn nan_throughput_parent_is_never_scheduled() {
+        // NaN-comparator regression (mirrors hadar.rs's
+        // nan_and_zero_throughput_rows_are_never_scheduled): a parent
+        // whose row is NaN must neither panic the round nor be placed;
+        // well-formed parents still fill the cluster.
+        use crate::cluster::gpu::GpuType;
+        let cluster = ClusterSpec::testbed5();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut queue = JobQueue::new();
+        let ids = ForkIds { max_job_count: 100 };
+        let mut tracker = JobTracker::new(ids);
+        for id in 0..2u64 {
+            let mut j = Job::new(id, DlModel::MiMa, 0.0, 1, 20, 100);
+            j.throughput = throughput::throughput_row(DlModel::MiMa, &pairs);
+            if id == 0 {
+                for g in GpuType::ALL {
+                    j.set_throughput(g, f64::NAN);
+                }
+            }
+            tracker.register(
+                j.id,
+                j.total_iters(),
+                &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+            );
+            queue.admit(j);
+        }
+        let mut h = HadarE::new(5);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.scheduled_jobs().len(), 5);
+        for id in plan.scheduled_jobs() {
+            assert_eq!(tracker.resolve(id), JobId(1),
+                       "only the well-formed parent runs");
+        }
     }
 }

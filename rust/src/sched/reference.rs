@@ -36,9 +36,19 @@
 //! baseline's cost (the maintenance is small next to the clones, rescans,
 //! and re-sorts this module preserves, but compare `speedup` with that
 //! grain of salt — see `docs/performance.md`).
+//!
+//! This module also freezes [`RefHadarE`] — the pre-gang HadarE planner,
+//! preserved when `sched::hadare` was generalised to whole-node gangs and
+//! reworked onto flat tables. On single-GPU clusters (where "one GPU" and
+//! "whole node" coincide) the reworked planner must match it plan for
+//! plan; on multi-GPU clusters the divergence *is* the bugfix (the frozen
+//! planner drives one GPU per node). Same two jobs as [`RefHadar`]:
+//! equivalence oracle (`rust/tests/prop_equivalence.rs`) and perf
+//! baseline (`sched::bench`'s `fork_*` cases).
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::state::ClusterState;
+use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId};
 use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::hadar::HadarConfig;
@@ -385,6 +395,154 @@ impl Scheduler for RefHadar {
     }
 }
 
+/// The frozen pre-gang HadarE planner (see module docs). One GPU slot per
+/// node (`primary_gpu`), per-round `BTreeMap` tables, a seven-argument
+/// placement closure — exactly as the planner stood before the whole-node
+/// gang rework. Must not be "improved".
+///
+/// Deliberate deviation, as with [`RefHadar`]: float comparators use
+/// `total_cmp` instead of the historical `partial_cmp().unwrap()`
+/// (identical ordering for non-NaN keys; a malformed row fails an
+/// equivalence case instead of panicking the oracle).
+pub struct RefHadarE {
+    /// Copies per job (usually = node count; Theorem 3's maximum).
+    pub copies: u64,
+}
+
+impl RefHadarE {
+    /// Reference planner with a per-parent copy budget.
+    pub fn new(copies: u64) -> Self {
+        RefHadarE { copies }
+    }
+
+    /// Historical `plan_round`: assigns one single-GPU slot per node via
+    /// the same fairness / payoff-greedy / work-conservation passes as
+    /// the live planner.
+    pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
+                      -> RoundPlan {
+        // Parents with work left, by remaining steps (desc).
+        let mut parents: Vec<(JobId, f64)> = tracker
+            .parents()
+            .filter(|(_, p)| !p.is_complete())
+            .map(|(&id, p)| (id, p.remaining()))
+            .collect();
+        parents.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let mut plan = RoundPlan::new();
+        if parents.is_empty() {
+            return plan;
+        }
+
+        // Node inventory: (node id, gpu type) — single-GPU nodes.
+        let nodes: Vec<(usize, GpuType)> = ctx
+            .cluster
+            .nodes
+            .iter()
+            .filter_map(|n| n.primary_gpu().map(|g| (n.id, g)))
+            .collect();
+
+        let job_of = |id: JobId| -> Option<&Job> { ctx.queue.get(id) };
+        let mut node_load: BTreeMap<usize, bool> = BTreeMap::new();
+        let mut copies_used: BTreeMap<JobId, u64> = BTreeMap::new();
+        let mut placed_on: BTreeMap<(JobId, usize), bool> = BTreeMap::new();
+
+        let place = |pid: JobId, h: usize, g: GpuType,
+                         plan: &mut RoundPlan,
+                         node_load: &mut BTreeMap<usize, bool>,
+                         copies_used: &mut BTreeMap<JobId, u64>,
+                         placed_on: &mut BTreeMap<(JobId, usize), bool>| {
+            let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
+            let copy = tracker.ids.copy_id(pid, i);
+            let mut alloc = JobAllocation::new();
+            alloc.add(h, g, 1);
+            plan.insert(copy, alloc);
+            node_load.insert(h, true);
+            copies_used.insert(pid, i);
+            placed_on.insert((pid, h), true);
+        };
+
+        // Pass 0: fairness — every unfinished parent first gets its best
+        // still-free node (longest-remaining parent picks first).
+        for &(pid, _) in &parents {
+            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                continue;
+            }
+            let best = nodes
+                .iter()
+                .filter(|&&(h, _)| !node_load.get(&h).unwrap_or(&false))
+                .filter_map(|&(h, g)| {
+                    job_of(pid).map(|j| (h, g, j.throughput_on(g)))
+                })
+                .filter(|&(_, _, x)| x > 0.0)
+                .max_by(|a, b| a.2.total_cmp(&b.2));
+            if let Some((h, g, _)) = best {
+                place(pid, h, g, &mut plan, &mut node_load,
+                      &mut copies_used, &mut placed_on);
+            }
+        }
+
+        // Build all candidate (score, parent, node, gpu) tuples.
+        let mut cands: Vec<(f64, JobId, usize, GpuType)> = Vec::new();
+        for &(pid, remaining) in &parents {
+            if let Some(job) = job_of(pid) {
+                for &(h, g) in &nodes {
+                    let x = job.throughput_on(g);
+                    if x > 0.0 {
+                        let burn = (x * ctx.slot_secs).min(remaining);
+                        cands.push((burn, pid, h, g));
+                    }
+                }
+            }
+        }
+        cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+
+        // Pass 1: payoff-greedy with the per-parent copy budget.
+        for &(_, pid, h, g) in &cands {
+            if *node_load.get(&h).unwrap_or(&false) {
+                continue;
+            }
+            if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                continue;
+            }
+            if placed_on.contains_key(&(pid, h)) {
+                continue;
+            }
+            place(pid, h, g, &mut plan, &mut node_load, &mut copies_used,
+                  &mut placed_on);
+        }
+
+        // Pass 2: work conservation — fill any idle node with the parent
+        // owning the most remaining work not already on that node.
+        for &(h, g) in &nodes {
+            if *node_load.get(&h).unwrap_or(&false) {
+                continue;
+            }
+            for &(pid, _) in &parents {
+                if placed_on.contains_key(&(pid, h)) {
+                    continue;
+                }
+                if copies_used.get(&pid).copied().unwrap_or(0) >= self.copies {
+                    continue;
+                }
+                let ok = job_of(pid)
+                    .map(|j| j.throughput_on(g) > 0.0)
+                    .unwrap_or(false);
+                if ok {
+                    let i = copies_used.get(&pid).copied().unwrap_or(0) + 1;
+                    let copy = tracker.ids.copy_id(pid, i);
+                    let mut alloc = JobAllocation::new();
+                    alloc.add(h, g, 1);
+                    plan.insert(copy, alloc);
+                    node_load.insert(h, true);
+                    copies_used.insert(pid, i);
+                    placed_on.insert((pid, h), true);
+                    break;
+                }
+            }
+        }
+        plan
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -414,5 +572,42 @@ mod tests {
         };
         let plan = s.schedule(&ctx);
         assert_eq!(plan.get(JobId(1)).unwrap().total_gpus(), 3);
+    }
+
+    #[test]
+    fn reference_hadare_drives_one_gpu_per_node() {
+        // The frozen planner's defining (buggy-on-multi-GPU) behaviour:
+        // on sim60 it books one GPU per node — 15, not 60. The live
+        // planner's divergence here is the bugfix; equivalence is only
+        // required on single-GPU clusters.
+        use crate::forking::forker::ForkIds;
+        use crate::jobs::throughput;
+        use crate::trace::workload::cluster_gpu_pcie;
+        let cluster = ClusterSpec::sim60();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut queue = JobQueue::new();
+        let ids = ForkIds { max_job_count: 100 };
+        let mut tracker = JobTracker::new(ids);
+        let mut j = Job::new(0, DlModel::MiMa, 0.0, 1, 20, 100);
+        j.throughput = throughput::throughput_row(DlModel::MiMa, &pairs);
+        tracker.register(
+            j.id,
+            j.total_iters(),
+            &(1..=15).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+        );
+        queue.admit(j);
+        let mut r = RefHadarE::new(15);
+        let ctx = RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 100_000.0,
+            queue: &queue,
+            active: &[],
+            cluster: &cluster,
+        };
+        let plan = r.plan_round(&ctx, &tracker);
+        assert_eq!(plan.scheduled_jobs().len(), 15);
+        assert_eq!(plan.total_gpus(), 15, "one GPU per node — the bug");
     }
 }

@@ -109,7 +109,8 @@ impl Scheduler for Tiresias {
             let qa = self.queue_of(a.id);
             let qb = self.queue_of(b.id);
             qa.cmp(&qb)
-                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+                // total_cmp: a NaN arrival must not panic the round.
+                .then(a.arrival.total_cmp(&b.arrival))
                 .then(a.id.cmp(&b.id))
         });
 
@@ -226,5 +227,21 @@ mod tests {
         let mut t = Tiresias::new();
         let _ = t.schedule(&ctx(&queue, &active, &cluster));
         assert!((t.attained[&JobId(1)] - 2.0 * 360.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_arrival_does_not_panic_the_fifo_sort() {
+        // NaN-comparator regression: the FIFO tie-break used
+        // partial_cmp().unwrap(), which panicked the round as soon as one
+        // job carried a NaN arrival. total_cmp must survive it and still
+        // place jobs.
+        let cluster = ClusterSpec::motivational();
+        let mut queue = JobQueue::new();
+        queue.admit(mk_job(1, 2, f64::NAN));
+        queue.admit(mk_job(2, 2, 0.0));
+        let active = vec![JobId(1), JobId(2)];
+        let mut t = Tiresias::new();
+        let plan = t.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(2)).is_some(), "well-formed job still runs");
     }
 }

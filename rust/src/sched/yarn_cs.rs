@@ -124,10 +124,8 @@ impl Scheduler for YarnCs {
             .filter(|j| !j.is_complete() && !self.running.contains_key(&j.id))
             .collect();
         waiting.sort_by(|a, b| {
-            a.arrival
-                .partial_cmp(&b.arrival)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
+            // total_cmp: a NaN arrival must not panic the round.
+            a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id))
         });
         let types = ctx.cluster.gpu_types();
         for job in waiting {

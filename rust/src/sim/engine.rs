@@ -332,7 +332,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
             finish_times.push(f);
         }
     }
-    finish_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    finish_times.sort_by(|a, b| a.total_cmp(b));
     let avail_total = integrate_capacity(&avail_log, ttd);
     Ok(SimResult {
         scheduler: scheduler.name().to_string(),

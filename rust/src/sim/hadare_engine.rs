@@ -2,12 +2,24 @@
 //! pure simulation (CRU/TTD/JCT figures) and the PJRT-backed emulation
 //! (which layers real training on the same schedule via `exec`).
 //!
-//! Per round: the HadarE planner assigns whole nodes to copies; the Job
-//! Tracker divides each parent's remaining steps across its scheduled
-//! copies in proportion to node throughput (§V-B); nodes burn their share
-//! (bounded by slot capacity and the restart overhead); the tracker
-//! aggregates completed steps. A parent finishes the moment its aggregated
-//! steps reach the target — possibly mid-slot ("early finish", §V-A).
+//! Per round: the HadarE planner assigns whole nodes to copies — every
+//! GPU of the node, per the node spec; the Job Tracker divides each
+//! parent's remaining steps across its scheduled copies in proportion to
+//! **gang** throughput ([`crate::sched::hadare::gang_throughput`]:
+//! bottleneck rule + sub-linear intra-node scaling, §V-B); nodes burn
+//! their share (bounded by gang slot capacity and the restart overhead);
+//! the tracker aggregates completed steps. A parent finishes the moment
+//! its aggregated steps reach the target — possibly mid-slot ("early
+//! finish", §V-A).
+//!
+//! Accounting is **per GPU**: a busy 4-GPU gang contributes 4 GPU-seconds
+//! per second to `busy_gpu_secs` and 4 × `slot_secs` to `alloc_gpu_secs`,
+//! so GRU/CRU/ANU measure the actual 60-GPU `sim60` cluster rather than
+//! its 15 nodes.
+//!
+//! Restart overhead is charged when a node switches *parents* (a model
+//! load); a node that idles a round keeps its loaded model, so resuming
+//! the same parent later is free.
 
 use crate::cluster::events::{ClusterTimeline, EventTimeline};
 use crate::cluster::spec::ClusterSpec;
@@ -15,7 +27,7 @@ use crate::forking::forker::{fork, ForkIds};
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
-use crate::sched::hadare::HadarE;
+use crate::sched::hadare::{gang_throughput, HadarE};
 use crate::sched::RoundCtx;
 use crate::sim::engine::{
     integrate_capacity, RoundJob, RoundRecord, SimConfig, SimResult,
@@ -35,9 +47,12 @@ pub struct CopyWork {
     pub parent: JobId,
     /// Node that hosted the copy this round.
     pub node: usize,
-    /// Steps this node completed this round.
+    /// GPUs in the node's gang (the copy occupies the whole node).
+    pub gpus: usize,
+    /// Steps this node's gang completed this round.
     pub steps: f64,
-    /// Seconds of the slot the node was busy.
+    /// Seconds of the slot the node's gang was busy (per node, not per
+    /// GPU — multiply by [`CopyWork::gpus`] for GPU-seconds).
     pub busy_secs: f64,
 }
 
@@ -106,7 +121,9 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
     let mut work_log = Vec::new();
     // Per-parent first-seen finish time.
     let mut finish: BTreeMap<JobId, f64> = BTreeMap::new();
-    // Copies previously bound to a node (restart overhead bookkeeping).
+    // Copy most recently bound to each node (restart-overhead
+    // bookkeeping). Entries persist while a node idles — the model stays
+    // loaded — and are dropped only when the node drains.
     let mut prev_binding: BTreeMap<usize, JobId> = BTreeMap::new();
 
     while !tracker.all_complete() && round < cfg.max_rounds {
@@ -151,19 +168,29 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             plan
         };
 
-        // Group scheduled copies by parent, collect (copy, node, x).
-        let mut per_parent: BTreeMap<JobId, Vec<(JobId, usize, f64)>> =
+        // Group scheduled copies by parent, collect
+        // (copy, node, gang size, gang throughput). A copy's allocation
+        // spans exactly one node (possibly several pools of it).
+        let mut per_parent: BTreeMap<JobId, Vec<(JobId, usize, usize, f64)>> =
             BTreeMap::new();
         for (&copy, alloc) in &plan.allocations {
             let parent = tracker.resolve(copy);
             let job = queue.get(parent).expect("parent job");
-            for (&(node, gpu), _) in &alloc.slots {
-                per_parent.entry(parent).or_default().push((
-                    copy,
-                    node,
-                    job.throughput_on(gpu),
-                ));
-            }
+            let node_id = alloc
+                .nodes()
+                .first()
+                .copied()
+                .expect("plan allocations are non-empty");
+            let node = view
+                .cluster()
+                .node(node_id)
+                .expect("planned node is in the current cluster");
+            per_parent.entry(parent).or_default().push((
+                copy,
+                node_id,
+                alloc.total_gpus(),
+                gang_throughput(job, node, &planner.gang),
+            ));
         }
 
         let mut rec = RoundRecord {
@@ -175,11 +202,9 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             avail_gpu_secs: view.cluster().total_gpus() as f64
                 * cfg.slot_secs,
         };
-        let mut new_binding: BTreeMap<usize, JobId> = BTreeMap::new();
-
         for (parent, assigned) in &per_parent {
             let throughputs: Vec<f64> =
-                assigned.iter().map(|&(_, _, x)| x).collect();
+                assigned.iter().map(|&(_, _, _, x)| x).collect();
             let shares =
                 tracker.divide_steps(*parent, &throughputs, cfg.slot_secs);
             let remaining_before =
@@ -187,27 +212,34 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             rec.jobs.insert(
                 *parent,
                 RoundJob {
-                    gpus: assigned.len(),
+                    gpus: assigned.iter().map(|&(_, _, g, _)| g).sum(),
                     remaining_before,
                     progressed: 0.0, // filled below as copies report
-                    node: assigned.first().map(|&(_, n, _)| n).unwrap_or(0),
+                    node: assigned
+                        .first()
+                        .map(|&(_, n, _, _)| n)
+                        .unwrap_or(0),
                 },
             );
-            for (&(copy, node, x), &share) in
+            for (&(copy, node, gpus, x), &share) in
                 assigned.iter().zip(shares.iter())
             {
-                // Restart overhead when the node switches models.
-                let switched = prev_binding.get(&node) != Some(&copy.clone())
-                    && prev_binding.get(&node).map(|c| tracker.resolve(*c))
-                        != Some(*parent);
+                // Restart overhead when the node switches *parents* — a
+                // model load. Which copy id carries the parent is
+                // irrelevant, and a node that idled keeps its model, so
+                // resuming the same parent later is free.
+                let switched = prev_binding
+                    .get(&node)
+                    .map(|c| tracker.resolve(*c))
+                    != Some(*parent);
                 let overhead =
                     if switched { cfg.restart_overhead } else { 0.0 };
                 let eff = (cfg.slot_secs - overhead).max(0.0);
                 let steps = share.min(x * eff);
                 let busy = if x > 0.0 { steps / x } else { 0.0 };
                 tracker.report_steps(copy, steps);
-                rec.busy_gpu_secs += busy;
-                rec.alloc_gpu_secs += cfg.slot_secs;
+                rec.busy_gpu_secs += busy * gpus as f64;
+                rec.alloc_gpu_secs += cfg.slot_secs * gpus as f64;
                 if let Some(rj) = rec.jobs.get_mut(parent) {
                     rj.progressed += steps;
                 }
@@ -216,10 +248,13 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
                     copy,
                     parent: *parent,
                     node,
+                    gpus,
                     steps,
                     busy_secs: busy,
                 });
-                new_binding.insert(node, copy);
+                // Idle nodes keep their previous binding (model stays
+                // loaded); only nodes used this round rebind.
+                prev_binding.insert(node, copy);
                 // Parent finishing mid-slot: early finish. Notify the
                 // planner (same completion protocol as the generic
                 // engine's [`crate::sched::Scheduler::job_completed`]) so
@@ -237,7 +272,6 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
 
         busy_total += rec.busy_gpu_secs;
         timeline.push(rec);
-        prev_binding = new_binding;
         round += 1;
         now += cfg.slot_secs;
     }
@@ -254,7 +288,7 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             finish_times.push(f);
         }
     }
-    finish_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    finish_times.sort_by(|a, b| a.total_cmp(b));
     let ttd = if last_finish > 0.0 { last_finish } else { now };
     // CRU denominator: allocated node-slots, with the final slot clamped
     // at the batch finish (a node is not "allocated" past the experiment).
@@ -303,6 +337,7 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::gpu::GpuType;
     use crate::jobs::model::DlModel;
     use crate::jobs::throughput;
     use crate::trace::workload::{cluster_gpu_pcie, physical_jobs};
@@ -391,17 +426,119 @@ mod tests {
 
     #[test]
     fn work_log_steps_match_tracker_totals() {
-        let cluster = ClusterSpec::testbed5();
+        // Gang throughput must not break §V-B conservation: summed
+        // work-log steps equal each parent's total, on the single-GPU
+        // testbed and the multi-GPU sim60 alike.
+        for cluster in [ClusterSpec::testbed5(), ClusterSpec::sim60()] {
+            let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
+            let res = run(&jobs, &cluster, &cfg(), None);
+            let mut per_parent: BTreeMap<JobId, f64> = BTreeMap::new();
+            for w in &res.work_log {
+                *per_parent.entry(w.parent).or_insert(0.0) += w.steps;
+            }
+            for j in &jobs {
+                let done = per_parent.get(&j.id).copied().unwrap_or(0.0);
+                assert!((done - j.total_iters()).abs() < 1e-6,
+                        "{}: parent {} steps {} vs {}", cluster.name, j.id,
+                        done, j.total_iters());
+            }
+        }
+    }
+
+    #[test]
+    fn sim60_round0_allocates_all_60_gpus() {
+        // The bugfix, engine-level: with unfinished parents, round 0
+        // books 60 GPU-slots (4 per node on all 15 nodes) — the pre-gang
+        // engine booked 15 and let 45 GPUs idle against `nominal_gpus =
+        // 60` in GRU.
+        let cluster = ClusterSpec::sim60();
         let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
         let res = run(&jobs, &cluster, &cfg(), None);
-        let mut per_parent: BTreeMap<JobId, f64> = BTreeMap::new();
-        for w in &res.work_log {
-            *per_parent.entry(w.parent).or_insert(0.0) += w.steps;
+        let r0 = &res.sim.timeline[0];
+        assert!((r0.alloc_gpu_secs - 60.0 * 90.0).abs() < 1e-6,
+                "round 0 allocates every GPU: {}", r0.alloc_gpu_secs);
+        let mut gpus_by_node: BTreeMap<usize, usize> = BTreeMap::new();
+        for w in res.work_log.iter().filter(|w| w.round == 0) {
+            *gpus_by_node.entry(w.node).or_insert(0) += w.gpus;
         }
-        for j in &jobs {
-            let done = per_parent.get(&j.id).copied().unwrap_or(0.0);
-            assert!((done - j.total_iters()).abs() < 1e-6,
-                    "parent {} steps {} vs {}", j.id, done, j.total_iters());
-        }
+        assert_eq!(gpus_by_node.len(), 15, "every node hosts a copy");
+        assert!(gpus_by_node.values().all(|&g| g == 4),
+                "each copy takes the node's whole 4-GPU gang");
+        assert_eq!(res.sim.jct.len(), 3, "all parents complete");
+    }
+
+    #[test]
+    fn theorem3_gru_monotone_on_multi_gpu_cluster() {
+        // Theorem 3 re-asserted on sim60: GRU_1 < GRU_x < GRU_n, and a
+        // budget beyond the node count changes nothing (one copy per
+        // node per parent).
+        let cluster = ClusterSpec::sim60();
+        let mut j = Job::new(0, DlModel::Transformer, 0.0, 1, 500, 100);
+        j.set_throughput(GpuType::V100, 3.0);
+        j.set_throughput(GpuType::P100, 2.0);
+        j.set_throughput(GpuType::K80, 1.0);
+        let gru = |copies: u64| {
+            run(std::slice::from_ref(&j), &cluster, &cfg(), Some(copies))
+                .sim
+                .gru
+        };
+        let g1 = gru(1);
+        let g5 = gru(5);
+        let g15 = gru(15);
+        let g20 = gru(20);
+        assert!(g1 < g5, "{g1} !< {g5}");
+        assert!(g5 < g15, "{g5} !< {g15}");
+        assert!((g15 - g20).abs() < 1e-12,
+                "budget beyond node count is inert: {g15} vs {g20}");
+        assert!(g15 > 0.9, "full fan-out keeps ~every GPU busy: {g15}");
+    }
+
+    #[test]
+    fn idle_node_resuming_same_parent_pays_no_restart() {
+        // Regression for the restart-overhead mischarge: bindings were
+        // wiped every round, so a node that idled re-paid the overhead
+        // for the parent it already had loaded. Two maintenance windows
+        // on the fast node force the slow node through a
+        // host→idle→resume cycle of the same parent.
+        use crate::cluster::events::{EventKind, EventTimeline};
+        use crate::cluster::gpu::PcieGen;
+        use crate::cluster::node::Node;
+        let cluster = ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "v", &[(GpuType::V100, 1)], PcieGen::Gen3),
+                Node::new(1, "k", &[(GpuType::K80, 1)], PcieGen::Gen3),
+            ],
+        );
+        let mut p = Job::new(0, DlModel::Lstm, 0.0, 1, 20, 100); // 2000 it
+        p.set_throughput(GpuType::V100, 2.0);
+        p.set_throughput(GpuType::K80, 1.0);
+        let mut events = EventTimeline::empty();
+        // Fast node away rounds 1-2 and again rounds 4-5.
+        events.push(90.0, EventKind::Maintenance { node: 0, duration: 180.0 });
+        events.push(360.0, EventKind::Maintenance { node: 0, duration: 180.0 });
+        let res = run_with_events(std::slice::from_ref(&p), &cluster,
+                                  &events, &cfg(), Some(1))
+            .unwrap();
+        // Round 1: the K80 node loads the model for the first time — it
+        // pays the 10 s overhead (80 of 90 s at 1 it/s).
+        let w1: Vec<&CopyWork> =
+            res.work_log.iter().filter(|w| w.round == 1).collect();
+        assert_eq!(w1.len(), 1);
+        assert_eq!(w1[0].node, 1);
+        assert!((w1[0].steps - 80.0).abs() < 1e-9, "first load pays: {:?}",
+                w1[0]);
+        // Round 3: back on the V100 node; the K80 node idles but keeps
+        // its loaded model.
+        assert!(res.work_log.iter().any(|w| w.round == 3 && w.node == 0));
+        // Round 4: the K80 node resumes the *same* parent — no second
+        // overhead charge (the full 90 steps, not 80).
+        let w4: Vec<&CopyWork> =
+            res.work_log.iter().filter(|w| w.round == 4).collect();
+        assert_eq!(w4.len(), 1);
+        assert_eq!(w4[0].node, 1);
+        assert!((w4[0].steps - 90.0).abs() < 1e-9,
+                "idle node keeps its model loaded: {:?}", w4[0]);
+        assert_eq!(res.sim.jct.len(), 1, "the job still completes");
     }
 }

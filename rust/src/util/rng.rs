@@ -192,10 +192,9 @@ impl ZipfTable {
     /// Draw one rank (0-based).
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self
-            .cdf
-            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
-        {
+        // total_cmp: the cdf is finite by construction, but a total
+        // order keeps a degenerate table from panicking the draw.
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

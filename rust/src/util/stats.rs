@@ -24,7 +24,8 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN samples sort to the ends instead of panicking.
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -55,7 +56,7 @@ pub fn max(xs: &[f64]) -> f64 {
 /// samples `<= p` for each point. Used for Fig. 4 (completion CDF).
 pub fn ecdf_at(samples: &[f64], points: &[f64]) -> Vec<f64> {
     let mut sorted: Vec<f64> = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     points
         .iter()
         .map(|p| {
@@ -176,5 +177,22 @@ mod tests {
         assert!((s.stddev() - stddev(&xs)).abs() < 1e-9);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_percentile_or_ecdf() {
+        // NaN-comparator regression: the sorts used partial_cmp().unwrap()
+        // and panicked on the first NaN sample. total_cmp orders NaN to
+        // the ends; the well-formed quantiles stay sane.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0, "negative-NaN-free input keeps min at 1.0");
+        let _ = percentile(&xs, 50.0);
+        let _ = median(&xs);
+        let cdf = ecdf_at(&xs, &[0.0, 2.0, 100.0]);
+        assert_eq!(cdf.len(), 3);
+        for w in cdf.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
     }
 }

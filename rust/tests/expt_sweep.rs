@@ -144,6 +144,47 @@ fn event_seed_sweeps_are_byte_identical_across_worker_counts() {
 }
 
 #[test]
+fn hadare_on_sim60_fills_the_whole_multi_gpu_cluster() {
+    // The PR-4 bugfix seen from the sweep surface: `hadare` on the
+    // 15-node × 4-GPU `sim60` preset (reachable with `scheduler:
+    // "hadare"` in any spec) drives whole-node gangs, so its GRU is no
+    // longer capped at 15/60 of nominal capacity. This is the sweep-smoke
+    // grid CI runs via examples/sweep_hadare.json.
+    let spec = SweepSpec {
+        name: "hadare-sim60".into(),
+        schedulers: vec!["hadar".into(), "hadare".into()],
+        clusters: vec![ClusterRef::Preset("sim60".into())],
+        workloads: vec![WorkloadSpec::Trace {
+            n_jobs: 30,
+            max_gpus: 4,
+            all_at_start: true,
+            hours_scale: 0.1,
+        }],
+        slots_secs: vec![360.0],
+        seeds: vec![7],
+        events: vec![EventsRef::None],
+        base: SimConfig {
+            max_rounds: 50_000,
+            ..Default::default()
+        },
+    };
+    let results = runner::run_sweep(&spec, 0).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(r.result.jct.len(), 30, "{}: all jobs complete",
+                   r.spec.id());
+    }
+    let hadare = results
+        .iter()
+        .find(|r| r.spec.scheduler == "hadare")
+        .unwrap();
+    // Pre-fix, 45 of 60 GPUs idled: GRU could never exceed 0.25. With
+    // whole-node gangs and an all-at-start backlog it starts near 1.0.
+    assert!(hadare.result.gru > 0.25,
+            "hadare gru {} still node-capped", hadare.result.gru);
+}
+
+#[test]
 fn figure_sweeps_reproduce_the_serial_grids() {
     // The refactored figures route through the parallel runner; their
     // specs must still describe the exact historical grids.

@@ -6,15 +6,24 @@
 //! through drain preemptions and completions. This is the non-negotiable
 //! gate on the perf rework: any divergence is a solver bug, not a tuning
 //! difference.
+//!
+//! The same contract pins the whole-node-gang HadarE planner to its
+//! frozen single-GPU predecessor (`sched::reference::RefHadarE`) on
+//! single-GPU clusters, where "one GPU" and "whole node" coincide — the
+//! rework must be behaviour-preserving there, and only there (on
+//! multi-GPU clusters the divergence *is* the PR-4 bugfix).
 
 use hadar::cluster::gpu::{GpuType, PcieGen};
 use hadar::cluster::node::Node;
 use hadar::cluster::spec::ClusterSpec;
+use hadar::forking::forker::ForkIds;
+use hadar::forking::tracker::JobTracker;
 use hadar::jobs::job::{Job, JobId};
 use hadar::jobs::model::DlModel;
 use hadar::jobs::queue::JobQueue;
 use hadar::sched::hadar::{Hadar, HadarConfig};
-use hadar::sched::reference::RefHadar;
+use hadar::sched::hadare::HadarE;
+use hadar::sched::reference::{RefHadar, RefHadarE};
 use hadar::sched::{RoundCtx, RoundPlan, Scheduler};
 use hadar::util::prop::{check_no_shrink, Config};
 use hadar::util::rng::Rng;
@@ -195,6 +204,117 @@ fn prop_incremental_rounds_with_preemption_identical() {
                     if let Some(&id) = scheduled.first() {
                         opt.preempt(id);
                         reference.preempt(id);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------------- HadarE
+
+/// Random *single-GPU* cluster: one of the paper's §VI clusters
+/// (`aws5`, `testbed5`) or a random 2-8-node mix of one-GPU nodes — the
+/// domain on which the gang rework must be behaviour-preserving.
+fn gen_single_gpu_cluster(rng: &mut Rng) -> ClusterSpec {
+    match rng.below(3) {
+        0 => ClusterSpec::aws5(),
+        1 => ClusterSpec::testbed5(),
+        _ => {
+            let n = rng.range_u(2, 8) as usize;
+            let nodes = (0..n)
+                .map(|id| {
+                    let t = *rng.choice(&TYPES);
+                    Node::new(id, &format!("s{id}"), &[(t, 1)],
+                              PcieGen::Gen3)
+                })
+                .collect();
+            ClusterSpec::new("rand-single", nodes)
+        }
+    }
+}
+
+/// Random HadarE parent: a throughput entry for most of the cluster's
+/// types (some missing — heterogeneous support), all present entries
+/// positive.
+fn gen_parent(rng: &mut Rng, id: u64, cluster: &ClusterSpec) -> Job {
+    let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, rng.range_u(1, 10), 50);
+    for (ti, &g) in cluster.gpu_types().iter().enumerate() {
+        if ti == 0 || rng.f64() < 0.85 {
+            j.set_throughput(g, rng.range_f(0.5, 60.0));
+        }
+    }
+    j
+}
+
+/// Whole-node HadarE equivalence on single-GPU clusters over ≥70 seeded
+/// scenarios: the flat-table gang planner and the frozen `RefHadarE`
+/// must agree plan for plan across multiple rounds, with copy progress
+/// (including mid-run completions) advancing the shared tracker between
+/// rounds and the copy budget varying from starved (1) to beyond the
+/// node count.
+#[test]
+fn prop_hadare_single_gpu_plans_identical() {
+    check_no_shrink(
+        Config { cases: 70, seed: 0x5EED3 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = gen_single_gpu_cluster(&mut rng);
+            let n_nodes = cluster.nodes.len() as u64;
+            let copies = rng.range_u(1, n_nodes + 2);
+            let ids = ForkIds { max_job_count: 64 };
+            let mut tracker = JobTracker::new(ids);
+            let mut queue = JobQueue::new();
+            let n_parents = rng.range_u(1, 8);
+            for id in 0..n_parents {
+                let j = gen_parent(&mut rng, id, &cluster);
+                tracker.register(
+                    j.id,
+                    j.total_iters(),
+                    &(1..=copies)
+                        .map(|i| ids.copy_id(j.id, i))
+                        .collect::<Vec<_>>(),
+                );
+                queue.admit(j);
+            }
+            let mut opt = HadarE::new(copies);
+            let mut reference = RefHadarE::new(copies);
+            let slot = 360.0;
+
+            for round in 0..4u64 {
+                let (p_opt, p_ref) = {
+                    let c = ctx(round as f64 * slot, &queue, &[], &cluster);
+                    (
+                        opt.plan_round(&c, &tracker),
+                        reference.plan_round(&c, &tracker),
+                    )
+                };
+                if !plans_equal(&p_opt, &p_ref) {
+                    return Err(format!(
+                        "round {round} (copies {copies}): plans diverged: \
+                         opt {:?} vs ref {:?}",
+                        p_opt.allocations, p_ref.allocations
+                    ));
+                }
+                if p_opt.allocations.is_empty() {
+                    break; // everything finished
+                }
+                // Advance: each scheduled copy reports a random share of
+                // its single-GPU slot capacity (occasionally a huge jump
+                // so mid-run parent completions are exercised).
+                for (&copy, alloc) in &p_opt.allocations {
+                    let parent = tracker.resolve(copy);
+                    if let Some(j) = queue.get(parent) {
+                        let g = alloc.gpu_types()[0];
+                        let x = j.throughput_on(g);
+                        let steps = if rng.f64() < 0.1 {
+                            1e9
+                        } else {
+                            x * slot * rng.f64()
+                        };
+                        tracker.report_steps(copy, steps);
                     }
                 }
             }
