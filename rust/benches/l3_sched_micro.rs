@@ -27,7 +27,7 @@ fn main() {
     let results = schedbench::run_suite(false);
     print!("{}", schedbench::render(&results));
     for r in &results {
-        assert!(r.plans_equal, "{}: plans diverged", r.name);
+        assert!(r.plans_equal, "{}: row invariant broken", r.name);
     }
     let dp_min = results
         .iter()

@@ -110,6 +110,42 @@ impl ClusterSpec {
         ClusterSpec::new("scaled", nodes)
     }
 
+    /// Two-pool **big-node** preset for partial-node HadarE (per-pool
+    /// gangs): 4 nodes, each carrying 8 GPUs as two 4-GPU pools
+    /// (V100 + P100) — 32 GPUs total. With whole-node gangs one parent
+    /// monopolises all 8 GPUs of a node (and runs at the bottleneck of
+    /// the slower pool); with `share_nodes` two parents can hold one
+    /// pool each, which is the scenario the `big8` tests and the
+    /// `expt`/CI sweep smoke drive. See [`ClusterSpec::big`] for the
+    /// scaled family.
+    pub fn big8() -> Self {
+        let mut c = ClusterSpec::big(4, 4);
+        c.name = "big8".into();
+        c
+    }
+
+    /// Scaled two-pool big-node family: `nodes` nodes, each with a
+    /// `gpus_per_pool`-GPU V100 pool and a `gpus_per_pool`-GPU P100 pool
+    /// (`2 * nodes * gpus_per_pool` GPUs total). Preset syntax in sweep
+    /// specs: `big:<nodes>x<gpus_per_pool>`; `sched::bench`'s
+    /// `fork_shared_*` rows plan on `big:20x4`.
+    pub fn big(nodes: usize, gpus_per_pool: usize) -> Self {
+        let spec_nodes = (0..nodes)
+            .map(|id| {
+                Node::new(
+                    id,
+                    &format!("big-{id}"),
+                    &[
+                        (GpuType::V100, gpus_per_pool),
+                        (GpuType::P100, gpus_per_pool),
+                    ],
+                    PcieGen::Gen3,
+                )
+            })
+            .collect();
+        ClusterSpec::new(&format!("big{nodes}x{gpus_per_pool}"), spec_nodes)
+    }
+
     /// ~256-node synthetic cluster for the scheduler microbenches
     /// (`benches/l3_sched_micro.rs`, `hadar bench`): 64 nodes each of
     /// V100/P100/K80/T4, 4 GPUs per node — 256 nodes, 1024 GPUs. Big
@@ -256,6 +292,26 @@ mod tests {
         assert_eq!(c.nodes.len(), 256);
         assert_eq!(c.total_gpus(), 1024);
         assert_eq!(c.gpu_types().len(), 4);
+    }
+
+    #[test]
+    fn big8_is_four_two_pool_nodes() {
+        let c = ClusterSpec::big8();
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.total_gpus(), 32);
+        for n in &c.nodes {
+            assert_eq!(n.total_gpus(), 8);
+            let gang: Vec<(GpuType, usize)> = n.gang().collect();
+            assert_eq!(
+                gang,
+                vec![(GpuType::V100, 4), (GpuType::P100, 4)],
+                "each big node carries two 4-GPU pools"
+            );
+        }
+        let scaled = ClusterSpec::big(20, 4);
+        assert_eq!(scaled.nodes.len(), 20);
+        assert_eq!(scaled.total_gpus(), 160);
+        assert_eq!(scaled.name, "big20x4");
     }
 
     #[test]

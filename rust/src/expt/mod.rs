@@ -13,9 +13,10 @@
 //!   ([`spec::EventsRef`]) replays node churn — explicit timelines or
 //!   seeded generators — identically under every scheduler.
 //! * [`runner`] — executes scenarios on a `std::thread` worker pool (one
-//!   `sim::engine::run` / `sim::hadare_engine::run` per scenario), with
-//!   per-scenario seeds and result ordering that is independent of thread
-//!   interleaving.
+//!   `sim::engine::run` / `sim::hadare_engine::run_with_gang` per
+//!   scenario; `hadare` plans whole-node gangs, `hadare-shared`
+//!   partial-node per-pool gangs), with per-scenario seeds and result
+//!   ordering that is independent of thread interleaving.
 //! * [`artifact`] — per-scenario JSONL summaries (TTD, JCT percentiles,
 //!   GRU/CRU, scheduling wall time) plus a run manifest, and a loader to
 //!   re-aggregate a finished sweep without re-running it.

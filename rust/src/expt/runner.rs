@@ -12,6 +12,7 @@
 use crate::expt::spec::{ScenarioSpec, SweepSpec};
 use crate::jobs::queue::JobQueue;
 use crate::sched;
+use crate::sched::hadare::GangConfig;
 use crate::sim::engine::{self, SimResult};
 use crate::sim::hadare_engine;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -43,20 +44,29 @@ pub fn effective_workers(requested: usize, n: usize) -> usize {
 
 /// Run a single scenario to completion.
 ///
-/// `hadare` is special-cased onto [`hadare_engine::run_with_events`] (it
-/// schedules forked copies onto whole nodes, which the generic engine
-/// cannot express); every other scheduler goes through [`sched::by_name`]
-/// and the generic [`engine::run_with_events`]. The scenario's `events`
-/// axis is materialised here — a churn generator expands against the
-/// resolved cluster, so every scheduler in a sweep replays the identical
-/// trace. Timelines are not recorded — sweeps only keep summary metrics.
+/// `hadare` and `hadare-shared` are special-cased onto
+/// [`hadare_engine::run_with_gang`] (they schedule forked copies onto
+/// gang slots, which the generic engine cannot express) — `hadare-shared`
+/// with partial-node per-pool gangs ([`GangConfig::shared`]), so a sweep
+/// can compare whole-node vs shared big nodes on the identical trace;
+/// every other scheduler goes through [`sched::by_name`] and the generic
+/// [`engine::run_with_events`]. The scenario's `events` axis is
+/// materialised here — a churn generator expands against the resolved
+/// cluster, so every scheduler in a sweep replays the identical trace.
+/// Timelines are not recorded — sweeps only keep summary metrics.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<SimResult, String> {
     let cluster = spec.cluster.resolve()?;
     let jobs = spec.workload.build_jobs(&cluster, spec.seed)?;
     let events = spec.events.build(&cluster)?;
-    if spec.scheduler.eq_ignore_ascii_case("hadare") {
-        Ok(hadare_engine::run_with_events(&jobs, &cluster, &events,
-                                          &spec.sim, None)?
+    let shared = spec.scheduler.eq_ignore_ascii_case("hadare-shared");
+    if shared || spec.scheduler.eq_ignore_ascii_case("hadare") {
+        let gang = if shared {
+            GangConfig::shared()
+        } else {
+            GangConfig::default()
+        };
+        Ok(hadare_engine::run_with_gang(&jobs, &cluster, &events,
+                                        &spec.sim, None, gang)?
             .sim)
     } else {
         let mut scheduler = sched::by_name(&spec.scheduler)?;
@@ -208,6 +218,44 @@ mod tests {
         };
         let res = run_scenario(&spec).unwrap();
         assert_eq!(res.jct.len(), 1);
+    }
+
+    #[test]
+    fn hadare_shared_routes_with_per_pool_gangs() {
+        // `hadare-shared` must reach the forking engine in partial-node
+        // mode: on the two-pool big8 preset it books 32 GPUs in round 0
+        // (per-pool gangs), where `hadare` books the same via whole-node
+        // gangs — and both complete the mix.
+        let mk = |scheduler: &str| ScenarioSpec {
+            scheduler: scheduler.into(),
+            cluster: ClusterRef::Preset("big8".into()),
+            workload: WorkloadSpec::Mix {
+                name: "M-3".into(),
+                epochs_scale: 0.2,
+            },
+            seed: 0,
+            sim: SimConfig {
+                slot_secs: 90.0,
+                ..Default::default()
+            },
+            events: EventsRef::None,
+        };
+        let shared = run_scenario(&mk("hadare-shared")).unwrap();
+        let whole = run_scenario(&mk("hadare")).unwrap();
+        assert_eq!(shared.scheduler, "hadare-shared");
+        assert_eq!(whole.scheduler, "hadare");
+        assert_eq!(shared.jct.len(), 3);
+        assert_eq!(whole.jct.len(), 3);
+        // Round 0 (three active parents): per-pool gangs book all 32
+        // GPUs across 8 sub-gang allocations; whole-node gangs book the
+        // same GPUs as 4 node-wide allocations. The per-parent GPU sums
+        // expose the difference: under sharing no parent holds a whole
+        // 8-GPU node to itself unless it spans several nodes in 4-GPU
+        // pools.
+        let r0 = &shared.timeline[0];
+        let booked: usize = r0.jobs.values().map(|rj| rj.gpus).sum();
+        assert_eq!(booked, 32, "shared round 0 books every GPU");
+        assert!(r0.jobs.values().all(|rj| rj.gpus % 4 == 0));
     }
 
     #[test]

@@ -23,8 +23,9 @@ use crate::trace::workload::{materialize, physical_jobs};
 use crate::util::json::{self, Json};
 
 /// A cluster, either by preset name (`"sim60"`, `"aws5"`, `"testbed5"`,
-/// `"motivational"`, `"scaled:<nodes_per_type>x<gpus_per_node>"`) or as an
-/// inline [`ClusterSpec`] JSON object.
+/// `"motivational"`, `"scaled:<nodes_per_type>x<gpus_per_node>"`,
+/// `"big8"`, `"big:<nodes>x<gpus_per_pool>"`) or as an inline
+/// [`ClusterSpec`] JSON object.
 #[derive(Clone, Debug)]
 pub enum ClusterRef {
     /// A named preset (resolved by [`preset`]).
@@ -81,6 +82,7 @@ pub fn preset(name: &str) -> Result<ClusterSpec, String> {
         "aws5" => Ok(ClusterSpec::aws5()),
         "testbed5" => Ok(ClusterSpec::testbed5()),
         "motivational" => Ok(ClusterSpec::motivational()),
+        "big8" => Ok(ClusterSpec::big8()),
         other => {
             if let Some(rest) = other.strip_prefix("scaled:") {
                 if let Some((a, b)) = rest.split_once('x') {
@@ -96,9 +98,23 @@ pub fn preset(name: &str) -> Result<ClusterSpec, String> {
                     return Ok(ClusterSpec::scaled(npt, gpn));
                 }
             }
+            if let Some(rest) = other.strip_prefix("big:") {
+                if let Some((a, b)) = rest.split_once('x') {
+                    let n: usize = a
+                        .parse()
+                        .map_err(|_| format!("bad big preset '{other}'"))?;
+                    let gpp: usize = b
+                        .parse()
+                        .map_err(|_| format!("bad big preset '{other}'"))?;
+                    if n == 0 || gpp == 0 {
+                        return Err(format!("bad big preset '{other}'"));
+                    }
+                    return Ok(ClusterSpec::big(n, gpp));
+                }
+            }
             Err(format!(
                 "unknown cluster preset '{other}' (known: sim60, aws5, \
-                 testbed5, motivational, scaled:<n>x<g>)"
+                 testbed5, motivational, scaled:<n>x<g>, big8, big:<n>x<g>)"
             ))
         }
     }
@@ -356,8 +372,9 @@ pub fn sim_from_json(v: &Json, base: SimConfig) -> SimConfig {
 /// authoritative (the sweep's slot axis writes into it).
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
-    /// Scheduler name (see [`crate::sched::by_name`]; `hadare` routes
-    /// through the forking engine).
+    /// Scheduler name (see [`crate::sched::by_name`]; `hadare` and
+    /// `hadare-shared` route through the forking engine — the latter with
+    /// partial-node per-pool gangs).
     pub scheduler: String,
     /// The cluster to simulate on.
     pub cluster: ClusterRef,
@@ -567,7 +584,7 @@ impl SweepSpec {
                 if !crate::sched::is_known(name) {
                     return Err(format!(
                         "unknown scheduler '{name}' (known: yarn-cs, \
-                         tiresias, gavel, hadar, hadare)"
+                         tiresias, gavel, hadar, hadare, hadare-shared)"
                     ));
                 }
                 Ok(name.to_string())
@@ -656,9 +673,13 @@ mod tests {
         assert_eq!(preset("sim60").unwrap().total_gpus(), 60);
         assert_eq!(preset("aws5").unwrap().total_gpus(), 5);
         assert_eq!(preset("scaled:2x4").unwrap().total_gpus(), 2 * 4 * 3);
+        assert_eq!(preset("big8").unwrap().total_gpus(), 32);
+        assert_eq!(preset("big:3x2").unwrap().total_gpus(), 3 * 2 * 2);
         assert!(preset("nope").is_err());
         assert!(preset("scaled:0x4").is_err());
         assert!(preset("scaled:abc").is_err());
+        assert!(preset("big:0x4").is_err());
+        assert!(preset("big:abc").is_err());
     }
 
     #[test]

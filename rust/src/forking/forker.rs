@@ -40,13 +40,14 @@ impl ForkIds {
 }
 
 /// Fork one parent into `copies` copy-jobs. Each copy occupies a single
-/// *whole node* when scheduled — the planner books every GPU of the host
-/// from the node spec, so `gpus_requested` is nominal (1, the paper's §VI
-/// single-GPU-node clusters) and ignored by the forking engine. Copies
-/// start with the parent's throughput row; their share of work is
-/// (re)assigned by the Job Tracker each round in proportion to gang
-/// throughput, so copies carry the *parent's* total length for utility
-/// purposes.
+/// gang slot when scheduled — the whole host node by default (the
+/// planner books every GPU from the node spec), or one `(node, pool)`
+/// sub-gang under partial-node HadarE — so `gpus_requested` is nominal
+/// (1, the paper's §VI single-GPU-node clusters) and ignored by the
+/// forking engine. Copies start with the parent's throughput row; their
+/// share of work is (re)assigned by the Job Tracker each round in
+/// proportion to sub-gang throughput, so copies carry the *parent's*
+/// total length for utility purposes.
 pub fn fork(parent: &Job, copies: u64, ids: ForkIds) -> Vec<Job> {
     (1..=copies)
         .map(|i| {

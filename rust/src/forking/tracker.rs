@@ -119,14 +119,15 @@ impl JobTracker {
     }
 
     /// §V-B work division: split the parent's remaining steps across the
-    /// nodes assigned this round, proportionally to their **gang**
-    /// throughputs — iterations/sec of the parent's model on the whole
-    /// node ([`crate::sched::hadare::gang_throughput`]: bottleneck rule ×
-    /// sub-linear multi-GPU scaling; on single-GPU nodes this is the
-    /// per-GPU rate). A 4×K80 gang therefore draws a larger share than a
-    /// 1×K80 node, but *not* naively 4×. The shares are what each copy
-    /// should complete in the next slot, capped by the gang's slot
-    /// capacity `x·L`.
+    /// gangs assigned this round, proportionally to their **sub-gang**
+    /// throughputs — iterations/sec of the parent's model on what each
+    /// copy actually booked ([`crate::sched::hadare::alloc_throughput`]:
+    /// bottleneck rule × sub-linear multi-GPU scaling; a whole node by
+    /// default, one `(node, pool)` under partial-node gangs, and on
+    /// single-GPU nodes simply the per-GPU rate). A 4×K80 gang therefore
+    /// draws a larger share than a 1×K80 node, but *not* naively 4×. The
+    /// shares are what each copy should complete in the next slot, capped
+    /// by the gang's slot capacity `x·L`.
     pub fn divide_steps(&self, parent: JobId, node_throughputs: &[f64],
                         slot_secs: f64) -> Vec<f64> {
         let remaining = match self.parents.get(&parent) {

@@ -202,10 +202,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         std::fs::write(&out, bench::to_json(&results, quick).pretty())?;
         println!("wrote {out}");
     }
-    // A divergence is a solver bug, not a perf number — fail loudly so CI
-    // smoke runs catch it even without the property tests.
+    // A broken row invariant (plan divergence, or a partial-node plan
+    // that failed its occupancy check) is a solver bug, not a perf
+    // number — fail loudly so CI smoke runs catch it even without the
+    // property tests.
     if let Some(bad) = results.iter().find(|r| !r.plans_equal) {
-        anyhow::bail!("{}: reference and optimised plans diverged", bad.name);
+        anyhow::bail!("{}: bench row invariant broken", bad.name);
     }
     Ok(())
 }

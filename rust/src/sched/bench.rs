@@ -2,18 +2,25 @@
 //! ([`crate::sched::hadar`]) timed against the frozen pre-optimisation
 //! baseline ([`crate::sched::reference`]), on both solve paths (exact DP
 //! at queue ≤ `dp_job_cap`, payoff-density greedy at 100-1000 jobs) and
-//! two clusters (`sim60`, `synthetic256`) — plus the **fork path**: the
-//! flat-table HadarE whole-node planner against the frozen
-//! [`crate::sched::reference::RefHadarE`] on a 60-node *single-GPU*
-//! cluster (the equivalence domain, so `plans_equal` stays meaningful;
-//! large copy-count rounds are exactly where the old per-candidate
-//! `BTreeMap` probes dominated).
+//! two clusters (`sim60`, `synthetic256`) — plus two **fork paths**:
+//!
+//! * `fork_*`: the flat-table HadarE whole-node planner against the
+//!   frozen [`crate::sched::reference::RefHadarE`] on a 60-node
+//!   *single-GPU* cluster (the equivalence domain, so `plans_equal` stays
+//!   meaningful; large copy-count rounds are exactly where the old
+//!   per-candidate `BTreeMap` probes dominated);
+//! * `fork_shared_*`: the partial-node (per-pool) planner against the
+//!   whole-node planner on the two-pool `big:20x4` big-node cluster —
+//!   here the plans *intentionally* differ (sharing big nodes is the
+//!   point), so the row's `plans_equal` bit instead records the
+//!   partial-node occupancy invariant: the shared plan books every GPU
+//!   and at least one node carries two parents.
 //!
 //! Shared by the `hadar bench` CLI subcommand (which emits
 //! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
 //! `docs/performance.md`) and `benches/l3_sched_micro.rs`. Every
-//! measurement also cross-checks that both solvers produced the *same
-//! plan* — a broken equivalence shows up in the artifact, not just in the
+//! measurement also cross-checks its row invariant — a broken
+//! equivalence (or occupancy) shows up in the artifact, not just in the
 //! property tests.
 
 use crate::cluster::spec::ClusterSpec;
@@ -21,7 +28,7 @@ use crate::forking::forker::ForkIds;
 use crate::forking::tracker::JobTracker;
 use crate::jobs::queue::JobQueue;
 use crate::sched::hadar::Hadar;
-use crate::sched::hadare::HadarE;
+use crate::sched::hadare::{GangConfig, HadarE};
 use crate::sched::reference::{RefHadar, RefHadarE};
 use crate::sched::{RoundCtx, RoundPlan, Scheduler};
 use crate::trace::philly::{generate, TraceConfig};
@@ -41,13 +48,22 @@ pub struct CaseResult {
     pub cluster: String,
     /// Queued jobs in the decision.
     pub jobs: usize,
-    /// Reference (pre-optimisation) decision latency, best-of-N ms.
+    /// Reference (pre-optimisation / whole-node) decision latency,
+    /// best-of-N ms.
     pub ref_ms: f64,
     /// Optimised decision latency, best-of-N ms.
     pub opt_ms: f64,
     /// `ref_ms / opt_ms`.
     pub speedup: f64,
-    /// Whether both solvers returned identical [`RoundPlan`]s.
+    /// Which correctness invariant [`CaseResult::plans_equal`] reports:
+    /// `"plans-equal"` (identical [`RoundPlan`]s from both solvers, the
+    /// `dp`/`greedy`/`fork` rows) or `"occupancy"` (the partial-node
+    /// invariant — every GPU booked, at least one node shared by two
+    /// parents — on `fork-shared` rows, where whole-node and per-pool
+    /// plans intentionally differ). Keeps `BENCH_sched.json`
+    /// self-describing for artifact-diffing tools.
+    pub check: &'static str,
+    /// Whether the row's invariant (see [`CaseResult::check`]) held.
     pub plans_equal: bool,
 }
 
@@ -130,12 +146,23 @@ fn fork_tracker(queue: &JobQueue, copies: u64) -> JobTracker {
     tracker
 }
 
+/// Which planner a fork-path measurement times.
+#[derive(Clone, Copy)]
+enum ForkPlanner {
+    /// The frozen pre-gang `RefHadarE`.
+    Reference,
+    /// The live planner in whole-node compatibility mode.
+    WholeNode,
+    /// The live planner with partial-node (per-pool) gangs.
+    Shared,
+}
+
 /// Best-of-`iters` wall time of one HadarE `plan_round`, fresh planner
 /// per iteration. Returns (best ms, the last plan).
 fn time_hadare_decision(
     iters: usize,
     copies: u64,
-    use_reference: bool,
+    planner: ForkPlanner,
     ctx: &RoundCtx,
     tracker: &JobTracker,
 ) -> (f64, RoundPlan) {
@@ -143,14 +170,44 @@ fn time_hadare_decision(
     let mut plan = RoundPlan::new();
     for _ in 0..iters.max(1) {
         let t0 = Instant::now();
-        plan = if use_reference {
-            RefHadarE::new(copies).plan_round(ctx, tracker)
-        } else {
-            HadarE::new(copies).plan_round(ctx, tracker)
+        plan = match planner {
+            ForkPlanner::Reference => {
+                RefHadarE::new(copies).plan_round(ctx, tracker)
+            }
+            ForkPlanner::WholeNode => {
+                HadarE::new(copies).plan_round(ctx, tracker)
+            }
+            ForkPlanner::Shared => {
+                HadarE::with_gang(copies, GangConfig::shared())
+                    .plan_round(ctx, tracker)
+            }
         };
         best = best.min(t0.elapsed().as_secs_f64() * 1e3);
     }
     (best, plan)
+}
+
+/// The `fork-shared` row invariant: the per-pool plan books every GPU of
+/// `cluster` and at least one node carries copies of two different
+/// parents.
+fn shared_plan_invariant(plan: &RoundPlan, cluster: &ClusterSpec,
+                         tracker: &JobTracker) -> bool {
+    if plan.total_gpus() != cluster.total_gpus() {
+        return false;
+    }
+    let mut parents_by_node: std::collections::BTreeMap<
+        usize,
+        std::collections::BTreeSet<crate::jobs::job::JobId>,
+    > = std::collections::BTreeMap::new();
+    for (&copy, alloc) in &plan.allocations {
+        for node in alloc.nodes() {
+            parents_by_node
+                .entry(node)
+                .or_default()
+                .insert(tracker.resolve(copy));
+        }
+    }
+    parents_by_node.values().any(|ps| ps.len() >= 2)
 }
 
 /// Run the full comparison suite. `quick` trims the grid and iteration
@@ -182,6 +239,7 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
             ref_ms,
             opt_ms,
             speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            check: "plans-equal",
             plans_equal: ref_plan.allocations == opt_plan.allocations,
         });
     }
@@ -204,10 +262,10 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
             active: &active,
             cluster: &cluster,
         };
-        let (ref_ms, ref_plan) =
-            time_hadare_decision(iters, copies, true, &ctx, &tracker);
-        let (opt_ms, opt_plan) =
-            time_hadare_decision(iters, copies, false, &ctx, &tracker);
+        let (ref_ms, ref_plan) = time_hadare_decision(
+            iters, copies, ForkPlanner::Reference, &ctx, &tracker);
+        let (opt_ms, opt_plan) = time_hadare_decision(
+            iters, copies, ForkPlanner::WholeNode, &ctx, &tracker);
         out.push(CaseResult {
             name: format!("fork_{}_{n_jobs}jobs", cluster.name),
             path: "fork",
@@ -216,7 +274,47 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
             ref_ms,
             opt_ms,
             speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            check: "plans-equal",
             plans_equal: ref_plan.allocations == opt_plan.allocations,
+        });
+    }
+
+    // Fork-shared path: partial-node (per-pool) planning vs whole-node
+    // planning on the two-pool big-node cluster. `ref` times the
+    // whole-node mode, `opt` the per-pool mode (which plans 2x the slots
+    // on this cluster); the row's boolean is the occupancy invariant, not
+    // plan equality — see the module docs.
+    let shared_sizes: &[usize] = if quick { &[16] } else { &[16, 64] };
+    for &n_jobs in shared_sizes {
+        let cluster = ClusterSpec::big(20, 4);
+        let copies = cluster.nodes.len() as u64;
+        let queue = case_queue(&cluster, n_jobs);
+        let tracker = fork_tracker(&queue, copies);
+        let active = queue.active_at(0.0);
+        let ctx = RoundCtx {
+            round: 0,
+            now: 0.0,
+            slot_secs: 360.0,
+            horizon: 1e7,
+            queue: &queue,
+            active: &active,
+            cluster: &cluster,
+        };
+        let (ref_ms, _) = time_hadare_decision(
+            iters, copies, ForkPlanner::WholeNode, &ctx, &tracker);
+        let (opt_ms, opt_plan) = time_hadare_decision(
+            iters, copies, ForkPlanner::Shared, &ctx, &tracker);
+        out.push(CaseResult {
+            name: format!("fork_shared_{}_{n_jobs}jobs", cluster.name),
+            path: "fork-shared",
+            cluster: cluster.name.clone(),
+            jobs: n_jobs,
+            ref_ms,
+            opt_ms,
+            speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            check: "occupancy",
+            plans_equal: shared_plan_invariant(&opt_plan, &cluster,
+                                               &tracker),
         });
     }
     out
@@ -226,7 +324,7 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
 pub fn render(results: &[CaseResult]) -> String {
     let mut out = String::from(
         "case                            path    jobs    ref ms    opt ms  \
-         speedup  plans\n",
+         speedup  check\n",
     );
     for r in results {
         out.push_str(&format!(
@@ -237,7 +335,7 @@ pub fn render(results: &[CaseResult]) -> String {
             r.ref_ms,
             r.opt_ms,
             r.speedup,
-            if r.plans_equal { "equal" } else { "DIFFER" },
+            if r.plans_equal { "ok" } else { "BROKEN" },
         ));
     }
     out
@@ -256,6 +354,7 @@ pub fn to_json(results: &[CaseResult], quick: bool) -> Json {
                 .set("ref_ms", r.ref_ms)
                 .set("opt_ms", r.opt_ms)
                 .set("speedup", r.speedup)
+                .set("check", r.check)
                 .set("plans_equal", r.plans_equal)
         })
         .collect();
@@ -276,9 +375,20 @@ mod tests {
         assert!(results.iter().any(|r| r.path == "greedy"));
         assert!(results.iter().any(|r| r.path == "fork"),
                 "hadare ref-vs-opt row present");
-        assert!(results.iter().any(|r| r.cluster == "synthetic256"));
+        assert!(results.iter().any(|r| r.path == "fork-shared"),
+                "partial-node big-cluster row present");
         for r in &results {
-            assert!(r.plans_equal, "{}: plans diverged", r.name);
+            let want = if r.path == "fork-shared" {
+                "occupancy"
+            } else {
+                "plans-equal"
+            };
+            assert_eq!(r.check, want, "{}: check label", r.name);
+        }
+        assert!(results.iter().any(|r| r.cluster == "synthetic256"));
+        assert!(results.iter().any(|r| r.cluster == "big20x4"));
+        for r in &results {
+            assert!(r.plans_equal, "{}: row invariant broken", r.name);
             assert!(r.ref_ms >= 0.0 && r.opt_ms >= 0.0);
         }
         let table = render(&results);
@@ -295,6 +405,7 @@ mod tests {
             ref_ms: 1.5,
             opt_ms: 0.3,
             speedup: 5.0,
+            check: "plans-equal",
             plans_equal: true,
         }];
         let text = to_json(&results, true).pretty();
@@ -303,6 +414,7 @@ mod tests {
         assert_eq!(v.get("quick").as_bool(), Some(true));
         let case = v.get("cases").at(0);
         assert_eq!(case.get("jobs").as_usize(), Some(8));
+        assert_eq!(case.get("check").as_str(), Some("plans-equal"));
         assert_eq!(case.get("plans_equal").as_bool(), Some(true));
         assert_eq!(case.get("speedup").as_f64(), Some(5.0));
     }

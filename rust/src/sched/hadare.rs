@@ -1,26 +1,59 @@
 //! **HadarE** (paper §V) — Hadar enhanced with job forking.
 //!
 //! Every unfinished parent job has `n` forked copies (for an `n`-node
-//! cluster); each round HadarE assigns *whole nodes* to copies so that no
-//! node idles while any parent has work left (Theorem 3 / its corollary).
-//! A copy scheduled on node `h` occupies **every GPU of `h`** — the
-//! per-pool counts come from the node spec ([`Node::gang`]), not from a
-//! single representative slot, so on a multi-GPU cluster (`sim60`'s
-//! 15 × 4-GPU nodes) a round-0 plan covers all 60 GPUs, not 15.
+//! cluster); each round HadarE assigns **gang slots** to copies so that no
+//! *node* idles while any parent has work left (Theorem 3 / its
+//! corollary; see the shared-mode caveat below for why conservation is
+//! per node, not per slot). What a slot is depends on
+//! [`GangConfig::share_nodes`]:
+//!
+//! * `share_nodes = false` (**whole-node compatibility mode**, the
+//!   default): one slot per node; a copy scheduled on node `h` occupies
+//!   **every GPU of `h`** — the per-pool counts come from the node spec
+//!   ([`Node::gang`]), so on a multi-GPU cluster (`sim60`'s 15 × 4-GPU
+//!   nodes) a round-0 plan covers all 60 GPUs, not 15.
+//! * `share_nodes = true` (**partial-node / per-pool mode**): one slot
+//!   per `(node, pool)` — a copy occupies one GPU pool of its host, so
+//!   two or more parents can share a big node in the same round. On an
+//!   8-GPU two-pool node, whole-node gangs let one parent monopolise the
+//!   node while other parents queue — exactly the fragmentation-driven
+//!   under-utilization Hadar/HadarE exist to eliminate (PAPER.md §V,
+//!   Theorem 3); per-pool slots hand each pool to a different parent.
+//!   On clusters whose nodes carry a single pool (every paper preset:
+//!   `aws5`, `testbed5`, `sim60`, `scaled:NxG`) the two modes coincide
+//!   slot-for-slot and produce identical plans.
+//!
+//!   Caveat: the one-copy-per-parent-per-*node* rule still applies, so
+//!   with fewer active parents than pools per node some pools idle (a
+//!   lone surviving parent holds at most one pool of each node, where a
+//!   whole-node gang would hold them all). Work conservation in shared
+//!   mode is therefore per *node*, not per slot; idle pools book no
+//!   GPU-seconds, so CRU (busy/allocated) is unaffected, but the
+//!   single-parent tail of a trace can drain slower than under
+//!   whole-node gangs. Same-parent multi-pool sub-gangs are the
+//!   ROADMAP's named follow-up.
 //!
 //! Scheduling reuses Hadar's machinery over the copy queue with two extra
 //! constraints:
 //!
-//! * at most one copy of a given parent per node (copies exist to run on
-//!   *separate* nodes);
-//! * work-conservation: after the payoff-driven pass, any still-idle node
+//! * at most one copy of a given parent per **node** (copies exist to run
+//!   on *separate* machines — two pools of one node never host two copies
+//!   of the same parent, that would consolidate a model with itself);
+//! * work-conservation: after the payoff-driven pass, any still-idle slot
 //!   is given a copy of the parent with the most remaining work that is
-//!   not yet on that node.
+//!   not yet on that slot's node.
+//!
+//! Parents are planned only once they have **arrived** (`job.arrival <=
+//! ctx.now`): the forking engine registers every parent with the tracker
+//! up front, so the planner filters by arrival rather than training jobs
+//! before they exist.
 //!
 //! ## Gang throughput
 //!
-//! A whole-node gang's rate ([`gang_throughput`]) follows the same rules
-//! Hadar applies to its gangs:
+//! A gang's rate — [`gang_throughput`] for a whole node,
+//! [`pool_throughput`] for one pool, [`alloc_throughput`] for whatever a
+//! plan actually booked — follows the same rules Hadar applies to its
+//! gangs:
 //!
 //! * **bottleneck (Eq. 1b)** — every GPU in the gang advances at the
 //!   slowest *usable* type's pace; a node carrying any type the job
@@ -50,6 +83,7 @@
 //! division + aggregation + consolidation happen in the engine through the
 //! [`crate::forking::JobTracker`].
 
+use crate::cluster::gpu::GpuType;
 use crate::cluster::node::Node;
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId};
@@ -57,7 +91,7 @@ use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::RoundCtx;
 use std::cmp::Ordering;
 
-/// Knobs of the whole-node gang throughput model (see module docs).
+/// Knobs of the gang throughput/placement model (see module docs).
 #[derive(Clone, Copy, Debug)]
 pub struct GangConfig {
     /// Fraction of a full GPU each GPU beyond the first contributes to
@@ -65,10 +99,16 @@ pub struct GangConfig {
     /// `1.0` = perfectly linear scaling; the default models the intra-node
     /// gradient-sync overhead of data-parallel training.
     pub marginal_efficiency: f64,
-    /// Reject nodes whose bottleneck throughput is below this fraction of
+    /// Reject gangs whose bottleneck throughput is below this fraction of
     /// the job's best single-GPU throughput — identical semantics to
     /// [`crate::sched::hadar::HadarConfig::min_efficiency`].
     pub min_efficiency: f64,
+    /// Partial-node mode: plan per-`(node, pool)` sub-gangs so several
+    /// parents can share a big node. `false` (the default) is the
+    /// whole-node compatibility mode, pinned plan-for-plan to
+    /// [`crate::sched::reference::RefHadarE`] on single-GPU clusters by
+    /// `rust/tests/prop_equivalence.rs`.
+    pub share_nodes: bool,
 }
 
 impl Default for GangConfig {
@@ -76,8 +116,39 @@ impl Default for GangConfig {
         GangConfig {
             marginal_efficiency: 0.9,
             min_efficiency: 0.0,
+            share_nodes: false,
         }
     }
+}
+
+impl GangConfig {
+    /// The partial-node (per-pool) configuration with the default
+    /// throughput knobs — what the `hadare-shared` sweep scheduler runs.
+    pub fn shared() -> Self {
+        GangConfig {
+            share_nodes: true,
+            ..GangConfig::default()
+        }
+    }
+}
+
+/// Shared tail of the gang rate model, so the three public rating
+/// functions cannot drift apart: a bottleneck of `x_min` it/s over
+/// `n_gpus` GPUs — empty gangs and zero/NaN/infinite bottlenecks are
+/// unusable, the `min_efficiency` floor rejects wasteful placements, and
+/// each GPU beyond the first contributes `marginal_efficiency` of a full
+/// one.
+fn scaled_rate(job: &Job, x_min: f64, n_gpus: usize,
+               cfg: &GangConfig) -> f64 {
+    // NaN fails the `>` too: a malformed row makes the gang unusable
+    // rather than poisoning the plan.
+    if n_gpus == 0 || !(x_min > 0.0) || !x_min.is_finite() {
+        return 0.0;
+    }
+    if x_min < cfg.min_efficiency * job.max_throughput() {
+        return 0.0;
+    }
+    x_min * (1.0 + cfg.marginal_efficiency * (n_gpus - 1) as f64)
 }
 
 /// Iterations/second of `job` when one forked copy occupies the whole of
@@ -90,70 +161,118 @@ pub fn gang_throughput(job: &Job, node: &Node, cfg: &GangConfig) -> f64 {
     let mut x_min = f64::INFINITY;
     for (g, c) in node.gang() {
         let x = job.throughput_on(g);
-        // NaN fails the `>` too: a malformed row makes the node unusable
-        // rather than poisoning the plan.
+        // The early return (not `min`, which would discard a NaN) makes
+        // any unusable pool poison the whole node.
         if !(x > 0.0) {
             return 0.0;
         }
         x_min = x_min.min(x);
         n_gpus += c;
     }
-    if n_gpus == 0 || !x_min.is_finite() {
-        return 0.0;
-    }
-    if x_min < cfg.min_efficiency * job.max_throughput() {
-        return 0.0;
-    }
-    x_min * (1.0 + cfg.marginal_efficiency * (n_gpus - 1) as f64)
+    scaled_rate(job, x_min, n_gpus, cfg)
 }
 
-/// The HadarE whole-node planner (see module docs).
+/// Iterations/second of `job` when one forked copy occupies a single
+/// `count`-GPU pool of type `gpu` — the per-pool slot of partial-node
+/// mode. Same model as [`gang_throughput`] with a one-type gang: no
+/// bottleneck across pools (the copy touches only this one), the
+/// `min_efficiency` floor, and sub-linear multi-GPU scaling. Returns
+/// `0.0` for an empty pool or a zero/NaN throughput row.
+pub fn pool_throughput(job: &Job, gpu: GpuType, count: usize,
+                       cfg: &GangConfig) -> f64 {
+    scaled_rate(job, job.throughput_on(gpu), count, cfg)
+}
+
+/// Iterations/second of `job` on whatever sub-gang `alloc` actually
+/// booked: the bottleneck rule across the allocation's pools, the
+/// `min_efficiency` floor, and sub-linear scaling over its total GPU
+/// count. For a whole-node allocation this equals [`gang_throughput`] of
+/// the host; for a per-pool allocation it equals [`pool_throughput`] of
+/// that pool. The forking engine rates every scheduled copy through this,
+/// so its accounting is mode-agnostic.
+pub fn alloc_throughput(job: &Job, alloc: &JobAllocation,
+                        cfg: &GangConfig) -> f64 {
+    let mut n_gpus = 0usize;
+    let mut x_min = f64::INFINITY;
+    for (&(_, g), &c) in alloc.slots.iter() {
+        let x = job.throughput_on(g);
+        if !(x > 0.0) {
+            return 0.0;
+        }
+        x_min = x_min.min(x);
+        n_gpus += c;
+    }
+    scaled_rate(job, x_min, n_gpus, cfg)
+}
+
+/// The HadarE gang planner (see module docs): whole-node slots by
+/// default, per-`(node, pool)` slots under [`GangConfig::share_nodes`].
 pub struct HadarE {
     /// Copies per job (usually = node count; Theorem 3's maximum).
     pub copies: u64,
-    /// Gang throughput model (bottleneck + sub-linear scaling).
+    /// Gang throughput model (bottleneck + sub-linear scaling) and the
+    /// whole-node vs per-pool placement mode.
     pub gang: GangConfig,
 }
 
-/// Per-round placement tables, flat `Vec`s indexed by parent/node
+/// One placeable gang slot: a whole node (compatibility mode) or a
+/// single GPU pool of it (partial-node mode).
+struct GangSlot<'a> {
+    /// Index into the planner's node inventory — the at-most-one-copy-
+    /// per-parent-per-**node** exclusion is keyed by this, not by slot.
+    hi: usize,
+    /// The host node.
+    node: &'a Node,
+    /// `Some((type, count))` books that pool only; `None` books the
+    /// node's whole gang.
+    pool: Option<(GpuType, usize)>,
+}
+
+/// Per-round placement tables, flat `Vec`s indexed by parent/slot/node
 /// *position* (node ids need not be contiguous under cluster events).
 /// This is the zero-clone replacement for the three `BTreeMap`s the
 /// pre-rework planner probed per candidate.
 struct Tables {
-    /// Node at index `hi` already hosts a copy this round.
-    node_busy: Vec<bool>,
+    /// Slot at index `si` already hosts a copy this round.
+    slot_busy: Vec<bool>,
     /// Copies handed out so far per parent index.
     copies_used: Vec<u64>,
     /// `placed[pi * n_nodes + hi]`: parent `pi` already has a copy on
-    /// node `hi`.
+    /// node `hi` (on *any* of its pools).
     placed: Vec<bool>,
     /// Row stride of `placed`.
     n_nodes: usize,
 }
 
 impl Tables {
-    fn new(n_parents: usize, n_nodes: usize) -> Self {
+    fn new(n_parents: usize, n_nodes: usize, n_slots: usize) -> Self {
         Tables {
-            node_busy: vec![false; n_nodes],
+            slot_busy: vec![false; n_slots],
             copies_used: vec![0; n_parents],
             placed: vec![false; n_parents * n_nodes],
             n_nodes,
         }
     }
 
-    /// Place the next copy of `pid` on `node`, occupying its whole gang.
+    /// Place the next copy of `pid` on `slot`, occupying its pool (or the
+    /// host's whole gang in compatibility mode).
     fn place(&mut self, plan: &mut RoundPlan, tracker: &JobTracker,
-             pid: JobId, pi: usize, hi: usize, node: &Node) {
+             pid: JobId, pi: usize, si: usize, slot: &GangSlot) {
         let i = self.copies_used[pi] + 1;
         let copy = tracker.ids.copy_id(pid, i);
         let mut alloc = JobAllocation::new();
-        for (g, c) in node.gang() {
-            alloc.add(node.id, g, c);
+        match slot.pool {
+            Some((g, c)) => alloc.add(slot.node.id, g, c),
+            None => {
+                for (g, c) in slot.node.gang() {
+                    alloc.add(slot.node.id, g, c);
+                }
+            }
         }
         plan.insert(copy, alloc);
-        self.node_busy[hi] = true;
+        self.slot_busy[si] = true;
         self.copies_used[pi] = i;
-        self.placed[pi * self.n_nodes + hi] = true;
+        self.placed[pi * self.n_nodes + slot.hi] = true;
     }
 }
 
@@ -180,19 +299,27 @@ impl HadarE {
     /// future per-parent planner state has one place to be dropped.
     pub fn job_completed(&mut self, _parent: JobId) {}
 
-    /// Assign nodes to parent jobs for this round.
+    /// Assign gang slots to parent jobs for this round.
     ///
-    /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on node
-    /// `h` means node `h` trains `p`'s model this slot on **all** of its
-    /// GPUs (whole-node gang).
+    /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on slot
+    /// `s` means `s`'s host trains `p`'s model this slot on the slot's
+    /// GPUs — **all** of the node's GPUs in whole-node mode, one pool of
+    /// them under [`GangConfig::share_nodes`].
     pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
                       -> RoundPlan {
-        // Parents with work left, by remaining steps (desc; total_cmp so
-        // a degenerate row cannot panic the round, stable sort keeps id
-        // order on ties).
+        // Parents with work left that have *arrived*, by remaining steps
+        // (desc; total_cmp so a degenerate row cannot panic the round,
+        // stable sort keeps id order on ties). The engine registers every
+        // parent with the tracker up front, so arrival gates here — a
+        // parent with `arrival > now` must not train before it exists.
         let mut parents: Vec<(JobId, f64)> = tracker
             .parents()
             .filter(|(_, p)| !p.is_complete())
+            .filter(|&(&id, _)| {
+                ctx.queue
+                    .get(id)
+                    .map_or(false, |j| j.arrival <= ctx.now)
+            })
             .map(|(&id, p)| (id, p.remaining()))
             .collect();
         parents.sort_by(|a, b| b.1.total_cmp(&a.1));
@@ -212,99 +339,131 @@ impl HadarE {
             return plan;
         }
 
+        // Slot inventory: one whole-node slot per node, or one slot per
+        // (node, pool) in partial-node mode. Slots of one node are
+        // adjacent and in pool (type) order, so single-pool clusters
+        // produce the identical slot list in both modes.
+        let mut slots: Vec<GangSlot> = Vec::new();
+        for (hi, &node) in nodes.iter().enumerate() {
+            if self.gang.share_nodes {
+                for (g, c) in node.gang() {
+                    slots.push(GangSlot {
+                        hi,
+                        node,
+                        pool: Some((g, c)),
+                    });
+                }
+            } else {
+                slots.push(GangSlot {
+                    hi,
+                    node,
+                    pool: None,
+                });
+            }
+        }
+        if slots.is_empty() {
+            return plan;
+        }
+
         let n_p = parents.len();
         let n_h = nodes.len();
+        let n_s = slots.len();
 
-        // Gang-throughput matrix, row-major [pi * n_h + hi]; 0.0 marks an
-        // unusable (parent, node) pair. Computed once — the passes below
+        // Gang-throughput matrix, row-major [pi * n_s + si]; 0.0 marks an
+        // unusable (parent, slot) pair. Computed once — the passes below
         // only do flat indexed reads.
-        let mut xg = vec![0.0f64; n_p * n_h];
+        let mut xg = vec![0.0f64; n_p * n_s];
         for (pi, &(pid, _)) in parents.iter().enumerate() {
             if let Some(job) = ctx.queue.get(pid) {
-                for (hi, &node) in nodes.iter().enumerate() {
-                    xg[pi * n_h + hi] = gang_throughput(job, node, &self.gang);
+                for (si, slot) in slots.iter().enumerate() {
+                    xg[pi * n_s + si] = match slot.pool {
+                        Some((g, c)) => {
+                            pool_throughput(job, g, c, &self.gang)
+                        }
+                        None => gang_throughput(job, slot.node, &self.gang),
+                    };
                 }
             }
         }
 
-        let mut t = Tables::new(n_p, n_h);
+        let mut t = Tables::new(n_p, n_h, n_s);
 
         // Pass 0: fairness — every unfinished parent first gets its best
-        // still-free node (longest-remaining parent picks first). Without
-        // this, one long job hogs every fast node and serialises the rest,
+        // still-free slot (longest-remaining parent picks first). Without
+        // this, one long job hogs every fast slot and serialises the rest,
         // which is exactly what HadarE exists to avoid (§V-A: copies of
-        // *all* jobs run concurrently). Ties keep the last node in
+        // *all* jobs run concurrently). Ties keep the last slot in
         // inventory order (the historical `max_by` semantics).
         for pi in 0..n_p {
             if t.copies_used[pi] >= self.copies {
                 continue;
             }
             let mut best: Option<(usize, f64)> = None;
-            for hi in 0..n_h {
-                if t.node_busy[hi] {
+            for si in 0..n_s {
+                if t.slot_busy[si] || t.placed[pi * n_h + slots[si].hi] {
                     continue;
                 }
-                let x = xg[pi * n_h + hi];
+                let x = xg[pi * n_s + si];
                 if x > 0.0
                     && best
                         .map_or(true, |(_, bx)| {
                             x.total_cmp(&bx) != Ordering::Less
                         })
                 {
-                    best = Some((hi, x));
+                    best = Some((si, x));
                 }
             }
-            if let Some((hi, _)) = best {
-                t.place(&mut plan, tracker, parents[pi].0, pi, hi,
-                        nodes[hi]);
+            if let Some((si, _)) = best {
+                t.place(&mut plan, tracker, parents[pi].0, pi, si,
+                        &slots[si]);
             }
         }
 
-        // Build all candidate (burn, parent idx, node idx) tuples. Burn is
+        // Build all candidate (burn, parent idx, slot idx) tuples. Burn is
         // the throughput-weighted urgency — how much of the remaining work
-        // this node's gang can complete this slot — the greedy core of
-        // Hadar's price argument specialised to whole-node slots.
+        // this slot's gang can complete this round — the greedy core of
+        // Hadar's price argument specialised to gang slots.
         let mut cands: Vec<(f64, u32, u32)> =
-            Vec::with_capacity(n_p * n_h);
+            Vec::with_capacity(n_p * n_s);
         for (pi, &(_, remaining)) in parents.iter().enumerate() {
-            for hi in 0..n_h {
-                let x = xg[pi * n_h + hi];
+            for si in 0..n_s {
+                let x = xg[pi * n_s + si];
                 if x > 0.0 {
                     let burn = (x * ctx.slot_secs).min(remaining);
-                    cands.push((burn, pi as u32, hi as u32));
+                    cands.push((burn, pi as u32, si as u32));
                 }
             }
         }
         cands.sort_by(|a, b| b.0.total_cmp(&a.0));
 
         // Pass 1: payoff-greedy with the per-parent copy budget.
-        for &(_, pi, hi) in &cands {
-            let (pi, hi) = (pi as usize, hi as usize);
-            if t.node_busy[hi]
+        for &(_, pi, si) in &cands {
+            let (pi, si) = (pi as usize, si as usize);
+            if t.slot_busy[si]
                 || t.copies_used[pi] >= self.copies
-                || t.placed[pi * n_h + hi]
+                || t.placed[pi * n_h + slots[si].hi]
             {
                 continue;
             }
-            t.place(&mut plan, tracker, parents[pi].0, pi, hi, nodes[hi]);
+            t.place(&mut plan, tracker, parents[pi].0, pi, si, &slots[si]);
         }
 
-        // Pass 2: work conservation — fill any idle node with the parent
-        // owning the most remaining work not already on that node
-        // (corollary to Theorem 3: no idle node before the last round).
-        for hi in 0..n_h {
-            if t.node_busy[hi] {
+        // Pass 2: work conservation — fill any idle slot with the parent
+        // owning the most remaining work not already on that slot's node
+        // (corollary to Theorem 3: no idle slot before the last round).
+        for si in 0..n_s {
+            if t.slot_busy[si] {
                 continue;
             }
             for pi in 0..n_p {
-                if t.placed[pi * n_h + hi]
+                if t.placed[pi * n_h + slots[si].hi]
                     || t.copies_used[pi] >= self.copies
                 {
                     continue;
                 }
-                if xg[pi * n_h + hi] > 0.0 {
-                    t.place(&mut plan, tracker, parents[pi].0, pi, hi,
-                            nodes[hi]);
+                if xg[pi * n_s + si] > 0.0 {
+                    t.place(&mut plan, tracker, parents[pi].0, pi, si,
+                            &slots[si]);
                     break;
                 }
             }
@@ -448,6 +607,155 @@ mod tests {
     }
 
     #[test]
+    fn big8_shared_round0_books_every_gpu_with_shared_nodes() {
+        // The tentpole's planner-level acceptance: on the two-pool
+        // 8-GPU-node preset with two active parents, per-pool slots book
+        // all 32 GPUs and at least one node hosts copies of two parents
+        // (whole-node gangs would hand each node to a single parent).
+        let (cluster, queue, tracker) =
+            setup_on(ClusterSpec::big8(), 2, 4);
+        let mut h = HadarE::with_gang(4, GangConfig::shared());
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.total_gpus(), 32, "every GPU booked");
+        assert_eq!(plan.scheduled_jobs().len(), 8, "one copy per pool");
+        let mut parents_by_node: BTreeMap<usize,
+            std::collections::BTreeSet<JobId>> = BTreeMap::new();
+        for (id, a) in &plan.allocations {
+            assert_eq!(a.nodes().len(), 1, "a copy never spans nodes");
+            assert_eq!(a.gpu_types().len(), 1, "a copy takes one pool");
+            assert_eq!(a.total_gpus(), 4, "a pool is 4 GPUs here");
+            parents_by_node
+                .entry(a.nodes()[0])
+                .or_default()
+                .insert(tracker.resolve(*id));
+        }
+        assert!(
+            parents_by_node.values().any(|ps| ps.len() >= 2),
+            "at least one big node is shared by two parents: {:?}",
+            parents_by_node
+        );
+    }
+
+    #[test]
+    fn big8_whole_node_gangs_monopolise_nodes() {
+        // Compatibility mode on the same preset: each copy takes all 8
+        // GPUs of its host, so nodes are never shared — the fragmentation
+        // the tentpole removes.
+        let (cluster, queue, tracker) =
+            setup_on(ClusterSpec::big8(), 2, 4);
+        let mut h = HadarE::new(4);
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(plan.total_gpus(), 32);
+        assert_eq!(plan.scheduled_jobs().len(), 4, "one copy per node");
+        for (_, a) in &plan.allocations {
+            assert_eq!(a.total_gpus(), 8, "whole-node gang");
+        }
+    }
+
+    #[test]
+    fn shared_mode_is_identical_on_single_pool_clusters() {
+        // On clusters whose nodes carry one pool (every paper preset),
+        // per-pool slots coincide with whole-node slots — the two modes
+        // must plan identically.
+        for cluster in [ClusterSpec::testbed5(), ClusterSpec::sim60()] {
+            let copies = cluster.nodes.len() as u64;
+            let (cluster, queue, tracker) =
+                setup_on(cluster, 3, copies);
+            let whole = HadarE::new(copies)
+                .plan_round(&ctx(&queue, &cluster), &tracker);
+            let shared = HadarE::with_gang(copies, GangConfig::shared())
+                .plan_round(&ctx(&queue, &cluster), &tracker);
+            assert_eq!(whole.allocations, shared.allocations,
+                       "{}: modes diverged", cluster.name);
+        }
+    }
+
+    #[test]
+    fn unarrived_parents_are_not_planned() {
+        // Arrival-handling regression (planner side): a parent with
+        // arrival > now is filtered even though the tracker knows it.
+        let cluster = ClusterSpec::testbed5();
+        let pairs = cluster_gpu_pcie(&cluster);
+        let mut queue = JobQueue::new();
+        let ids = ForkIds { max_job_count: 100 };
+        let mut tracker = JobTracker::new(ids);
+        for id in 0..2u64 {
+            let arrival = if id == 0 { 0.0 } else { 500.0 };
+            let mut j = Job::new(id, DlModel::MiMa, arrival, 1, 20, 100);
+            j.throughput = throughput::throughput_row(DlModel::MiMa, &pairs);
+            tracker.register(
+                j.id,
+                j.total_iters(),
+                &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
+            );
+            queue.admit(j);
+        }
+        let mut h = HadarE::new(5);
+        // now = 0: only parent 0 exists.
+        let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert!(!plan.scheduled_jobs().is_empty());
+        for id in plan.scheduled_jobs() {
+            assert_eq!(tracker.resolve(id), JobId(0),
+                       "unarrived parent must not train");
+        }
+        // now = 500: both planned.
+        let mut c = ctx(&queue, &cluster);
+        c.now = 500.0;
+        let plan = h.plan_round(&c, &tracker);
+        let parents: std::collections::BTreeSet<JobId> = plan
+            .scheduled_jobs()
+            .iter()
+            .map(|&id| tracker.resolve(id))
+            .collect();
+        assert_eq!(parents.len(), 2, "both parents run once arrived");
+    }
+
+    #[test]
+    fn pool_and_alloc_throughput_match_the_gang_model() {
+        use crate::cluster::gpu::{GpuType, PcieGen};
+        let mut j = Job::new(0, DlModel::MiMa, 0.0, 1, 1, 100);
+        j.set_throughput(GpuType::K80, 10.0);
+        j.set_throughput(GpuType::V100, 40.0);
+        let cfg = GangConfig::default();
+        // A 4-GPU pool scales sub-linearly like a 4-GPU single-type node.
+        assert!((pool_throughput(&j, GpuType::K80, 4, &cfg) - 37.0).abs()
+                < 1e-9);
+        assert_eq!(pool_throughput(&j, GpuType::K80, 0, &cfg), 0.0);
+        assert_eq!(pool_throughput(&j, GpuType::T4, 2, &cfg), 0.0,
+                   "missing row is unusable");
+        // min_efficiency floor applies per pool.
+        let strict = GangConfig {
+            min_efficiency: 0.5,
+            ..GangConfig::default()
+        };
+        assert_eq!(pool_throughput(&j, GpuType::K80, 4, &strict), 0.0);
+        assert!(pool_throughput(&j, GpuType::V100, 4, &strict) > 0.0);
+        // alloc_throughput of a whole-node allocation equals
+        // gang_throughput of the host; of a one-pool allocation, the
+        // pool rate.
+        let node = Node::new(
+            0,
+            "big",
+            &[(GpuType::K80, 4), (GpuType::V100, 4)],
+            PcieGen::Gen3,
+        );
+        let mut whole = JobAllocation::new();
+        for (g, c) in node.gang() {
+            whole.add(node.id, g, c);
+        }
+        assert!((alloc_throughput(&j, &whole, &cfg)
+                 - gang_throughput(&j, &node, &cfg))
+                    .abs()
+                < 1e-12);
+        let mut one_pool = JobAllocation::new();
+        one_pool.add(node.id, GpuType::V100, 4);
+        assert!((alloc_throughput(&j, &one_pool, &cfg)
+                 - pool_throughput(&j, GpuType::V100, 4, &cfg))
+                    .abs()
+                < 1e-12);
+    }
+
+    #[test]
     fn gang_throughput_is_sublinear_and_bottlenecked() {
         use crate::cluster::gpu::{GpuType, PcieGen};
         let mut j = Job::new(0, DlModel::MiMa, 0.0, 1, 1, 100);
@@ -456,6 +764,7 @@ mod tests {
         let cfg = GangConfig {
             marginal_efficiency: 0.9,
             min_efficiency: 0.0,
+            ..GangConfig::default()
         };
         let one = Node::new(0, "k1", &[(GpuType::K80, 1)], PcieGen::Gen3);
         let four = Node::new(1, "k4", &[(GpuType::K80, 4)], PcieGen::Gen3);
@@ -480,6 +789,7 @@ mod tests {
         let strict = GangConfig {
             marginal_efficiency: 0.9,
             min_efficiency: 0.5,
+            ..GangConfig::default()
         };
         assert_eq!(gang_throughput(&j, &four, &strict), 0.0);
     }

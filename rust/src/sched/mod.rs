@@ -71,35 +71,46 @@ pub trait Scheduler {
 
 /// Construct a scheduler by name (CLI surface).
 ///
-/// `hadare` is deliberately *not* constructible here: it schedules forked
-/// copies onto whole nodes through the Job Tracker, which the generic
-/// round engine cannot drive — run it via [`crate::sim::hadare_engine`]
-/// or the `expt` sweep runner (which routes it there automatically).
-/// Unknown names get an error listing the known schedulers.
+/// `hadare` (and its partial-node variant `hadare-shared`, which plans
+/// per-`(node, pool)` sub-gangs so parents can share big nodes) is
+/// deliberately *not* constructible here: it schedules forked copies onto
+/// gang slots through the Job Tracker, which the generic round engine
+/// cannot drive — run it via [`crate::sim::hadare_engine`] or the `expt`
+/// sweep runner (which routes both names there automatically). Unknown
+/// names get an error listing the known schedulers.
 pub fn by_name(name: &str) -> Result<Box<dyn Scheduler>, String> {
     match name.to_ascii_lowercase().as_str() {
         "hadar" => Ok(Box::new(hadar::Hadar::new())),
         "gavel" => Ok(Box::new(gavel::Gavel::new())),
         "tiresias" => Ok(Box::new(tiresias::Tiresias::new())),
         "yarn-cs" | "yarn" => Ok(Box::new(yarn_cs::YarnCs::new())),
-        "hadare" => Err("hadare schedules forked job copies onto whole \
-                         nodes and requires the forking engine; run it via \
-                         sim::hadare_engine::run or the expt sweep runner"
-            .into()),
+        "hadare" | "hadare-shared" => Err(
+            "hadare/hadare-shared schedule forked job copies onto gang \
+             slots and require the forking engine; run them via \
+             sim::hadare_engine::run_with_gang or the expt sweep runner"
+                .into(),
+        ),
         other => Err(format!(
             "unknown scheduler '{other}' (known: yarn-cs, tiresias, gavel, \
-             hadar, hadare)"
+             hadar, hadare, hadare-shared)"
         )),
     }
 }
 
-/// Whether `name` names any scheduler — including `hadare`, which only
-/// the forking engine can run (see [`by_name`]). Lets spec parsers reject
-/// typos before a sweep starts burning CPU.
+/// Whether `name` names any scheduler — including `hadare` and
+/// `hadare-shared`, which only the forking engine can run (see
+/// [`by_name`]). Lets spec parsers reject typos before a sweep starts
+/// burning CPU.
 pub fn is_known(name: &str) -> bool {
     matches!(
         name.to_ascii_lowercase().as_str(),
-        "hadar" | "gavel" | "tiresias" | "yarn-cs" | "yarn" | "hadare"
+        "hadar"
+            | "gavel"
+            | "tiresias"
+            | "yarn-cs"
+            | "yarn"
+            | "hadare"
+            | "hadare-shared"
     )
 }
 

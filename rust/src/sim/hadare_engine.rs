@@ -2,37 +2,50 @@
 //! pure simulation (CRU/TTD/JCT figures) and the PJRT-backed emulation
 //! (which layers real training on the same schedule via `exec`).
 //!
-//! Per round: the HadarE planner assigns whole nodes to copies — every
-//! GPU of the node, per the node spec; the Job Tracker divides each
-//! parent's remaining steps across its scheduled copies in proportion to
-//! **gang** throughput ([`crate::sched::hadare::gang_throughput`]:
-//! bottleneck rule + sub-linear intra-node scaling, §V-B); nodes burn
-//! their share (bounded by gang slot capacity and the restart overhead);
-//! the tracker aggregates completed steps. A parent finishes the moment
-//! its aggregated steps reach the target — possibly mid-slot ("early
-//! finish", §V-A).
+//! Per round: the HadarE planner assigns gang slots to copies — a whole
+//! node by default, one `(node, pool)` sub-gang under
+//! [`GangConfig::share_nodes`] (partial-node mode, so two parents can
+//! share a big node); the Job Tracker divides each parent's remaining
+//! steps across its scheduled copies in proportion to the **sub-gang**
+//! throughput of what each copy actually booked
+//! ([`crate::sched::hadare::alloc_throughput`]: bottleneck rule +
+//! sub-linear intra-node scaling, §V-B); copies burn their share (bounded
+//! by gang slot capacity and the restart overhead); the tracker
+//! aggregates completed steps. A parent finishes the moment its
+//! aggregated steps reach the target — possibly mid-slot ("early finish",
+//! §V-A). Copies run *concurrently*, so the finish instant is the **max**
+//! busy end-time across the parent's copies that round, not whichever
+//! copy's report happened to cross the threshold.
 //!
-//! Accounting is **per GPU**: a busy 4-GPU gang contributes 4 GPU-seconds
-//! per second to `busy_gpu_secs` and 4 × `slot_secs` to `alloc_gpu_secs`,
-//! so GRU/CRU/ANU measure the actual 60-GPU `sim60` cluster rather than
-//! its 15 nodes.
+//! Parents are admitted by **arrival**: the planner filters parents whose
+//! `arrival` lies beyond the round start, so a staggered trace produces
+//! no work before a job exists.
 //!
-//! Restart overhead is charged when a node switches *parents* (a model
-//! load); a node that idles a round keeps its loaded model, so resuming
-//! the same parent later is free.
+//! Accounting is **per GPU**: a busy 4-GPU sub-gang contributes 4
+//! GPU-seconds per second to `busy_gpu_secs` and 4 × `slot_secs` to
+//! `alloc_gpu_secs`, so GRU/CRU/ANU measure the actual 60-GPU `sim60`
+//! cluster rather than its 15 nodes — and, in partial-node mode, each
+//! pool of a shared big node books its own GPU-seconds.
+//!
+//! Restart overhead is charged when a `(node, pool)` switches *parents*
+//! (a model load); a pool that idles a round keeps its loaded model, so
+//! resuming the same parent later is free. Under whole-node gangs every
+//! pool of the node carries the same binding, which degenerates to the
+//! historical per-node bookkeeping.
 
 use crate::cluster::events::{ClusterTimeline, EventTimeline};
+use crate::cluster::gpu::GpuType;
 use crate::cluster::spec::ClusterSpec;
 use crate::forking::forker::{fork, ForkIds};
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
-use crate::sched::hadare::{gang_throughput, HadarE};
+use crate::sched::hadare::{alloc_throughput, GangConfig, HadarE};
 use crate::sched::RoundCtx;
 use crate::sim::engine::{
     integrate_capacity, RoundJob, RoundRecord, SimConfig, SimResult,
 };
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 /// What one copy did in one round — the hook `exec` uses to run real
@@ -47,11 +60,17 @@ pub struct CopyWork {
     pub parent: JobId,
     /// Node that hosted the copy this round.
     pub node: usize,
-    /// GPUs in the node's gang (the copy occupies the whole node).
+    /// GPUs in the copy's sub-gang (the whole node by default, one pool
+    /// in partial-node mode).
     pub gpus: usize,
-    /// Steps this node's gang completed this round.
+    /// The pool the copy occupied: `Some(type)` when the allocation sat
+    /// on a single GPU pool (always the case in partial-node mode, and
+    /// for whole-node gangs on single-type nodes); `None` when a
+    /// whole-node gang spanned several pools.
+    pub pool: Option<GpuType>,
+    /// Steps this copy's sub-gang completed this round.
     pub steps: f64,
-    /// Seconds of the slot the node's gang was busy (per node, not per
+    /// Seconds of the slot the sub-gang was busy (per gang, not per
     /// GPU — multiply by [`CopyWork::gpus`] for GPU-seconds).
     pub busy_secs: f64,
 }
@@ -73,16 +92,27 @@ pub fn run(parents: &[Job], cluster: &ClusterSpec, cfg: &SimConfig,
         .expect("the empty event timeline always resolves")
 }
 
-/// Run HadarE under a cluster event timeline: due events apply at round
-/// boundaries, node drains unbind the copies running there (counted as
-/// preemptions; the node's next model load pays the restart overhead),
-/// and the planner sees the current node inventory every round. The copy
-/// budget stays at the *initial* node count unless `copies` is given —
-/// under heavy joins, pass a larger budget to keep every node busy.
+/// [`run_with_gang`] with the default whole-node [`GangConfig`].
 pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
                        events: &EventTimeline, cfg: &SimConfig,
                        copies: Option<u64>)
                        -> Result<HadarESimResult, String> {
+    run_with_gang(parents, cluster, events, cfg, copies,
+                  GangConfig::default())
+}
+
+/// Run HadarE under a cluster event timeline with explicit gang-model
+/// knobs (pass [`GangConfig::shared`] for partial-node / per-pool
+/// gangs): due events apply at round boundaries, node drains unbind the
+/// copies running there (counted as preemptions; the pool's next model
+/// load pays the restart overhead), and the planner sees the current
+/// node inventory every round. The copy budget stays at the *initial*
+/// node count unless `copies` is given — under heavy joins, pass a
+/// larger budget to keep every node busy.
+pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
+                     events: &EventTimeline, cfg: &SimConfig,
+                     copies: Option<u64>, gang: GangConfig)
+                     -> Result<HadarESimResult, String> {
     let mut view = ClusterTimeline::new(cluster, events)?;
     let n_nodes = cluster.nodes.len() as u64;
     let copies = copies.unwrap_or(n_nodes).max(1);
@@ -106,7 +136,7 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
         queue.admit(p.clone());
     }
 
-    let mut planner = HadarE::new(copies);
+    let mut planner = HadarE::with_gang(copies, gang);
     let nominal_gpus = cluster.total_gpus() as f64;
     let mut now = 0.0;
     let mut round = 0u64;
@@ -121,10 +151,12 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
     let mut work_log = Vec::new();
     // Per-parent first-seen finish time.
     let mut finish: BTreeMap<JobId, f64> = BTreeMap::new();
-    // Copy most recently bound to each node (restart-overhead
-    // bookkeeping). Entries persist while a node idles — the model stays
-    // loaded — and are dropped only when the node drains.
-    let mut prev_binding: BTreeMap<usize, JobId> = BTreeMap::new();
+    // Copy most recently bound to each (node, pool) — restart-overhead
+    // bookkeeping. Entries persist while a pool idles — the model stays
+    // loaded — and are dropped only when the node drains. Whole-node
+    // gangs bind every pool of the host to the same copy, so on
+    // single-pool nodes this is the historical per-node table.
+    let mut prev_binding: BTreeMap<(usize, GpuType), JobId> = BTreeMap::new();
 
     while !tracker.all_complete() && round < cfg.max_rounds {
         // Apply cluster events due by this round boundary; drained nodes
@@ -135,20 +167,29 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             avail_log.push((now, view.cluster().total_gpus() as f64));
         }
         if !change.affected.is_empty() {
-            let drained: Vec<usize> = prev_binding
+            let drained: Vec<(usize, GpuType)> = prev_binding
                 .keys()
                 .copied()
-                .filter(|h| change.affected.contains(h))
+                .filter(|(h, _)| change.affected.contains(h))
                 .collect();
-            for h in drained {
-                if let Some(copy) = prev_binding.remove(&h) {
+            // One preemption per distinct still-running (node, parent)
+            // unbound — the historical per-node count. A whole-node gang
+            // on a two-pool node is one preemption; a shared node
+            // carrying two parents' pools is two; and a parent whose
+            // live copy migrated pools within the node (leaving a stale
+            // binding of an older copy on the idle pool) is still one,
+            // not two.
+            let mut preempted: BTreeSet<(usize, JobId)> = BTreeSet::new();
+            for key in drained {
+                if let Some(copy) = prev_binding.remove(&key) {
                     // Bindings of already-finished parents are stale —
                     // dropping them disturbs no running work.
                     if !tracker.is_parent_complete(copy) {
-                        preemptions += 1;
+                        preempted.insert((key.0, tracker.resolve(copy)));
                     }
                 }
             }
+            preemptions += preempted.len() as u64;
         }
 
         let active = queue.active_at(now);
@@ -168,11 +209,21 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             plan
         };
 
-        // Group scheduled copies by parent, collect
-        // (copy, node, gang size, gang throughput). A copy's allocation
-        // spans exactly one node (possibly several pools of it).
-        let mut per_parent: BTreeMap<JobId, Vec<(JobId, usize, usize, f64)>> =
-            BTreeMap::new();
+        // Group scheduled copies by parent. A copy's allocation spans
+        // exactly one node — several pools of it for a whole-node gang,
+        // a single pool in partial-node mode — and is rated by what it
+        // actually booked (`alloc_throughput`), so shares stay
+        // sub-gang-accurate in both modes.
+        struct Assigned {
+            copy: JobId,
+            node: usize,
+            gpus: usize,
+            /// The allocation's pools on the host (binding keys).
+            pools: Vec<GpuType>,
+            /// Sub-gang throughput of the allocation.
+            x: f64,
+        }
+        let mut per_parent: BTreeMap<JobId, Vec<Assigned>> = BTreeMap::new();
         for (&copy, alloc) in &plan.allocations {
             let parent = tracker.resolve(copy);
             let job = queue.get(parent).expect("parent job");
@@ -181,16 +232,13 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
                 .first()
                 .copied()
                 .expect("plan allocations are non-empty");
-            let node = view
-                .cluster()
-                .node(node_id)
-                .expect("planned node is in the current cluster");
-            per_parent.entry(parent).or_default().push((
+            per_parent.entry(parent).or_default().push(Assigned {
                 copy,
-                node_id,
-                alloc.total_gpus(),
-                gang_throughput(job, node, &planner.gang),
-            ));
+                node: node_id,
+                gpus: alloc.total_gpus(),
+                pools: alloc.gpu_types(),
+                x: alloc_throughput(job, alloc, &planner.gang),
+            });
         }
 
         let mut rec = RoundRecord {
@@ -204,7 +252,7 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
         };
         for (parent, assigned) in &per_parent {
             let throughputs: Vec<f64> =
-                assigned.iter().map(|&(_, _, _, x)| x).collect();
+                assigned.iter().map(|a| a.x).collect();
             let shares =
                 tracker.divide_steps(*parent, &throughputs, cfg.slot_secs);
             let remaining_before =
@@ -212,61 +260,76 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
             rec.jobs.insert(
                 *parent,
                 RoundJob {
-                    gpus: assigned.iter().map(|&(_, _, g, _)| g).sum(),
+                    gpus: assigned.iter().map(|a| a.gpus).sum(),
                     remaining_before,
                     progressed: 0.0, // filled below as copies report
-                    node: assigned
-                        .first()
-                        .map(|&(_, n, _, _)| n)
-                        .unwrap_or(0),
+                    node: assigned.first().map(|a| a.node).unwrap_or(0),
                 },
             );
-            for (&(copy, node, gpus, x), &share) in
-                assigned.iter().zip(shares.iter())
-            {
-                // Restart overhead when the node switches *parents* — a
-                // model load. Which copy id carries the parent is
-                // irrelevant, and a node that idled keeps its model, so
-                // resuming the same parent later is free.
-                let switched = prev_binding
-                    .get(&node)
-                    .map(|c| tracker.resolve(*c))
-                    != Some(*parent);
+            // Busy end-time (offset from round start) of the latest copy
+            // that advanced steps. Copies run concurrently, so a parent's
+            // early finish is the *max* end across its copies this round
+            // — not whichever copy's report happened to cross the
+            // completion threshold in iteration order, which could
+            // under-report TTD/JCT by up to nearly a slot.
+            let mut last_end = 0.0f64;
+            for (a, &share) in assigned.iter().zip(shares.iter()) {
+                // Restart overhead when the (node, pool) switches
+                // *parents* — a model load. Which copy id carries the
+                // parent is irrelevant, and a pool that idled keeps its
+                // model, so resuming the same parent later is free.
+                let switched = a.pools.iter().any(|g| {
+                    prev_binding
+                        .get(&(a.node, *g))
+                        .map(|c| tracker.resolve(*c))
+                        != Some(*parent)
+                });
                 let overhead =
                     if switched { cfg.restart_overhead } else { 0.0 };
                 let eff = (cfg.slot_secs - overhead).max(0.0);
-                let steps = share.min(x * eff);
-                let busy = if x > 0.0 { steps / x } else { 0.0 };
-                tracker.report_steps(copy, steps);
-                rec.busy_gpu_secs += busy * gpus as f64;
-                rec.alloc_gpu_secs += cfg.slot_secs * gpus as f64;
+                let steps = share.min(a.x * eff);
+                let busy = if a.x > 0.0 { steps / a.x } else { 0.0 };
+                tracker.report_steps(a.copy, steps);
+                rec.busy_gpu_secs += busy * a.gpus as f64;
+                rec.alloc_gpu_secs += cfg.slot_secs * a.gpus as f64;
                 if let Some(rj) = rec.jobs.get_mut(parent) {
                     rj.progressed += steps;
                 }
+                if steps > 0.0 {
+                    last_end = last_end.max(overhead + busy);
+                }
                 work_log.push(CopyWork {
                     round,
-                    copy,
+                    copy: a.copy,
                     parent: *parent,
-                    node,
-                    gpus,
+                    node: a.node,
+                    gpus: a.gpus,
+                    pool: if a.pools.len() == 1 {
+                        Some(a.pools[0])
+                    } else {
+                        None
+                    },
                     steps,
                     busy_secs: busy,
                 });
-                // Idle nodes keep their previous binding (model stays
-                // loaded); only nodes used this round rebind.
-                prev_binding.insert(node, copy);
-                // Parent finishing mid-slot: early finish. Notify the
-                // planner (same completion protocol as the generic
-                // engine's [`crate::sched::Scheduler::job_completed`]) so
-                // any per-parent planner state is dropped exactly once.
-                if tracker.is_parent_complete(*parent)
-                    && !finish.contains_key(parent)
-                {
-                    let f = now + overhead + busy;
-                    finish.insert(*parent, f);
-                    last_finish = last_finish.max(f);
-                    planner.job_completed(*parent);
+                // Idle pools keep their previous binding (model stays
+                // loaded); only pools used this round rebind.
+                for &g in &a.pools {
+                    prev_binding.insert((a.node, g), a.copy);
                 }
+            }
+            // Parent finishing mid-slot: early finish, stamped at the
+            // max copy end-time. Notify the planner (same completion
+            // protocol as the generic engine's
+            // [`crate::sched::Scheduler::job_completed`]) so any
+            // per-parent planner state is dropped exactly once.
+            if tracker.is_parent_complete(*parent)
+                && !finish.contains_key(parent)
+            {
+                let f = now + last_end;
+                finish.insert(*parent, f);
+                last_finish = last_finish.max(f);
+                planner.job_completed(*parent);
             }
         }
 
@@ -299,7 +362,11 @@ pub fn run_with_events(parents: &[Job], cluster: &ClusterSpec,
     let avail_total = integrate_capacity(&avail_log, ttd);
     Ok(HadarESimResult {
         sim: SimResult {
-            scheduler: "hadare".to_string(),
+            scheduler: if gang.share_nodes {
+                "hadare-shared".to_string()
+            } else {
+                "hadare".to_string()
+            },
             ttd,
             jct,
             finish_times,
@@ -382,7 +449,11 @@ mod tests {
 
     #[test]
     fn more_copies_never_hurt_cru_theorem3() {
-        // Theorem 3: CRU_1 < CRU_x < CRU_n = CRU_{n+j}.
+        // Theorem 3: CRU_1 < CRU_x < CRU_n = CRU_{n+j}. The interior
+        // inequalities are *strict* — every extra copy below the node
+        // count puts another (usable) node to work, and Transformer has a
+        // positive rate on all five testbed types, so the assertions
+        // match the theorem rather than allowing a hidden tie.
         let cluster = ClusterSpec::testbed5();
         let pairs = cluster_gpu_pcie(&cluster);
         let mut j = Job::new(0, DlModel::Transformer, 0.0, 1, 40, 100);
@@ -393,8 +464,100 @@ mod tests {
         let g5 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(5)).sim.gru;
         let g7 = run(std::slice::from_ref(&j), &cluster, &cfg(), Some(7)).sim.gru;
         assert!(g1 < g3, "{g1} !< {g3}");
-        assert!(g3 < g5 + 1e-9, "{g3} !< {g5}");
+        assert!(g3 < g5, "{g3} !< {g5}");
         assert!((g5 - g7).abs() < 0.05, "n vs n+j: {g5} vs {g7}");
+    }
+
+    #[test]
+    fn early_finish_is_stamped_at_the_latest_copy_end() {
+        // Regression (engine timing): a parent's finish used to be
+        // stamped from whichever copy's `report_steps` crossed the
+        // completion threshold in iteration order. Copies run
+        // concurrently, so the finish is the *max* busy end-time across
+        // the parent's copies that round — here the overhead-paying copy
+        // ends at +100 s while the threshold-crossing copy ends at +90 s,
+        // and the buggy stamp under-reported JCT/TTD by the 10 s restart
+        // overhead.
+        use crate::cluster::gpu::PcieGen;
+        use crate::cluster::node::Node;
+        let cluster = ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "v", &[(GpuType::V100, 1)], PcieGen::Gen3),
+                Node::new(1, "k", &[(GpuType::K80, 1)], PcieGen::Gen3),
+            ],
+        );
+        let cfg = SimConfig {
+            slot_secs: 100.0,
+            restart_overhead: 10.0,
+            max_rounds: 100,
+            horizon: 1e7,
+        };
+        // P0: 360 iters at V100=2 / K80=1 it/s. P1: 400 iters, V100 only
+        // (more remaining, so it wins the fast node in round 0 and P0
+        // starts on the K80 node).
+        let mut p0 = Job::new(0, DlModel::Lstm, 0.0, 1, 4, 90);
+        p0.set_throughput(GpuType::V100, 2.0);
+        p0.set_throughput(GpuType::K80, 1.0);
+        let mut p1 = Job::new(1, DlModel::Lstm, 0.0, 1, 4, 100);
+        p1.set_throughput(GpuType::V100, 5.0);
+        let res = run(&[p0, p1], &cluster, &cfg, Some(2));
+        // Round 0: P1 finishes on the V100 node (10 + 80 s); P0 burns 90
+        // steps on the K80 node (270 left). Round 1: P0's copy 1 moves to
+        // the V100 node (switch: 10 s overhead, 180 steps in 90 s busy,
+        // end +100 s) while copy 2 stays on the K80 node (no overhead, 90
+        // steps, end +90 s). The threshold crosses at copy 2, but the
+        // parent is only done when copy 1's gang drains at 100 + 100 s.
+        assert!((res.sim.jct[&JobId(1)] - 90.0).abs() < 1e-9,
+                "P1 jct: {}", res.sim.jct[&JobId(1)]);
+        assert!((res.sim.jct[&JobId(0)] - 200.0).abs() < 1e-9,
+                "P0 finish must wait for the overhead-paying copy: {}",
+                res.sim.jct[&JobId(0)]);
+        assert!((res.sim.ttd - 200.0).abs() < 1e-9, "ttd: {}", res.sim.ttd);
+    }
+
+    #[test]
+    fn staggered_arrivals_produce_no_work_before_arrival() {
+        // Regression (arrival handling): the engine registers every
+        // parent with the tracker up front, and the planner used to
+        // iterate all registered parents — a parent with `arrival > 0`
+        // trained before it existed. Now arrival gates planning: no
+        // work-log row may precede a parent's arrival.
+        use crate::cluster::gpu::PcieGen;
+        use crate::cluster::node::Node;
+        let cluster = ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "v", &[(GpuType::V100, 1)], PcieGen::Gen3),
+                Node::new(1, "k", &[(GpuType::K80, 1)], PcieGen::Gen3),
+            ],
+        );
+        let cfg = SimConfig {
+            slot_secs: 100.0,
+            restart_overhead: 10.0,
+            max_rounds: 1000,
+            horizon: 1e7,
+        };
+        let mut p0 = Job::new(0, DlModel::Lstm, 0.0, 1, 20, 100);
+        p0.set_throughput(GpuType::V100, 2.0);
+        p0.set_throughput(GpuType::K80, 1.0);
+        // Arrives mid-round-1: first plannable round boundary is t=200.
+        let mut p1 = Job::new(1, DlModel::Lstm, 150.0, 1, 5, 100);
+        p1.set_throughput(GpuType::V100, 2.0);
+        p1.set_throughput(GpuType::K80, 1.0);
+        let arrival = p1.arrival;
+        let res = run(&[p0, p1], &cluster, &cfg, Some(2));
+        assert_eq!(res.sim.jct.len(), 2, "both parents complete");
+        for w in res.work_log.iter().filter(|w| w.parent == JobId(1)) {
+            let round_start = w.round as f64 * cfg.slot_secs;
+            assert!(round_start >= arrival,
+                    "work for parent 1 at t={round_start} before its \
+                     arrival at {arrival}: {w:?}");
+        }
+        // JCT is measured from arrival, and the parent cannot finish
+        // before it starts.
+        let f1 = res.sim.jct[&JobId(1)] + arrival;
+        assert!(f1 > 200.0, "parent 1 finishes after its first round: {f1}");
     }
 
     #[test]
@@ -491,6 +654,100 @@ mod tests {
         assert!((g15 - g20).abs() < 1e-12,
                 "budget beyond node count is inert: {g15} vs {g20}");
         assert!(g15 > 0.9, "full fan-out keeps ~every GPU busy: {g15}");
+    }
+
+    #[test]
+    fn big8_shared_round0_books_every_gpu_across_shared_nodes() {
+        // Partial-node occupancy, engine-level: with three active parents
+        // on the two-pool big-node preset, per-pool gangs book all 32
+        // GPUs in round 0 and every node hosts pools of two *different*
+        // parents (a parent never holds two pools of one node).
+        let cluster = ClusterSpec::big8();
+        let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
+        let res = run_with_gang(&jobs, &cluster, &EventTimeline::empty(),
+                                &cfg(), None, GangConfig::shared())
+            .unwrap();
+        let r0 = &res.sim.timeline[0];
+        assert!((r0.alloc_gpu_secs - 32.0 * 90.0).abs() < 1e-6,
+                "round 0 allocates every GPU: {}", r0.alloc_gpu_secs);
+        let mut gpus_by_node: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut parents_by_node: BTreeMap<usize, BTreeSet<JobId>> =
+            BTreeMap::new();
+        for w in res.work_log.iter().filter(|w| w.round == 0) {
+            assert_eq!(w.gpus, 4, "a copy takes one 4-GPU pool");
+            assert!(w.pool.is_some(), "per-pool work records its pool");
+            *gpus_by_node.entry(w.node).or_insert(0) += w.gpus;
+            parents_by_node.entry(w.node).or_default().insert(w.parent);
+        }
+        assert_eq!(gpus_by_node.len(), 4, "every big node hosts copies");
+        assert!(gpus_by_node.values().all(|&g| g == 8),
+                "both pools of every node are booked: {gpus_by_node:?}");
+        assert!(parents_by_node.values().all(|ps| ps.len() == 2),
+                "each node is shared by two parents: {parents_by_node:?}");
+        assert_eq!(res.sim.jct.len(), 3, "all parents complete");
+    }
+
+    #[test]
+    fn big8_work_log_conserves_steps_in_both_gang_modes() {
+        // §V-B conservation on the big-node preset: summed work-log steps
+        // equal each parent's total, with whole-node gangs and with
+        // per-pool gangs alike.
+        let cluster = ClusterSpec::big8();
+        for gang in [GangConfig::default(), GangConfig::shared()] {
+            let jobs = physical_jobs("M-3", &cluster, 1.0).unwrap();
+            let res = run_with_gang(&jobs, &cluster,
+                                    &EventTimeline::empty(), &cfg(), None,
+                                    gang)
+                .unwrap();
+            let mut per_parent: BTreeMap<JobId, f64> = BTreeMap::new();
+            for w in &res.work_log {
+                *per_parent.entry(w.parent).or_insert(0.0) += w.steps;
+            }
+            for j in &jobs {
+                let done = per_parent.get(&j.id).copied().unwrap_or(0.0);
+                assert!((done - j.total_iters()).abs() < 1e-6,
+                        "share_nodes={}: parent {} steps {} vs {}",
+                        gang.share_nodes, j.id, done, j.total_iters());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_gangs_unstrand_single_type_parents_and_beat_whole_node_cru() {
+        // The stranding scenario from the bugfix title: two parents that
+        // each run on only one of the big nodes' two pool types. The
+        // whole-node bottleneck rule (all-or-nothing) makes *every* node
+        // unusable for both, so the whole-node planner strands all 32
+        // GPUs; per-pool gangs hand each parent its pools, book the whole
+        // cluster, and finish both jobs — so shared CRU (and GRU) beats
+        // the whole-node planner's on the same scenario.
+        let cluster = ClusterSpec::big8();
+        let mut p0 = Job::new(0, DlModel::MiMa, 0.0, 1, 20, 100);
+        p0.set_throughput(GpuType::V100, 2.0);
+        let mut p1 = Job::new(1, DlModel::MiMa, 0.0, 1, 20, 100);
+        p1.set_throughput(GpuType::P100, 1.5);
+        let jobs = vec![p0, p1];
+        let cfg = SimConfig {
+            slot_secs: 90.0,
+            restart_overhead: 10.0,
+            max_rounds: 50,
+            horizon: 1e7,
+        };
+        let whole = run(&jobs, &cluster, &cfg, None);
+        let shared = run_with_gang(&jobs, &cluster, &EventTimeline::empty(),
+                                   &cfg, None, GangConfig::shared())
+            .unwrap();
+        assert!(whole.sim.jct.is_empty(),
+                "whole-node gangs strand single-pool parents");
+        assert_eq!(whole.sim.cru, 0.0);
+        assert_eq!(shared.sim.jct.len(), 2, "both parents complete");
+        assert!(shared.sim.cru > whole.sim.cru,
+                "shared CRU {} !> whole-node CRU {}", shared.sim.cru,
+                whole.sim.cru);
+        assert!(shared.sim.cru > 0.5, "shared CRU: {}", shared.sim.cru);
+        assert!(shared.sim.gru > whole.sim.gru);
+        assert_eq!(shared.sim.scheduler, "hadare-shared");
+        assert_eq!(whole.sim.scheduler, "hadare");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod metrics;
 
 pub use engine::{run, run_with_events, RoundRecord, SimConfig, SimResult};
 pub use hadare_engine::{
-    run as run_hadare, run_with_events as run_hadare_with_events, CopyWork,
-    HadarESimResult,
+    run as run_hadare, run_with_events as run_hadare_with_events,
+    run_with_gang as run_hadare_with_gang, CopyWork, HadarESimResult,
 };
 pub use metrics::{completion_cdf, Metrics};

@@ -107,19 +107,34 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceJob> {
 
 /// Parse `job_id,submit_sec,gpus,duration_gpu_hours` CSV (with optional
 /// header). Lines starting with `#` are skipped.
+///
+/// At most **one** leading header row is tolerated: the first
+/// non-comment line may be a four-column row of *labels* — every field
+/// non-numeric, like `job_id,submit,gpus,hours`. Anything else that
+/// fails to parse — a bad-id data row (even as the first line), a second
+/// header, a three-field garbage line — is an error, not a silent drop
+/// (a trace loader that eats malformed rows under-reports the workload
+/// it claims to replay).
 pub fn parse_csv(text: &str) -> Result<Vec<TraceJob>, String> {
     let mut out = Vec::new();
-    let mut seen_data = false;
+    let mut first_candidate = true;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        if !seen_data && fields[0].parse::<u64>().is_err() {
-            continue; // header row
+        // Header = all four fields are labels. A corrupt first *data*
+        // row ("xx,0.0,1,0.5") has numeric tail fields and must error
+        // below, not vanish as a pseudo-header.
+        if first_candidate
+            && fields.len() == 4
+            && fields.iter().all(|f| f.parse::<f64>().is_err())
+        {
+            first_candidate = false;
+            continue; // the single permitted header row
         }
-        seen_data = true;
+        first_candidate = false;
         if fields.len() != 4 {
             return Err(format!("line {}: expected 4 fields", lineno + 1));
         }
@@ -231,5 +246,43 @@ job_id,submit,gpus,hours
         assert_eq!(jobs[2].class, SizeClass::XL);
         assert!(parse_csv("1,2,3").is_err());
         assert!(parse_csv("a,b,c,d\n1,x,1,1").is_err());
+    }
+
+    #[test]
+    fn csv_skips_at_most_one_header_and_rejects_garbage() {
+        // Regression: pre-data lines whose id failed to parse were *all*
+        // skipped as "headers", silently dropping bad-id data rows and
+        // short garbage lines. Exactly one four-field header row may be
+        // skipped; everything else errors.
+        //
+        // A second header-looking line is an error, not a skip.
+        let err = parse_csv("job_id,submit,gpus,hours\na,b,c,d\n1,0,1,1")
+            .unwrap_err();
+        assert!(err.contains("bad id"), "{err}");
+        // A bad-id data row after the header is an error (it used to
+        // vanish because no data row had been seen yet).
+        let err = parse_csv("job_id,submit,gpus,hours\nxx,0.0,1,0.5")
+            .unwrap_err();
+        assert!(err.contains("bad id"), "{err}");
+        // A bad-id row after data is an error too.
+        let err = parse_csv("0,0.0,1,0.5\nxx,1.0,1,0.5").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        // A corrupt first *data* row in a headerless file is not a
+        // header — its tail fields are numeric, so it errors instead of
+        // vanishing.
+        let err = parse_csv("xx,0.0,1,0.5\n1,1.0,1,0.5").unwrap_err();
+        assert!(err.contains("bad id"), "{err}");
+        // A three-field garbage first line is not a header — it used to
+        // be dropped silently.
+        let err = parse_csv("a,b,c\n0,0.0,1,0.5").unwrap_err();
+        assert!(err.contains("expected 4 fields"), "{err}");
+        // Comments and blank lines before the header are still fine, and
+        // a header-only file parses to an empty trace.
+        let jobs =
+            parse_csv("# c\n\njob_id,submit,gpus,hours\n3,1.0,2,5.0")
+                .unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].id, 3);
+        assert!(parse_csv("job_id,submit,gpus,hours").unwrap().is_empty());
     }
 }

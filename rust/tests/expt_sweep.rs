@@ -185,6 +185,59 @@ fn hadare_on_sim60_fills_the_whole_multi_gpu_cluster() {
 }
 
 #[test]
+fn hadare_shared_on_big8_shares_nodes_on_the_same_trace() {
+    // The partial-node tentpole seen from the sweep surface: on the
+    // two-pool big-node preset (reachable with `cluster: "big8"`),
+    // `hadare-shared` plans per-pool gangs — big nodes are shared
+    // between parents and each pool runs at its own type's rate — while
+    // `hadare` drives whole-node gangs at the cross-pool bottleneck.
+    // This checks routing + occupancy + completion on the identical
+    // trace; the CRU advantage itself is pinned by the engine-level
+    // stranding test (`shared_gangs_unstrand_single_type_parents...`).
+    // This is the sweep-smoke grid CI runs via examples/sweep_big8.json.
+    let spec = SweepSpec {
+        name: "hadare-big8".into(),
+        schedulers: vec!["hadare".into(), "hadare-shared".into()],
+        clusters: vec![ClusterRef::Preset("big8".into())],
+        workloads: vec![WorkloadSpec::Trace {
+            n_jobs: 12,
+            max_gpus: 4,
+            all_at_start: true,
+            hours_scale: 0.1,
+        }],
+        slots_secs: vec![360.0],
+        seeds: vec![7],
+        events: vec![EventsRef::None],
+        base: SimConfig {
+            max_rounds: 50_000,
+            ..Default::default()
+        },
+    };
+    let results = runner::run_sweep(&spec, 0).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(r.result.jct.len(), 12, "{}: all jobs complete",
+                   r.spec.id());
+    }
+    let shared = results
+        .iter()
+        .find(|r| r.spec.scheduler == "hadare-shared")
+        .unwrap();
+    let whole = results
+        .iter()
+        .find(|r| r.spec.scheduler == "hadare")
+        .unwrap();
+    // While several parents are active, per-pool gangs book every GPU
+    // (32) just like whole-node gangs, but as 4-GPU sub-gangs that can
+    // pair two parents on one node.
+    let r0 = &shared.result.timeline[0];
+    let booked: usize = r0.jobs.values().map(|rj| rj.gpus).sum();
+    assert_eq!(booked, 32, "shared round 0 books every GPU");
+    assert!(shared.result.cru > 0.0 && shared.result.gru > 0.0);
+    assert!(whole.result.cru > 0.0 && whole.result.gru > 0.0);
+}
+
+#[test]
 fn figure_sweeps_reproduce_the_serial_grids() {
     // The refactored figures route through the parallel runner; their
     // specs must still describe the exact historical grids.

@@ -7,11 +7,15 @@
 //! gate on the perf rework: any divergence is a solver bug, not a tuning
 //! difference.
 //!
-//! The same contract pins the whole-node-gang HadarE planner to its
-//! frozen single-GPU predecessor (`sched::reference::RefHadarE`) on
-//! single-GPU clusters, where "one GPU" and "whole node" coincide — the
-//! rework must be behaviour-preserving there, and only there (on
-//! multi-GPU clusters the divergence *is* the PR-4 bugfix).
+//! The same contract pins the gang HadarE planner to its frozen
+//! single-GPU predecessor (`sched::reference::RefHadarE`) on single-GPU
+//! clusters, where "one GPU" and "whole node" coincide — the rework must
+//! be behaviour-preserving there, and only there (on multi-GPU clusters
+//! the divergence *is* the PR-4 bugfix). The partial-node rework pinned
+//! no new reference: `share_nodes = false` is the compatibility mode
+//! (checked against `RefHadarE` below), and `share_nodes = true`
+//! degenerates to the same plans on single-pool nodes, which the same
+//! property drives as a third planner.
 
 use hadar::cluster::gpu::{GpuType, PcieGen};
 use hadar::cluster::node::Node;
@@ -248,14 +252,18 @@ fn gen_parent(rng: &mut Rng, id: u64, cluster: &ClusterSpec) -> Job {
     j
 }
 
-/// Whole-node HadarE equivalence on single-GPU clusters over ≥70 seeded
-/// scenarios: the flat-table gang planner and the frozen `RefHadarE`
-/// must agree plan for plan across multiple rounds, with copy progress
-/// (including mid-run completions) advancing the shared tracker between
-/// rounds and the copy budget varying from starved (1) to beyond the
-/// node count.
+/// Gang HadarE equivalence on single-GPU clusters over ≥70 seeded
+/// scenarios: the flat-table planner in whole-node compatibility mode
+/// (`share_nodes = false`, explicitly pinned), the same planner in
+/// partial-node mode (`share_nodes = true`, which degenerates to the
+/// identical slot inventory on single-pool nodes), and the frozen
+/// `RefHadarE` must agree plan for plan across multiple rounds, with
+/// copy progress (including mid-run completions) advancing the shared
+/// tracker between rounds and the copy budget varying from starved (1)
+/// to beyond the node count.
 #[test]
 fn prop_hadare_single_gpu_plans_identical() {
+    use hadar::sched::hadare::GangConfig;
     check_no_shrink(
         Config { cases: 70, seed: 0x5EED3 },
         |rng: &mut Rng| rng.next_u64(),
@@ -279,15 +287,25 @@ fn prop_hadare_single_gpu_plans_identical() {
                 );
                 queue.admit(j);
             }
-            let mut opt = HadarE::new(copies);
+            // The compatibility mode is pinned explicitly (not via the
+            // Default impl), so a future default flip cannot silently
+            // drop this equivalence.
+            let compat = GangConfig {
+                share_nodes: false,
+                ..GangConfig::default()
+            };
+            let mut opt = HadarE::with_gang(copies, compat);
+            let mut shared =
+                HadarE::with_gang(copies, GangConfig::shared());
             let mut reference = RefHadarE::new(copies);
             let slot = 360.0;
 
             for round in 0..4u64 {
-                let (p_opt, p_ref) = {
+                let (p_opt, p_shared, p_ref) = {
                     let c = ctx(round as f64 * slot, &queue, &[], &cluster);
                     (
                         opt.plan_round(&c, &tracker),
+                        shared.plan_round(&c, &tracker),
                         reference.plan_round(&c, &tracker),
                     )
                 };
@@ -296,6 +314,14 @@ fn prop_hadare_single_gpu_plans_identical() {
                         "round {round} (copies {copies}): plans diverged: \
                          opt {:?} vs ref {:?}",
                         p_opt.allocations, p_ref.allocations
+                    ));
+                }
+                if !plans_equal(&p_shared, &p_ref) {
+                    return Err(format!(
+                        "round {round} (copies {copies}): shared-mode \
+                         plan diverged on a single-GPU cluster: shared \
+                         {:?} vs ref {:?}",
+                        p_shared.allocations, p_ref.allocations
                     ));
                 }
                 if p_opt.allocations.is_empty() {
