@@ -218,6 +218,9 @@ impl ClusterState {
         &self,
         gpu: GpuType,
     ) -> impl Iterator<Item = (usize, usize)> + '_ {
+        if crate::obs::enabled() {
+            crate::obs::metrics::core().state_slot_scans.add(1);
+        }
         self.slot_index[tix(gpu)]
             .iter()
             .enumerate()
@@ -285,6 +288,9 @@ impl ClusterState {
     /// zero-clone select-branch pattern of the Hadar DP.
     #[inline]
     pub fn checkpoint(&self) -> StateMark {
+        if crate::obs::enabled() {
+            crate::obs::metrics::core().state_checkpoints.add(1);
+        }
         StateMark(self.assignments.len())
     }
 
@@ -293,6 +299,12 @@ impl ClusterState {
     /// test in `rust/tests/prop_invariants.rs`). O(assignments undone).
     pub fn rewind(&mut self, mark: StateMark) {
         debug_assert!(mark.0 <= self.assignments.len(), "stale mark");
+        if crate::obs::enabled() {
+            let m = crate::obs::metrics::core();
+            m.state_rewinds.add(1);
+            m.state_rewound_assignments
+                .add(self.assignments.len().saturating_sub(mark.0) as u64);
+        }
         while self.assignments.len() > mark.0 {
             let a = self.assignments.pop().expect("log longer than mark");
             self.shift_pool(a.node, tix(a.gpu), -(a.count as i64));

@@ -68,6 +68,16 @@ pub struct ScenarioRecord {
     pub sched_wall_secs: f64,
     /// Mean wall-clock per round (non-deterministic).
     pub sched_wall_per_round: f64,
+    /// Solver DP-memo hits over the run (0 for schedulers without a
+    /// solver counter surface — see
+    /// [`crate::sched::Scheduler::solver_stats`]).
+    pub memo_hits: u64,
+    /// Solver DP-memo misses over the run (0 likewise).
+    pub memo_misses: u64,
+    /// Rounds the solver answered with the full DP.
+    pub dp_rounds: u64,
+    /// Rounds the solver fell back to its greedy path.
+    pub greedy_rounds: u64,
 }
 
 impl ScenarioRecord {
@@ -80,6 +90,7 @@ impl ScenarioRecord {
         } else {
             (stats::min(&jcts), stats::max(&jcts))
         };
+        let solver = res.solver.unwrap_or_default();
         ScenarioRecord {
             id: run.spec.id(),
             scheduler: run.spec.scheduler.clone(),
@@ -104,6 +115,10 @@ impl ScenarioRecord {
             change_fraction: res.change_fraction,
             sched_wall_secs: res.sched_wall_secs,
             sched_wall_per_round: res.sched_wall_per_round,
+            memo_hits: solver.memo_hits,
+            memo_misses: solver.memo_misses,
+            dp_rounds: solver.dp_rounds,
+            greedy_rounds: solver.greedy_rounds,
         }
     }
 
@@ -131,7 +146,11 @@ impl ScenarioRecord {
             .set("completed", self.completed)
             .set("rounds", self.rounds)
             .set("preemptions", self.preemptions)
-            .set("change_fraction", self.change_fraction);
+            .set("change_fraction", self.change_fraction)
+            .set("memo_hits", self.memo_hits)
+            .set("memo_misses", self.memo_misses)
+            .set("dp_rounds", self.dp_rounds)
+            .set("greedy_rounds", self.greedy_rounds);
         if include_timing {
             v.insert("sched_wall_secs", self.sched_wall_secs);
             v.insert("sched_wall_per_round", self.sched_wall_per_round);
@@ -184,6 +203,10 @@ impl ScenarioRecord {
                 .get("sched_wall_per_round")
                 .as_f64()
                 .unwrap_or(0.0),
+            memo_hits: v.get("memo_hits").as_u64().unwrap_or(0),
+            memo_misses: v.get("memo_misses").as_u64().unwrap_or(0),
+            dp_rounds: v.get("dp_rounds").as_u64().unwrap_or(0),
+            greedy_rounds: v.get("greedy_rounds").as_u64().unwrap_or(0),
         })
     }
 }
@@ -312,6 +335,10 @@ mod tests {
             change_fraction: 0.5,
             sched_wall_secs: 0.123,
             sched_wall_per_round: 0.01,
+            memo_hits: 30,
+            memo_misses: 6,
+            dp_rounds: 10,
+            greedy_rounds: 2,
         }
     }
 

@@ -57,6 +57,7 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
         "dCRU",
         "ANU",
         "preempt",
+        "memo%",
         "sched ms/round",
     ]);
     // Per-scheduler accumulators for the summary table.
@@ -92,6 +93,17 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
                 .unwrap_or_else(|| "-".into()),
             format!("{:.1}%", r.anu * 100.0),
             format!("{}", r.preemptions),
+            // DP-memo hit rate for schedulers that expose solver
+            // counters; `-` for baselines without a solver.
+            {
+                let lookups = r.memo_hits + r.memo_misses;
+                if lookups == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.1}%",
+                            r.memo_hits as f64 * 100.0 / lookups as f64)
+                }
+            },
             format!("{:.3}", r.sched_wall_per_round * 1e3),
         ]);
     }
@@ -156,7 +168,28 @@ mod tests {
             change_fraction: 0.1,
             sched_wall_secs: 0.0,
             sched_wall_per_round: 0.0,
+            memo_hits: 0,
+            memo_misses: 0,
+            dp_rounds: 0,
+            greedy_rounds: 0,
         }
+    }
+
+    #[test]
+    fn memo_column_shows_hit_rate_or_dash() {
+        let mut with = record("hadar", 7, 100.0, 0.6);
+        with.memo_hits = 3;
+        with.memo_misses = 1;
+        let without = record("gavel", 7, 200.0, 0.5);
+        let out = render(&[without, with], "gavel");
+        assert!(out.contains("75.0%"), "{out}");
+        // The counter-less baseline renders a dash in its memo column
+        // (its data row is the one with the 1.00x self-speedup).
+        let gavel_line = out
+            .lines()
+            .find(|l| l.contains("gavel") && l.contains("1.00x"))
+            .expect("gavel row");
+        assert!(gavel_line.contains(" - "), "{gavel_line}");
     }
 
     #[test]

@@ -11,10 +11,13 @@
 
 use crate::expt::spec::{ScenarioSpec, SweepSpec};
 use crate::jobs::queue::JobQueue;
+use crate::obs;
+use crate::obs::export::TelemetrySink;
 use crate::sched;
 use crate::sched::hadare::GangConfig;
 use crate::sim::engine::{self, SimResult};
 use crate::sim::hadare_engine;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
@@ -55,33 +58,91 @@ pub fn effective_workers(requested: usize, n: usize) -> usize {
 /// cluster, so every scheduler in a sweep replays the identical trace.
 /// Timelines are not recorded — sweeps only keep summary metrics.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<SimResult, String> {
-    let cluster = spec.cluster.resolve()?;
-    let jobs = spec.workload.build_jobs(&cluster, spec.seed)?;
-    let events = spec.events.build(&cluster)?;
-    let shared = spec.scheduler.eq_ignore_ascii_case("hadare-shared");
-    if shared || spec.scheduler.eq_ignore_ascii_case("hadare") {
-        let gang = if shared {
-            GangConfig::shared()
+    run_scenario_observed(spec, None)
+}
+
+/// [`run_scenario`] with an optional per-round telemetry sink threaded
+/// through to the engine ([`engine::run_observed`] /
+/// [`hadare_engine::run_with_gang_observed`]). The scenario runs under an
+/// `expt.scenario` span and flushes this thread's span totals into the
+/// global trace table on completion, so sweep flamegraphs attribute time
+/// even when worker threads outlive many scenarios.
+pub fn run_scenario_observed(spec: &ScenarioSpec,
+                             sink: Option<&mut TelemetrySink>)
+                             -> Result<SimResult, String> {
+    let out = {
+        // Inner scope: the span must drop before the flush below so the
+        // scenario's own wall-clock lands in the global table now, not
+        // at some later flush on this worker thread.
+        let _span = obs::trace::span("expt.scenario");
+        let cluster = spec.cluster.resolve()?;
+        let jobs = spec.workload.build_jobs(&cluster, spec.seed)?;
+        let events = spec.events.build(&cluster)?;
+        let shared = spec.scheduler.eq_ignore_ascii_case("hadare-shared");
+        if shared || spec.scheduler.eq_ignore_ascii_case("hadare") {
+            let gang = if shared {
+                GangConfig::shared()
+            } else {
+                GangConfig::default()
+            };
+            hadare_engine::run_with_gang_observed(&jobs, &cluster, &events,
+                                                  &spec.sim, None, gang,
+                                                  sink)
+                .map(|r| r.sim)
         } else {
-            GangConfig::default()
-        };
-        Ok(hadare_engine::run_with_gang(&jobs, &cluster, &events,
-                                        &spec.sim, None, gang)?
-            .sim)
-    } else {
-        let mut scheduler = sched::by_name(&spec.scheduler)?;
-        let mut queue = JobQueue::new();
-        for j in jobs {
-            queue.admit(j);
+            let mut scheduler = sched::by_name(&spec.scheduler)?;
+            let mut queue = JobQueue::new();
+            for j in jobs {
+                queue.admit(j);
+            }
+            engine::run_observed(
+                &mut queue,
+                scheduler.as_mut(),
+                &cluster,
+                &events,
+                &spec.sim,
+                false,
+                sink,
+            )
         }
-        engine::run_with_events(
-            &mut queue,
-            scheduler.as_mut(),
-            &cluster,
-            &events,
-            &spec.sim,
-            false,
-        )
+    };
+    obs::trace::flush();
+    out
+}
+
+/// File-system-safe telemetry stem for a scenario id: ASCII
+/// alphanumerics, `-`, `.` and `_` pass through, everything else maps
+/// to `_`.
+pub fn sanitize_id(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '.' | '_') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Run one scenario, writing per-round telemetry to
+/// `<dir>/<sanitized-id>.telemetry.jsonl` when `telemetry_dir` is set.
+/// Telemetry files include wall-clock timing fields (they are run
+/// artifacts, not determinism fixtures).
+fn run_scenario_to_dir(spec: &ScenarioSpec, telemetry_dir: Option<&Path>)
+                       -> Result<SimResult, String> {
+    match telemetry_dir {
+        None => run_scenario_observed(spec, None),
+        Some(dir) => {
+            let path = dir
+                .join(format!("{}.telemetry.jsonl", sanitize_id(&spec.id())));
+            let mut sink = TelemetrySink::to_file(&path, true)
+                .map_err(|e| format!("telemetry open {path:?}: {e}"))?;
+            let res = run_scenario_observed(spec, Some(&mut sink))?;
+            sink.finish()
+                .map_err(|e| format!("telemetry close {path:?}: {e}"))?;
+            Ok(res)
+        }
     }
 }
 
@@ -92,11 +153,31 @@ pub fn run_sweep(spec: &SweepSpec, workers: usize)
     run_scenarios(&spec.expand(), workers)
 }
 
+/// [`run_sweep`] with an optional telemetry directory: when `Some`, every
+/// scenario writes one `<sanitized-id>.telemetry.jsonl` stream into it
+/// (the directory must already exist — the CLI creates it before the
+/// run).
+pub fn run_sweep_observed(spec: &SweepSpec, workers: usize,
+                          telemetry_dir: Option<&Path>)
+                          -> Result<Vec<ScenarioResult>, String> {
+    run_scenarios_observed(&spec.expand(), workers, telemetry_dir)
+}
+
 /// Run an explicit scenario list on `workers` threads (`0` = all cores).
 /// The output order matches the input order independent of thread
 /// interleaving; the first failing scenario aborts the sweep with its id.
 pub fn run_scenarios(scenarios: &[ScenarioSpec], workers: usize)
                      -> Result<Vec<ScenarioResult>, String> {
+    run_scenarios_observed(scenarios, workers, None)
+}
+
+/// [`run_scenarios`] with an optional per-scenario telemetry directory
+/// (see [`run_sweep_observed`]). Telemetry streams are written by the
+/// worker that runs the scenario, so parallel sweeps produce the same
+/// set of files as serial ones.
+pub fn run_scenarios_observed(scenarios: &[ScenarioSpec], workers: usize,
+                              telemetry_dir: Option<&Path>)
+                              -> Result<Vec<ScenarioResult>, String> {
     let n = scenarios.len();
     let workers = effective_workers(workers, n);
 
@@ -105,7 +186,7 @@ pub fn run_scenarios(scenarios: &[ScenarioSpec], workers: usize)
 
     if workers <= 1 {
         for (i, s) in scenarios.iter().enumerate() {
-            let out = run_scenario(s);
+            let out = run_scenario_to_dir(s, telemetry_dir);
             let failed = out.is_err();
             slots[i] = Some(out);
             if failed {
@@ -131,7 +212,8 @@ pub fn run_scenarios(scenarios: &[ScenarioSpec], workers: usize)
                     if i >= scenarios.len() {
                         break;
                     }
-                    let out = run_scenario(&scenarios[i]);
+                    let out = run_scenario_to_dir(&scenarios[i],
+                                                  telemetry_dir);
                     if out.is_err() {
                         stop.store(true, Ordering::SeqCst);
                     }
@@ -278,6 +360,28 @@ mod tests {
         assert_eq!(a.preemptions, b.preemptions);
         assert_eq!(a.events_applied, b.events_applied);
         assert_eq!(a.jct, b.jct);
+    }
+
+    #[test]
+    fn observed_scenario_streams_one_record_per_round() {
+        let mut sink = TelemetrySink::in_memory(false);
+        let res =
+            run_scenario_observed(&tiny_spec("hadar"), Some(&mut sink))
+                .unwrap();
+        assert_eq!(sink.records(), res.rounds);
+        let text = sink.contents().unwrap().to_string();
+        assert_eq!(text.lines().count() as u64, res.rounds);
+        for line in text.lines() {
+            let v = crate::util::json::parse(line).unwrap();
+            assert_eq!(v.get("scheduler").as_str(), Some("hadar"));
+        }
+    }
+
+    #[test]
+    fn sanitize_id_keeps_safe_chars_only() {
+        assert_eq!(sanitize_id("hadar-sim60_s3.slot360"),
+                   "hadar-sim60_s3.slot360");
+        assert_eq!(sanitize_id("a/b:c d"), "a_b_c_d");
     }
 
     #[test]

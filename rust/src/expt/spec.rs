@@ -460,6 +460,9 @@ pub struct SweepSpec {
     pub events: Vec<EventsRef>,
     /// Base simulation config (slot overridden per scenario).
     pub base: SimConfig,
+    /// Write one per-round telemetry JSONL stream per scenario next to
+    /// the sweep artifacts (see `docs/observability.md`).
+    pub telemetry: bool,
 }
 
 impl SweepSpec {
@@ -530,6 +533,7 @@ impl SweepSpec {
                 max_rounds: 50_000,
                 horizon: 30.0 * 24.0 * 3600.0,
             },
+            telemetry: false,
         }
     }
 
@@ -566,6 +570,7 @@ impl SweepSpec {
                 Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
             )
             .set("sim", sim_to_json(&self.base))
+            .set("telemetry", self.telemetry)
     }
 
     /// Parse a grid from JSON; `slots_secs`, `seeds`, and `events` are
@@ -654,6 +659,7 @@ impl SweepSpec {
             seeds,
             events,
             base,
+            telemetry: v.get("telemetry").as_bool().unwrap_or(false),
         })
     }
 

@@ -63,6 +63,7 @@ pub fn sweep_spec(slot_secs: f64) -> SweepSpec {
         seeds: vec![0],
         events: vec![EventsRef::None],
         base: sim_cfg(slot_secs),
+        telemetry: false,
     }
 }
 

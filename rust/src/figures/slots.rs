@@ -41,6 +41,7 @@ pub fn sweep_spec(scheduler: &str) -> SweepSpec {
         seeds: vec![0],
         events: vec![EventsRef::None],
         base: physical::sim_cfg(SLOTS[0]),
+        telemetry: false,
     }
 }
 

@@ -64,6 +64,7 @@ pub fn sweep_spec(cfg: &TraceEvalConfig) -> SweepSpec {
             max_rounds: 50_000,
             horizon: 30.0 * 24.0 * 3600.0,
         },
+        telemetry: false,
     }
 }
 

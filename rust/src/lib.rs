@@ -30,6 +30,9 @@
 //!   `hadar sweep` subcommand; the multi-scenario figures run through it).
 //! * [`figures`] — one driver per paper table/figure (see DESIGN.md's
 //!   experiment index), shared by examples and benches.
+//! * [`obs`] — observability: scoped span tracing with folded-stack
+//!   export, a counters/gauges/histograms registry, and per-round JSONL
+//!   telemetry (off by default; see `docs/observability.md`).
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, stats, tables,
 //!   property-test + bench harnesses).
 //!
@@ -46,6 +49,7 @@ pub mod expt;
 pub mod figures;
 pub mod forking;
 pub mod jobs;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

@@ -4,7 +4,9 @@
 //!   workloads   Tables II/III
 //!   motivate    Fig. 1 motivational example
 //!   simulate    trace-driven simulation, Figs. 3-4; with --events, the
-//!               dynamic-cluster churn comparison
+//!               dynamic-cluster churn comparison; with --preset/--sched/
+//!               --telemetry/--metrics-dump/--trace-folded, a single
+//!               observability run (see docs/observability.md)
 //!   scale       Fig. 5 scheduling-time scalability
 //!   rounds      Fig. 6 Hadar vs HadarE round timelines
 //!   physical    Figs. 8-10 mixes grid
@@ -30,7 +32,24 @@ fn app() -> App {
                      "cluster event timeline JSON; runs the churn-scenario \
                       comparison instead of Figs. 3-4")
                 .opt("cluster", Some("sim60"),
-                     "cluster preset for the churn comparison"),
+                     "cluster preset for the churn comparison")
+                .opt("preset", Some(""),
+                     "cluster preset for a single-scheduler run (enables \
+                      single-run mode)")
+                .opt("sched", Some("hadar"),
+                     "scheduler for the single-scheduler run")
+                .opt("telemetry", Some(""),
+                     "write per-round JSONL telemetry to this file \
+                      (single-run mode)")
+                .opt("trace-folded", Some(""),
+                     "write flamegraph-compatible folded span stacks to \
+                      this file (enables span tracing)")
+                .switch("metrics-dump",
+                        "print a Prometheus-style metrics snapshot after \
+                         the run (enables metric collection)")
+                .switch("log-json", "emit structured JSON log lines")
+                .switch("log-timestamps", "prefix log lines with RFC-3339 \
+                                           timestamps"),
         )
         .command(
             Command::new("scale", "Fig. 5 scheduling-time scalability")
@@ -58,7 +77,10 @@ fn app() -> App {
                  "baseline scheduler for the comparison report")
             .opt("from", Some(""),
                  "re-aggregate an existing summaries.jsonl (skips running)")
-            .switch("dry-run", "print the expanded scenario grid and exit"),
+            .switch("dry-run", "print the expanded scenario grid and exit")
+            .switch("log-json", "emit structured JSON log lines")
+            .switch("log-timestamps", "prefix log lines with RFC-3339 \
+                                       timestamps"),
         )
         .command(
             Command::new("train", "end-to-end real-training emulation (Table IV)")
@@ -73,13 +95,112 @@ fn app() -> App {
             )
             .opt("out", Some("BENCH_sched.json"),
                  "artifact path written with --json")
+            .opt("baseline", Some(""),
+                 "committed baseline JSON to gate against (fails on >20% \
+                  speedup regression on plans-equal rows)")
             .switch("json", "write the BENCH_sched.json artifact")
             .switch("quick", "CI smoke profile: fewer cases and iterations"),
         )
         .command(Command::new("bench-info", "map figures/tables to bench targets"))
 }
 
+/// Apply the shared `--log-json` / `--log-timestamps` switches.
+fn apply_log_flags(args: &Args) {
+    if args.flag("log-json") {
+        hadar::util::log::set_json(true);
+    }
+    if args.flag("log-timestamps") {
+        hadar::util::log::set_timestamps(true);
+    }
+}
+
+/// Single-scheduler observability run: one scheduler on one preset, with
+/// optional per-round telemetry, a Prometheus metrics snapshot, and a
+/// folded-stack span export. `--metrics-dump` / `--trace-folded` enable
+/// the (default-off) obs instrumentation; telemetry streams regardless —
+/// it reads round state, not span state.
+fn simulate_single(args: &Args) -> anyhow::Result<()> {
+    use hadar::expt::runner;
+    use hadar::expt::spec::{ClusterRef, EventsRef, ScenarioSpec,
+                            WorkloadSpec};
+    use hadar::obs;
+    use hadar::obs::export::TelemetrySink;
+    use hadar::sim::engine::SimConfig;
+
+    let preset = {
+        let p = args.get_str("preset");
+        if p.is_empty() { "sim60".to_string() } else { p }
+    };
+    let folded_path = args.get_str("trace-folded");
+    let metrics_dump = args.flag("metrics-dump");
+    if metrics_dump || !folded_path.is_empty() {
+        obs::set_enabled(true);
+    }
+
+    let slot = args.get_f64("slot");
+    let spec = ScenarioSpec {
+        scheduler: args.get_str("sched"),
+        cluster: ClusterRef::Preset(preset),
+        workload: WorkloadSpec::Trace {
+            n_jobs: args.get_usize("jobs"),
+            max_gpus: 8,
+            all_at_start: true,
+            hours_scale: args.get_f64("hours-scale"),
+        },
+        seed: args.get_u64("seed"),
+        sim: SimConfig {
+            slot_secs: slot,
+            restart_overhead: 10.0,
+            max_rounds: 50_000,
+            horizon: 30.0 * 24.0 * 3600.0,
+        },
+        events: EventsRef::None,
+    };
+
+    let telemetry_path = args.get_str("telemetry");
+    let mut sink = if telemetry_path.is_empty() {
+        None
+    } else {
+        Some(TelemetrySink::to_file(
+            std::path::Path::new(&telemetry_path), true)?)
+    };
+    let res = runner::run_scenario_observed(&spec, sink.as_mut())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "{}: {} jobs done, ttd {:.0}s, gru {:.1}%, cru {:.1}%, {} rounds",
+        res.scheduler,
+        res.jct.len(),
+        res.ttd,
+        res.gru * 100.0,
+        res.cru * 100.0,
+        res.rounds,
+    );
+    if let Some(s) = sink.take() {
+        let n = s.records();
+        s.finish()?;
+        println!("wrote {telemetry_path} ({n} records)");
+    }
+    if !folded_path.is_empty() {
+        std::fs::write(&folded_path, obs::trace::folded())?;
+        println!("wrote {folded_path}");
+    }
+    if metrics_dump {
+        print!("{}", obs::export::prometheus(obs::metrics::global()));
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    apply_log_flags(args);
+    // Single-run observability mode: any of the dedicated flags selects
+    // one scheduler on one preset instead of the Figs. 3-4 comparison.
+    if !args.get_str("preset").is_empty()
+        || !args.get_str("telemetry").is_empty()
+        || !args.get_str("trace-folded").is_empty()
+        || args.flag("metrics-dump")
+    {
+        return simulate_single(args);
+    }
     let events_path = args.get_str("events");
     if !events_path.is_empty() {
         // Dynamic-cluster mode: replay the event trace under every
@@ -127,6 +248,7 @@ fn cmd_scale(args: &Args) {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     use hadar::expt::{artifact, report, runner, spec::SweepSpec};
 
+    apply_log_flags(args);
     let baseline = args.get_str("baseline");
 
     // Re-aggregation path: load existing artifacts, render, done.
@@ -156,15 +278,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 
     let workers =
         runner::effective_workers(args.get_usize("workers"), scenarios.len());
+    let out = args.get_str("out");
+    std::fs::create_dir_all(&out)?;
+    // `telemetry: true` in the spec streams one per-round JSONL file per
+    // scenario into <out>/telemetry/.
+    let telemetry_dir = if spec.telemetry {
+        let dir = std::path::PathBuf::from(&out).join("telemetry");
+        std::fs::create_dir_all(&dir)?;
+        Some(dir)
+    } else {
+        None
+    };
     let t0 = std::time::Instant::now();
-    let results = runner::run_scenarios(&scenarios, workers)
+    let results = runner::run_scenarios_observed(&scenarios, workers,
+                                                 telemetry_dir.as_deref())
         .map_err(|e| anyhow::anyhow!(e))?;
     let wall = t0.elapsed().as_secs_f64();
     let records: Vec<artifact::ScenarioRecord> =
         results.iter().map(artifact::ScenarioRecord::from_run).collect();
-
-    let out = args.get_str("out");
-    std::fs::create_dir_all(&out)?;
     let summaries = format!("{out}/summaries.jsonl");
     artifact::write_jsonl(std::path::Path::new(&summaries), &records)?;
     let manifest = artifact::RunManifest {
@@ -189,6 +320,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         records.len(),
         workers
     );
+    if let Some(dir) = &telemetry_dir {
+        println!("telemetry streams in {}", dir.display());
+    }
     Ok(())
 }
 
@@ -208,6 +342,26 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // property tests.
     if let Some(bad) = results.iter().find(|r| !r.plans_equal) {
         anyhow::bail!("{}: bench row invariant broken", bad.name);
+    }
+    // Perf regression gate against a committed baseline artifact.
+    let baseline_path = args.get_str("baseline");
+    if !baseline_path.is_empty() {
+        let text = std::fs::read_to_string(&baseline_path)?;
+        let base = hadar::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+        let diffs = bench::compare_to_baseline(&results, &base, 0.20);
+        print!("{}", bench::render_baseline(&diffs));
+        let regressed: Vec<&str> = diffs
+            .iter()
+            .filter(|d| d.regressed)
+            .map(|d| d.name.as_str())
+            .collect();
+        if !regressed.is_empty() {
+            anyhow::bail!(
+                "speedup regressed >20% vs {baseline_path}: {}",
+                regressed.join(", ")
+            );
+        }
     }
     Ok(())
 }

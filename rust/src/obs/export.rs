@@ -1,0 +1,299 @@
+//! Telemetry export: per-round JSONL streams and a Prometheus-style
+//! text snapshot.
+//!
+//! The engines emit one [`RoundTelemetry`] record per scheduling round
+//! into a [`TelemetrySink`] (`hadar simulate --telemetry <file>`, or one
+//! stream per scenario when `SweepSpec.telemetry` is set). Records are
+//! deterministic modulo the wall-clock field: with `include_timing`
+//! off, the same seed produces a byte-identical stream whether span
+//! tracing is enabled or not (asserted by `rust/tests/obs_telemetry.rs`).
+//!
+//! [`prometheus`] renders a [`crate::obs::metrics::Registry`] snapshot
+//! in the Prometheus text exposition format, for
+//! `hadar simulate --metrics-dump` and the future `hadar serve` mode.
+
+use crate::obs::metrics::{MetricValue, Registry};
+use crate::sched::SolverStats;
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// One scheduling round's telemetry record (one JSONL line).
+///
+/// Everything except `sched_wall_secs` is derived from the simulation
+/// state, so it is deterministic for a fixed seed; `sched_wall_secs` is
+/// wall clock and is dropped when the sink's `include_timing` is off.
+/// The schema is documented in `docs/observability.md`.
+#[derive(Clone, Debug)]
+pub struct RoundTelemetry {
+    /// Round number (0-based).
+    pub round: u64,
+    /// Virtual time at round start (seconds).
+    pub now: f64,
+    /// Scheduler that produced this round's plan.
+    pub scheduler: String,
+    /// Arrived, incomplete jobs at round start (queue depth).
+    pub active_jobs: usize,
+    /// Jobs holding an allocation this round.
+    pub scheduled_jobs: usize,
+    /// GPUs allocated this round.
+    pub gpus_allocated: usize,
+    /// Busy GPU-seconds this round (excludes restart overhead).
+    pub busy_gpu_secs: f64,
+    /// GPU-seconds allocated this round.
+    pub alloc_gpu_secs: f64,
+    /// GPU-seconds available this round (current cluster x slot).
+    pub avail_gpu_secs: f64,
+    /// Whether this round's plan differs from the previous round's.
+    pub plan_changed: bool,
+    /// Jobs force-preempted at this round's boundary.
+    pub preemptions: u64,
+    /// Cluster events applied at this round's boundary.
+    pub events_applied: u64,
+    /// Jobs that completed during this round.
+    pub completed: usize,
+    /// Solver-internal counters (cumulative), for schedulers that
+    /// expose them ([`crate::sched::Scheduler::solver_stats`]).
+    pub solver: Option<SolverStats>,
+    /// Wall-clock seconds inside `Scheduler::schedule` this round —
+    /// the one non-deterministic field.
+    pub sched_wall_secs: f64,
+}
+
+impl RoundTelemetry {
+    /// JSON form. `include_timing` gates the wall-clock field so
+    /// canonical streams stay reproducible (same convention as
+    /// `ScenarioRecord::to_json`).
+    pub fn to_json(&self, include_timing: bool) -> Json {
+        let mut j = Json::obj()
+            .set("round", self.round)
+            .set("now", self.now)
+            .set("scheduler", self.scheduler.as_str())
+            .set("active_jobs", self.active_jobs)
+            .set("scheduled_jobs", self.scheduled_jobs)
+            .set("gpus_allocated", self.gpus_allocated)
+            .set("busy_gpu_secs", self.busy_gpu_secs)
+            .set("alloc_gpu_secs", self.alloc_gpu_secs)
+            .set("avail_gpu_secs", self.avail_gpu_secs)
+            .set("plan_changed", self.plan_changed)
+            .set("preemptions", self.preemptions)
+            .set("events_applied", self.events_applied)
+            .set("completed", self.completed);
+        if let Some(s) = self.solver {
+            j.insert(
+                "solver",
+                Json::obj()
+                    .set("memo_hits", s.memo_hits)
+                    .set("memo_misses", s.memo_misses)
+                    .set("dp_rounds", s.dp_rounds)
+                    .set("greedy_rounds", s.greedy_rounds)
+                    .set("rounds_with_change", s.rounds_with_change),
+            );
+        }
+        if include_timing {
+            j.insert("sched_wall_secs", self.sched_wall_secs);
+        }
+        j
+    }
+}
+
+enum Out {
+    File(BufWriter<File>),
+    Mem(Vec<u8>),
+}
+
+/// Line-oriented JSONL destination for [`RoundTelemetry`] records.
+///
+/// Writing telemetry is orthogonal to [`crate::obs::enabled`]: a sink
+/// handed to an engine is always written, so streams can be compared
+/// across tracing states.
+pub struct TelemetrySink {
+    out: Out,
+    include_timing: bool,
+    records: u64,
+}
+
+impl TelemetrySink {
+    /// Stream records to `path` (created/truncated). File streams keep
+    /// the wall-clock field by default when `include_timing` is true.
+    pub fn to_file(path: &Path, include_timing: bool) -> io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(TelemetrySink {
+            out: Out::File(BufWriter::new(f)),
+            include_timing,
+            records: 0,
+        })
+    }
+
+    /// Buffer records in memory (tests; read back via
+    /// [`TelemetrySink::contents`]).
+    pub fn in_memory(include_timing: bool) -> Self {
+        TelemetrySink {
+            out: Out::Mem(Vec::new()),
+            include_timing,
+            records: 0,
+        }
+    }
+
+    /// Append one record as a single JSON line.
+    pub fn emit(&mut self, t: &RoundTelemetry) -> io::Result<()> {
+        let line = t.to_json(self.include_timing).to_string();
+        self.records += 1;
+        match &mut self.out {
+            Out::File(w) => {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")
+            }
+            Out::Mem(buf) => {
+                buf.extend_from_slice(line.as_bytes());
+                buf.push(b'\n');
+                Ok(())
+            }
+        }
+    }
+
+    /// Records emitted so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// The buffered stream, for in-memory sinks (`None` for files).
+    pub fn contents(&self) -> Option<&str> {
+        match &self.out {
+            Out::Mem(buf) => std::str::from_utf8(buf).ok(),
+            Out::File(_) => None,
+        }
+    }
+
+    /// Flush and close the stream.
+    pub fn finish(self) -> io::Result<()> {
+        match self.out {
+            Out::File(mut w) => w.flush(),
+            Out::Mem(_) => Ok(()),
+        }
+    }
+}
+
+/// Render a registry snapshot in the Prometheus text exposition format
+/// (`# TYPE` comments, `_bucket{le=...}`/`_sum`/`_count` histogram
+/// series). Metric dots become underscores (`hadar.dp_memo_hits` →
+/// `hadar_dp_memo_hits`). Deterministic: sorted by metric name.
+pub fn prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+    for m in reg.snapshot() {
+        let name: String = m
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        match m.value {
+            MetricValue::Counter(v) => {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+                out.push_str(&format!("{name} {v}\n"));
+            }
+            MetricValue::Gauge(v) => {
+                out.push_str(&format!("# TYPE {name} gauge\n"));
+                out.push_str(&format!("{name} {v}\n"));
+            }
+            MetricValue::Histogram {
+                buckets,
+                count,
+                sum_secs,
+            } => {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                let mut cum = 0u64;
+                for (le, n) in buckets {
+                    cum += n;
+                    if le.is_infinite() {
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"+Inf\"}} {cum}\n"
+                        ));
+                    } else {
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"{le}\"}} {cum}\n"
+                        ));
+                    }
+                }
+                out.push_str(&format!("{name}_sum {sum_secs}\n"));
+                out.push_str(&format!("{name}_count {count}\n"));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(round: u64) -> RoundTelemetry {
+        RoundTelemetry {
+            round,
+            now: round as f64 * 360.0,
+            scheduler: "hadar".to_string(),
+            active_jobs: 5,
+            scheduled_jobs: 4,
+            gpus_allocated: 6,
+            busy_gpu_secs: 2100.0,
+            alloc_gpu_secs: 2160.0,
+            avail_gpu_secs: 2880.0,
+            plan_changed: round == 0,
+            preemptions: 0,
+            events_applied: 0,
+            completed: 1,
+            solver: Some(SolverStats {
+                memo_hits: 10,
+                memo_misses: 20,
+                dp_rounds: 1,
+                greedy_rounds: 0,
+                rounds_with_change: 1,
+            }),
+            sched_wall_secs: 0.001,
+        }
+    }
+
+    #[test]
+    fn sink_emits_one_line_per_record_and_gates_timing() {
+        let mut sink = TelemetrySink::in_memory(false);
+        sink.emit(&sample(0)).unwrap();
+        sink.emit(&sample(1)).unwrap();
+        assert_eq!(sink.records(), 2);
+        let text = sink.contents().unwrap().to_string();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = crate::util::json::parse(line).unwrap();
+            assert!(j.get("round").as_u64().is_some());
+            assert_eq!(j.get("scheduler").as_str(), Some("hadar"));
+            assert_eq!(j.get("solver").get("memo_hits").as_u64(), Some(10));
+            assert!(j.get("sched_wall_secs").as_f64().is_none(),
+                    "timing excluded from canonical streams");
+        }
+
+        let mut timed = TelemetrySink::in_memory(true);
+        timed.emit(&sample(0)).unwrap();
+        let j = crate::util::json::parse(timed.contents().unwrap().trim())
+            .unwrap();
+        assert!(j.get("sched_wall_secs").as_f64().is_some());
+    }
+
+    #[test]
+    fn prometheus_renders_all_kinds() {
+        let reg = Registry::new();
+        reg.counter("t.hits").add(4);
+        reg.gauge("t.depth").set(2.0);
+        let h = reg.histogram("t.lat");
+        h.record(0.5);
+        h.record(200.0);
+        let text = prometheus(&reg);
+        assert!(text.contains("# TYPE t_hits counter\nt_hits 4\n"));
+        assert!(text.contains("# TYPE t_depth gauge\nt_depth 2\n"));
+        assert!(text.contains("# TYPE t_lat histogram\n"));
+        assert!(text.contains("t_lat_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("t_lat_count 2\n"));
+        // Cumulative buckets: the le="1" bucket already holds the 0.5 s
+        // sample.
+        assert!(text.contains("t_lat_bucket{le=\"1\"} 1\n"), "{text}");
+    }
+}

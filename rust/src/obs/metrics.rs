@@ -1,0 +1,382 @@
+//! Metrics registry: counters, gauges, and histograms behind cheap
+//! atomic handles.
+//!
+//! A handle ([`Counter`], [`Gauge`], [`Histogram`]) is an `Arc` around
+//! atomics: obtaining one takes the registry lock once, after which
+//! every update is a single relaxed atomic operation — cheap enough for
+//! solver inner loops. Hot-path call sites additionally gate on
+//! [`crate::obs::enabled`] so the disabled path is one atomic load and a
+//! branch, in line with the subsystem's off-by-default contract.
+//!
+//! The well-known instruments fed by the solvers and engines live in
+//! [`CoreMetrics`] (lazily registered on first use via [`core`]);
+//! [`Registry::snapshot`] feeds the Prometheus-style text dump in
+//! [`crate::obs::export::prometheus`]. The full inventory is documented
+//! in `docs/observability.md`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Histogram bucket count: powers of two from 2^-20 s (~1 µs) to 2^6 s
+/// (64 s), plus one overflow bucket.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Monotonically increasing event count.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` to the counter.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins floating-point level (queue depth, etc.). Stored as
+/// `f64` bits in an atomic.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistInner {
+    /// `buckets[i]` counts samples with `value <= 2^(i-20)` seconds
+    /// (non-cumulative); the last bucket catches everything larger.
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    /// Sum of samples in nanoseconds (saturating enough for our use:
+    /// 2^64 ns ≈ 584 years of scheduler wall time).
+    sum_ns: AtomicU64,
+}
+
+/// Distribution of non-negative second-valued samples over
+/// power-of-two buckets (per-round solver wall clock, etc.).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Histogram {
+    /// Record one sample, in seconds.
+    #[inline]
+    pub fn record(&self, secs: f64) {
+        let idx = bucket_index(secs);
+        self.0.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (secs.max(0.0) * 1e9) as u64;
+        self.0.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples, in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.0.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Non-cumulative bucket counts as `(upper bound in seconds, count)`;
+    /// the final entry's bound is `f64::INFINITY`.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        (0..HIST_BUCKETS)
+            .map(|i| {
+                (bucket_bound(i), self.0.buckets[i].load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+}
+
+/// Upper bound (seconds) of bucket `i`.
+fn bucket_bound(i: usize) -> f64 {
+    if i + 1 >= HIST_BUCKETS {
+        f64::INFINITY
+    } else {
+        (2.0f64).powi(i as i32 - 20)
+    }
+}
+
+/// Smallest bucket whose upper bound holds `secs`.
+fn bucket_index(secs: f64) -> usize {
+    if !(secs > 0.0) {
+        return 0;
+    }
+    let i = secs.log2().ceil() as i64 + 20;
+    i.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+enum Handle {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// A point-in-time reading of one metric ([`Registry::snapshot`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram reading.
+    Histogram {
+        /// Non-cumulative `(upper bound secs, count)` buckets.
+        buckets: Vec<(f64, u64)>,
+        /// Total samples.
+        count: u64,
+        /// Sum of samples (seconds).
+        sum_secs: f64,
+    },
+}
+
+/// One named metric in a [`Registry::snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricSnapshot {
+    /// Dotted metric name (e.g. `hadar.dp_memo_hits`).
+    pub name: String,
+    /// Its current reading.
+    pub value: MetricValue,
+}
+
+/// Named metric store. Handles are get-or-create: asking twice for the
+/// same name returns clones sharing the same atomics.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Handle>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub const fn new() -> Self {
+        Registry {
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Handle>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get or create the counter `name`. Panics if `name` is already
+    /// registered as a different kind (a programming error).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.lock();
+        let h = m.entry(name.to_string()).or_insert_with(|| {
+            Handle::Counter(Counter(Arc::new(AtomicU64::new(0))))
+        });
+        match h {
+            Handle::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' is not a counter"),
+        }
+    }
+
+    /// Get or create the gauge `name`. Panics on kind mismatch.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.lock();
+        let h = m.entry(name.to_string()).or_insert_with(|| {
+            Handle::Gauge(Gauge(Arc::new(AtomicU64::new(0))))
+        });
+        match h {
+            Handle::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' is not a gauge"),
+        }
+    }
+
+    /// Get or create the histogram `name`. Panics on kind mismatch.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.lock();
+        let h = m.entry(name.to_string()).or_insert_with(|| {
+            Handle::Histogram(Histogram(Arc::new(HistInner {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum_ns: AtomicU64::new(0),
+            })))
+        });
+        match h {
+            Handle::Histogram(hh) => hh.clone(),
+            _ => panic!("metric '{name}' is not a histogram"),
+        }
+    }
+
+    /// Read every metric, sorted by name (deterministic order).
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let m = self.lock();
+        m.iter()
+            .map(|(name, h)| MetricSnapshot {
+                name: name.clone(),
+                value: match h {
+                    Handle::Counter(c) => MetricValue::Counter(c.get()),
+                    Handle::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Handle::Histogram(hh) => MetricValue::Histogram {
+                        buckets: hh.buckets(),
+                        count: hh.count(),
+                        sum_secs: hh.sum_secs(),
+                    },
+                },
+            })
+            .collect()
+    }
+
+    /// Zero every registered metric (handles stay valid).
+    pub fn reset(&self) {
+        let m = self.lock();
+        for h in m.values() {
+            match h {
+                Handle::Counter(c) => c.0.store(0, Ordering::Relaxed),
+                Handle::Gauge(g) => g.0.store(0, Ordering::Relaxed),
+                Handle::Histogram(hh) => {
+                    for b in &hh.0.buckets {
+                        b.store(0, Ordering::Relaxed);
+                    }
+                    hh.0.count.store(0, Ordering::Relaxed);
+                    hh.0.sum_ns.store(0, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// The process-wide registry — what the CLI's `--metrics-dump` prints.
+pub fn global() -> &'static Registry {
+    static R: Registry = Registry::new();
+    &R
+}
+
+/// The well-known instruments fed by the solvers and engines (the
+/// metric inventory in `docs/observability.md`). One lazy lookup per
+/// process; call sites reach them via [`core`] and gate on
+/// [`crate::obs::enabled`].
+pub struct CoreMetrics {
+    /// Hadar DP memo hits (includes the replay pass's revisits).
+    pub dp_memo_hits: Counter,
+    /// Hadar DP memo misses.
+    pub dp_memo_misses: Counter,
+    /// Rounds solved by the exact select/skip DP.
+    pub dp_rounds: Counter,
+    /// Rounds solved by the payoff-density greedy.
+    pub greedy_rounds: Counter,
+    /// HadarE gang-planner rounds.
+    pub hadare_plan_rounds: Counter,
+    /// `ClusterState::checkpoint` calls.
+    pub state_checkpoints: Counter,
+    /// `ClusterState::rewind` calls.
+    pub state_rewinds: Counter,
+    /// Assignments undone across all rewinds (total rewind depth).
+    pub state_rewound_assignments: Counter,
+    /// Free-slot bucket scans (`ClusterState::free_slots_of_type`).
+    pub state_slot_scans: Counter,
+    /// Engine rounds executed.
+    pub sim_rounds: Counter,
+    /// Jobs force-preempted by node drains / capacity shrinks.
+    pub sim_preemptions: Counter,
+    /// Checkpoint-restart overhead charges applied.
+    pub sim_restart_charges: Counter,
+    /// Arrived, incomplete jobs at the latest round (waiting set depth).
+    pub sim_queue_depth: Gauge,
+    /// Per-round `Scheduler::schedule` wall clock (seconds).
+    pub sched_round_secs: Histogram,
+}
+
+/// The [`CoreMetrics`] singleton, registered in [`global`].
+pub fn core() -> &'static CoreMetrics {
+    static C: OnceLock<CoreMetrics> = OnceLock::new();
+    C.get_or_init(|| {
+        let r = global();
+        CoreMetrics {
+            dp_memo_hits: r.counter("hadar.dp_memo_hits"),
+            dp_memo_misses: r.counter("hadar.dp_memo_misses"),
+            dp_rounds: r.counter("hadar.dp_rounds"),
+            greedy_rounds: r.counter("hadar.greedy_rounds"),
+            hadare_plan_rounds: r.counter("hadare.plan_rounds"),
+            state_checkpoints: r.counter("cluster.checkpoints"),
+            state_rewinds: r.counter("cluster.rewinds"),
+            state_rewound_assignments: r
+                .counter("cluster.rewound_assignments"),
+            state_slot_scans: r.counter("cluster.slot_scans"),
+            sim_rounds: r.counter("sim.rounds"),
+            sim_preemptions: r.counter("sim.preemptions"),
+            sim_restart_charges: r.counter("sim.restart_charges"),
+            sim_queue_depth: r.gauge("sim.queue_depth"),
+            sched_round_secs: r.histogram("sim.sched_round_secs"),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("t.count");
+        c.add(3);
+        r.counter("t.count").add(2);
+        assert_eq!(c.get(), 5, "handles share the same atomic");
+
+        let g = r.gauge("t.depth");
+        g.set(7.5);
+        assert_eq!(r.gauge("t.depth").get(), 7.5);
+
+        let h = r.histogram("t.lat");
+        h.record(0.001); // 2^-10 bucket range
+        h.record(0.001);
+        h.record(100.0); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert!((h.sum_secs() - 100.002).abs() < 1e-6);
+        let buckets = h.buckets();
+        assert_eq!(buckets.last().unwrap().1, 1, "overflow bucket");
+        let small: u64 = buckets
+            .iter()
+            .filter(|(le, _)| *le <= 0.001 * (1.0 + 1e-12))
+            .map(|(_, n)| n)
+            .sum();
+        assert_eq!(small, 2, "1 ms samples land at or below the 2^-10 bound");
+
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].name, "t.count");
+        assert_eq!(snap[0].value, MetricValue::Counter(5));
+
+        r.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn bucket_index_maps_powers_exactly() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        // 2^-20 is the bound of bucket 0.
+        assert_eq!(bucket_index((2.0f64).powi(-20)), 0);
+        // Just above it spills into bucket 1.
+        assert_eq!(bucket_index((2.0f64).powi(-20) * 1.01), 1);
+        // 1 s = 2^0 -> bucket 20.
+        assert_eq!(bucket_index(1.0), 20);
+        // Anything above 2^6 s lands in the overflow bucket.
+        assert_eq!(bucket_index(1e9), HIST_BUCKETS - 1);
+    }
+}

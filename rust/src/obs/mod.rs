@@ -1,0 +1,58 @@
+//! Observability: span tracing, a metrics registry, and per-round
+//! telemetry export (see `docs/observability.md`).
+//!
+//! Three layers, all self-contained (no external crates — same sandbox
+//! constraint as the rest of `util`):
+//!
+//! * [`trace`] — lightweight scoped spans (RAII guard, thread-local span
+//!   stack, monotonic nanosecond timers) over the scheduler and engine
+//!   hot paths, exportable as a folded-stack (flamegraph-compatible)
+//!   text dump.
+//! * [`metrics`] — a registry of counters/gauges/histograms fed by the
+//!   solvers and engines through cheap atomic handles (DP memo
+//!   hits/misses, checkpoint/rewind depth, free-slot scans, queue depth,
+//!   preemptions, restart-overhead charges, per-round solver wall-clock).
+//! * [`export`] — the per-round JSONL telemetry stream
+//!   (`hadar simulate --telemetry <file>`, `SweepSpec.telemetry`) and the
+//!   Prometheus-style text snapshot (`hadar simulate --metrics-dump`).
+//!
+//! **Off by default, near-zero cost when disabled.** Every span/metric
+//! hook is gated on one global flag read with a single relaxed atomic
+//! load ([`enabled`]); the disabled path does no allocation, takes no
+//! lock, and reads no clock. Telemetry never perturbs plans: spans and
+//! metrics only *observe* — the same seed produces identical
+//! [`crate::sched::RoundPlan`]s and identical non-timing telemetry with
+//! tracing on or off (asserted by `rust/tests/obs_telemetry.rs`).
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Globally enable or disable span tracing and metric collection.
+///
+/// Telemetry JSONL streams ([`export::TelemetrySink`]) are independent of
+/// this flag — a sink passed to an engine is always written — so the
+/// determinism tests can compare streams across both flag states.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether tracing/metrics are collecting. One relaxed atomic load —
+/// this is the *entire* disabled-path cost of every span and metric
+/// hook (guarded callers branch on it and do nothing else).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Reset all observability state: span totals, the disabled-path probe
+/// counter, and every registered metric. Test and long-lived-process
+/// hygiene; never called on the hot path.
+pub fn reset() {
+    trace::reset();
+    metrics::global().reset();
+}

@@ -1,0 +1,193 @@
+//! Scoped spans with thread-local stacks and folded-stack export.
+//!
+//! A span is entered with [`span`] and closed when the returned RAII
+//! guard drops. While tracing is enabled ([`crate::obs::enabled`]) each
+//! guard pushes its name onto a thread-local stack, reads a monotonic
+//! clock on enter/exit, and accumulates `(call count, nanoseconds)`
+//! under the *folded path* — the `;`-joined stack, e.g.
+//! `sim.round;sched.schedule;hadar.dp` — the exact line format
+//! `flamegraph.pl` consumes (see [`folded`]).
+//!
+//! Disabled-path contract: [`span`] does one relaxed atomic load and
+//! returns an inert guard — no clock read, no allocation, no lock, no
+//! thread-local touch. The [`enters`] counter increments only on the
+//! *enabled* path, so tests can assert the disabled path stayed cold by
+//! counting instead of timing (`rust/tests/obs_telemetry.rs`).
+//!
+//! Accumulation is thread-local (lock-free on the hot path); [`flush`]
+//! merges the calling thread's totals into the process-wide table that
+//! [`folded`] and [`totals`] read. Engines and the sweep runner flush
+//! at natural boundaries (end of run / scenario).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Enabled-path span entries since the last [`reset`] — the probe the
+/// overhead-guard test counts (disabled spans must not move it).
+static ENTERS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide folded totals: path -> (calls, nanoseconds). Fed only by
+/// [`flush`], never on the span hot path.
+static GLOBAL: Mutex<BTreeMap<String, (u64, u64)>> =
+    Mutex::new(BTreeMap::new());
+
+thread_local! {
+    /// Names of the spans currently open on this thread, outermost first.
+    static STACK: RefCell<Vec<&'static str>> = RefCell::new(Vec::new());
+    /// This thread's folded totals, merged into [`GLOBAL`] by [`flush`].
+    static LOCAL: RefCell<BTreeMap<String, (u64, u64)>> =
+        RefCell::new(BTreeMap::new());
+}
+
+/// RAII span guard returned by [`span`]. Inert (all fields `None`) when
+/// tracing was disabled at enter time.
+pub struct Span {
+    start: Option<Instant>,
+}
+
+/// Open a span named `name`. Drop the returned guard to close it.
+///
+/// `name` should follow the `layer.phase` naming scheme documented in
+/// `docs/observability.md` (e.g. `hadar.find_alloc`). When tracing is
+/// disabled this is one atomic load and a branch.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !crate::obs::enabled() {
+        return Span { start: None };
+    }
+    enter(name)
+}
+
+#[cold]
+fn enter(name: &'static str) -> Span {
+    ENTERS.fetch_add(1, Ordering::Relaxed);
+    STACK.with(|s| s.borrow_mut().push(name));
+    Span {
+        start: Some(Instant::now()),
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let ns = t0.elapsed().as_nanos() as u64;
+            let key = STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                let key = s.join(";");
+                s.pop();
+                key
+            });
+            LOCAL.with(|m| {
+                let mut m = m.borrow_mut();
+                let e = m.entry(key).or_insert((0, 0));
+                e.0 += 1;
+                e.1 += ns;
+            });
+        }
+    }
+}
+
+/// Merge the calling thread's span totals into the process-wide table.
+/// Cheap when the thread recorded nothing.
+pub fn flush() {
+    LOCAL.with(|m| {
+        let mut m = m.borrow_mut();
+        if m.is_empty() {
+            return;
+        }
+        let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        for (key, (calls, ns)) in std::mem::take(&mut *m) {
+            let e = g.entry(key).or_insert((0, 0));
+            e.0 += calls;
+            e.1 += ns;
+        }
+    });
+}
+
+/// Folded-stack dump of every flushed span total: one
+/// `path;to;span <nanoseconds>` line per distinct stack, sorted by path
+/// (deterministic order). Pipe straight into `flamegraph.pl`. Flushes
+/// the calling thread first.
+pub fn folded() -> String {
+    flush();
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = String::new();
+    for (path, &(_calls, ns)) in g.iter() {
+        out.push_str(path);
+        out.push(' ');
+        out.push_str(&ns.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Flushed span totals as `(folded path, calls, nanoseconds)` rows,
+/// sorted by path. Flushes the calling thread first.
+pub fn totals() -> Vec<(String, u64, u64)> {
+    flush();
+    let g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    g.iter().map(|(k, &(c, ns))| (k.clone(), c, ns)).collect()
+}
+
+/// Enabled-path span entries since the last [`reset`]. The overhead
+/// guard asserts this does not move while tracing is disabled.
+pub fn enters() -> u64 {
+    ENTERS.load(Ordering::Relaxed)
+}
+
+/// Clear the calling thread's totals, the process-wide table, and the
+/// [`enters`] counter. (Other threads' unflushed totals survive until
+/// they flush — tests that reset serialize on one thread.)
+pub fn reset() {
+    LOCAL.with(|m| m.borrow_mut().clear());
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    ENTERS.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_fold_and_disabled_spans_are_invisible() {
+        let _g = crate::util::log::test_lock();
+        crate::obs::set_enabled(false);
+        reset();
+
+        // Disabled: no probe movement, nothing recorded.
+        let before = enters();
+        for _ in 0..1000 {
+            let _s = span("trace.test.off");
+        }
+        assert_eq!(enters(), before, "disabled spans must stay cold");
+        assert!(!folded().contains("trace.test.off"));
+
+        // Enabled: nesting produces the folded path.
+        crate::obs::set_enabled(true);
+        {
+            let _a = span("trace.test.outer");
+            let _b = span("trace.test.inner");
+        }
+        crate::obs::set_enabled(false);
+        let dump = folded();
+        assert!(
+            dump.contains("trace.test.outer;trace.test.inner "),
+            "{dump}"
+        );
+        assert!(dump.contains("\ntrace.test.outer ")
+                    || dump.starts_with("trace.test.outer "),
+                "{dump}");
+        assert_eq!(enters(), before + 2);
+        let rows = totals();
+        let inner = rows
+            .iter()
+            .find(|(p, _, _)| p == "trace.test.outer;trace.test.inner")
+            .expect("inner row");
+        assert_eq!(inner.1, 1, "one call");
+        reset();
+        assert!(folded().is_empty());
+    }
+}

@@ -364,6 +364,86 @@ pub fn to_json(results: &[CaseResult], quick: bool) -> Json {
         .set("cases", Json::Arr(cases))
 }
 
+/// One row of a current-vs-committed-baseline comparison (the CI perf
+/// regression gate over `BENCH_baseline.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineDiff {
+    /// Case name shared by both runs.
+    pub name: String,
+    /// Speedup recorded in the committed baseline.
+    pub base_speedup: f64,
+    /// Speedup measured by the current run.
+    pub cur_speedup: f64,
+    /// `cur_speedup / base_speedup`.
+    pub ratio: f64,
+    /// Whether the current speedup fell below the tolerance band
+    /// (`cur < base * (1 - tolerance)`).
+    pub regressed: bool,
+}
+
+/// Diff the current suite against a committed `BENCH_sched.json`-shaped
+/// baseline document. Only rows whose `check` is `"plans-equal"` gate —
+/// `occupancy` rows compare two *different* planners, so their ratio is
+/// a characterisation, not a regression signal. Cases present on only
+/// one side are skipped (grid drift is handled by refreshing the
+/// baseline, not by failing CI). `tolerance` is the allowed fractional
+/// drop, e.g. `0.20` fails anything slower than 80% of baseline.
+pub fn compare_to_baseline(results: &[CaseResult], baseline: &Json,
+                           tolerance: f64) -> Vec<BaselineDiff> {
+    let mut base: std::collections::BTreeMap<&str, f64> =
+        std::collections::BTreeMap::new();
+    if let Some(cases) = baseline.get("cases").as_arr() {
+        for c in cases {
+            if c.get("check").as_str() != Some("plans-equal") {
+                continue;
+            }
+            if let (Some(name), Some(speedup)) =
+                (c.get("name").as_str(), c.get("speedup").as_f64())
+            {
+                base.insert(name, speedup);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for r in results {
+        if r.check != "plans-equal" {
+            continue;
+        }
+        let Some(&base_speedup) = base.get(r.name.as_str()) else {
+            continue;
+        };
+        if base_speedup <= 0.0 {
+            continue;
+        }
+        out.push(BaselineDiff {
+            name: r.name.clone(),
+            base_speedup,
+            cur_speedup: r.speedup,
+            ratio: r.speedup / base_speedup,
+            regressed: r.speedup < base_speedup * (1.0 - tolerance),
+        });
+    }
+    out
+}
+
+/// Render the baseline comparison table; regressed rows say so.
+pub fn render_baseline(diffs: &[BaselineDiff]) -> String {
+    let mut out = String::from(
+        "case                            base x     cur x    ratio  gate\n",
+    );
+    for d in diffs {
+        out.push_str(&format!(
+            "{:<30} {:>7.2} {:>9.2} {:>8.2}  {}\n",
+            d.name,
+            d.base_speedup,
+            d.cur_speedup,
+            d.ratio,
+            if d.regressed { "REGRESSED" } else { "ok" },
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,5 +497,48 @@ mod tests {
         assert_eq!(case.get("check").as_str(), Some("plans-equal"));
         assert_eq!(case.get("plans_equal").as_bool(), Some(true));
         assert_eq!(case.get("speedup").as_f64(), Some(5.0));
+    }
+
+    fn case(name: &str, check: &'static str, speedup: f64) -> CaseResult {
+        CaseResult {
+            name: name.into(),
+            path: "dp",
+            cluster: "sim60".into(),
+            jobs: 8,
+            ref_ms: 1.0,
+            opt_ms: 1.0 / speedup.max(1e-9),
+            speedup,
+            check,
+            plans_equal: true,
+        }
+    }
+
+    #[test]
+    fn baseline_gate_flags_only_real_regressions() {
+        let baseline = to_json(
+            &[
+                case("dp_sim60_8jobs", "plans-equal", 4.0),
+                case("greedy_sim60_100jobs", "plans-equal", 2.0),
+                case("fork_shared_big20x4_16jobs", "occupancy", 3.0),
+            ],
+            true,
+        );
+        let current = [
+            // 4.0 -> 3.5 is within the 20% band.
+            case("dp_sim60_8jobs", "plans-equal", 3.5),
+            // 2.0 -> 1.0 is a regression.
+            case("greedy_sim60_100jobs", "plans-equal", 1.0),
+            // occupancy rows never gate, however large the swing.
+            case("fork_shared_big20x4_16jobs", "occupancy", 0.1),
+            // unknown-to-baseline cases are skipped.
+            case("dp_new_case_12jobs", "plans-equal", 0.1),
+        ];
+        let diffs = compare_to_baseline(&current, &baseline, 0.20);
+        assert_eq!(diffs.len(), 2);
+        assert!(!diffs[0].regressed, "{:?}", diffs[0]);
+        assert!(diffs[1].regressed, "{:?}", diffs[1]);
+        let table = render_baseline(&diffs);
+        assert!(table.contains("REGRESSED"), "{table}");
+        assert!(table.contains("ok"), "{table}");
     }
 }

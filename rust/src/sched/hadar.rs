@@ -39,9 +39,10 @@
 use crate::cluster::gpu::GpuType;
 use crate::cluster::state::ClusterState;
 use crate::jobs::job::{Job, JobId};
+use crate::obs;
 use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::price::{PriceBounds, PriceTable};
-use crate::sched::{RoundCtx, Scheduler};
+use crate::sched::{RoundCtx, Scheduler, SolverStats};
 use std::collections::{BTreeMap, HashMap};
 
 /// Tunables (ablated in `benches/ablation_*.rs`).
@@ -208,6 +209,7 @@ impl Hadar {
     fn find_alloc(&mut self, job: &Job, state: &ClusterState,
                   prices: &PriceTable, now: f64)
                   -> Option<(JobAllocation, f64)> {
+        let _span = obs::trace::span("hadar.find_alloc");
         let cfg = self.cfg;
         let w = job.gpus_requested.max(1);
         let types = Self::cached_type_order(&mut self.type_order, job);
@@ -374,6 +376,7 @@ impl Hadar {
     fn dp_plan(&mut self, jobs: &[&Job], state: &mut ClusterState,
                prices: &PriceTable, now: f64)
                -> Vec<(JobId, JobAllocation)> {
+        let _span = obs::trace::span("hadar.dp");
         let mut memo: HashMap<(usize, u64), DpEntry> = HashMap::new();
         let mut plan = Vec::new();
         for idx in 0..jobs.len() {
@@ -400,6 +403,7 @@ impl Hadar {
     fn greedy(&mut self, jobs: &[&Job], state: &mut ClusterState,
               prices: &PriceTable, now: f64)
               -> Vec<(JobId, JobAllocation)> {
+        let _span = obs::trace::span("hadar.greedy");
         let mut order: Vec<usize> = (0..jobs.len()).collect();
         order.sort_by(|&a, &b| {
             let da = jobs[a].utility(jobs[a].t_min())
@@ -435,6 +439,22 @@ impl Hadar {
     pub fn forget_job(&mut self, id: JobId) {
         self.type_order.remove(&id);
     }
+
+    /// Feed this round's [`HadarStats`] deltas into the global metrics
+    /// registry. Gated on [`crate::obs::enabled`] so the disabled path is
+    /// one atomic load.
+    fn publish_stats_delta(&self, before: HadarStats) {
+        if !obs::enabled() {
+            return;
+        }
+        let m = obs::metrics::core();
+        m.dp_memo_hits.add(self.stats.memo_hits - before.memo_hits);
+        m.dp_memo_misses.add(self.stats.memo_misses - before.memo_misses);
+        m.dp_rounds
+            .add(self.stats.dp_invocations - before.dp_invocations);
+        m.greedy_rounds
+            .add(self.stats.greedy_invocations - before.greedy_invocations);
+    }
 }
 
 impl Scheduler for Hadar {
@@ -443,6 +463,8 @@ impl Scheduler for Hadar {
     }
 
     fn schedule(&mut self, ctx: &RoundCtx) -> RoundPlan {
+        let _span = obs::trace::span("hadar.schedule");
+        let stats_before = self.stats;
         self.stats.rounds += 1;
         let jobs: Vec<&Job> = ctx
             .active
@@ -517,6 +539,7 @@ impl Scheduler for Hadar {
             self.stats.rounds_with_change += 1;
         }
         self.prev_plan = plan.clone();
+        self.publish_stats_delta(stats_before);
         plan
     }
 
@@ -534,6 +557,19 @@ impl Scheduler for Hadar {
     fn job_completed(&mut self, job: JobId) {
         self.forget_job(job);
         self.prev_plan.allocations.remove(&job);
+    }
+
+    /// Hadar's cumulative [`HadarStats`], mapped onto the generic
+    /// telemetry shape — this is how memo efficiency reaches sweep
+    /// artifacts and per-round telemetry instead of dying in-process.
+    fn solver_stats(&self) -> Option<SolverStats> {
+        Some(SolverStats {
+            memo_hits: self.stats.memo_hits,
+            memo_misses: self.stats.memo_misses,
+            dp_rounds: self.stats.dp_invocations,
+            greedy_rounds: self.stats.greedy_invocations,
+            rounds_with_change: self.stats.rounds_with_change,
+        })
     }
 }
 

@@ -307,6 +307,10 @@ impl HadarE {
     /// them under [`GangConfig::share_nodes`].
     pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
                       -> RoundPlan {
+        let _span = crate::obs::trace::span("hadare.plan_round");
+        if crate::obs::enabled() {
+            crate::obs::metrics::core().hadare_plan_rounds.add(1);
+        }
         // Parents with work left that have *arrived*, by remaining steps
         // (desc; total_cmp so a degenerate row cannot panic the round,
         // stable sort keeps id order on ties). The engine registers every
@@ -372,6 +376,7 @@ impl HadarE {
         // Gang-throughput matrix, row-major [pi * n_s + si]; 0.0 marks an
         // unusable (parent, slot) pair. Computed once — the passes below
         // only do flat indexed reads.
+        let matrix_span = crate::obs::trace::span("hadare.gang_matrix");
         let mut xg = vec![0.0f64; n_p * n_s];
         for (pi, &(pid, _)) in parents.iter().enumerate() {
             if let Some(job) = ctx.queue.get(pid) {
@@ -386,7 +391,10 @@ impl HadarE {
             }
         }
 
+        drop(matrix_span);
+
         let mut t = Tables::new(n_p, n_h, n_s);
+        let _placement_span = crate::obs::trace::span("hadare.placement");
 
         // Pass 0: fairness — every unfinished parent first gets its best
         // still-free slot (longest-remaining parent picks first). Without

@@ -40,6 +40,25 @@ pub struct RoundCtx<'a> {
     pub cluster: &'a ClusterSpec,
 }
 
+/// Cumulative solver-internal counters a scheduler may expose for
+/// telemetry ([`Scheduler::solver_stats`]). Deterministic for a fixed
+/// seed — no wall-clock fields — so they travel in canonical sweep
+/// artifacts and per-round telemetry streams. Hadar reports its
+/// [`hadar::HadarStats`] through this; baselines report nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolverStats {
+    /// DP memoisation hits (including the replay pass's revisits).
+    pub memo_hits: u64,
+    /// DP memoisation misses.
+    pub memo_misses: u64,
+    /// Rounds solved by the exact select/skip DP.
+    pub dp_rounds: u64,
+    /// Rounds solved by the payoff-density greedy fallback.
+    pub greedy_rounds: u64,
+    /// Rounds whose plan differed from the previous round's.
+    pub rounds_with_change: u64,
+}
+
 /// A round-based cluster scheduler.
 pub trait Scheduler {
     /// Stable scheduler name (CLI surface, result records).
@@ -67,6 +86,14 @@ pub trait Scheduler {
     /// bounded by the *live* job count on long traces instead of growing
     /// with every job ever admitted. Stateless schedulers ignore this.
     fn job_completed(&mut self, _job: JobId) {}
+
+    /// Cumulative solver-internal counters since construction, if the
+    /// scheduler tracks any. The engines snapshot this per round for
+    /// telemetry and once per run for sweep artifacts; the default is
+    /// "nothing to report".
+    fn solver_stats(&self) -> Option<SolverStats> {
+        None
+    }
 }
 
 /// Construct a scheduler by name (CLI surface).

@@ -20,8 +20,10 @@ use crate::cluster::events::{ClusterTimeline, EventTimeline};
 use crate::cluster::spec::ClusterSpec;
 use crate::jobs::job::{JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
+use crate::obs;
+use crate::obs::export::{RoundTelemetry, TelemetrySink};
 use crate::sched::alloc::RoundPlan;
-use crate::sched::{RoundCtx, Scheduler};
+use crate::sched::{RoundCtx, Scheduler, SolverStats};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -64,7 +66,7 @@ pub struct RoundJob {
 }
 
 /// One round's record, enough to redraw Fig. 1 / Fig. 6 style timelines.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     /// Round number (0-based).
     pub round: u64,
@@ -119,6 +121,9 @@ pub struct SimResult {
     pub timeline: Vec<RoundRecord>,
     /// Fraction of rounds whose plan differed from the previous round's.
     pub change_fraction: f64,
+    /// Solver-internal counters at run end, for schedulers that expose
+    /// them ([`Scheduler::solver_stats`]); `None` for the baselines.
+    pub solver: Option<SolverStats>,
 }
 
 /// Integrate a capacity step function over `[0, ttd]` — the ANU
@@ -163,6 +168,23 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                        cluster: &ClusterSpec, events: &EventTimeline,
                        cfg: &SimConfig, record_timeline: bool)
                        -> Result<SimResult, String> {
+    run_observed(queue, scheduler, cluster, events, cfg, record_timeline,
+                 None)
+}
+
+/// [`run_with_events`] plus telemetry: when `sink` is given, one
+/// [`RoundTelemetry`] record is emitted per scheduling round (idle skips
+/// to the next arrival emit nothing — no scheduling happened).
+///
+/// Observation never perturbs plans: the sink only *reads* round state
+/// already computed, and the span/metric hooks are gated on
+/// [`crate::obs::enabled`] — the same seed yields identical plans and
+/// identical non-timing telemetry with tracing on or off.
+pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
+                    cluster: &ClusterSpec, events: &EventTimeline,
+                    cfg: &SimConfig, record_timeline: bool,
+                    mut sink: Option<&mut TelemetrySink>)
+                    -> Result<SimResult, String> {
     let mut view = ClusterTimeline::new(cluster, events)?;
     let nominal_gpus = cluster.total_gpus() as f64;
     let mut now = 0.0;
@@ -181,7 +203,11 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
     let mut changed_rounds = 0u64;
 
     while !queue.all_complete() && round < cfg.max_rounds {
+        let _round_span = obs::trace::span("sim.round");
+        let events_before = view.events_applied();
+        let preempts_before = preemptions;
         // Apply cluster events due by this round boundary.
+        let event_span = obs::trace::span("sim.events");
         let change = view.advance_to(now);
         if change.capacity_changed {
             avail_log.push((now, view.cluster().total_gpus() as f64));
@@ -213,6 +239,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 }
             }
         }
+        drop(event_span);
 
         let active = queue.active_at(now);
         if active.is_empty() {
@@ -225,7 +252,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 None => break,
             }
         }
-        let plan = {
+        let (plan, round_wall) = {
             let ctx = RoundCtx {
                 round,
                 now,
@@ -236,11 +263,16 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 cluster: view.cluster(),
             };
             let t0 = Instant::now();
-            let plan = scheduler.schedule(&ctx);
-            sched_wall += t0.elapsed().as_secs_f64();
-            plan
+            let plan = {
+                let _s = obs::trace::span("sched.schedule");
+                scheduler.schedule(&ctx)
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            sched_wall += dt;
+            (plan, dt)
         };
-        if plan_differs(&plan, &prev_plan) {
+        let plan_changed = plan_differs(&plan, &prev_plan);
+        if plan_changed {
             changed_rounds += 1;
         }
 
@@ -255,6 +287,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         };
 
         let mut completed_now: Vec<JobId> = Vec::new();
+        let mut restart_charges = 0u64;
         for (&id, alloc) in &plan.allocations {
             let job = queue.get_mut(id).expect("plan references live job");
             if job.is_complete() {
@@ -263,6 +296,9 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
             let remaining_before = job.remaining_iters();
             // Restart overhead if this job's allocation changed.
             let changed = prev_plan.get(id) != Some(alloc);
+            if changed {
+                restart_charges += 1;
+            }
             let overhead = if changed { cfg.restart_overhead } else { 0.0 };
             let eff = (cfg.slot_secs - overhead).max(0.0);
             // Bottleneck rule (1b): slowest used type gates every worker.
@@ -303,8 +339,43 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         // Completion notifications: let stateful schedulers drop per-job
         // caches (Hadar's type orders, Tiresias' attained service, YARN's
         // pins) so they stay bounded by the live job count.
+        let completed_count = completed_now.len();
         for id in completed_now {
             scheduler.job_completed(id);
+        }
+
+        if obs::enabled() {
+            let m = obs::metrics::core();
+            m.sim_rounds.add(1);
+            m.sim_queue_depth.set(active.len() as f64);
+            m.sim_preemptions.add(preemptions - preempts_before);
+            m.sim_restart_charges.add(restart_charges);
+            m.sched_round_secs.record(round_wall);
+        }
+        if let Some(s) = sink.as_deref_mut() {
+            let t = RoundTelemetry {
+                round,
+                now,
+                scheduler: scheduler.name().to_string(),
+                active_jobs: active.len(),
+                scheduled_jobs: plan.allocations.len(),
+                gpus_allocated: plan
+                    .allocations
+                    .values()
+                    .map(|a| a.total_gpus())
+                    .sum(),
+                busy_gpu_secs: rec.busy_gpu_secs,
+                alloc_gpu_secs: rec.alloc_gpu_secs,
+                avail_gpu_secs: rec.avail_gpu_secs,
+                plan_changed,
+                preemptions: preemptions - preempts_before,
+                events_applied: view.events_applied() - events_before,
+                completed: completed_count,
+                solver: scheduler.solver_stats(),
+                sched_wall_secs: round_wall,
+            };
+            s.emit(&t)
+                .map_err(|e| format!("telemetry write failed: {e}"))?;
         }
 
         busy_total += rec.busy_gpu_secs;
@@ -334,6 +405,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
     }
     finish_times.sort_by(|a, b| a.total_cmp(b));
     let avail_total = integrate_capacity(&avail_log, ttd);
+    obs::trace::flush();
     Ok(SimResult {
         scheduler: scheduler.name().to_string(),
         ttd,
@@ -369,6 +441,7 @@ pub fn run_with_events(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         } else {
             0.0
         },
+        solver: scheduler.solver_stats(),
     })
 }
 

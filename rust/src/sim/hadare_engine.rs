@@ -40,6 +40,8 @@ use crate::forking::forker::{fork, ForkIds};
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
+use crate::obs;
+use crate::obs::export::{RoundTelemetry, TelemetrySink};
 use crate::sched::hadare::{alloc_throughput, GangConfig, HadarE};
 use crate::sched::RoundCtx;
 use crate::sim::engine::{
@@ -113,6 +115,18 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
                      events: &EventTimeline, cfg: &SimConfig,
                      copies: Option<u64>, gang: GangConfig)
                      -> Result<HadarESimResult, String> {
+    run_with_gang_observed(parents, cluster, events, cfg, copies, gang, None)
+}
+
+/// [`run_with_gang`] plus telemetry: when `sink` is given, one
+/// [`RoundTelemetry`] record is emitted per round (job counts are
+/// *parents*, GPU counts are copy sub-gangs). Observation never perturbs
+/// plans — same contract as [`crate::sim::engine::run_observed`].
+pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
+                              events: &EventTimeline, cfg: &SimConfig,
+                              copies: Option<u64>, gang: GangConfig,
+                              mut sink: Option<&mut TelemetrySink>)
+                              -> Result<HadarESimResult, String> {
     let mut view = ClusterTimeline::new(cluster, events)?;
     let n_nodes = cluster.nodes.len() as u64;
     let copies = copies.unwrap_or(n_nodes).max(1);
@@ -157,11 +171,19 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
     // gangs bind every pool of the host to the same copy, so on
     // single-pool nodes this is the historical per-node table.
     let mut prev_binding: BTreeMap<(usize, GpuType), JobId> = BTreeMap::new();
+    // Previous round's allocations, kept only while telemetry is being
+    // written (`plan_changed` needs them; the planner itself is
+    // stateless about plan diffs).
+    let mut prev_allocs = None;
 
     while !tracker.all_complete() && round < cfg.max_rounds {
+        let _round_span = obs::trace::span("sim.round");
+        let events_before = view.events_applied();
+        let preempts_before = preemptions;
         // Apply cluster events due by this round boundary; drained nodes
         // lose their copy bindings (the tracker keeps the parents'
         // aggregated steps — HadarE is naturally churn-tolerant).
+        let event_span = obs::trace::span("sim.events");
         let change = view.advance_to(now);
         if change.capacity_changed {
             avail_log.push((now, view.cluster().total_gpus() as f64));
@@ -191,9 +213,10 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
             }
             preemptions += preempted.len() as u64;
         }
+        drop(event_span);
 
         let active = queue.active_at(now);
-        let plan = {
+        let (plan, round_wall) = {
             let ctx = RoundCtx {
                 round,
                 now,
@@ -204,9 +227,13 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
                 cluster: view.cluster(),
             };
             let t0 = Instant::now();
-            let plan = planner.plan_round(&ctx, &tracker);
-            sched_wall += t0.elapsed().as_secs_f64();
-            plan
+            let plan = {
+                let _s = obs::trace::span("sched.schedule");
+                planner.plan_round(&ctx, &tracker)
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            sched_wall += dt;
+            (plan, dt)
         };
 
         // Group scheduled copies by parent. A copy's allocation spans
@@ -250,6 +277,8 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
             avail_gpu_secs: view.cluster().total_gpus() as f64
                 * cfg.slot_secs,
         };
+        let mut restart_charges = 0u64;
+        let mut completed_count = 0usize;
         for (parent, assigned) in &per_parent {
             let throughputs: Vec<f64> =
                 assigned.iter().map(|a| a.x).collect();
@@ -284,6 +313,9 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
                         .map(|c| tracker.resolve(*c))
                         != Some(*parent)
                 });
+                if switched {
+                    restart_charges += 1;
+                }
                 let overhead =
                     if switched { cfg.restart_overhead } else { 0.0 };
                 let eff = (cfg.slot_secs - overhead).max(0.0);
@@ -329,8 +361,49 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
                 let f = now + last_end;
                 finish.insert(*parent, f);
                 last_finish = last_finish.max(f);
+                completed_count += 1;
                 planner.job_completed(*parent);
             }
+        }
+
+        if obs::enabled() {
+            let m = obs::metrics::core();
+            m.sim_rounds.add(1);
+            m.sim_queue_depth.set(active.len() as f64);
+            m.sim_preemptions.add(preemptions - preempts_before);
+            m.sim_restart_charges.add(restart_charges);
+            m.sched_round_secs.record(round_wall);
+        }
+        if let Some(s) = sink.as_deref_mut() {
+            let plan_changed = prev_allocs.as_ref() != Some(&plan.allocations);
+            let t = RoundTelemetry {
+                round,
+                now,
+                scheduler: if gang.share_nodes {
+                    "hadare-shared".to_string()
+                } else {
+                    "hadare".to_string()
+                },
+                active_jobs: active.len(),
+                scheduled_jobs: per_parent.len(),
+                gpus_allocated: plan
+                    .allocations
+                    .values()
+                    .map(|a| a.total_gpus())
+                    .sum(),
+                busy_gpu_secs: rec.busy_gpu_secs,
+                alloc_gpu_secs: rec.alloc_gpu_secs,
+                avail_gpu_secs: rec.avail_gpu_secs,
+                plan_changed,
+                preemptions: preemptions - preempts_before,
+                events_applied: view.events_applied() - events_before,
+                completed: completed_count,
+                solver: None,
+                sched_wall_secs: round_wall,
+            };
+            s.emit(&t)
+                .map_err(|e| format!("telemetry write failed: {e}"))?;
+            prev_allocs = Some(plan.allocations.clone());
         }
 
         busy_total += rec.busy_gpu_secs;
@@ -360,6 +433,7 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
         alloc_total += rec.alloc_gpu_secs / cfg.slot_secs * span;
     }
     let avail_total = integrate_capacity(&avail_log, ttd);
+    obs::trace::flush();
     Ok(HadarESimResult {
         sim: SimResult {
             scheduler: if gang.share_nodes {
@@ -396,6 +470,7 @@ pub fn run_with_gang(parents: &[Job], cluster: &ClusterSpec,
             },
             timeline,
             change_fraction: 0.0,
+            solver: None,
         },
         work_log,
     })

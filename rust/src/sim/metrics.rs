@@ -100,6 +100,7 @@ mod tests {
             sched_wall_per_round: 0.01,
             timeline: vec![],
             change_fraction: 0.25,
+            solver: None,
         }
     }
 

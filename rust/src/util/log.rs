@@ -1,6 +1,23 @@
-//! Leveled stderr logger with a global verbosity switch.
+//! Leveled stderr logger with a global verbosity switch, optional
+//! RFC-3339 timestamps, and a line-oriented JSON mode.
+//!
+//! The `info!`/`warn_!`/`debug!`/`error!` macros are the stable surface;
+//! [`log_kv`] additionally carries structured key-value fields, which
+//! the JSON mode ([`set_json`], the CLI's `--log-json`) emits as object
+//! members instead of flattening into the message:
+//!
+//! ```text
+//! [INFO ] sweep done scenarios=12             # text mode
+//! {"level":"info","msg":"sweep done","scenarios":"12"}   # --log-json
+//! ```
+//!
+//! All switches are process-wide atomics; tests that flip them must
+//! serialize through [`test_lock`] and restore the prior state on exit
+//! (see [`level_gating`](self::tests) for the pattern).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 /// Verbosity levels, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
@@ -15,11 +32,47 @@ pub enum Level {
     Debug = 3,
 }
 
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
 static VERBOSITY: AtomicU8 = AtomicU8::new(2); // Info by default
+static JSON_MODE: AtomicBool = AtomicBool::new(false);
+static TIMESTAMPS: AtomicBool = AtomicBool::new(false);
 
 /// Set the global verbosity threshold.
 pub fn set_level(level: Level) {
     VERBOSITY.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current verbosity threshold (so tests and guards can restore it).
+pub fn get_level() -> Level {
+    Level::from_u8(VERBOSITY.load(Ordering::Relaxed))
 }
 
 /// Whether messages at `level` are currently emitted.
@@ -27,17 +80,138 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= VERBOSITY.load(Ordering::Relaxed)
 }
 
+/// Switch between human-readable lines and one-JSON-object-per-line
+/// output (the CLI's `--log-json`).
+pub fn set_json(on: bool) {
+    JSON_MODE.store(on, Ordering::Relaxed);
+}
+
+/// Whether JSON line mode is on.
+pub fn json_mode() -> bool {
+    JSON_MODE.load(Ordering::Relaxed)
+}
+
+/// Prefix each line with an RFC-3339 UTC timestamp (the CLI's
+/// `--log-timestamps`; always included as a `ts` member in JSON mode
+/// while on).
+pub fn set_timestamps(on: bool) {
+    TIMESTAMPS.store(on, Ordering::Relaxed);
+}
+
+/// Whether timestamps are being emitted.
+pub fn timestamps() -> bool {
+    TIMESTAMPS.load(Ordering::Relaxed)
+}
+
+/// Render `unix` seconds as RFC-3339 UTC (`YYYY-MM-DDTHH:MM:SSZ`).
+/// Days-to-civil conversion per Howard Hinnant's algorithm.
+fn rfc3339(unix: u64) -> String {
+    let days = (unix / 86_400) as i64;
+    let secs = unix % 86_400;
+    let (h, m, s) = (secs / 3600, (secs % 3600) / 60, secs % 60);
+    // civil_from_days, shifted so the era starts 0000-03-01.
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let mo = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if mo <= 2 { y + 1 } else { y };
+    format!("{y:04}-{mo:02}-{d:02}T{h:02}:{m:02}:{s:02}Z")
+}
+
+/// Minimal JSON string escaping for log values (quotes, backslashes,
+/// control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one log line. Pure — no globals, no clock — so both output
+/// modes are unit-testable: `json` selects the mode, `unix_ts` supplies
+/// the timestamp (omitted when `None`).
+pub fn format_line(level: Level, msg: &str, fields: &[(&str, &str)],
+                   json: bool, unix_ts: Option<u64>) -> String {
+    if json {
+        let mut line = String::from("{");
+        if let Some(ts) = unix_ts {
+            line.push_str(&format!("\"ts\":\"{}\",", rfc3339(ts)));
+        }
+        line.push_str(&format!(
+            "\"level\":\"{}\",\"msg\":\"{}\"",
+            level.name(),
+            json_escape(msg)
+        ));
+        for (k, v) in fields {
+            line.push_str(&format!(
+                ",\"{}\":\"{}\"",
+                json_escape(k),
+                json_escape(v)
+            ));
+        }
+        line.push('}');
+        line
+    } else {
+        let mut line = String::new();
+        if let Some(ts) = unix_ts {
+            line.push_str(&rfc3339(ts));
+            line.push(' ');
+        }
+        line.push_str(&format!("[{}] {}", level.tag(), msg));
+        for (k, v) in fields {
+            line.push_str(&format!(" {k}={v}"));
+        }
+        line
+    }
+}
+
 /// Emit one message to stderr if the level is enabled.
 pub fn log(level: Level, msg: &str) {
-    if enabled(level) {
-        let tag = match level {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-        };
-        eprintln!("[{tag}] {msg}");
+    log_kv(level, msg, &[]);
+}
+
+/// Emit one message with structured key-value fields to stderr if the
+/// level is enabled. Fields render as ` k=v` suffixes in text mode and
+/// as string members in JSON mode.
+pub fn log_kv(level: Level, msg: &str, fields: &[(&str, &str)]) {
+    if !enabled(level) {
+        return;
     }
+    let ts = if timestamps() {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .ok()
+            .map(|d| d.as_secs())
+    } else {
+        None
+    };
+    eprintln!("{}", format_line(level, msg, fields, json_mode(), ts));
+}
+
+/// Serialize tests that touch process-wide observability/logging state
+/// (the verbosity/JSON/timestamp atomics here, and the span/metric
+/// globals in [`crate::obs`]). Lock poisoning is ignored — a failed
+/// test must not cascade.
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Log at Info level with `format!` syntax.
@@ -69,8 +243,20 @@ macro_rules! error {
 mod tests {
     use super::*;
 
+    /// Restores the level it captured when dropped, so a panicking
+    /// assertion cannot leak a flipped verbosity into parallel tests.
+    struct LevelGuard(Level);
+
+    impl Drop for LevelGuard {
+        fn drop(&mut self) {
+            set_level(self.0);
+        }
+    }
+
     #[test]
     fn level_gating() {
+        let _serial = test_lock();
+        let _restore = LevelGuard(get_level());
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
@@ -78,5 +264,34 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn format_line_text_and_json() {
+        let fields = [("jobs", "12"), ("cluster", "sim60")];
+        let text =
+            format_line(Level::Info, "sweep done", &fields, false, None);
+        assert_eq!(text, "[INFO ] sweep done jobs=12 cluster=sim60");
+
+        let json = format_line(Level::Warn, "odd \"thing\"", &fields, true,
+                               None);
+        let v = crate::util::json::parse(&json).unwrap();
+        assert_eq!(v.get("level").as_str(), Some("warn"));
+        assert_eq!(v.get("msg").as_str(), Some("odd \"thing\""));
+        assert_eq!(v.get("jobs").as_str(), Some("12"));
+        assert_eq!(v.get("cluster").as_str(), Some("sim60"));
+        assert!(v.get("ts").as_str().is_none(), "no ts unless requested");
+    }
+
+    #[test]
+    fn rfc3339_renders_known_instants() {
+        assert_eq!(rfc3339(0), "1970-01-01T00:00:00Z");
+        // 2000-02-29 (leap day) 12:34:56 UTC.
+        assert_eq!(rfc3339(951_827_696), "2000-02-29T12:34:56Z");
+        // 2026-08-07 00:00:00 UTC.
+        assert_eq!(rfc3339(1_786_060_800), "2026-08-07T00:00:00Z");
+        let j = format_line(Level::Info, "x", &[], true, Some(0));
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("ts").as_str(), Some("1970-01-01T00:00:00Z"));
     }
 }

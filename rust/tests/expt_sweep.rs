@@ -26,6 +26,7 @@ fn tiny_sweep() -> SweepSpec {
         seeds: vec![3, 4],
         events: vec![EventsRef::None],
         base: SimConfig::default(),
+        telemetry: false,
     }
 }
 
@@ -167,6 +168,7 @@ fn hadare_on_sim60_fills_the_whole_multi_gpu_cluster() {
             max_rounds: 50_000,
             ..Default::default()
         },
+        telemetry: false,
     };
     let results = runner::run_sweep(&spec, 0).unwrap();
     assert_eq!(results.len(), 2);
@@ -212,6 +214,7 @@ fn hadare_shared_on_big8_shares_nodes_on_the_same_trace() {
             max_rounds: 50_000,
             ..Default::default()
         },
+        telemetry: false,
     };
     let results = runner::run_sweep(&spec, 0).unwrap();
     assert_eq!(results.len(), 2);

@@ -1,0 +1,193 @@
+//! End-to-end guarantees of the `obs` telemetry subsystem:
+//!
+//! * observation is **inert** — the same seed produces identical plans
+//!   and identical non-timing telemetry whether tracing/metrics are
+//!   enabled or not;
+//! * the disabled path is **free at the counter level** — a simulation
+//!   with `obs` off never enters a span;
+//! * telemetry streams are valid JSONL with one record per scheduling
+//!   round.
+//!
+//! The obs enabled flag, span table, and metrics registry are process
+//! globals, so every test here serialises on the shared test lock.
+
+use hadar::cluster::events::EventTimeline;
+use hadar::expt::spec::{ClusterRef, WorkloadSpec};
+use hadar::jobs::queue::JobQueue;
+use hadar::obs;
+use hadar::obs::export::TelemetrySink;
+use hadar::sched;
+use hadar::sched::hadare::GangConfig;
+use hadar::sim::engine::{self, SimConfig, SimResult};
+use hadar::sim::hadare_engine;
+use hadar::util::log::test_lock;
+
+/// Run `hadar` on a sim60 trace with an in-memory non-timing telemetry
+/// sink, returning the result (with timeline) and the telemetry text.
+fn run_hadar_sim60() -> (SimResult, String) {
+    let cluster = ClusterRef::Preset("sim60".into()).resolve().unwrap();
+    let jobs = WorkloadSpec::Trace {
+        n_jobs: 24,
+        max_gpus: 4,
+        all_at_start: true,
+        hours_scale: 0.05,
+    }
+    .build_jobs(&cluster, 7)
+    .unwrap();
+    let mut queue = JobQueue::new();
+    for j in jobs {
+        queue.admit(j);
+    }
+    let mut scheduler = sched::by_name("hadar").unwrap();
+    let mut sink = TelemetrySink::in_memory(false);
+    let res = engine::run_observed(
+        &mut queue,
+        scheduler.as_mut(),
+        &cluster,
+        &EventTimeline::empty(),
+        &SimConfig {
+            slot_secs: 360.0,
+            ..Default::default()
+        },
+        true,
+        Some(&mut sink),
+    )
+    .unwrap();
+    let text = sink.contents().unwrap().to_string();
+    (res, text)
+}
+
+/// Run `hadare-shared` (per-pool gangs) on the big8 M-3 mix with an
+/// in-memory non-timing sink.
+fn run_shared_big8() -> (SimResult, String) {
+    let cluster = ClusterRef::Preset("big8".into()).resolve().unwrap();
+    let jobs = WorkloadSpec::Mix {
+        name: "M-3".into(),
+        epochs_scale: 0.2,
+    }
+    .build_jobs(&cluster, 0)
+    .unwrap();
+    let mut sink = TelemetrySink::in_memory(false);
+    let res = hadare_engine::run_with_gang_observed(
+        &jobs,
+        &cluster,
+        &EventTimeline::empty(),
+        &SimConfig {
+            slot_secs: 90.0,
+            ..Default::default()
+        },
+        None,
+        GangConfig::shared(),
+        Some(&mut sink),
+    )
+    .unwrap();
+    let text = sink.contents().unwrap().to_string();
+    (res.sim, text)
+}
+
+#[test]
+fn tracing_on_or_off_yields_identical_plans_and_telemetry_sim60() {
+    let _guard = test_lock();
+    obs::reset();
+    obs::set_enabled(false);
+    let (res_off, text_off) = run_hadar_sim60();
+    obs::set_enabled(true);
+    let (res_on, text_on) = run_hadar_sim60();
+    obs::set_enabled(false);
+    obs::reset();
+
+    assert_eq!(res_off.jct, res_on.jct, "JCTs must not depend on obs");
+    assert_eq!(res_off.rounds, res_on.rounds);
+    assert_eq!(res_off.timeline, res_on.timeline,
+               "per-round plans must be identical with tracing on or off");
+    assert_eq!(text_off, text_on,
+               "non-timing telemetry must be byte-identical");
+    assert!(!text_off.is_empty());
+}
+
+#[test]
+fn tracing_on_or_off_yields_identical_plans_and_telemetry_big8() {
+    let _guard = test_lock();
+    obs::reset();
+    obs::set_enabled(false);
+    let (res_off, text_off) = run_shared_big8();
+    obs::set_enabled(true);
+    let (res_on, text_on) = run_shared_big8();
+    obs::set_enabled(false);
+    obs::reset();
+
+    assert_eq!(res_off.jct, res_on.jct);
+    assert_eq!(res_off.rounds, res_on.rounds);
+    assert_eq!(text_off, text_on);
+    // Scheduler label distinguishes the per-pool mode in the stream.
+    assert!(text_off.contains("\"scheduler\":\"hadare-shared\""),
+            "{}", &text_off[..text_off.len().min(200)]);
+}
+
+#[test]
+fn disabled_obs_never_enters_a_span() {
+    let _guard = test_lock();
+    obs::reset();
+    obs::set_enabled(false);
+    let before = obs::trace::enters();
+    // Raw span overhead guard: counter-based, not wall-clock, so it
+    // cannot flake on loaded CI machines.
+    for _ in 0..10_000 {
+        let _s = obs::trace::span("obs.test.disabled");
+    }
+    // A full simulation with obs off must not enter spans either.
+    let (res, _) = run_hadar_sim60();
+    assert!(res.rounds > 0);
+    assert_eq!(obs::trace::enters(), before,
+               "disabled spans must never hit the slow path");
+    obs::trace::flush();
+    assert!(!obs::trace::folded().contains("obs.test.disabled"));
+}
+
+#[test]
+fn enabled_obs_collects_spans_and_metrics() {
+    let _guard = test_lock();
+    obs::reset();
+    obs::set_enabled(true);
+    let (res, _) = run_hadar_sim60();
+    obs::set_enabled(false);
+    let folded = obs::trace::folded();
+    assert!(folded.contains("sim.round"), "{folded}");
+    assert!(folded.contains("sim.round;sched.schedule;hadar.schedule"),
+            "nested span paths recorded: {folded}");
+    let prom =
+        hadar::obs::export::prometheus(hadar::obs::metrics::global());
+    assert!(prom.contains("sim_rounds"), "{prom}");
+    let rounds = hadar::obs::metrics::core().sim_rounds.get();
+    assert_eq!(rounds, res.rounds, "sim.rounds counter matches the run");
+    obs::reset();
+}
+
+#[test]
+fn telemetry_is_valid_jsonl_one_record_per_round() {
+    let _guard = test_lock();
+    obs::reset();
+    obs::set_enabled(false);
+    let (res, text) = run_hadar_sim60();
+    assert_eq!(text.lines().count() as u64, res.rounds,
+               "one record per scheduling round");
+    let mut last_round = None;
+    for line in text.lines() {
+        let v = hadar::util::json::parse(line).unwrap();
+        assert_eq!(v.get("scheduler").as_str(), Some("hadar"));
+        let round = v.get("round").as_u64().unwrap();
+        if let Some(prev) = last_round {
+            assert!(round > prev, "rounds strictly increase");
+        }
+        last_round = Some(round);
+        assert!(v.get("now").as_f64().is_some());
+        assert!(v.get("active_jobs").as_u64().is_some());
+        assert!(v.get("gpus_allocated").as_u64().is_some());
+        assert!(v.get("plan_changed").as_bool().is_some());
+        // Non-timing streams must not leak wall-clock fields.
+        assert!(v.get("sched_wall_secs").as_f64().is_none());
+        // Hadar exposes solver counters in every record.
+        assert!(v.get("solver").get("dp_rounds").as_u64().is_some(),
+                "{line}");
+    }
+}
