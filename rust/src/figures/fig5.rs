@@ -1,11 +1,22 @@
 //! Fig. 5 (scalability): scheduling time per round vs active-job count
 //! (32 → 2048) for Hadar (incremental mode, per §IV-B) and Gavel, on a
 //! cluster that grows with the job count.
+//!
+//! The `--forked` variant ([`run_forked`]) extends the sweep to the
+//! streaming regime: the forking HadarE planner on a *fixed* `scaled:NxG`
+//! multi-GPU cluster, warm start ([`HadarE::plan_round_with`] with a
+//! populated row cache and the previous round's bindings) against cold
+//! replanning on the identical round. The plans must match exactly; the
+//! speedup is the sublinear-decision-time claim the `warm_*` bench rows
+//! gate on (see `docs/performance.md`).
 
 use crate::cluster::spec::ClusterSpec;
+use crate::forking::forker::ForkIds;
+use crate::forking::tracker::JobTracker;
 use crate::jobs::queue::JobQueue;
 use crate::sched::gavel::Gavel;
 use crate::sched::hadar::{Hadar, HadarConfig};
+use crate::sched::hadare::{alloc_throughput, HadarE, PrevRound};
 use crate::sched::{RoundCtx, Scheduler};
 use crate::trace::philly::{generate, TraceConfig};
 use crate::trace::workload::materialize;
@@ -107,6 +118,129 @@ pub fn render(points: &[Fig5Point]) -> String {
     out
 }
 
+/// One warm-vs-cold forking-planner measurement at a given job count
+/// (the `--forked` streaming-scale sweep).
+#[derive(Clone, Debug)]
+pub struct ForkScalePoint {
+    /// Queued jobs in the decision.
+    pub jobs: usize,
+    /// Cold full-replanning decision time, mean over the measured
+    /// rounds (ms).
+    pub cold_ms: f64,
+    /// Warm-start decision time on the identical rounds (ms).
+    pub warm_ms: f64,
+    /// `cold_ms / warm_ms`.
+    pub speedup: f64,
+    /// Whether every warm plan matched its cold twin exactly.
+    pub plans_match: bool,
+    /// Cached throughput rows the warm planner reused instead of
+    /// recomputing (the deterministic counterpart of the speedup).
+    pub rows_reused: u64,
+}
+
+/// Warm-start vs cold-replanning sweep of the forking HadarE planner on
+/// a fixed `scaled:{nodes_per_type}x{gpus_per_node}` cluster. Round 0
+/// populates the warm planner's row cache and yields the carry-over
+/// bindings; every parent then reports half a slot of progress (so the
+/// priority order shifts but nobody finishes), and rounds 1–2 are timed
+/// warm vs cold on identical state.
+pub fn run_forked(scales: &[usize], nodes_per_type: usize,
+                  gpus_per_node: usize) -> Vec<ForkScalePoint> {
+    let mut out = Vec::new();
+    for &n in scales {
+        let cluster = ClusterSpec::scaled(nodes_per_type.max(1),
+                                          gpus_per_node.max(1));
+        let trace = generate(&TraceConfig {
+            n_jobs: n,
+            seed: 11,
+            all_at_start: true,
+            max_gpus: 4,
+            ..Default::default()
+        });
+        let mut queue = JobQueue::new();
+        for j in materialize(&trace, &cluster, 11) {
+            queue.admit(j);
+        }
+        let ids = ForkIds {
+            max_job_count: (n as u64).max(64),
+        };
+        let mut tracker = JobTracker::new(ids);
+        for j in queue.iter() {
+            tracker.register(j.id, j.total_iters(),
+                             &[ids.copy_id(j.id, 1)]);
+        }
+        let active = queue.active_at(0.0);
+        let slot = 360.0;
+        let ctx = |round: u64| RoundCtx {
+            round,
+            now: round as f64 * slot,
+            slot_secs: slot,
+            horizon: 1e7,
+            queue: &queue,
+            active: &active,
+            cluster: &cluster,
+        };
+        let mut warm = HadarE::new(1);
+        let p0 = warm.plan_round(&ctx(0), &tracker);
+        let prev = PrevRound::from_plan(&p0, &tracker, 10.0);
+        for (&copy, alloc) in &p0.allocations {
+            let parent = tracker.resolve(copy);
+            if let Some(job) = queue.get(parent) {
+                let x = alloc_throughput(job, alloc, &warm.gang);
+                tracker.report_steps(copy, x * slot * 0.5);
+            }
+        }
+        let reused0 = warm.stats.rows_reused;
+        let mut cold_total = 0.0;
+        let mut warm_total = 0.0;
+        let mut plans_match = true;
+        for round in 1..=2u64 {
+            let c = ctx(round);
+            let t0 = Instant::now();
+            let cold_plan =
+                HadarE::new(1).plan_round_cold(&c, &tracker, &prev);
+            cold_total += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let warm_plan = warm.plan_round_with(&c, &tracker, &prev);
+            warm_total += t0.elapsed().as_secs_f64();
+            plans_match &= cold_plan.allocations == warm_plan.allocations;
+        }
+        let cold_ms = cold_total / 2.0 * 1e3;
+        let warm_ms = warm_total / 2.0 * 1e3;
+        out.push(ForkScalePoint {
+            jobs: n,
+            cold_ms,
+            warm_ms,
+            speedup: if warm_ms > 0.0 { cold_ms / warm_ms } else { 0.0 },
+            plans_match,
+            rows_reused: warm.stats.rows_reused - reused0,
+        });
+    }
+    out
+}
+
+/// Render the `--forked` streaming-scale table.
+pub fn render_forked(points: &[ForkScalePoint]) -> String {
+    let mut t = Table::new(&["jobs", "cold (ms)", "warm (ms)", "speedup",
+                             "rows reused", "plans"]);
+    for p in points {
+        t.row(&[
+            p.jobs.to_string(),
+            format!("{:.3}", p.cold_ms),
+            format!("{:.3}", p.warm_ms),
+            format!("{:.2}x", p.speedup),
+            p.rows_reused.to_string(),
+            if p.plans_match { "match" } else { "DIVERGED" }.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "warm start must match cold replanning exactly; the speedup is \
+         the sublinear-decision-time claim (bench warm_* rows gate it)\n",
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,8 +264,28 @@ mod tests {
     #[test]
     fn incremental_second_round_is_cheap() {
         let pts = run(&[128]);
-        // Incremental mode re-uses previous allocations, so its mean over
-        // 3 rounds (2 of which are no-ops) is below the full recompute.
-        assert!(pts[0].hadar_incremental_ms <= pts[0].hadar_ms * 1.5);
+        // Incremental mode re-uses previous allocations: over 3 rounds
+        // of an identical queue only round 0 may change the allocation,
+        // so the solver's own change counter — deterministic, unlike the
+        // wall-clock ratio this test used to assert on — is at most 1/3
+        // and nonzero (round 0 allocates from scratch).
+        assert!(pts[0].change_fraction > 0.0,
+                "round 0 must register a change: {}",
+                pts[0].change_fraction);
+        assert!(pts[0].change_fraction <= 1.0 / 3.0 + 1e-9,
+                "steady-state rounds must not replan: {}",
+                pts[0].change_fraction);
+    }
+
+    #[test]
+    fn forked_warm_scale_smoke() {
+        let pts = run_forked(&[48], 2, 2);
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert!(p.plans_match, "warm plan diverged from cold");
+        assert!(p.rows_reused > 0, "warm rounds must hit the row cache");
+        assert!(p.cold_ms >= 0.0 && p.warm_ms >= 0.0);
+        let table = render_forked(&pts);
+        assert!(table.contains("match"), "{table}");
     }
 }

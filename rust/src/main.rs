@@ -53,7 +53,15 @@ fn app() -> App {
         )
         .command(
             Command::new("scale", "Fig. 5 scheduling-time scalability")
-                .opt("max", Some("2048"), "largest job count (powers of 2 from 32)"),
+                .opt("max", Some("2048"), "largest job count (powers of 2 from 32)")
+                .opt("gang-nodes", Some("64"),
+                     "--forked: nodes per GPU type in the scaled cluster")
+                .opt("gang-gpus", Some("8"),
+                     "--forked: GPUs per node in the scaled cluster")
+                .switch("forked",
+                        "sweep the forking HadarE planner instead: \
+                         warm-start vs cold replanning on a scaled:NxG \
+                         cluster"),
         )
         .command(Command::new("rounds", "Fig. 6 round-by-round Hadar vs HadarE"))
         .command(
@@ -98,6 +106,10 @@ fn app() -> App {
             .opt("baseline", Some(""),
                  "committed baseline JSON to gate against (fails on >20% \
                   speedup regression on plans-equal rows)")
+            .opt("warm-jobs", Some(""),
+                 "comma-separated job counts for the warm_*/shard_* \
+                  streaming rows (empty = profile default: 800 quick, \
+                  20000,100000 full)")
             .switch("json", "write the BENCH_sched.json artifact")
             .switch("quick", "CI smoke profile: fewer cases and iterations"),
         )
@@ -241,6 +253,15 @@ fn cmd_scale(args: &Args) {
         scales.push(n);
         n *= 2;
     }
+    if args.flag("forked") {
+        let pts = hadar::figures::fig5::run_forked(
+            &scales,
+            args.get_usize("gang-nodes"),
+            args.get_usize("gang-gpus"),
+        );
+        println!("{}", hadar::figures::fig5::render_forked(&pts));
+        return;
+    }
     let pts = hadar::figures::fig5::run(&scales);
     println!("{}", hadar::figures::fig5::render(&pts));
 }
@@ -329,7 +350,16 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use hadar::sched::bench;
     let quick = args.flag("quick");
-    let results = bench::run_suite(quick);
+    let warm_jobs: Vec<usize> = args
+        .get_str("warm-jobs")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let results = if warm_jobs.is_empty() {
+        bench::run_suite(quick)
+    } else {
+        bench::run_suite_with(quick, &warm_jobs)
+    };
     print!("{}", bench::render(&results));
     if args.flag("json") {
         let out = args.get_str("out");

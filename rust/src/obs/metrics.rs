@@ -279,6 +279,13 @@ pub struct CoreMetrics {
     pub greedy_rounds: Counter,
     /// HadarE gang-planner rounds.
     pub hadare_plan_rounds: Counter,
+    /// HadarE warm-start gang rows computed (row-cache misses).
+    pub hadare_warm_rows_computed: Counter,
+    /// HadarE warm-start gang rows served from the cache.
+    pub hadare_warm_rows_reused: Counter,
+    /// HadarE warm-start row-cache clears forced by slot-inventory
+    /// changes (node join/leave/capacity events).
+    pub hadare_warm_invalidations: Counter,
     /// `ClusterState::checkpoint` calls.
     pub state_checkpoints: Counter,
     /// `ClusterState::rewind` calls.
@@ -310,6 +317,12 @@ pub fn core() -> &'static CoreMetrics {
             dp_rounds: r.counter("hadar.dp_rounds"),
             greedy_rounds: r.counter("hadar.greedy_rounds"),
             hadare_plan_rounds: r.counter("hadare.plan_rounds"),
+            hadare_warm_rows_computed: r
+                .counter("hadare.warm_rows_computed"),
+            hadare_warm_rows_reused: r
+                .counter("hadare.warm_rows_reused"),
+            hadare_warm_invalidations: r
+                .counter("hadare.warm_invalidations"),
             state_checkpoints: r.counter("cluster.checkpoints"),
             state_rewinds: r.counter("cluster.rewinds"),
             state_rewound_assignments: r

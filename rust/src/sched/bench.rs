@@ -16,6 +16,21 @@
 //!   partial-node occupancy invariant: the shared plan books every GPU
 //!   and at least one node carries two parents.
 //!
+//! …and two **streaming-scale paths** on the `scaled:64x8` multi-GPU
+//! preset (192 nodes / 1536 GPUs, up to 100k jobs):
+//!
+//! * `warm_*`: the warm-start planner ([`HadarE::plan_round_with`] with
+//!   a populated row cache and the previous round's bindings) against
+//!   cold full replanning ([`HadarE::plan_round_cold`]) on the identical
+//!   round — the plans must be identical, and the speedup is the
+//!   sublinear-decision-time claim (the acceptance floor is ≥2x at 100k
+//!   jobs; in practice the cache prunes the matrix from O(jobs) rows to
+//!   O(slots));
+//! * `shard_*`: cold replanning at 1 worker vs the resolved multi-worker
+//!   count — plans must be **bit-identical** (the determinism
+//!   guarantee), while the speedup is machine-dependent and therefore
+//!   never gates against the baseline.
+//!
 //! Shared by the `hadar bench` CLI subcommand (which emits
 //! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
 //! `docs/performance.md`) and `benches/l3_sched_micro.rs`. Every
@@ -57,11 +72,15 @@ pub struct CaseResult {
     pub speedup: f64,
     /// Which correctness invariant [`CaseResult::plans_equal`] reports:
     /// `"plans-equal"` (identical [`RoundPlan`]s from both solvers, the
-    /// `dp`/`greedy`/`fork` rows) or `"occupancy"` (the partial-node
-    /// invariant — every GPU booked, at least one node shared by two
-    /// parents — on `fork-shared` rows, where whole-node and per-pool
-    /// plans intentionally differ). Keeps `BENCH_sched.json`
-    /// self-describing for artifact-diffing tools.
+    /// `dp`/`greedy`/`fork`/`warm` rows — the only label the baseline
+    /// gate acts on), `"occupancy"` (the partial-node invariant — every
+    /// GPU booked, at least one node shared by two parents — on
+    /// `fork-shared` rows, where whole-node and per-pool plans
+    /// intentionally differ), or `"plans-equal-parallel"` (`shard` rows:
+    /// bit-identical plans at 1 vs N workers; the invariant still fails
+    /// the CLI on divergence, but the speedup is machine-dependent so
+    /// the row never gates against the committed baseline). Keeps
+    /// `BENCH_sched.json` self-describing for artifact-diffing tools.
     pub check: &'static str,
     /// Whether the row's invariant (see [`CaseResult::check`]) held.
     pub plans_equal: bool,
@@ -132,9 +151,16 @@ fn fork_cluster() -> ClusterSpec {
     c
 }
 
-/// Tracker over the case queue's jobs, each forked `copies` ways.
+/// Tracker over the case queue's jobs, each forked `copies` ways. The
+/// id-space stride adapts to the queue (streaming cases go to 100k
+/// jobs) but never shrinks below the historical 1024, so the copy ids —
+/// and therefore the plans — of the existing `fork_*` rows are
+/// unchanged.
 fn fork_tracker(queue: &JobQueue, copies: u64) -> JobTracker {
-    let ids = ForkIds { max_job_count: 1024 };
+    let max_id = queue.iter().map(|j| j.id.0).max().unwrap_or(0);
+    let ids = ForkIds {
+        max_job_count: (max_id + 1).max(1024),
+    };
     let mut tracker = JobTracker::new(ids);
     for j in queue.iter() {
         tracker.register(
@@ -210,9 +236,146 @@ fn shared_plan_invariant(plan: &RoundPlan, cluster: &ClusterSpec,
     parents_by_node.values().any(|ps| ps.len() >= 2)
 }
 
-/// Run the full comparison suite. `quick` trims the grid and iteration
-/// counts for CI smoke runs.
+/// The streaming-scale bench cluster: `scaled:64x8` — 192 nodes (64 per
+/// sim60 type), 8 GPUs each, 1536 GPUs. Single-pool nodes, so whole-node
+/// and per-pool modes coincide and `plans_equal` stays a live check.
+fn scaled_cluster() -> ClusterSpec {
+    let mut c = ClusterSpec::scaled(64, 8);
+    c.name = "scaled64x8".into();
+    c
+}
+
+/// The `warm_*`/`shard_*` streaming-scale rows at one job count. Shared
+/// setup — one copy per parent (the streaming regime: jobs ≫ slots), a
+/// round-0 plan that populates the warm planner's row cache and yields
+/// the carry-over bindings, then half a slot of reported progress so
+/// every parent stays live with a shifted priority order — and two
+/// measurements of the same steady-state round 1:
+///
+/// * `warm`: [`HadarE::plan_round_with`] (cached rows) vs
+///   [`HadarE::plan_round_cold`] (full matrix) — `check: plans-equal`,
+///   so the row gates against the committed baseline;
+/// * `shard`: `plan_round_cold` at 1 worker vs the resolved multi-worker
+///   count — `check: plans-equal-parallel`; the plans must still match
+///   bit-for-bit (the CLI fails otherwise) but the thread speedup never
+///   gates.
+fn run_stream_cases(iters: usize, n_jobs: usize,
+                    out: &mut Vec<CaseResult>) {
+    use crate::sched::hadare::{alloc_throughput, resolve_plan_threads,
+                               PrevRound};
+    let cluster = scaled_cluster();
+    let copies = 1u64;
+    let queue = case_queue(&cluster, n_jobs);
+    let mut tracker = fork_tracker(&queue, copies);
+    let active = queue.active_at(0.0);
+    let slot = 360.0;
+    let ctx0 = RoundCtx {
+        round: 0,
+        now: 0.0,
+        slot_secs: slot,
+        horizon: 1e7,
+        queue: &queue,
+        active: &active,
+        cluster: &cluster,
+    };
+    let mut warm = HadarE::new(copies);
+    let p0 = warm.plan_round(&ctx0, &tracker);
+    let prev = PrevRound::from_plan(&p0, &tracker, 10.0);
+    for (&copy, alloc) in &p0.allocations {
+        let parent = tracker.resolve(copy);
+        if let Some(job) = queue.get(parent) {
+            let x = alloc_throughput(job, alloc, &warm.gang);
+            tracker.report_steps(copy, x * slot * 0.5);
+        }
+    }
+    let ctx1 = RoundCtx {
+        round: 1,
+        now: slot,
+        slot_secs: slot,
+        horizon: 1e7,
+        queue: &queue,
+        active: &active,
+        cluster: &cluster,
+    };
+
+    // warm row: cold replanning (reference) vs the warm-start path.
+    let cold = HadarE::new(copies);
+    let mut ref_ms = f64::INFINITY;
+    let mut ref_plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        ref_plan = cold.plan_round_cold(&ctx1, &tracker, &prev);
+        ref_ms = ref_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mut opt_ms = f64::INFINITY;
+    let mut opt_plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        opt_plan = warm.plan_round_with(&ctx1, &tracker, &prev);
+        opt_ms = opt_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out.push(CaseResult {
+        name: format!("warm_{}_{n_jobs}jobs", cluster.name),
+        path: "warm",
+        cluster: cluster.name.clone(),
+        jobs: n_jobs,
+        ref_ms,
+        opt_ms,
+        speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+        check: "plans-equal",
+        plans_equal: ref_plan.allocations == opt_plan.allocations,
+    });
+
+    // shard row: the same cold decision, 1 worker vs multi-worker.
+    let single = HadarE::with_gang(copies, GangConfig {
+        plan_threads: 1,
+        ..GangConfig::default()
+    });
+    let multi = HadarE::with_gang(copies, GangConfig {
+        plan_threads: resolve_plan_threads(0).max(2),
+        ..GangConfig::default()
+    });
+    let mut s_ms = f64::INFINITY;
+    let mut s_plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        s_plan = single.plan_round_cold(&ctx1, &tracker, &prev);
+        s_ms = s_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mut m_ms = f64::INFINITY;
+    let mut m_plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        m_plan = multi.plan_round_cold(&ctx1, &tracker, &prev);
+        m_ms = m_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out.push(CaseResult {
+        name: format!("shard_{}_{n_jobs}jobs", cluster.name),
+        path: "shard",
+        cluster: cluster.name.clone(),
+        jobs: n_jobs,
+        ref_ms: s_ms,
+        opt_ms: m_ms,
+        speedup: if m_ms > 0.0 { s_ms / m_ms } else { 0.0 },
+        check: "plans-equal-parallel",
+        plans_equal: s_plan.allocations == m_plan.allocations,
+    });
+}
+
+/// Run the full comparison suite with the profile's default
+/// streaming-scale job counts: one small point (800 jobs) in `quick`
+/// mode — the in-tree unit test runs this in debug builds — and
+/// 20k/100k in the full profile. CI's bench smoke overrides the sizes
+/// to the 100k acceptance point via `hadar bench --warm-jobs`.
 pub fn run_suite(quick: bool) -> Vec<CaseResult> {
+    let stream: &[usize] = if quick { &[800] } else { &[20_000, 100_000] };
+    run_suite_with(quick, stream)
+}
+
+/// [`run_suite`] with explicit streaming-scale job counts for the
+/// `warm_*`/`shard_*` rows (`&[]` skips them).
+pub fn run_suite_with(quick: bool, stream_jobs: &[usize])
+                      -> Vec<CaseResult> {
     let iters = if quick { 3 } else { 7 };
     let mut out = Vec::new();
     for (path, cluster, n_jobs) in case_grid(quick) {
@@ -316,6 +479,15 @@ pub fn run_suite(quick: bool) -> Vec<CaseResult> {
             plans_equal: shared_plan_invariant(&opt_plan, &cluster,
                                                &tracker),
         });
+    }
+
+    // Streaming-scale paths: warm-start vs cold replanning, and 1-vs-N
+    // worker sharding, on the scaled:64x8 preset. One iteration in quick
+    // mode — at 100k jobs even the cold reference plan is the dominant
+    // cost, and the row invariants (plan equality) are per-iteration.
+    let stream_iters = if quick { 1 } else { 2 };
+    for &n_jobs in stream_jobs {
+        run_stream_cases(stream_iters, n_jobs, &mut out);
     }
     out
 }
@@ -457,16 +629,21 @@ mod tests {
                 "hadare ref-vs-opt row present");
         assert!(results.iter().any(|r| r.path == "fork-shared"),
                 "partial-node big-cluster row present");
+        assert!(results.iter().any(|r| r.path == "warm"),
+                "warm-start streaming row present");
+        assert!(results.iter().any(|r| r.path == "shard"),
+                "sharded streaming row present");
         for r in &results {
-            let want = if r.path == "fork-shared" {
-                "occupancy"
-            } else {
-                "plans-equal"
+            let want = match r.path {
+                "fork-shared" => "occupancy",
+                "shard" => "plans-equal-parallel",
+                _ => "plans-equal",
             };
             assert_eq!(r.check, want, "{}: check label", r.name);
         }
         assert!(results.iter().any(|r| r.cluster == "synthetic256"));
         assert!(results.iter().any(|r| r.cluster == "big20x4"));
+        assert!(results.iter().any(|r| r.cluster == "scaled64x8"));
         for r in &results {
             assert!(r.plans_equal, "{}: row invariant broken", r.name);
             assert!(r.ref_ms >= 0.0 && r.opt_ms >= 0.0);

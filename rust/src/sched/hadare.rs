@@ -72,24 +72,87 @@
 //! [`crate::sched::reference::RefHadarE`] — is pinned plan-for-plan to
 //! this one on `aws5`/`testbed5` by `rust/tests/prop_equivalence.rs`.
 //!
+//! ## Warm start and the round carry-over
+//!
+//! The forking engine keeps a per-`(node, pool)` → copy binding map
+//! across rounds (restart-overhead accounting). Since the streaming-scale
+//! rework that map is also handed *into* the planner as a [`PrevRound`]
+//! ([`HadarE::plan_round_with`]), which buys two things:
+//!
+//! * **Switch-cost-aware payoffs.** A slot whose loaded model is a
+//!   different parent only trains `slot_secs − restart_overhead` seconds
+//!   after the engine charges the model (re)load, so the planner scores
+//!   and burns candidates by `x · eff_secs` instead of raw `x` — the
+//!   restart-overhead model the engine charges is now the one the
+//!   planner optimises against, and a parent keeps its loaded gang
+//!   unless moving genuinely pays. One documented asymmetry: a pool with
+//!   *no* binding is treated as penalty-free even though the engine
+//!   charges its first model load. Charging it would deduct the same
+//!   constant from every still-unloaded slot (it carries no information
+//!   about *which* parent should win one), and leaving it out is what
+//!   makes an **empty carry-over degrade bit-identically** to the
+//!   historical planner: with no bindings at all the scores fall back to
+//!   raw `x` and the burns to `x · slot_secs`, exactly the pre-rework
+//!   formulas (pinned by `prop_hadare_empty_carry_over_degrades_to_plan_round`).
+//! * **A per-parent gang-row cache.** A parent's throughput row over the
+//!   slot inventory depends only on (job, slots), so rows are cached
+//!   across rounds keyed by parent id and recomputed lazily, only for
+//!   parents the placement passes actually examine. The cache is
+//!   invalidated wholesale whenever the slot inventory changes (node
+//!   join/leave/capacity event, mode flip) — detected by an FNV-1a
+//!   signature over the inventory — and a parent's row is dropped on its
+//!   completion ([`HadarE::job_completed`]). In the streaming regime
+//!   (jobs ≫ slots, copy budget small) pass 0 fills the whole inventory
+//!   from a prefix of the priority order, so a round touches O(slots)
+//!   rows instead of re-scoring every live parent: that is the
+//!   sublinear-decision-time claim `sched::bench`'s `warm_*` rows
+//!   measure. [`WarmStats`] counts rounds/computed/reused/invalidations
+//!   deterministically; the same numbers feed the gated `obs` counters
+//!   `hadare.warm_rows_*`.
+//!
+//! [`HadarE::plan_round_cold`] is the reference path: a full-matrix
+//! recompute with the *same* carry-over payoff model, against which the
+//! warm path is pinned plan-for-plan by
+//! `prop_hadare_warm_start_equals_cold_replanning` and timed by the
+//! bench. Any divergence is a bug, never a perf trade.
+//!
+//! ## Sharded rounds
+//!
+//! The cold path's two superlinear stages — the gang-matrix build and
+//! the candidate sort — are sharded across a small owned worker pool
+//! (`std::thread::scope`, the same no-new-deps idiom as
+//! [`crate::expt::runner`]). Determinism is structural, not incidental:
+//! matrix cells are pure functions of (job, slot) written into disjoint
+//! chunks, and the sort runs as per-chunk stable sorts over *contiguous*
+//! chunks followed by a k-way merge that breaks ties toward the earlier
+//! chunk — which reproduces exactly the original-index order of a serial
+//! stable sort. Plans are therefore **bit-identical at any thread
+//! count** (pinned by `rust/tests/hadare_stream.rs` at 1/2/8 workers).
+//! The worker count comes from [`GangConfig::plan_threads`] via
+//! [`resolve_plan_threads`]; tiny inputs stay serial.
+//!
 //! §Perf: `plan_round` follows the PR-3 zero-clone idiom — the per-round
 //! `BTreeMap`s (`node_load`, `copies_used`, `placed_on`) are flat
 //! `Vec`-indexed tables, the gang-throughput matrix is computed once per
 //! (parent, node) pair, and placement is a method instead of a
 //! seven-argument closure. `sched::bench` (`fork_*` cases) times it
-//! against the frozen reference.
+//! against the frozen reference; the `warm_*`/`shard_*` cases time the
+//! warm-start and sharded paths against cold single-threaded replanning.
 //!
-//! The engines call [`HadarE::plan_round`] with the tracker state; step
-//! division + aggregation + consolidation happen in the engine through the
+//! The engines call [`HadarE::plan_round_with`] with the tracker state
+//! and their binding carry-over; step division + aggregation +
+//! consolidation happen in the engine through the
 //! [`crate::forking::JobTracker`].
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::node::Node;
 use crate::forking::tracker::JobTracker;
 use crate::jobs::job::{Job, JobId};
+use crate::jobs::queue::JobQueue;
 use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::RoundCtx;
 use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Knobs of the gang throughput/placement model (see module docs).
 #[derive(Clone, Copy, Debug)]
@@ -109,6 +172,15 @@ pub struct GangConfig {
     /// [`crate::sched::reference::RefHadarE`] on single-GPU clusters by
     /// `rust/tests/prop_equivalence.rs`.
     pub share_nodes: bool,
+    /// Worker threads for the sharded gang-matrix build and candidate
+    /// sort. `0` (the default) resolves at planner construction via
+    /// [`resolve_plan_threads`]: the `HADAR_PLAN_THREADS` environment
+    /// variable if set to a positive integer, else
+    /// `min(4, available_parallelism)`. Plans are **bit-identical at any
+    /// thread count** (deterministic merge order, pinned by
+    /// `rust/tests/hadare_stream.rs`), so this is a latency knob, never
+    /// a semantics knob.
+    pub plan_threads: usize,
 }
 
 impl Default for GangConfig {
@@ -117,6 +189,7 @@ impl Default for GangConfig {
             marginal_efficiency: 0.9,
             min_efficiency: 0.0,
             share_nodes: false,
+            plan_threads: 0,
         }
     }
 }
@@ -130,6 +203,41 @@ impl GangConfig {
             ..GangConfig::default()
         }
     }
+}
+
+/// Below this many gang-matrix cells (parents × slots) the sharded build
+/// runs serially — thread spawn/join overhead would dominate.
+const SHARD_MIN_CELLS: usize = 1 << 14;
+/// Below this many candidates the sort runs serially, for the same
+/// reason.
+const SHARD_MIN_CANDS: usize = 1 << 14;
+
+/// Parse a `HADAR_PLAN_THREADS`-style override. `None`, empty, garbage
+/// and `0` all mean "no override" (the zero case so exporting
+/// `HADAR_PLAN_THREADS=0` behaves like unsetting it).
+fn threads_from(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// Resolve a [`GangConfig::plan_threads`] setting to a concrete worker
+/// count: an explicit positive value wins; `0` falls back to the
+/// `HADAR_PLAN_THREADS` environment variable, then to
+/// `min(4, available_parallelism)`. Called once at planner construction
+/// so a round never re-reads the environment.
+pub fn resolve_plan_threads(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    if let Some(n) =
+        threads_from(std::env::var("HADAR_PLAN_THREADS").ok().as_deref())
+    {
+        return n;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
 }
 
 /// Shared tail of the gang rate model, so the three public rating
@@ -205,14 +313,184 @@ pub fn alloc_throughput(job: &Job, alloc: &JobAllocation,
     scaled_rate(job, x_min, n_gpus, cfg)
 }
 
+/// The previous round's `(node, pool)` → parent bindings plus the
+/// restart-overhead charge — the engine's carry-over, resolved to
+/// **parent** ids, that lets the planner model the switch costs it
+/// induces (module docs, "Warm start"). Bindings may be stale: entries
+/// for nodes that have since left the cluster are simply never matched
+/// by a live slot and are ignored (churn safety, pinned by
+/// `rust/tests/hadare_stream.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct PrevRound {
+    /// Parent most recently trained on each `(node id, pool type)`.
+    bindings: BTreeMap<(usize, GpuType), JobId>,
+    /// Seconds a gang loses to a model (re)load when it switches parents
+    /// — the planner-side mirror of
+    /// [`crate::sim::engine::SimConfig::restart_overhead`].
+    pub restart_overhead: f64,
+}
+
+impl PrevRound {
+    /// An empty carry-over with the given restart overhead.
+    pub fn new(restart_overhead: f64) -> Self {
+        PrevRound {
+            bindings: BTreeMap::new(),
+            restart_overhead,
+        }
+    }
+
+    /// The no-carry-over value: no bindings, zero overhead. A planner
+    /// handed this plans **bit-identically** to the historical
+    /// carry-over-blind `plan_round`.
+    pub fn empty() -> Self {
+        PrevRound::default()
+    }
+
+    /// Record that `(node, pool)` most recently trained `parent`.
+    pub fn bind(&mut self, node: usize, pool: GpuType, parent: JobId) {
+        self.bindings.insert((node, pool), parent);
+    }
+
+    /// Whether the carry-over holds no bindings at all.
+    pub fn is_empty(&self) -> bool {
+        self.bindings.is_empty()
+    }
+
+    /// Number of bound `(node, pool)` pairs.
+    pub fn len(&self) -> usize {
+        self.bindings.len()
+    }
+
+    /// Build a carry-over from a round's plan: every pool each scheduled
+    /// copy booked is bound to the copy's *parent* (resolved through the
+    /// tracker). Convenience for benches/tests; the engine builds its
+    /// carry-over from its own persistent binding map instead, which
+    /// also remembers idle-node bindings from earlier rounds.
+    pub fn from_plan(plan: &RoundPlan, tracker: &JobTracker,
+                     restart_overhead: f64) -> Self {
+        let mut prev = PrevRound::new(restart_overhead);
+        for (&copy, alloc) in &plan.allocations {
+            let parent = tracker.resolve(copy);
+            for (&(node, g), _) in alloc.slots.iter() {
+                prev.bind(node, g, parent);
+            }
+        }
+        prev
+    }
+}
+
+/// What the carry-over says about one gang slot: nothing bound, one
+/// parent's model loaded on every bound pool, or a mix (a whole-node
+/// slot whose pools last trained different parents — any copy placed
+/// there reloads at least one pool, so it pays the switch cost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotBind {
+    /// No pool of the slot has a recorded binding.
+    Free,
+    /// Every bound pool of the slot last trained this parent.
+    One(JobId),
+    /// Bound pools disagree about the loaded parent.
+    Mixed,
+}
+
+/// Resolve each slot's [`SlotBind`] from the carry-over. A per-pool slot
+/// consults its own `(node, pool)` key; a whole-node slot consults every
+/// pool of its host's gang. Bindings for `(node, pool)` pairs absent
+/// from the inventory are never looked up, which is what drops stale
+/// entries for departed nodes.
+fn slot_binds(slots: &[GangSlot], prev: &PrevRound) -> Vec<SlotBind> {
+    fn note(bind: &mut SlotBind, parent: JobId) {
+        match *bind {
+            SlotBind::Free => *bind = SlotBind::One(parent),
+            SlotBind::One(q) if q != parent => *bind = SlotBind::Mixed,
+            _ => {}
+        }
+    }
+    slots
+        .iter()
+        .map(|s| {
+            let mut bind = SlotBind::Free;
+            match s.pool {
+                Some((g, _)) => {
+                    if let Some(&p) = prev.bindings.get(&(s.node.id, g)) {
+                        note(&mut bind, p);
+                    }
+                }
+                None => {
+                    for (g, _) in s.node.gang() {
+                        if let Some(&p) =
+                            prev.bindings.get(&(s.node.id, g))
+                        {
+                            note(&mut bind, p);
+                        }
+                    }
+                }
+            }
+            bind
+        })
+        .collect()
+}
+
+/// Effective training seconds of a slot for `parent` under the
+/// carry-over: a slot whose loaded model is a *different* parent (or a
+/// mix) loses `overhead` seconds to the reload, matching the engine's
+/// any-pool-differs charge. An unbound slot is not penalised here — see
+/// the module docs for why that asymmetry is deliberate.
+#[inline]
+fn eff_secs(bind: SlotBind, parent: JobId, slot_secs: f64,
+            overhead: f64) -> f64 {
+    let switch = match bind {
+        SlotBind::Free => false,
+        SlotBind::One(p) => p != parent,
+        SlotBind::Mixed => true,
+    };
+    if switch {
+        (slot_secs - overhead).max(0.0)
+    } else {
+        slot_secs
+    }
+}
+
+/// Deterministic warm-start cache statistics, updated on every
+/// [`HadarE::plan_round_with`] call regardless of the `obs` gate (they
+/// are plain counters, never timers, so maintaining them cannot perturb
+/// plans). The same deltas feed the gated `hadare.warm_rows_*` obs
+/// counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Rounds planned through the warm path.
+    pub rounds: u64,
+    /// Gang rows computed from scratch (cache misses).
+    pub rows_computed: u64,
+    /// Gang rows served from the cache.
+    pub rows_reused: u64,
+    /// Whole-cache clears forced by a slot-inventory change (node
+    /// join/leave/capacity event, gang-mode flip).
+    pub invalidations: u64,
+}
+
 /// The HadarE gang planner (see module docs): whole-node slots by
-/// default, per-`(node, pool)` slots under [`GangConfig::share_nodes`].
+/// default, per-`(node, pool)` slots under [`GangConfig::share_nodes`];
+/// warm-started from the engine's binding carry-over and sharded across
+/// [`GangConfig::plan_threads`] workers.
 pub struct HadarE {
     /// Copies per job (usually = node count; Theorem 3's maximum).
     pub copies: u64,
     /// Gang throughput model (bottleneck + sub-linear scaling) and the
     /// whole-node vs per-pool placement mode.
     pub gang: GangConfig,
+    /// Warm-start cache statistics (deterministic, see [`WarmStats`]).
+    pub stats: WarmStats,
+    /// Worker count resolved from `gang.plan_threads` at construction.
+    threads: usize,
+    /// Cached gang rows keyed by parent id, valid for `rows_sig`'s slot
+    /// inventory. Jobs are immutable while live (the queue only mutates
+    /// rows at admission), so a row only goes stale when the inventory
+    /// changes or the parent completes.
+    rows: BTreeMap<JobId, Vec<f64>>,
+    /// FNV-1a signature of the slot inventory `rows` was built against;
+    /// `0` is the initial no-cache sentinel.
+    rows_sig: u64,
 }
 
 /// One placeable gang slot: a whole node (compatibility mode) or a
@@ -228,10 +506,28 @@ struct GangSlot<'a> {
     pool: Option<(GpuType, usize)>,
 }
 
+/// The allocation one copy books when placed on `slot`: the slot's pool,
+/// or the host's whole gang in compatibility mode.
+fn slot_alloc(slot: &GangSlot) -> JobAllocation {
+    let mut alloc = JobAllocation::new();
+    match slot.pool {
+        Some((g, c)) => alloc.add(slot.node.id, g, c),
+        None => {
+            for (g, c) in slot.node.gang() {
+                alloc.add(slot.node.id, g, c);
+            }
+        }
+    }
+    alloc
+}
+
 /// Per-round placement tables, flat `Vec`s indexed by parent/slot/node
 /// *position* (node ids need not be contiguous under cluster events).
 /// This is the zero-clone replacement for the three `BTreeMap`s the
-/// pre-rework planner probed per candidate.
+/// pre-rework planner probed per candidate. The cold reference path uses
+/// these dense tables; the warm path replaces `placed` with a sparse set
+/// (a round touches O(slots) placements, so a dense `n_p × n_h` bitmap
+/// would dominate the warm cost at streaming scale).
 struct Tables {
     /// Slot at index `si` already hosts a copy this round.
     slot_busy: Vec<bool>,
@@ -260,46 +556,262 @@ impl Tables {
              pid: JobId, pi: usize, si: usize, slot: &GangSlot) {
         let i = self.copies_used[pi] + 1;
         let copy = tracker.ids.copy_id(pid, i);
-        let mut alloc = JobAllocation::new();
-        match slot.pool {
-            Some((g, c)) => alloc.add(slot.node.id, g, c),
-            None => {
-                for (g, c) in slot.node.gang() {
-                    alloc.add(slot.node.id, g, c);
-                }
-            }
-        }
-        plan.insert(copy, alloc);
+        plan.insert(copy, slot_alloc(slot));
         self.slot_busy[si] = true;
         self.copies_used[pi] = i;
         self.placed[pi * self.n_nodes + slot.hi] = true;
     }
 }
 
+/// Parents with work left that have *arrived*, by remaining steps (desc;
+/// `total_cmp` so a degenerate row cannot panic the round, stable sort
+/// keeps id order on ties). The engine registers every parent with the
+/// tracker up front, so arrival gates here — a parent with `arrival >
+/// now` must not train before it exists.
+fn sorted_parents(ctx: &RoundCtx, tracker: &JobTracker)
+                  -> Vec<(JobId, f64)> {
+    let mut parents: Vec<(JobId, f64)> = tracker
+        .parents()
+        .filter(|(_, p)| !p.is_complete())
+        .filter(|&(&id, _)| {
+            ctx.queue
+                .get(id)
+                .map_or(false, |j| j.arrival <= ctx.now)
+        })
+        .map(|(&id, p)| (id, p.remaining()))
+        .collect();
+    parents.sort_by(|a, b| b.1.total_cmp(&a.1));
+    parents
+}
+
+/// Slot inventory: one whole-node slot per node, or one slot per
+/// (node, pool) in partial-node mode. Slots of one node are adjacent and
+/// in pool (type) order, so single-pool clusters produce the identical
+/// slot list in both modes.
+fn build_slots<'a>(nodes: &[&'a Node], share_nodes: bool)
+                   -> Vec<GangSlot<'a>> {
+    let mut slots: Vec<GangSlot> = Vec::new();
+    for (hi, &node) in nodes.iter().enumerate() {
+        if share_nodes {
+            for (g, c) in node.gang() {
+                slots.push(GangSlot {
+                    hi,
+                    node,
+                    pool: Some((g, c)),
+                });
+            }
+        } else {
+            slots.push(GangSlot {
+                hi,
+                node,
+                pool: None,
+            });
+        }
+    }
+    slots
+}
+
+/// FNV-1a signature of everything a cached gang row depends on besides
+/// the job itself: the gang mode, the slot count, and each slot's host
+/// id plus booked `(type, count)` pools. Any cluster event that changes
+/// the inventory (join, leave, capacity) changes this, which is the row
+/// cache's whole invalidation story. Never returns `0` in practice (the
+/// offset basis is folded in), so `0` doubles as the "no cache yet"
+/// sentinel.
+fn slots_sig(slots: &[GangSlot], share_nodes: bool) -> u64 {
+    fn eat(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x100000001b3)
+    }
+    let mut h = eat(0xcbf29ce484222325, share_nodes as u64);
+    h = eat(h, slots.len() as u64);
+    for s in slots {
+        h = eat(h, s.node.id as u64);
+        match s.pool {
+            Some((g, c)) => {
+                h = eat(h, 1);
+                h = eat(h, g as u64);
+                h = eat(h, c as u64);
+            }
+            None => {
+                h = eat(h, 2);
+                for (g, c) in s.node.gang() {
+                    h = eat(h, g as u64);
+                    h = eat(h, c as u64);
+                }
+            }
+        }
+    }
+    h
+}
+
+/// Gang rate of `job` on one slot — the matrix cell.
+fn slot_rate(job: &Job, slot: &GangSlot, cfg: &GangConfig) -> f64 {
+    match slot.pool {
+        Some((g, c)) => pool_throughput(job, g, c, cfg),
+        None => gang_throughput(job, slot.node, cfg),
+    }
+}
+
+/// One parent's gang row over the slot inventory; an unknown job id
+/// yields an all-zero (never placeable) row, like the dense matrix.
+fn row_for(job: Option<&Job>, slots: &[GangSlot],
+           cfg: &GangConfig) -> Vec<f64> {
+    match job {
+        Some(j) => {
+            slots.iter().map(|s| slot_rate(j, s, cfg)).collect()
+        }
+        None => vec![0.0; slots.len()],
+    }
+}
+
+/// Fetch-or-compute one parent's cached gang row, counting the hit or
+/// miss. Split out as a free function (not a method) so callers can hold
+/// `&mut` borrows of the cache and the stats while the planner's other
+/// fields stay readable.
+fn ensure_row<'m>(rows: &'m mut BTreeMap<JobId, Vec<f64>>,
+                  stats: &mut WarmStats, pid: JobId, queue: &JobQueue,
+                  slots: &[GangSlot], cfg: &GangConfig) -> &'m [f64] {
+    use std::collections::btree_map::Entry;
+    match rows.entry(pid) {
+        Entry::Occupied(e) => {
+            stats.rows_reused += 1;
+            e.into_mut()
+        }
+        Entry::Vacant(v) => {
+            stats.rows_computed += 1;
+            v.insert(row_for(queue.get(pid), slots, cfg))
+        }
+    }
+}
+
+/// Build the full gang matrix (row-major `[pi * n_s + si]`, `0.0` marks
+/// an unusable pair), sharded over contiguous parent chunks. Every cell
+/// is a pure function of (job, slot) written into a disjoint chunk, so
+/// the result is bit-identical to the serial build at any worker count.
+/// Small inputs stay serial ([`SHARD_MIN_CELLS`]).
+fn fill_matrix(parents: &[(JobId, f64)], slots: &[GangSlot],
+               queue: &JobQueue, cfg: &GangConfig,
+               threads: usize) -> Vec<f64> {
+    let n_s = slots.len();
+    let mut xg = vec![0.0f64; parents.len() * n_s];
+    let fill = |chunk: &[(JobId, f64)], out: &mut [f64]| {
+        for (i, &(pid, _)) in chunk.iter().enumerate() {
+            if let Some(job) = queue.get(pid) {
+                for (si, slot) in slots.iter().enumerate() {
+                    out[i * n_s + si] = slot_rate(job, slot, cfg);
+                }
+            }
+        }
+    };
+    if threads <= 1
+        || parents.len() < 2
+        || parents.len() * n_s < SHARD_MIN_CELLS
+    {
+        fill(parents, &mut xg);
+        return xg;
+    }
+    let per = (parents.len() + threads - 1) / threads;
+    let fill = &fill;
+    std::thread::scope(|scope| {
+        for (chunk, out) in
+            parents.chunks(per).zip(xg.chunks_mut(per * n_s))
+        {
+            scope.spawn(move || fill(chunk, out));
+        }
+    });
+    xg
+}
+
+/// Sort candidates by burn, descending — serially below
+/// [`SHARD_MIN_CANDS`], else as per-chunk stable sorts over *contiguous*
+/// chunks followed by a k-way merge. The merge only lets a later chunk's
+/// head win on strictly-greater burn (`total_cmp == Greater`), so ties
+/// resolve toward the earlier chunk — and since chunks are contiguous,
+/// "earlier chunk, then within-chunk stable order" is exactly the
+/// original-index tie order a serial stable sort produces. The sharded
+/// result is therefore bit-identical to the serial one at any worker
+/// count (unit-tested below).
+fn sort_candidates(cands: &mut Vec<(f64, u32, u32)>, threads: usize) {
+    if threads <= 1 || cands.len() < SHARD_MIN_CANDS {
+        cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        return;
+    }
+    let per = (cands.len() + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for chunk in cands.chunks_mut(per) {
+            scope.spawn(move || {
+                chunk.sort_by(|a, b| b.0.total_cmp(&a.0));
+            });
+        }
+    });
+    let chunks: Vec<&[(f64, u32, u32)]> = cands.chunks(per).collect();
+    let mut idx = vec![0usize; chunks.len()];
+    let mut out = Vec::with_capacity(cands.len());
+    loop {
+        let mut best: Option<usize> = None;
+        for (c, chunk) in chunks.iter().enumerate() {
+            if idx[c] >= chunk.len() {
+                continue;
+            }
+            match best {
+                None => best = Some(c),
+                Some(b) => {
+                    if chunk[idx[c]]
+                        .0
+                        .total_cmp(&chunks[b][idx[b]].0)
+                        == Ordering::Greater
+                    {
+                        best = Some(c);
+                    }
+                }
+            }
+        }
+        let Some(b) = best else { break };
+        out.push(chunks[b][idx[b]]);
+        idx[b] += 1;
+    }
+    *cands = out;
+}
+
 impl HadarE {
     /// Planner with a per-parent copy budget and the default
     /// [`GangConfig`].
     pub fn new(copies: u64) -> Self {
+        HadarE::with_gang(copies, GangConfig::default())
+    }
+
+    /// Planner with explicit gang-model knobs. The sharding worker count
+    /// is resolved here, once, from `gang.plan_threads`
+    /// ([`resolve_plan_threads`]).
+    pub fn with_gang(copies: u64, gang: GangConfig) -> Self {
         HadarE {
             copies,
-            gang: GangConfig::default(),
+            gang,
+            stats: WarmStats::default(),
+            threads: resolve_plan_threads(gang.plan_threads),
+            rows: BTreeMap::new(),
+            rows_sig: 0,
         }
     }
 
-    /// Planner with explicit gang-model knobs.
-    pub fn with_gang(copies: u64, gang: GangConfig) -> Self {
-        HadarE { copies, gang }
+    /// The worker count this planner shards rounds across (resolved from
+    /// [`GangConfig::plan_threads`] at construction).
+    pub fn plan_threads(&self) -> usize {
+        self.threads
     }
 
     /// Completion notification from the forking engine — the counterpart
-    /// of [`crate::sched::Scheduler::job_completed`] for the whole-node
-    /// planner. The planner keeps no per-parent caches today (every round
-    /// is planned from the tracker's live state), so this is a no-op; it
-    /// exists so both engines speak the same completion protocol and any
-    /// future per-parent planner state has one place to be dropped.
-    pub fn job_completed(&mut self, _parent: JobId) {}
+    /// of [`crate::sched::Scheduler::job_completed`] for the gang
+    /// planner: drops the parent's cached gang row, keeping the warm
+    /// cache bounded by the *live* parent count on long traces.
+    pub fn job_completed(&mut self, parent: JobId) {
+        self.rows.remove(&parent);
+    }
 
-    /// Assign gang slots to parent jobs for this round.
+    /// Assign gang slots to parent jobs for this round, with no
+    /// carry-over — exactly [`Self::plan_round_with`] under
+    /// [`PrevRound::empty`], and bit-identical to the historical
+    /// carry-over-blind planner.
     ///
     /// Returns a plan keyed by *copy id*: copy `i` of parent `p` on slot
     /// `s` means `s`'s host trains `p`'s model this slot on the slot's
@@ -307,26 +819,31 @@ impl HadarE {
     /// them under [`GangConfig::share_nodes`].
     pub fn plan_round(&mut self, ctx: &RoundCtx, tracker: &JobTracker)
                       -> RoundPlan {
+        self.plan_round_with(ctx, tracker, &PrevRound::empty())
+    }
+
+    /// Warm-start round planning: the hot path the engines call. Same
+    /// three passes as the cold reference (fairness, payoff-greedy, work
+    /// conservation) over the same priority order, but parent gang rows
+    /// come from the cross-round cache (computed lazily, only for
+    /// parents a pass actually examines), candidate generation is
+    /// restricted to slots still free after the fairness pass, and
+    /// payoffs are carry-over-aware (`x · eff_secs`, see [`PrevRound`]).
+    /// Produces plans **bit-identical** to
+    /// [`Self::plan_round_cold`] on the same inputs — pinned by
+    /// `rust/tests/prop_equivalence.rs` — while touching O(slots) rows
+    /// per round in the streaming regime.
+    pub fn plan_round_with(&mut self, ctx: &RoundCtx,
+                           tracker: &JobTracker, prev: &PrevRound)
+                           -> RoundPlan {
         let _span = crate::obs::trace::span("hadare.plan_round");
         if crate::obs::enabled() {
             crate::obs::metrics::core().hadare_plan_rounds.add(1);
         }
-        // Parents with work left that have *arrived*, by remaining steps
-        // (desc; total_cmp so a degenerate row cannot panic the round,
-        // stable sort keeps id order on ties). The engine registers every
-        // parent with the tracker up front, so arrival gates here — a
-        // parent with `arrival > now` must not train before it exists.
-        let mut parents: Vec<(JobId, f64)> = tracker
-            .parents()
-            .filter(|(_, p)| !p.is_complete())
-            .filter(|&(&id, _)| {
-                ctx.queue
-                    .get(id)
-                    .map_or(false, |j| j.arrival <= ctx.now)
-            })
-            .map(|(&id, p)| (id, p.remaining()))
-            .collect();
-        parents.sort_by(|a, b| b.1.total_cmp(&a.1));
+        self.stats.rounds += 1;
+        let before = self.stats;
+
+        let parents = sorted_parents(ctx, tracker);
         let mut plan = RoundPlan::new();
         if parents.is_empty() {
             return plan;
@@ -342,29 +859,240 @@ impl HadarE {
         if nodes.is_empty() {
             return plan;
         }
+        let slots = build_slots(&nodes, self.gang.share_nodes);
+        if slots.is_empty() {
+            return plan;
+        }
 
-        // Slot inventory: one whole-node slot per node, or one slot per
-        // (node, pool) in partial-node mode. Slots of one node are
-        // adjacent and in pool (type) order, so single-pool clusters
-        // produce the identical slot list in both modes.
-        let mut slots: Vec<GangSlot> = Vec::new();
-        for (hi, &node) in nodes.iter().enumerate() {
-            if self.gang.share_nodes {
-                for (g, c) in node.gang() {
-                    slots.push(GangSlot {
-                        hi,
-                        node,
-                        pool: Some((g, c)),
-                    });
+        // Row-cache validity: any slot-inventory change (cluster event,
+        // mode flip) clears every cached row.
+        let sig = slots_sig(&slots, self.gang.share_nodes);
+        if sig != self.rows_sig {
+            if self.rows_sig != 0 {
+                self.stats.invalidations += 1;
+            }
+            self.rows.clear();
+            self.rows_sig = sig;
+        }
+
+        let n_p = parents.len();
+        let n_s = slots.len();
+        let binds = slot_binds(&slots, prev);
+        // With no bindings at all, score by raw throughput and burn by
+        // the full slot — the historical formulas, bitwise. (Scaling
+        // every score by the same slot length could collapse historical
+        // near-ties; gating on an actual binding keeps the degradation
+        // exact.)
+        let scaled = binds.iter().any(|b| *b != SlotBind::Free);
+        let slot_secs = ctx.slot_secs;
+        let oh = prev.restart_overhead;
+        let gang = self.gang;
+        let copies = self.copies;
+        let rows = &mut self.rows;
+        let stats = &mut self.stats;
+
+        let mut slot_busy = vec![false; n_s];
+        let mut copies_used = vec![0u64; n_p];
+        // Sparse placed-on-node set (see `Tables` docs).
+        let mut placed: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut free = n_s;
+
+        let _placement_span = crate::obs::trace::span("hadare.placement");
+
+        // Pass 0: fairness — every unfinished parent first gets its best
+        // still-free slot (longest-remaining parent picks first), scored
+        // by carry-over-effective work `x · eff`. Ties keep the last
+        // slot in inventory order (the historical `max_by` semantics).
+        // Once the inventory is exhausted no later parent can place
+        // either, so the scan stops — the examined parents are a prefix
+        // of the priority order, which is what caps a streaming round at
+        // O(slots) scored rows.
+        for pi in 0..n_p {
+            if free == 0 {
+                break;
+            }
+            if copies_used[pi] >= copies {
+                continue;
+            }
+            let pid = parents[pi].0;
+            let row =
+                ensure_row(rows, stats, pid, ctx.queue, &slots, &gang);
+            let mut best: Option<(usize, f64)> = None;
+            for si in 0..n_s {
+                if slot_busy[si]
+                    || placed
+                        .contains(&(pi as u32, slots[si].hi as u32))
+                {
+                    continue;
                 }
-            } else {
-                slots.push(GangSlot {
-                    hi,
-                    node,
-                    pool: None,
-                });
+                let x = row[si];
+                if !(x > 0.0) {
+                    continue;
+                }
+                let score = if scaled {
+                    x * eff_secs(binds[si], pid, slot_secs, oh)
+                } else {
+                    x
+                };
+                if score > 0.0
+                    && best.map_or(true, |(_, bs)| {
+                        score.total_cmp(&bs) != Ordering::Less
+                    })
+                {
+                    best = Some((si, score));
+                }
+            }
+            if let Some((si, _)) = best {
+                let i = copies_used[pi] + 1;
+                plan.insert(tracker.ids.copy_id(pid, i),
+                            slot_alloc(&slots[si]));
+                slot_busy[si] = true;
+                copies_used[pi] = i;
+                placed.insert((pi as u32, slots[si].hi as u32));
+                free -= 1;
             }
         }
+
+        if free > 0 {
+            // Candidate (burn, parent, slot) tuples, restricted to the
+            // pairs pass 1 could still take: slots free after pass 0 and
+            // parents with budget left. The skip predicates only grow
+            // during pass 1 (busy/budget/placed are never un-set), so
+            // every pair excluded here would be skipped there too — the
+            // filtered, stable-sorted subsequence reproduces the cold
+            // planner's placements exactly.
+            let free_slots: Vec<u32> = (0..n_s as u32)
+                .filter(|&si| !slot_busy[si as usize])
+                .collect();
+            let mut cands: Vec<(f64, u32, u32)> = Vec::new();
+            for pi in 0..n_p {
+                if copies_used[pi] >= copies {
+                    continue;
+                }
+                let (pid, remaining) = parents[pi];
+                let row = ensure_row(rows, stats, pid, ctx.queue,
+                                     &slots, &gang);
+                for &si in &free_slots {
+                    if placed.contains(
+                        &(pi as u32, slots[si as usize].hi as u32))
+                    {
+                        continue;
+                    }
+                    let x = row[si as usize];
+                    if x > 0.0 {
+                        let eff = eff_secs(binds[si as usize], pid,
+                                           slot_secs, oh);
+                        cands.push((
+                            (x * eff).min(remaining),
+                            pi as u32,
+                            si,
+                        ));
+                    }
+                }
+            }
+            sort_candidates(&mut cands, self.threads);
+
+            // Pass 1: payoff-greedy with the per-parent copy budget
+            // (live re-checks identical to the cold path).
+            for &(_, pi, si) in &cands {
+                let (pi, si) = (pi as usize, si as usize);
+                if slot_busy[si]
+                    || copies_used[pi] >= copies
+                    || placed
+                        .contains(&(pi as u32, slots[si].hi as u32))
+                {
+                    continue;
+                }
+                let pid = parents[pi].0;
+                let i = copies_used[pi] + 1;
+                plan.insert(tracker.ids.copy_id(pid, i),
+                            slot_alloc(&slots[si]));
+                slot_busy[si] = true;
+                copies_used[pi] = i;
+                placed.insert((pi as u32, slots[si].hi as u32));
+                free -= 1;
+            }
+
+            // Pass 2: work conservation, kept faithfully from the cold
+            // path (pass 1's candidate set covers every usable pair, so
+            // this fills nothing pass 1 could not — it guards the
+            // Theorem-3 corollary against future pass-1 changes). Cells
+            // are probed singly, without caching a full row: caching
+            // here could pin O(parents) rows on a slot nobody can use.
+            if free > 0 {
+                for si in 0..n_s {
+                    if slot_busy[si] {
+                        continue;
+                    }
+                    for pi in 0..n_p {
+                        if placed.contains(
+                            &(pi as u32, slots[si].hi as u32))
+                            || copies_used[pi] >= copies
+                        {
+                            continue;
+                        }
+                        let pid = parents[pi].0;
+                        let x = match rows.get(&pid) {
+                            Some(row) => row[si],
+                            None => ctx
+                                .queue
+                                .get(pid)
+                                .map_or(0.0, |j| {
+                                    slot_rate(j, &slots[si], &gang)
+                                }),
+                        };
+                        if x > 0.0 {
+                            let i = copies_used[pi] + 1;
+                            plan.insert(tracker.ids.copy_id(pid, i),
+                                        slot_alloc(&slots[si]));
+                            slot_busy[si] = true;
+                            copies_used[pi] = i;
+                            placed
+                                .insert((pi as u32, slots[si].hi as u32));
+                            free -= 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        if crate::obs::enabled() {
+            let m = crate::obs::metrics::core();
+            m.hadare_warm_rows_computed
+                .add(self.stats.rows_computed - before.rows_computed);
+            m.hadare_warm_rows_reused
+                .add(self.stats.rows_reused - before.rows_reused);
+            m.hadare_warm_invalidations
+                .add(self.stats.invalidations - before.invalidations);
+        }
+        plan
+    }
+
+    /// Cold reference planning: recompute the full gang matrix (sharded,
+    /// [`fill_matrix`]) and run the three passes over dense tables, with
+    /// the *same* carry-over payoff model as the warm path. This is what
+    /// the equivalence property tests pin [`Self::plan_round_with`]
+    /// against and what `sched::bench`'s `warm_*` rows use as the
+    /// cold-replanning baseline; it touches no planner state (`&self`).
+    pub fn plan_round_cold(&self, ctx: &RoundCtx, tracker: &JobTracker,
+                           prev: &PrevRound) -> RoundPlan {
+        let _span = crate::obs::trace::span("hadare.plan_round_cold");
+        let parents = sorted_parents(ctx, tracker);
+        let mut plan = RoundPlan::new();
+        if parents.is_empty() {
+            return plan;
+        }
+        let nodes: Vec<&Node> = ctx
+            .cluster
+            .nodes
+            .iter()
+            .filter(|n| n.total_gpus() > 0)
+            .collect();
+        if nodes.is_empty() {
+            return plan;
+        }
+        let slots = build_slots(&nodes, self.gang.share_nodes);
         if slots.is_empty() {
             return plan;
         }
@@ -377,21 +1105,14 @@ impl HadarE {
         // unusable (parent, slot) pair. Computed once — the passes below
         // only do flat indexed reads.
         let matrix_span = crate::obs::trace::span("hadare.gang_matrix");
-        let mut xg = vec![0.0f64; n_p * n_s];
-        for (pi, &(pid, _)) in parents.iter().enumerate() {
-            if let Some(job) = ctx.queue.get(pid) {
-                for (si, slot) in slots.iter().enumerate() {
-                    xg[pi * n_s + si] = match slot.pool {
-                        Some((g, c)) => {
-                            pool_throughput(job, g, c, &self.gang)
-                        }
-                        None => gang_throughput(job, slot.node, &self.gang),
-                    };
-                }
-            }
-        }
-
+        let xg = fill_matrix(&parents, &slots, ctx.queue, &self.gang,
+                             self.threads);
         drop(matrix_span);
+
+        let binds = slot_binds(&slots, prev);
+        let scaled = binds.iter().any(|b| *b != SlotBind::Free);
+        let slot_secs = ctx.slot_secs;
+        let oh = prev.restart_overhead;
 
         let mut t = Tables::new(n_p, n_h, n_s);
         let _placement_span = crate::obs::trace::span("hadare.placement");
@@ -406,43 +1127,55 @@ impl HadarE {
             if t.copies_used[pi] >= self.copies {
                 continue;
             }
+            let pid = parents[pi].0;
             let mut best: Option<(usize, f64)> = None;
             for si in 0..n_s {
                 if t.slot_busy[si] || t.placed[pi * n_h + slots[si].hi] {
                     continue;
                 }
                 let x = xg[pi * n_s + si];
-                if x > 0.0
-                    && best
-                        .map_or(true, |(_, bx)| {
-                            x.total_cmp(&bx) != Ordering::Less
-                        })
+                if !(x > 0.0) {
+                    continue;
+                }
+                let score = if scaled {
+                    x * eff_secs(binds[si], pid, slot_secs, oh)
+                } else {
+                    x
+                };
+                if score > 0.0
+                    && best.map_or(true, |(_, bs)| {
+                        score.total_cmp(&bs) != Ordering::Less
+                    })
                 {
-                    best = Some((si, x));
+                    best = Some((si, score));
                 }
             }
             if let Some((si, _)) = best {
-                t.place(&mut plan, tracker, parents[pi].0, pi, si,
-                        &slots[si]);
+                t.place(&mut plan, tracker, pid, pi, si, &slots[si]);
             }
         }
 
         // Build all candidate (burn, parent idx, slot idx) tuples. Burn is
         // the throughput-weighted urgency — how much of the remaining work
-        // this slot's gang can complete this round — the greedy core of
-        // Hadar's price argument specialised to gang slots.
+        // this slot's gang can complete this round after any model reload
+        // — the greedy core of Hadar's price argument specialised to gang
+        // slots.
         let mut cands: Vec<(f64, u32, u32)> =
             Vec::with_capacity(n_p * n_s);
-        for (pi, &(_, remaining)) in parents.iter().enumerate() {
+        for (pi, &(pid, remaining)) in parents.iter().enumerate() {
             for si in 0..n_s {
                 let x = xg[pi * n_s + si];
                 if x > 0.0 {
-                    let burn = (x * ctx.slot_secs).min(remaining);
-                    cands.push((burn, pi as u32, si as u32));
+                    let eff = eff_secs(binds[si], pid, slot_secs, oh);
+                    cands.push((
+                        (x * eff).min(remaining),
+                        pi as u32,
+                        si as u32,
+                    ));
                 }
             }
         }
-        cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        sort_candidates(&mut cands, self.threads);
 
         // Pass 1: payoff-greedy with the per-parent copy budget.
         for &(_, pi, si) in &cands {
@@ -835,6 +1568,185 @@ mod tests {
         for id in plan.scheduled_jobs() {
             assert_eq!(tracker.resolve(id), JobId(1),
                        "only the well-formed parent runs");
+        }
+    }
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(threads_from(None), None);
+        assert_eq!(threads_from(Some("")), None);
+        assert_eq!(threads_from(Some("banana")), None);
+        assert_eq!(threads_from(Some("0")), None, "0 = unset");
+        assert_eq!(threads_from(Some("4")), Some(4));
+        assert_eq!(threads_from(Some(" 8 ")), Some(8));
+        // Explicit config always beats the fallbacks.
+        assert_eq!(resolve_plan_threads(3), 3);
+        assert!(resolve_plan_threads(0) >= 1);
+    }
+
+    #[test]
+    fn sharded_candidate_sort_matches_serial_stable_sort() {
+        // Many duplicated burn values force the tie path: the k-way
+        // merge must reproduce the serial stable sort bit-for-bit,
+        // including the original-index order among equals.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xCAFE);
+        let n = SHARD_MIN_CANDS + 1234;
+        let mut cands: Vec<(f64, u32, u32)> = (0..n)
+            .map(|i| {
+                // 16 distinct burn values over ~17k entries → ~1k-deep
+                // tie classes.
+                let burn = (rng.below(16) as f64) * 0.5;
+                (burn, i as u32, (i % 97) as u32)
+            })
+            .collect();
+        let mut serial = cands.clone();
+        serial.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for threads in [2, 3, 8] {
+            let mut sharded = cands.clone();
+            sort_candidates(&mut sharded, threads);
+            assert_eq!(sharded, serial, "threads={threads}");
+        }
+        // Below the size floor the serial path runs regardless.
+        cands.truncate(100);
+        let mut small = cands.clone();
+        sort_candidates(&mut small, 8);
+        cands.sort_by(|a, b| b.0.total_cmp(&a.0));
+        assert_eq!(small, cands);
+    }
+
+    #[test]
+    fn warm_plan_matches_cold_plan_with_carried_bindings() {
+        // Smoke version of the prop test: two rounds on sim60, the
+        // second with the first round's bindings carried over — warm and
+        // cold paths must agree exactly, and the second warm round must
+        // hit the row cache.
+        let (cluster, queue, mut tracker) =
+            setup_on(ClusterSpec::sim60(), 4, 15);
+        let mut warm = HadarE::new(15);
+        let c0 = ctx(&queue, &cluster);
+        let p0 = warm.plan_round_with(&c0, &tracker, &PrevRound::empty());
+        assert_eq!(
+            p0.allocations,
+            warm.plan_round_cold(&c0, &tracker, &PrevRound::empty())
+                .allocations
+        );
+        let prev = PrevRound::from_plan(&p0, &tracker, 30.0);
+        assert!(!prev.is_empty());
+        assert_eq!(prev.len(), 15, "every (node, pool) bound");
+        // Unequal progress so round 1's priority order shifts.
+        for (i, (&copy, _)) in p0.allocations.iter().enumerate() {
+            tracker.report_steps(copy, 10.0 * i as f64);
+        }
+        let mut c1 = ctx(&queue, &cluster);
+        c1.now = 360.0;
+        let reused_before = warm.stats.rows_reused;
+        let pw = warm.plan_round_with(&c1, &tracker, &prev);
+        let pc = warm.plan_round_cold(&c1, &tracker, &prev);
+        assert_eq!(pw.allocations, pc.allocations,
+                   "warm and cold diverged under carried bindings");
+        assert!(warm.stats.rows_reused > reused_before,
+                "second round must reuse cached rows");
+        assert_eq!(warm.stats.invalidations, 0);
+    }
+
+    #[test]
+    fn inventory_change_invalidates_row_cache() {
+        let (mut cluster, queue, tracker) =
+            setup_on(ClusterSpec::sim60(), 3, 15);
+        let mut warm = HadarE::new(15);
+        let _ = warm.plan_round(&ctx(&queue, &cluster), &tracker);
+        let computed_round0 = warm.stats.rows_computed;
+        assert!(computed_round0 > 0);
+        let victim = cluster.nodes[0].id;
+        cluster.remove_node(victim);
+        let plan = warm.plan_round(&ctx(&queue, &cluster), &tracker);
+        assert_eq!(warm.stats.invalidations, 1,
+                   "node removal must clear the row cache");
+        assert!(warm.stats.rows_computed > computed_round0,
+                "rows rebuilt against the new inventory");
+        for (_, a) in &plan.allocations {
+            assert!(!a.nodes().contains(&victim),
+                    "no placement on the removed node");
+        }
+        // Completion drops the parent's row: the next round recomputes
+        // only for live parents.
+        warm.job_completed(JobId(0));
+        assert!(!warm.rows.contains_key(&JobId(0)));
+    }
+
+    #[test]
+    fn carried_bindings_keep_parents_on_their_loaded_gangs() {
+        // The switch-cost model in action: two single-GPU nodes, fast
+        // (V100, x=40) and slow (K80, x=10); two parents, each with its
+        // model loaded on one node, and a restart overhead eating 90% of
+        // the slot. Blind planning moves the longer job onto the fast
+        // node (two reloads); carry-over-aware planning keeps both
+        // parents where their models are loaded.
+        use crate::cluster::gpu::{GpuType, PcieGen};
+        let cluster = ClusterSpec::new(
+            "duo",
+            vec![
+                Node::new(0, "fast", &[(GpuType::V100, 1)], PcieGen::Gen3),
+                Node::new(1, "slow", &[(GpuType::K80, 1)], PcieGen::Gen3),
+            ],
+        );
+        let mut queue = JobQueue::new();
+        let ids = ForkIds { max_job_count: 100 };
+        let mut tracker = JobTracker::new(ids);
+        for id in 0..2u64 {
+            let mut j = Job::new(id, DlModel::MiMa, 0.0, 1, 20, 100);
+            j.set_throughput(GpuType::V100, 40.0);
+            j.set_throughput(GpuType::K80, 10.0);
+            tracker.register(j.id, j.total_iters(),
+                             &[ids.copy_id(j.id, 1)]);
+            queue.admit(j);
+        }
+        // Parent 1 has less work left → parent 0 picks first.
+        tracker.report_steps(ids.copy_id(JobId(1), 1), 500.0);
+        let mut h = HadarE::new(1);
+        let c = ctx(&queue, &cluster);
+
+        // Blind: parent 0 (longest) takes the fast node.
+        let blind = h.plan_round_with(&c, &tracker, &PrevRound::empty());
+        let on = |plan: &RoundPlan, copy: JobId| {
+            plan.allocations.get(&copy).unwrap().nodes()[0]
+        };
+        assert_eq!(on(&blind, ids.copy_id(JobId(0), 1)), 0);
+        assert_eq!(on(&blind, ids.copy_id(JobId(1), 1)), 1);
+
+        // Loaded models: parent 0 on the slow node, parent 1 on the
+        // fast one. Overhead 324s of a 360s slot → switching to the fast
+        // node only trains 36s: 40·36 < 10·360, staying wins.
+        let mut prev = PrevRound::new(324.0);
+        prev.bind(0, GpuType::V100, JobId(1));
+        prev.bind(1, GpuType::K80, JobId(0));
+        let warm = h.plan_round_with(&c, &tracker, &prev);
+        assert_eq!(on(&warm, ids.copy_id(JobId(0), 1)), 1,
+                   "parent 0 stays on its loaded slow node");
+        assert_eq!(on(&warm, ids.copy_id(JobId(1), 1)), 0,
+                   "parent 1 stays on its loaded fast node");
+        // Cold reference agrees, of course.
+        let cold = h.plan_round_cold(&c, &tracker, &prev);
+        assert_eq!(warm.allocations, cold.allocations);
+    }
+
+    #[test]
+    fn stale_bindings_for_absent_nodes_are_ignored() {
+        // Churn safety at the planner level: bindings referencing nodes
+        // that left the cluster (or never existed) change nothing.
+        let (cluster, queue, tracker) = setup(2);
+        let mut h = HadarE::new(5);
+        let c = ctx(&queue, &cluster);
+        let clean = h.plan_round_with(&c, &tracker, &PrevRound::empty());
+        let mut stale = PrevRound::new(30.0);
+        stale.bind(999, GpuType::V100, JobId(0));
+        stale.bind(998, GpuType::K80, JobId(1));
+        let with_stale = h.plan_round_with(&c, &tracker, &stale);
+        assert_eq!(clean.allocations, with_stale.allocations,
+                   "bindings to absent nodes must be inert");
+        for (_, a) in &with_stale.allocations {
+            assert!(a.nodes().iter().all(|&n| n < 900));
         }
     }
 }

@@ -42,7 +42,8 @@ use crate::jobs::job::{Job, JobId, JobStatus};
 use crate::jobs::queue::JobQueue;
 use crate::obs;
 use crate::obs::export::{RoundTelemetry, TelemetrySink};
-use crate::sched::hadare::{alloc_throughput, GangConfig, HadarE};
+use crate::sched::hadare::{alloc_throughput, GangConfig, HadarE,
+                           PrevRound};
 use crate::sched::RoundCtx;
 use crate::sim::engine::{
     integrate_capacity, RoundJob, RoundRecord, SimConfig, SimResult,
@@ -216,6 +217,18 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
         drop(event_span);
 
         let active = queue.active_at(now);
+        // Hand the planner the binding carry-over, resolved to parent
+        // ids: warm start (fewer rescored rows) + switch-cost-aware
+        // payoffs, with the same `restart_overhead` the engine charges
+        // below — the planner now optimises against the cost model it
+        // is billed under.
+        let prev = {
+            let mut p = PrevRound::new(cfg.restart_overhead);
+            for (&(node, g), &copy) in &prev_binding {
+                p.bind(node, g, tracker.resolve(copy));
+            }
+            p
+        };
         let (plan, round_wall) = {
             let ctx = RoundCtx {
                 round,
@@ -229,7 +242,7 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
             let t0 = Instant::now();
             let plan = {
                 let _s = obs::trace::span("sched.schedule");
-                planner.plan_round(&ctx, &tracker)
+                planner.plan_round_with(&ctx, &tracker, &prev)
             };
             let dt = t0.elapsed().as_secs_f64();
             sched_wall += dt;

@@ -348,3 +348,211 @@ fn prop_hadare_single_gpu_plans_identical() {
         },
     );
 }
+
+// ---------------------------------------------------- HadarE warm start
+
+/// Random cluster for the warm-start equivalence domain: the paper
+/// presets (sim60, big:2x4), a small `scaled:NxG` multi-GPU preset, or
+/// the single-GPU mix — multi-pool and multi-GPU shapes included, since
+/// the warm path must agree with cold replanning everywhere, not just on
+/// the single-GPU compatibility domain.
+fn gen_warm_cluster(rng: &mut Rng) -> ClusterSpec {
+    match rng.below(4) {
+        0 => ClusterSpec::sim60(),
+        1 => ClusterSpec::big(2, 4),
+        2 => ClusterSpec::scaled(rng.range_u(1, 3) as usize,
+                                 rng.range_u(1, 4) as usize),
+        _ => gen_single_gpu_cluster(rng),
+    }
+}
+
+/// Warm-start equivalence over ≥70 seeded scenarios: with *any*
+/// carry-over bindings — including stale ones referencing removed nodes
+/// — [`HadarE::plan_round_with`] (cached rows, pruned candidate scan)
+/// must produce plans identical to [`HadarE::plan_round_cold`] (full
+/// matrix rebuild) on the same round, across multiple rounds with
+/// staggered arrivals, progress, completions, and node churn. Both modes
+/// (whole-node and partial-node gangs) are driven.
+#[test]
+fn prop_hadare_warm_start_equals_cold_replanning() {
+    use hadar::sched::hadare::{GangConfig, PrevRound};
+    use std::collections::BTreeMap;
+    check_no_shrink(
+        Config { cases: 70, seed: 0x5EED4 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cluster = gen_warm_cluster(&mut rng);
+            let n_nodes = cluster.nodes.len() as u64;
+            let copies = rng.range_u(1, n_nodes + 2);
+            let gang = if rng.below(2) == 0 {
+                GangConfig::default()
+            } else {
+                GangConfig::shared()
+            };
+            let ids = ForkIds { max_job_count: 64 };
+            let mut tracker = JobTracker::new(ids);
+            let mut queue = JobQueue::new();
+            let slot = 360.0;
+            let n_parents = rng.range_u(1, 8);
+            for id in 0..n_parents {
+                let mut j = gen_parent(&mut rng, id, &cluster);
+                // ~1/3 of parents arrive one or two rounds late.
+                j.arrival = slot * rng.below(3) as f64;
+                tracker.register(
+                    j.id,
+                    j.total_iters(),
+                    &(1..=copies)
+                        .map(|i| ids.copy_id(j.id, i))
+                        .collect::<Vec<_>>(),
+                );
+                queue.admit(j);
+            }
+            let mut warm = HadarE::with_gang(copies, gang);
+            // Persistent (node, pool) -> parent carry-over, exactly as
+            // the engine maintains `prev_binding` — including stale
+            // entries for nodes removed below.
+            let mut bind_map: BTreeMap<(usize, GpuType), JobId> =
+                BTreeMap::new();
+
+            for round in 0..4u64 {
+                let now = round as f64 * slot;
+                let mut prev = PrevRound::new(10.0);
+                for (&(node, g), &pid) in &bind_map {
+                    prev.bind(node, g, pid);
+                }
+                let (p_warm, p_cold) = {
+                    let c = ctx(now, &queue, &[], &cluster);
+                    let cold = HadarE::with_gang(copies, gang);
+                    (
+                        warm.plan_round_with(&c, &tracker, &prev),
+                        cold.plan_round_cold(&c, &tracker, &prev),
+                    )
+                };
+                if !plans_equal(&p_warm, &p_cold) {
+                    return Err(format!(
+                        "round {round} (copies {copies}, shared \
+                         {}, {} bindings): warm plan diverged from cold: \
+                         warm {:?} vs cold {:?}",
+                        gang.share_nodes,
+                        prev.len(),
+                        p_warm.allocations,
+                        p_cold.allocations
+                    ));
+                }
+                if p_warm.allocations.is_empty() && bind_map.is_empty() {
+                    break;
+                }
+                // Next round's carry-over is this round's plan.
+                bind_map.clear();
+                for (&copy, alloc) in &p_warm.allocations {
+                    let parent = tracker.resolve(copy);
+                    for (&(node, g), _) in alloc.slots.iter() {
+                        bind_map.insert((node, g), parent);
+                    }
+                    if let Some(j) = queue.get(parent) {
+                        let g = alloc.gpu_types()[0];
+                        let x = j.throughput_on(g);
+                        let steps = if rng.f64() < 0.1 {
+                            1e9
+                        } else {
+                            x * slot * rng.f64()
+                        };
+                        tracker.report_steps(copy, steps);
+                    }
+                    if tracker.is_parent_complete(parent) {
+                        warm.job_completed(parent);
+                    }
+                }
+                // Churn: occasionally drop a node but *keep* its stale
+                // bindings in the carry-over — the planner must ignore
+                // them (the churn-safety contract).
+                if rng.f64() < 0.25 && cluster.nodes.len() > 1 {
+                    let victim = cluster.nodes
+                        [rng.below(cluster.nodes.len() as u64) as usize]
+                        .id;
+                    cluster.remove_node(victim);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Degradation exactness over ≥40 seeded scenarios: a warm planner
+/// handed an **empty** carry-over must plan identically to a fresh
+/// planner's [`HadarE::plan_round`] — even with a populated row cache —
+/// so engines that never thread bindings lose nothing and change
+/// nothing.
+#[test]
+fn prop_hadare_empty_carry_over_degrades_to_plan_round() {
+    use hadar::sched::hadare::{GangConfig, PrevRound};
+    check_no_shrink(
+        Config { cases: 40, seed: 0x5EED5 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let cluster = gen_warm_cluster(&mut rng);
+            let n_nodes = cluster.nodes.len() as u64;
+            let copies = rng.range_u(1, n_nodes + 2);
+            let gang = if rng.below(2) == 0 {
+                GangConfig::default()
+            } else {
+                GangConfig::shared()
+            };
+            let ids = ForkIds { max_job_count: 64 };
+            let mut tracker = JobTracker::new(ids);
+            let mut queue = JobQueue::new();
+            let n_parents = rng.range_u(1, 6);
+            for id in 0..n_parents {
+                let j = gen_parent(&mut rng, id, &cluster);
+                tracker.register(
+                    j.id,
+                    j.total_iters(),
+                    &(1..=copies)
+                        .map(|i| ids.copy_id(j.id, i))
+                        .collect::<Vec<_>>(),
+                );
+                queue.admit(j);
+            }
+            let mut warm = HadarE::with_gang(copies, gang);
+            let slot = 360.0;
+            for round in 0..3u64 {
+                let (p_warm, p_fresh) = {
+                    let c = ctx(round as f64 * slot, &queue, &[], &cluster);
+                    let mut fresh = HadarE::with_gang(copies, gang);
+                    (
+                        warm.plan_round_with(&c, &tracker,
+                                             &PrevRound::empty()),
+                        fresh.plan_round(&c, &tracker),
+                    )
+                };
+                if !plans_equal(&p_warm, &p_fresh) {
+                    return Err(format!(
+                        "round {round} (copies {copies}): empty carry-over \
+                         did not degrade to plan_round: warm {:?} vs fresh \
+                         {:?}",
+                        p_warm.allocations, p_fresh.allocations
+                    ));
+                }
+                if p_warm.allocations.is_empty() {
+                    break;
+                }
+                for (&copy, alloc) in &p_warm.allocations {
+                    let parent = tracker.resolve(copy);
+                    if let Some(j) = queue.get(parent) {
+                        let g = alloc.gpu_types()[0];
+                        tracker.report_steps(
+                            copy,
+                            j.throughput_on(g) * slot * rng.f64(),
+                        );
+                    }
+                    if tracker.is_parent_complete(parent) {
+                        warm.job_completed(parent);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
