@@ -80,6 +80,18 @@ pub struct ClusterState {
     /// Zobrist rolling digest over all pools with capacity (incrementally
     /// maintained; see [`zkey`]).
     zobrist: u64,
+    /// Per-type rolling digests: `type_digests[t]` XORs the same keys as
+    /// `zobrist` but only over type-`t` pools, so the digest of any *set*
+    /// of types is an O(set) XOR of entries
+    /// ([`ClusterState::digest_of_types`]) — the signature the Hadar
+    /// no-candidate rows are invalidated by.
+    type_digests: [u64; NTYPES],
+    /// FNV-1a digest of the capacity matrix. Capacities are fixed for the
+    /// lifetime of one snapshot, so this is computed once in
+    /// [`ClusterState::new`] and never maintained. Needed because the
+    /// Zobrist digests cover *allocated counts* only: two clusters with
+    /// different capacities but equal allocations share a `zobrist`.
+    cap_digest: u64,
     /// Per-type free-slot buckets: `slot_index[t][f]` holds the ids (sorted
     /// ascending) of nodes with exactly `f` free type-`t` GPUs, for
     /// `f >= 1`. Bucket 0 stays empty — fully-allocated pools leave the
@@ -108,9 +120,11 @@ impl ClusterState {
                 total += c as i64;
             }
         }
-        // Seed the rolling digest and the free-slot buckets from the
+        // Seed the rolling digests and the free-slot buckets from the
         // all-free position (O(nodes × types), once per round).
         let mut zobrist = 0u64;
+        let mut type_digests = [0u64; NTYPES];
+        let mut cap_digest = 0xCBF2_9CE4_8422_2325u64; // FNV-1a offset
         let mut slot_index: Vec<Vec<Vec<u32>>> = Vec::with_capacity(NTYPES);
         for t in 0..NTYPES {
             let max_cap = capacity
@@ -123,6 +137,12 @@ impl ClusterState {
                 let c = row[t] as usize;
                 if c > 0 {
                     zobrist ^= zkey(h, t, 0);
+                    type_digests[t] ^= zkey(h, t, 0);
+                    let cell = ((h as u64) << 24)
+                        | ((t as u64) << 16)
+                        | c as u64;
+                    cap_digest = (cap_digest ^ cell)
+                        .wrapping_mul(0x0000_0100_0000_01B3);
                     buckets[c].push(h as u32);
                 }
             }
@@ -137,6 +157,8 @@ impl ClusterState {
             total_capacity_count: total,
             assignments: Vec::new(),
             zobrist,
+            type_digests,
+            cap_digest,
             slot_index,
         }
     }
@@ -248,7 +270,9 @@ impl ClusterState {
         self.allocated[node][t] = new as u16;
         self.free_by_type[t] -= delta;
         self.total_free_count -= delta;
-        self.zobrist ^= zkey(node, t, old) ^ zkey(node, t, new);
+        let dk = zkey(node, t, old) ^ zkey(node, t, new);
+        self.zobrist ^= dk;
+        self.type_digests[t] ^= dk;
         let (old_free, new_free) = (cap - old, cap - new);
         if old_free > 0 {
             let bucket = &mut self.slot_index[t][old_free];
@@ -375,6 +399,67 @@ impl ClusterState {
     pub fn digest(&self) -> u64 {
         self.zobrist
     }
+
+    /// Digest of the capacity matrix — O(1), fixed for this snapshot.
+    /// Distinguishes clusters the allocation digests cannot: the Zobrist
+    /// keys cover allocated counts, not capacities, so round signatures
+    /// that must change under node churn fold this in too.
+    #[inline]
+    pub fn capacity_digest(&self) -> u64 {
+        self.cap_digest
+    }
+
+    /// Rolling digest restricted to a set of GPU types — O(types).
+    /// Equal values mean every type-`g` pool (for `g` in `types`) holds
+    /// the allocation counts it held when the other digest was taken,
+    /// which is exactly the read set of one `FIND_ALLOC` scoring call.
+    /// `types` must hold distinct entries (duplicates XOR-cancel).
+    #[inline]
+    pub fn digest_of_types(&self, types: &[GpuType]) -> u64 {
+        types
+            .iter()
+            .fold(0u64, |d, &g| d ^ self.type_digests[tix(g)])
+    }
+
+    /// Candidate nodes for a *packed* (single-node) allocation of `want`
+    /// GPUs drawn from `types`, ascending by node id — the order the
+    /// historical full scan visited them in, so payoff ties break
+    /// identically. Served from the free-slot buckets:
+    ///
+    /// * one type: exactly the nodes with `>= want` free type GPUs
+    ///   (buckets `want..`);
+    /// * several types: every node with at least one free GPU of any of
+    ///   the types — a superset of the feasible set (per-node sums are
+    ///   not indexed), but omitted nodes provably cannot contribute.
+    ///
+    /// Fully-busy nodes never appear, which is what makes the packed
+    /// scan O(candidates) instead of O(nodes).
+    pub fn packed_candidates(
+        &self,
+        types: &[GpuType],
+        want: usize,
+    ) -> Vec<u32> {
+        if crate::obs::enabled() {
+            crate::obs::metrics::core().state_slot_scans.add(1);
+        }
+        let mut out: Vec<u32> = Vec::new();
+        if let [g] = types {
+            let buckets = &self.slot_index[tix(*g)];
+            for bucket in &buckets[want.min(buckets.len())..] {
+                out.extend_from_slice(bucket);
+            }
+            out.sort_unstable();
+        } else {
+            for &g in types {
+                for bucket in &self.slot_index[tix(g)][1..] {
+                    out.extend_from_slice(bucket);
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -482,6 +567,59 @@ mod tests {
             s.free_slots_of_type(GpuType::P100).collect::<Vec<_>>(),
             vec![(1, 3)]
         );
+    }
+
+    #[test]
+    fn capacity_digest_fixed_under_allocations() {
+        let mut s = state();
+        let d = s.capacity_digest();
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 2 });
+        assert_eq!(d, s.capacity_digest(), "allocations never move it");
+        let other = ClusterState::new(&ClusterSpec::sim60());
+        assert_ne!(d, other.capacity_digest(), "different capacity matrix");
+    }
+
+    #[test]
+    fn type_digests_track_only_touched_types() {
+        let mut s = state();
+        let v0 = s.digest_of_types(&[GpuType::V100]);
+        let p0 = s.digest_of_types(&[GpuType::P100]);
+        let both0 = s.digest_of_types(&[GpuType::V100, GpuType::P100]);
+        assert_eq!(both0, v0 ^ p0, "set digest is the XOR of its types");
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 1 });
+        assert_ne!(v0, s.digest_of_types(&[GpuType::V100]));
+        assert_eq!(p0, s.digest_of_types(&[GpuType::P100]),
+                   "untouched type keeps its digest");
+        s.release_job(JobId(1));
+        assert_eq!(v0, s.digest_of_types(&[GpuType::V100]));
+    }
+
+    #[test]
+    fn packed_candidates_single_type_matches_brute_force() {
+        let mut s = ClusterState::new(&ClusterSpec::sim60());
+        s.allocate(Assignment { job: JobId(1), node: 1, gpu: GpuType::V100, count: 3 });
+        s.allocate(Assignment { job: JobId(1), node: 3, gpu: GpuType::V100, count: 4 });
+        for want in 1..=5usize {
+            let got = s.packed_candidates(&[GpuType::V100], want);
+            let want_nodes: Vec<u32> = (0..s.n_nodes())
+                .filter(|&h| s.free(h, GpuType::V100) >= want)
+                .map(|h| h as u32)
+                .collect();
+            assert_eq!(got, want_nodes, "want={want}");
+        }
+        // Beyond the largest bucket: empty, no slice panic.
+        assert!(s.packed_candidates(&[GpuType::V100], 99).is_empty());
+    }
+
+    #[test]
+    fn packed_candidates_multi_type_union_is_sorted_dedup() {
+        let mut s = state();
+        // motivational: node 0 = 2x V100, node 1 = 3x P100, node 2 = 1x K80.
+        let got = s.packed_candidates(&[GpuType::V100, GpuType::P100], 2);
+        assert_eq!(got, vec![0, 1]);
+        s.allocate(Assignment { job: JobId(1), node: 0, gpu: GpuType::V100, count: 2 });
+        let got = s.packed_candidates(&[GpuType::V100, GpuType::P100], 2);
+        assert_eq!(got, vec![1], "fully-busy node 0 leaves the index");
     }
 
     #[test]

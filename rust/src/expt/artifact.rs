@@ -78,6 +78,13 @@ pub struct ScenarioRecord {
     pub dp_rounds: u64,
     /// Rounds the solver fell back to its greedy path.
     pub greedy_rounds: u64,
+    /// Solver `FIND_ALLOC` scoring passes over the run (0 likewise).
+    pub find_alloc_calls: u64,
+    /// Candidate allocations the solver payoff-scored over the run.
+    pub candidates_scored: u64,
+    /// Speculative scores invalidated by an earlier commit and redone
+    /// serially (Hadar's speculative greedy; 0 for other schedulers).
+    pub rescore_conflicts: u64,
 }
 
 impl ScenarioRecord {
@@ -119,6 +126,9 @@ impl ScenarioRecord {
             memo_misses: solver.memo_misses,
             dp_rounds: solver.dp_rounds,
             greedy_rounds: solver.greedy_rounds,
+            find_alloc_calls: solver.find_alloc_calls,
+            candidates_scored: solver.candidates_scored,
+            rescore_conflicts: solver.rescore_conflicts,
         }
     }
 
@@ -150,7 +160,10 @@ impl ScenarioRecord {
             .set("memo_hits", self.memo_hits)
             .set("memo_misses", self.memo_misses)
             .set("dp_rounds", self.dp_rounds)
-            .set("greedy_rounds", self.greedy_rounds);
+            .set("greedy_rounds", self.greedy_rounds)
+            .set("find_alloc_calls", self.find_alloc_calls)
+            .set("candidates_scored", self.candidates_scored)
+            .set("rescore_conflicts", self.rescore_conflicts);
         if include_timing {
             v.insert("sched_wall_secs", self.sched_wall_secs);
             v.insert("sched_wall_per_round", self.sched_wall_per_round);
@@ -207,6 +220,15 @@ impl ScenarioRecord {
             memo_misses: v.get("memo_misses").as_u64().unwrap_or(0),
             dp_rounds: v.get("dp_rounds").as_u64().unwrap_or(0),
             greedy_rounds: v.get("greedy_rounds").as_u64().unwrap_or(0),
+            find_alloc_calls: v.get("find_alloc_calls").as_u64().unwrap_or(0),
+            candidates_scored: v
+                .get("candidates_scored")
+                .as_u64()
+                .unwrap_or(0),
+            rescore_conflicts: v
+                .get("rescore_conflicts")
+                .as_u64()
+                .unwrap_or(0),
         })
     }
 }
@@ -339,6 +361,9 @@ mod tests {
             memo_misses: 6,
             dp_rounds: 10,
             greedy_rounds: 2,
+            find_alloc_calls: 44,
+            candidates_scored: 120,
+            rescore_conflicts: 3,
         }
     }
 

@@ -58,6 +58,7 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
         "ANU",
         "preempt",
         "memo%",
+        "rescore%",
         "sched ms/round",
     ]);
     // Per-scheduler accumulators for the summary table.
@@ -102,6 +103,18 @@ pub fn render(records: &[ScenarioRecord], baseline: &str) -> String {
                 } else {
                     format!("{:.1}%",
                             r.memo_hits as f64 * 100.0 / lookups as f64)
+                }
+            },
+            // Fraction of FIND_ALLOC passes forced by speculative-commit
+            // conflicts — the cost of Hadar's sharded greedy. `-` for
+            // schedulers that never score candidates.
+            {
+                if r.find_alloc_calls == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.1}%",
+                            r.rescore_conflicts as f64 * 100.0
+                                / r.find_alloc_calls as f64)
                 }
             },
             format!("{:.3}", r.sched_wall_per_round * 1e3),
@@ -172,6 +185,9 @@ mod tests {
             memo_misses: 0,
             dp_rounds: 0,
             greedy_rounds: 0,
+            find_alloc_calls: 0,
+            candidates_scored: 0,
+            rescore_conflicts: 0,
         }
     }
 
@@ -180,9 +196,12 @@ mod tests {
         let mut with = record("hadar", 7, 100.0, 0.6);
         with.memo_hits = 3;
         with.memo_misses = 1;
+        with.find_alloc_calls = 40;
+        with.rescore_conflicts = 10;
         let without = record("gavel", 7, 200.0, 0.5);
         let out = render(&[without, with], "gavel");
         assert!(out.contains("75.0%"), "{out}");
+        assert!(out.contains("25.0%"), "rescore%: {out}");
         // The counter-less baseline renders a dash in its memo column
         // (its data row is the one with the 1.00x self-speedup).
         let gavel_line = out

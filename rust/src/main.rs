@@ -110,6 +110,11 @@ fn app() -> App {
                  "comma-separated job counts for the warm_*/shard_* \
                   streaming rows (empty = profile default: 800 quick, \
                   20000,100000 full)")
+            .opt("stream-jobs", Some(""),
+                 "comma-separated job counts for the hadar_stream_*/\
+                  hadar_shard_*/hadar_incr_* rows (empty = profile \
+                  default; the serial-reference row is skipped above \
+                  200k jobs, so e.g. 1000000 is a safe opt-in)")
             .switch("json", "write the BENCH_sched.json artifact")
             .switch("quick", "CI smoke profile: fewer cases and iterations"),
         )
@@ -350,16 +355,19 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use hadar::sched::bench;
     let quick = args.flag("quick");
-    let warm_jobs: Vec<usize> = args
-        .get_str("warm-jobs")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
-    let results = if warm_jobs.is_empty() {
-        bench::run_suite(quick)
-    } else {
-        bench::run_suite_with(quick, &warm_jobs)
+    let parse_jobs = |key: &str| -> Vec<usize> {
+        args.get_str(key)
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect()
     };
+    let warm_jobs = parse_jobs("warm-jobs");
+    let stream_jobs = parse_jobs("stream-jobs");
+    let results = bench::run_suite_with(
+        quick,
+        if warm_jobs.is_empty() { None } else { Some(&warm_jobs) },
+        if stream_jobs.is_empty() { None } else { Some(&stream_jobs) },
+    );
     print!("{}", bench::render(&results));
     if args.flag("json") {
         let out = args.get_str("out");

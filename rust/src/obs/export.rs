@@ -88,7 +88,10 @@ impl RoundTelemetry {
                     .set("memo_misses", s.memo_misses)
                     .set("dp_rounds", s.dp_rounds)
                     .set("greedy_rounds", s.greedy_rounds)
-                    .set("rounds_with_change", s.rounds_with_change),
+                    .set("rounds_with_change", s.rounds_with_change)
+                    .set("find_alloc_calls", s.find_alloc_calls)
+                    .set("candidates_scored", s.candidates_scored)
+                    .set("rescore_conflicts", s.rescore_conflicts),
             );
         }
         if include_timing {
@@ -248,6 +251,9 @@ mod tests {
                 dp_rounds: 1,
                 greedy_rounds: 0,
                 rounds_with_change: 1,
+                find_alloc_calls: 30,
+                candidates_scored: 90,
+                rescore_conflicts: 2,
             }),
             sched_wall_secs: 0.001,
         }

@@ -277,6 +277,19 @@ pub struct CoreMetrics {
     pub dp_rounds: Counter,
     /// Rounds solved by the payoff-density greedy.
     pub greedy_rounds: Counter,
+    /// Hadar `FIND_ALLOC` invocations (speculative scores and
+    /// commit-time rescores both count; infeasible avail-bails too).
+    pub hadar_find_alloc_calls: Counter,
+    /// Candidate allocations scored across all Hadar `FIND_ALLOC` calls
+    /// (packed + pure-spread + mixed-spread).
+    pub hadar_candidates_scored: Counter,
+    /// Speculatively scored jobs whose winning candidate touched a GPU
+    /// type dirtied by an earlier commit and were rescored serially.
+    pub hadar_rescore_conflicts: Counter,
+    /// Hadar none-row cache hits: pending jobs skipped because a prior
+    /// `FIND_ALLOC` under the same round signature proved no positive-
+    /// payoff candidate exists.
+    pub hadar_none_row_hits: Counter,
     /// HadarE gang-planner rounds.
     pub hadare_plan_rounds: Counter,
     /// HadarE warm-start gang rows computed (row-cache misses).
@@ -316,6 +329,12 @@ pub fn core() -> &'static CoreMetrics {
             dp_memo_misses: r.counter("hadar.dp_memo_misses"),
             dp_rounds: r.counter("hadar.dp_rounds"),
             greedy_rounds: r.counter("hadar.greedy_rounds"),
+            hadar_find_alloc_calls: r.counter("hadar.find_alloc_calls"),
+            hadar_candidates_scored: r
+                .counter("hadar.candidates_scored"),
+            hadar_rescore_conflicts: r
+                .counter("hadar.rescore_conflicts"),
+            hadar_none_row_hits: r.counter("hadar.none_row_hits"),
             hadare_plan_rounds: r.counter("hadare.plan_rounds"),
             hadare_warm_rows_computed: r
                 .counter("hadare.warm_rows_computed"),

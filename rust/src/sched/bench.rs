@@ -31,6 +31,28 @@
 //!   guarantee), while the speedup is machine-dependent and therefore
 //!   never gates against the baseline.
 //!
+//! …and the **Hadar streaming family** on the same preset — the
+//! task-level solver's counterpart to the rows above, measuring the
+//! speculative-parallel-scoring greedy of [`crate::sched::hadar`]:
+//!
+//! * `hadar_stream_*`: one greedy round, the frozen serial
+//!   [`RefHadar`] vs the index-accelerated speculative solver — plans
+//!   must be identical (`plans-equal`, so the row gates; ≥2x at 100k
+//!   jobs is the acceptance floor);
+//! * `hadar_shard_*`: the same round at `plan_threads` 1 vs the
+//!   resolved multi-worker count — `plans-equal-parallel`, bit-identical
+//!   plans required but the thread speedup never gates;
+//! * `hadar_incr_*`: a steady-state round 1 — cold full replanning by a
+//!   fresh non-incremental solver vs the incremental solver carrying
+//!   round 0's allocations over (with the full-cluster dispatch skip) —
+//!   `plans-carried`: the carried plan must equal round 0's plan
+//!   bit-for-bit, and the cold-vs-incremental speedup gates.
+//!
+//! The serial reference is skipped above 200k jobs (its comparator
+//! sorts dominate and tell us nothing new), so a 1M-job `--stream-jobs`
+//! run emits only the `hadar_shard_*`/`hadar_incr_*` rows and stays
+//! minutes-scale.
+//!
 //! Shared by the `hadar bench` CLI subcommand (which emits
 //! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
 //! `docs/performance.md`) and `benches/l3_sched_micro.rs`. Every
@@ -72,15 +94,19 @@ pub struct CaseResult {
     pub speedup: f64,
     /// Which correctness invariant [`CaseResult::plans_equal`] reports:
     /// `"plans-equal"` (identical [`RoundPlan`]s from both solvers, the
-    /// `dp`/`greedy`/`fork`/`warm` rows — the only label the baseline
-    /// gate acts on), `"occupancy"` (the partial-node invariant — every
-    /// GPU booked, at least one node shared by two parents — on
-    /// `fork-shared` rows, where whole-node and per-pool plans
-    /// intentionally differ), or `"plans-equal-parallel"` (`shard` rows:
+    /// `dp`/`greedy`/`fork`/`warm`/`hadar-stream` rows),
+    /// `"plans-carried"` (`hadar-incr` rows: the incremental round-1
+    /// plan equals round 0's plan bit-for-bit), `"occupancy"` (the
+    /// partial-node invariant — every GPU booked, at least one node
+    /// shared by two parents — on `fork-shared` rows, where whole-node
+    /// and per-pool plans intentionally differ), or
+    /// `"plans-equal-parallel"` (`shard`/`hadar-shard` rows:
     /// bit-identical plans at 1 vs N workers; the invariant still fails
     /// the CLI on divergence, but the speedup is machine-dependent so
-    /// the row never gates against the committed baseline). Keeps
-    /// `BENCH_sched.json` self-describing for artifact-diffing tools.
+    /// the row never gates against the committed baseline). The
+    /// baseline gate acts on `plans-equal` and `plans-carried` rows
+    /// only. Keeps `BENCH_sched.json` self-describing for
+    /// artifact-diffing tools.
     pub check: &'static str,
     /// Whether the row's invariant (see [`CaseResult::check`]) held.
     pub plans_equal: bool,
@@ -362,20 +388,154 @@ fn run_stream_cases(iters: usize, n_jobs: usize,
     });
 }
 
+/// Above this queue size the `hadar_stream_*` serial-reference row is
+/// skipped: `RefHadar`'s per-comparison `t_min` sorts dominate its wall
+/// time there, so the ratio stops measuring the solver. The optimised
+/// rows (`hadar_shard_*`, `hadar_incr_*`) still run — that is what
+/// keeps a 1M-job `--stream-jobs` invocation minutes-scale.
+const HADAR_REF_JOB_CAP: usize = 200_000;
+
+/// The `hadar_stream_*`/`hadar_shard_*`/`hadar_incr_*` rows at one job
+/// count (module docs): the task-level solver on one `scaled:64x8`
+/// greedy round against (a) the frozen serial [`RefHadar`], (b) itself
+/// at 1 worker, and (c) cold full replanning of a steady-state round
+/// that incremental mode carries over entirely.
+fn run_hadar_stream_cases(iters: usize, n_jobs: usize,
+                          out: &mut Vec<CaseResult>) {
+    use crate::sched::hadar::HadarConfig;
+    use crate::sched::hadare::resolve_plan_threads;
+    let cluster = scaled_cluster();
+    let queue = case_queue(&cluster, n_jobs);
+    let active = queue.active_at(0.0);
+    let slot = 360.0;
+    let ctx0 = RoundCtx {
+        round: 0,
+        now: 0.0,
+        slot_secs: slot,
+        horizon: 1e7,
+        queue: &queue,
+        active: &active,
+        cluster: &cluster,
+    };
+
+    // hadar_stream row: frozen serial reference vs the speculative
+    // solver on the identical round-0 decision.
+    if n_jobs <= HADAR_REF_JOB_CAP {
+        let (ref_ms, ref_plan) =
+            time_decision(iters, || Box::new(RefHadar::new()), &ctx0);
+        let (opt_ms, opt_plan) =
+            time_decision(iters, || Box::new(Hadar::new()), &ctx0);
+        out.push(CaseResult {
+            name: format!("hadar_stream_{}_{n_jobs}jobs", cluster.name),
+            path: "hadar-stream",
+            cluster: cluster.name.clone(),
+            jobs: n_jobs,
+            ref_ms,
+            opt_ms,
+            speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+            check: "plans-equal",
+            plans_equal: ref_plan.allocations == opt_plan.allocations,
+        });
+    }
+
+    // hadar_shard row: the same decision at 1 worker vs the resolved
+    // multi-worker count — the determinism guarantee under load.
+    let (s_ms, s_plan) = time_decision(
+        iters,
+        || {
+            Box::new(Hadar::with_config(HadarConfig {
+                plan_threads: 1,
+                ..Default::default()
+            }))
+        },
+        &ctx0,
+    );
+    let threads = resolve_plan_threads(0).max(2);
+    let (m_ms, m_plan) = time_decision(
+        iters,
+        || {
+            Box::new(Hadar::with_config(HadarConfig {
+                plan_threads: threads,
+                ..Default::default()
+            }))
+        },
+        &ctx0,
+    );
+    out.push(CaseResult {
+        name: format!("hadar_shard_{}_{n_jobs}jobs", cluster.name),
+        path: "hadar-shard",
+        cluster: cluster.name.clone(),
+        jobs: n_jobs,
+        ref_ms: s_ms,
+        opt_ms: m_ms,
+        speedup: if m_ms > 0.0 { s_ms / m_ms } else { 0.0 },
+        check: "plans-equal-parallel",
+        plans_equal: s_plan.allocations == m_plan.allocations,
+    });
+
+    // hadar_incr row: steady-state round 1. The incremental solver
+    // carries round 0's allocations over (full-state dispatch skip);
+    // the reference is a fresh non-incremental solver replanning the
+    // whole queue at the same round-1 context. The invariant is that
+    // the carried plan IS round 0's plan, bit for bit.
+    let mut incr = Hadar::with_config(HadarConfig {
+        incremental: true,
+        ..Default::default()
+    });
+    let p0 = incr.schedule(&ctx0);
+    let ctx1 = RoundCtx {
+        round: 1,
+        now: slot,
+        slot_secs: slot,
+        horizon: 1e7,
+        queue: &queue,
+        active: &active,
+        cluster: &cluster,
+    };
+    let (cold_ms, _) = time_decision(iters, || Box::new(Hadar::new()), &ctx1);
+    let mut incr_ms = f64::INFINITY;
+    let mut incr_plan = RoundPlan::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        incr_plan = incr.schedule(&ctx1);
+        incr_ms = incr_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out.push(CaseResult {
+        name: format!("hadar_incr_{}_{n_jobs}jobs", cluster.name),
+        path: "hadar-incr",
+        cluster: cluster.name.clone(),
+        jobs: n_jobs,
+        ref_ms: cold_ms,
+        opt_ms: incr_ms,
+        speedup: if incr_ms > 0.0 { cold_ms / incr_ms } else { 0.0 },
+        check: "plans-carried",
+        plans_equal: !p0.allocations.is_empty()
+            && incr_plan.allocations == p0.allocations,
+    });
+}
+
 /// Run the full comparison suite with the profile's default
 /// streaming-scale job counts: one small point (800 jobs) in `quick`
 /// mode — the in-tree unit test runs this in debug builds — and
 /// 20k/100k in the full profile. CI's bench smoke overrides the sizes
-/// to the 100k acceptance point via `hadar bench --warm-jobs`.
+/// to the 100k acceptance point via `hadar bench --warm-jobs` /
+/// `--stream-jobs`.
 pub fn run_suite(quick: bool) -> Vec<CaseResult> {
-    let stream: &[usize] = if quick { &[800] } else { &[20_000, 100_000] };
-    run_suite_with(quick, stream)
+    run_suite_with(quick, None, None)
 }
 
-/// [`run_suite`] with explicit streaming-scale job counts for the
-/// `warm_*`/`shard_*` rows (`&[]` skips them).
-pub fn run_suite_with(quick: bool, stream_jobs: &[usize])
+/// [`run_suite`] with explicit streaming-scale job counts:
+/// `hadare_stream_jobs` drives the `warm_*`/`shard_*` rows and
+/// `hadar_stream_jobs` the `hadar_stream_*`/`hadar_shard_*`/
+/// `hadar_incr_*` rows. `None` means the profile default (800 quick,
+/// 20k/100k full); `Some(&[])` skips that family.
+pub fn run_suite_with(quick: bool, hadare_stream_jobs: Option<&[usize]>,
+                      hadar_stream_jobs: Option<&[usize]>)
                       -> Vec<CaseResult> {
+    let default_stream: &[usize] =
+        if quick { &[800] } else { &[20_000, 100_000] };
+    let hadare_jobs = hadare_stream_jobs.unwrap_or(default_stream);
+    let hadar_jobs = hadar_stream_jobs.unwrap_or(default_stream);
     let iters = if quick { 3 } else { 7 };
     let mut out = Vec::new();
     for (path, cluster, n_jobs) in case_grid(quick) {
@@ -486,8 +646,15 @@ pub fn run_suite_with(quick: bool, stream_jobs: &[usize])
     // mode — at 100k jobs even the cold reference plan is the dominant
     // cost, and the row invariants (plan equality) are per-iteration.
     let stream_iters = if quick { 1 } else { 2 };
-    for &n_jobs in stream_jobs {
+    for &n_jobs in hadare_jobs {
         run_stream_cases(stream_iters, n_jobs, &mut out);
+    }
+
+    // Hadar streaming family: the task-level solver's serial-vs-
+    // speculative, 1-vs-N-worker, and cold-vs-incremental rows on the
+    // same preset.
+    for &n_jobs in hadar_jobs {
+        run_hadar_stream_cases(stream_iters, n_jobs, &mut out);
     }
     out
 }
@@ -553,20 +720,29 @@ pub struct BaselineDiff {
     pub regressed: bool,
 }
 
+/// Whether rows with this check label gate against the committed
+/// baseline. `plans-equal` and `plans-carried` compare a reference and
+/// an optimised run of the *same* decision, so their ratio is a real
+/// regression signal; `occupancy` rows compare two different planners
+/// and `plans-equal-parallel` rows measure machine-dependent thread
+/// scaling, so neither gates.
+fn check_gates(check: &str) -> bool {
+    check == "plans-equal" || check == "plans-carried"
+}
+
 /// Diff the current suite against a committed `BENCH_sched.json`-shaped
-/// baseline document. Only rows whose `check` is `"plans-equal"` gate —
-/// `occupancy` rows compare two *different* planners, so their ratio is
-/// a characterisation, not a regression signal. Cases present on only
-/// one side are skipped (grid drift is handled by refreshing the
-/// baseline, not by failing CI). `tolerance` is the allowed fractional
-/// drop, e.g. `0.20` fails anything slower than 80% of baseline.
+/// baseline document. Only rows whose `check` label gates
+/// (`plans-equal` and `plans-carried`) participate. Cases present on only one side are
+/// skipped (grid drift is handled by refreshing the baseline, not by
+/// failing CI). `tolerance` is the allowed fractional drop, e.g. `0.20`
+/// fails anything slower than 80% of baseline.
 pub fn compare_to_baseline(results: &[CaseResult], baseline: &Json,
                            tolerance: f64) -> Vec<BaselineDiff> {
     let mut base: std::collections::BTreeMap<&str, f64> =
         std::collections::BTreeMap::new();
     if let Some(cases) = baseline.get("cases").as_arr() {
         for c in cases {
-            if c.get("check").as_str() != Some("plans-equal") {
+            if !c.get("check").as_str().map_or(false, check_gates) {
                 continue;
             }
             if let (Some(name), Some(speedup)) =
@@ -578,7 +754,7 @@ pub fn compare_to_baseline(results: &[CaseResult], baseline: &Json,
     }
     let mut out = Vec::new();
     for r in results {
-        if r.check != "plans-equal" {
+        if !check_gates(r.check) {
             continue;
         }
         let Some(&base_speedup) = base.get(r.name.as_str()) else {
@@ -633,10 +809,17 @@ mod tests {
                 "warm-start streaming row present");
         assert!(results.iter().any(|r| r.path == "shard"),
                 "sharded streaming row present");
+        assert!(results.iter().any(|r| r.path == "hadar-stream"),
+                "hadar serial-vs-speculative row present");
+        assert!(results.iter().any(|r| r.path == "hadar-shard"),
+                "hadar 1-vs-N-worker row present");
+        assert!(results.iter().any(|r| r.path == "hadar-incr"),
+                "hadar cold-vs-incremental row present");
         for r in &results {
             let want = match r.path {
                 "fork-shared" => "occupancy",
-                "shard" => "plans-equal-parallel",
+                "shard" | "hadar-shard" => "plans-equal-parallel",
+                "hadar-incr" => "plans-carried",
                 _ => "plans-equal",
             };
             assert_eq!(r.check, want, "{}: check label", r.name);
@@ -697,6 +880,10 @@ mod tests {
                 case("dp_sim60_8jobs", "plans-equal", 4.0),
                 case("greedy_sim60_100jobs", "plans-equal", 2.0),
                 case("fork_shared_big20x4_16jobs", "occupancy", 3.0),
+                case("hadar_incr_scaled64x8_100000jobs", "plans-carried",
+                     2.0),
+                case("hadar_shard_scaled64x8_100000jobs",
+                     "plans-equal-parallel", 3.0),
             ],
             true,
         );
@@ -709,11 +896,17 @@ mod tests {
             case("fork_shared_big20x4_16jobs", "occupancy", 0.1),
             // unknown-to-baseline cases are skipped.
             case("dp_new_case_12jobs", "plans-equal", 0.1),
+            // plans-carried rows gate like plans-equal rows.
+            case("hadar_incr_scaled64x8_100000jobs", "plans-carried", 1.0),
+            // thread-scaling rows never gate.
+            case("hadar_shard_scaled64x8_100000jobs",
+                 "plans-equal-parallel", 0.1),
         ];
         let diffs = compare_to_baseline(&current, &baseline, 0.20);
-        assert_eq!(diffs.len(), 2);
+        assert_eq!(diffs.len(), 3);
         assert!(!diffs[0].regressed, "{:?}", diffs[0]);
         assert!(diffs[1].regressed, "{:?}", diffs[1]);
+        assert!(diffs[2].regressed, "incr row gates: {:?}", diffs[2]);
         let table = render_baseline(&diffs);
         assert!(table.contains("REGRESSED"), "{table}");
         assert!(table.contains("ok"), "{table}");

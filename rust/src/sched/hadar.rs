@@ -35,6 +35,25 @@
 //! (`rust/tests/prop_equivalence.rs`) pins this implementation to it
 //! plan-for-plan, and `benches/l3_sched_micro.rs` + `hadar bench` measure
 //! the gap.
+//!
+//! §Streaming scale: the greedy path runs as **speculative parallel
+//! scoring with a deterministic serial commit**. Candidate generation
+//! (`FIND_ALLOC`) is a pure function of the job and an immutable state
+//! snapshot, so batches of pending jobs are scored concurrently across
+//! `HADAR_PLAN_THREADS` workers ([`HadarConfig::plan_threads`]), then
+//! committed one by one in density order; a job is rescored only when an
+//! earlier commit in its batch dirtied a GPU type it can use
+//! (conflict-set invalidation at type granularity — `FIND_ALLOC`'s
+//! entire cluster read set is the pools of the job's usable types). The
+//! packed scan walks [`ClusterState::packed_candidates`] instead of
+//! every node, a Σ-free bail rejects infeasible jobs in O(types), and
+//! cross-round **no-candidate rows** (the Hadar-side mirror of HadarE's
+//! warm-start rows, invalidated by per-type digests + a round
+//! signature) let steady-state rounds skip rescoring jobs that had no
+//! positive-payoff candidate last round. Batch sizing depends only on
+//! commit outcomes, never on the worker count, so plans *and* counters
+//! are bit-identical at any `plan_threads` (pinned by
+//! `rust/tests/prop_equivalence.rs`).
 
 use crate::cluster::gpu::GpuType;
 use crate::cluster::state::ClusterState;
@@ -66,6 +85,13 @@ pub struct HadarConfig {
     /// running at (say) <10% efficiency wastes every worker in it
     /// (Eq. 1b), so waiting a round beats taking the placement.
     pub min_efficiency: f64,
+    /// Speculative-scoring worker count for the greedy path. `0` defers
+    /// to the `HADAR_PLAN_THREADS` environment variable (the same knob
+    /// the HadarE planner shards on), then to
+    /// `min(4, available_parallelism)` — resolved once at construction
+    /// ([`crate::sched::hadare::resolve_plan_threads`]). Plans are
+    /// bit-identical at any value.
+    pub plan_threads: usize,
 }
 
 impl Default for HadarConfig {
@@ -77,13 +103,14 @@ impl Default for HadarConfig {
             dp_memo_cap: 50_000,
             incremental: false,
             min_efficiency: 0.0,
+            plan_threads: 0,
         }
     }
 }
 
 /// Decision statistics (scalability + the "~30% of rounds change
 /// allocations" observation).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct HadarStats {
     /// Scheduling rounds served.
     pub rounds: u64,
@@ -97,11 +124,143 @@ pub struct HadarStats {
     pub memo_hits: u64,
     /// DP memo misses.
     pub memo_misses: u64,
+    /// `FIND_ALLOC` scoring passes: DP-path calls, speculative batch
+    /// scores, Σ-free feasibility bails, and commit-time rescores.
+    pub find_alloc_calls: u64,
+    /// Candidate allocations payoff-scored across all passes (packed +
+    /// pure-spread + mixed-spread).
+    pub candidates_scored: u64,
+    /// Batched jobs whose speculative score (or cached no-candidate row)
+    /// was invalidated by an earlier commit dirtying one of their GPU
+    /// types, forcing a serial rescore.
+    pub rescore_conflicts: u64,
+    /// Greedy decisions served from a still-valid cross-round
+    /// no-candidate row instead of a scoring pass.
+    pub none_row_hits: u64,
 }
 
 /// One DP memo value: GPUs utilised and payoff from this subproblem on,
 /// plus whether the select branch won (enough to replay the plan).
 type DpEntry = (usize, f64, bool);
+
+/// Speculative batch policy: the starting batch size, the growth cap,
+/// and the batch size below which scoring stays on the calling thread
+/// (spawn/join overhead would dominate). All three are outcome-driven —
+/// a pure function of commit results, never of the worker count — so
+/// plans and counters are identical at any [`HadarConfig::plan_threads`].
+const SPEC_BATCH_MIN: usize = 32;
+/// Upper bound the conflict-free batch size doubles toward.
+const SPEC_BATCH_MAX: usize = 4096;
+/// Minimum jobs-to-score before `score_batch` spawns workers.
+const SPEC_SPAWN_MIN: usize = 16;
+
+/// Result of scoring one job's candidates ([`Hadar::score_alloc`]).
+#[derive(Debug, Default)]
+struct ScoreOutcome {
+    /// Payoff-maximal feasible candidate with `μ_j > 0`, if any.
+    best: Option<(JobAllocation, f64)>,
+    /// Whether `W_j` GPUs could be assembled at all. `false` means the
+    /// Σ-free bail fired — a `None` that needs no cross-round row, since
+    /// re-deriving it costs O(types).
+    assembled: bool,
+    /// Candidates payoff-scored (the `hadar.candidates_scored` counter).
+    candidates: u64,
+}
+
+/// Cross-round "FIND_ALLOC found no positive-payoff candidate" row —
+/// the Hadar-side mirror of HadarE's warm-start row cache. A row is
+/// reusable only when every input the scoring pass read is provably
+/// unchanged (digest + signature match) and `now` has only advanced:
+/// with fixed pools, prices, progress, and a non-negative weight, every
+/// candidate's payoff is non-increasing in `now` (estimated completion
+/// grows, utility shrinks, costs are fixed), so "no candidate with
+/// `μ_j > 0`" stays true.
+struct NoneRow {
+    /// [`ClusterState::digest_of_types`] over the job's usable types at
+    /// scoring time — the scoring pass's entire per-round cluster read
+    /// set.
+    type_digest: u64,
+    /// [`round_signature`] at scoring time (capacity matrix + price
+    /// bounds): node churn or a dual-price move invalidates every row.
+    round_sig: u64,
+    /// `job.progress` bits at scoring time (progress changes the
+    /// remaining work and thereby every payoff).
+    progress_bits: u64,
+    /// `job.weight` bits at scoring time. Recording requires
+    /// `weight >= 0.0` (NaN fails that) — the payoff-monotonicity
+    /// argument above needs a non-negative weight.
+    weight_bits: u64,
+    /// Virtual time of the scoring pass; reuse requires `now >= this`.
+    now: f64,
+}
+
+/// Formation-time classification of one batched pending job.
+enum Spec {
+    /// Σ free over the job's usable types < `W_j`: nothing can assemble,
+    /// and free counts only shrink within a round, so no earlier commit
+    /// needs re-checking — the decision is `None`, permanently.
+    Infeasible,
+    /// A still-valid [`NoneRow`] short-circuits the scoring pass.
+    RowNone,
+    /// Speculatively scored; the payload indexes the batch outcome
+    /// table.
+    Scored(u32),
+}
+
+/// Bitmask over GPU-type indices — the conflict-set representation. Two
+/// jobs conflict exactly when their usable-type masks intersect, because
+/// a scoring pass reads nothing outside its job's type pools.
+#[inline]
+fn type_mask(types: &[GpuType]) -> u32 {
+    types.iter().fold(0u32, |m, &g| m | (1u32 << g as usize))
+}
+
+/// FNV-1a signature of everything a scoring pass reads besides per-type
+/// allocation counts: the capacity matrix and the dual price bounds.
+/// Folded into every [`NoneRow`] so rows are churn- and price-safe.
+fn round_signature(state: &ClusterState, bounds: &PriceBounds) -> u64 {
+    const P: u64 = 0x0000_0100_0000_01B3;
+    let mut h = (0xCBF2_9CE4_8422_2325u64 ^ state.capacity_digest())
+        .wrapping_mul(P);
+    for (&g, &v) in &bounds.u_max {
+        h = (h ^ g as u64).wrapping_mul(P);
+        h = (h ^ v.to_bits()).wrapping_mul(P);
+    }
+    for (&g, &v) in &bounds.u_min {
+        h = (h ^ g as u64).wrapping_mul(P);
+        h = (h ^ v.to_bits()).wrapping_mul(P);
+    }
+    h
+}
+
+/// Score a batch of `(job, type-order)` pairs against one immutable
+/// state snapshot, sharded over contiguous chunks of scoped workers
+/// (the PR-7 `fill_matrix` recipe). Every outcome is a pure function of
+/// its own pair, so the result is bit-identical to the serial loop at
+/// any worker count; small batches stay serial ([`SPEC_SPAWN_MIN`]).
+fn score_batch(cfg: &HadarConfig, items: &[(&Job, &[GpuType])],
+               state: &ClusterState, prices: &PriceTable, now: f64,
+               threads: usize) -> Vec<ScoreOutcome> {
+    let mut out: Vec<ScoreOutcome> = Vec::new();
+    out.resize_with(items.len(), ScoreOutcome::default);
+    let score = |chunk: &[(&Job, &[GpuType])], res: &mut [ScoreOutcome]| {
+        for (&(job, types), slot) in chunk.iter().zip(res.iter_mut()) {
+            *slot = Hadar::score_alloc(cfg, job, types, state, prices, now);
+        }
+    };
+    if threads <= 1 || items.len() < SPEC_SPAWN_MIN {
+        score(items, &mut out);
+        return out;
+    }
+    let per = (items.len() + threads - 1) / threads;
+    let score = &score;
+    std::thread::scope(|scope| {
+        for (chunk, res) in items.chunks(per).zip(out.chunks_mut(per)) {
+            scope.spawn(move || score(chunk, res));
+        }
+    });
+    out
+}
 
 /// The Hadar scheduler (Algorithms 1 and 2; see module docs).
 pub struct Hadar {
@@ -110,6 +269,12 @@ pub struct Hadar {
     /// FIND_ALLOC line 23: GPU types sorted by `X_j^r` once per job.
     type_order: BTreeMap<JobId, Vec<GpuType>>,
     prev_plan: RoundPlan,
+    /// Cross-round no-candidate rows (greedy path), keyed by job and
+    /// invalidated by signature — see [`NoneRow`].
+    none_rows: HashMap<JobId, NoneRow>,
+    /// Speculative-scoring worker count, resolved once at construction
+    /// from [`HadarConfig::plan_threads`] / `HADAR_PLAN_THREADS`.
+    threads: usize,
     /// Decision statistics, updated every round.
     pub stats: HadarStats,
 }
@@ -129,9 +294,13 @@ impl Hadar {
     /// Hadar with explicit tunables (the ablation benches use this).
     pub fn with_config(cfg: HadarConfig) -> Self {
         Hadar {
+            threads: crate::sched::hadare::resolve_plan_threads(
+                cfg.plan_threads,
+            ),
             cfg,
             type_order: BTreeMap::new(),
             prev_plan: RoundPlan::new(),
+            none_rows: HashMap::new(),
             stats: HadarStats::default(),
         }
     }
@@ -206,21 +375,58 @@ impl Hadar {
 
     /// Algorithm 2's FIND_ALLOC: best feasible allocation of `W_j` GPUs
     /// given current prices/state, or None if no candidate has `μ_j > 0`.
+    /// A thin counting wrapper over [`Hadar::score_alloc`] — the DP path
+    /// calls this; the greedy path drives `score_alloc` directly so
+    /// speculative workers can score without `&mut self`.
     fn find_alloc(&mut self, job: &Job, state: &ClusterState,
                   prices: &PriceTable, now: f64)
                   -> Option<(JobAllocation, f64)> {
         let _span = obs::trace::span("hadar.find_alloc");
         let cfg = self.cfg;
-        let w = job.gpus_requested.max(1);
         let types = Self::cached_type_order(&mut self.type_order, job);
+        let o = Self::score_alloc(&cfg, job, types, state, prices, now);
+        self.stats.find_alloc_calls += 1;
+        self.stats.candidates_scored += o.candidates;
+        o.best
+    }
+
+    /// Candidate generation as a pure read-only function of
+    /// `(job, state, prices, now)` — exactly the historical `find_alloc`
+    /// body, restructured for speculation:
+    ///
+    /// * a Σ-free **feasibility bail** rejects jobs whose usable types
+    ///   cannot supply `W_j` GPUs in O(types), before any scan;
+    /// * the **packed scan** walks
+    ///   [`ClusterState::packed_candidates`] — the nodes that can still
+    ///   contribute, in ascending id order (the historical visiting
+    ///   order, so payoff ties break identically) — instead of every
+    ///   node;
+    /// * its cluster read set is exactly the pools of the job's usable
+    ///   types, which is what makes type-granularity conflict sets sound.
+    fn score_alloc(cfg: &HadarConfig, job: &Job, types: &[GpuType],
+                   state: &ClusterState, prices: &PriceTable, now: f64)
+                   -> ScoreOutcome {
+        let w = job.gpus_requested.max(1);
         if types.is_empty() {
-            return None;
+            return ScoreOutcome::default();
         }
+        // Every candidate draws all W_j workers from the job's usable
+        // types, so Σ_g free(g) < W_j means nothing can assemble.
+        let avail: usize =
+            types.iter().map(|&g| state.free_of_type(g)).sum();
+        if avail < w {
+            return ScoreOutcome::default();
+        }
+        // From here on the mixed-type spread always assembles (it drains
+        // every free slot of every usable type until `need` hits 0), so
+        // `assembled` is true even when no candidate's payoff clears 0.
+        let mut candidates = 0u64;
         let mut best: Option<(JobAllocation, f64)> = None;
         let mut consider = |alloc: JobAllocation, cost: f64, comm: f64| {
             if alloc.total_gpus() != w {
                 return;
             }
+            candidates += 1;
             let p = Self::payoff(job, &alloc, cost, comm, now,
                                  cfg.min_efficiency);
             if p > 0.0 && best.as_ref().map_or(true, |(_, bp)| p > *bp) {
@@ -229,8 +435,11 @@ impl Hadar {
         };
 
         // --- packed candidates: all W_j workers on a single node, fastest
-        // types first (Algorithm 2 line 24).
-        for node in 0..state.n_nodes() {
+        // types first (Algorithm 2 line 24). Only nodes with free GPUs of
+        // the job's types can assemble, and the index hands exactly those
+        // out in ascending id order.
+        for &node in &state.packed_candidates(types, w) {
+            let node = node as usize;
             let mut alloc = JobAllocation::new();
             let mut cost = 0.0;
             let mut need = w;
@@ -271,7 +480,7 @@ impl Hadar {
                 need -= take;
             }
             let nodes_used = alloc.nodes().len();
-            let comm = Self::comm_cost(&cfg, job, nodes_used);
+            let comm = Self::comm_cost(cfg, job, nodes_used);
             consider(alloc, cost, comm);
         }
 
@@ -298,12 +507,12 @@ impl Hadar {
             }
             if need == 0 {
                 let nodes_used = alloc.nodes().len();
-                let comm = Self::comm_cost(&cfg, job, nodes_used);
+                let comm = Self::comm_cost(cfg, job, nodes_used);
                 consider(alloc, cost, comm);
             }
         }
 
-        best
+        ScoreOutcome { best, assembled: true, candidates }
     }
 
     /// Non-consolidated communication cost (Algorithm 2 line 27): a
@@ -398,46 +607,178 @@ impl Hadar {
         plan
     }
 
-    /// Large-queue path: payoff-density greedy (utility per requested GPU,
-    /// recomputed against live prices), O(n log n + n·H·R).
+    /// Large-queue path: payoff-density greedy, run as speculative
+    /// parallel scoring with a deterministic serial commit (module docs,
+    /// §Streaming scale). The plan is identical to the frozen serial
+    /// loop (`RefHadar`): batches are formed, committed, and grown by
+    /// rules that never consult the worker count, and a speculative
+    /// score is only trusted when no earlier commit touched the job's
+    /// usable types — otherwise it is rescored against the live state,
+    /// exactly as the serial loop would have scored it.
     fn greedy(&mut self, jobs: &[&Job], state: &mut ClusterState,
-              prices: &PriceTable, now: f64)
+              prices: &PriceTable, now: f64, round_sig: u64)
               -> Vec<(JobId, JobAllocation)> {
         let _span = obs::trace::span("hadar.greedy");
-        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        // Pass 0: cache every job's type order, so the batch loop below
+        // holds one shared borrow of the cache while the stats and the
+        // no-candidate rows stay mutable (disjoint fields).
+        for job in jobs {
+            Self::cached_type_order(&mut self.type_order, job);
+        }
+        let cfg = self.cfg;
+        let threads = self.threads;
+        let type_order = &self.type_order;
+        let stats = &mut self.stats;
+        let none_rows = &mut self.none_rows;
+
+        // Decorate-sort by payoff density. The key is a per-job constant,
+        // so sorting precomputed keys with the same stable sort +
+        // total_cmp reproduces the historical comparator order exactly —
+        // including NaN densities sorting first (harmless: payoff()
+        // rejects NaN payoffs, `p > 0.0` is false, the job never places).
+        let dens: Vec<f64> = jobs
+            .iter()
+            .map(|j| {
+                j.utility(j.t_min()) / j.gpus_requested.max(1) as f64
+            })
+            .collect();
+        let mut order: Vec<u32> = (0..jobs.len() as u32).collect();
         order.sort_by(|&a, &b| {
-            let da = jobs[a].utility(jobs[a].t_min())
-                / jobs[a].gpus_requested.max(1) as f64;
-            let db = jobs[b].utility(jobs[b].t_min())
-                / jobs[b].gpus_requested.max(1) as f64;
-            // total_cmp: a NaN density (e.g. a NaN job weight) must not
-            // panic the round. Note total_cmp orders positive NaN above
-            // +inf, so a NaN-density job sorts *first* here — harmless,
-            // because payoff() rejects NaN payoffs (p > 0.0 is false) and
-            // the job simply fails to place.
-            db.total_cmp(&da)
+            dens[b as usize].total_cmp(&dens[a as usize])
         });
+
         let mut out = Vec::new();
-        for i in order {
-            if state.is_full() {
-                break;
-            }
-            if let Some((alloc, _)) =
-                self.find_alloc(jobs[i], state, prices, now)
-            {
-                for a in alloc.assignments(jobs[i].id) {
-                    state.allocate(a);
+        let mut k = SPEC_BATCH_MIN;
+        let mut pos = 0usize;
+        'stream: while pos < order.len() && !state.is_full() {
+            let batch = &order[pos..(pos + k).min(order.len())];
+            pos += batch.len();
+
+            // Formation: classify each batched job against the current
+            // state — bail, row hit, or speculative score.
+            let mut specs: Vec<Spec> = Vec::with_capacity(batch.len());
+            let mut to_score: Vec<(&Job, &[GpuType])> = Vec::new();
+            for &ji in batch {
+                let job = jobs[ji as usize];
+                let types = type_order
+                    .get(&job.id)
+                    .expect("type order cached in pass 0")
+                    .as_slice();
+                let w = job.gpus_requested.max(1);
+                let avail: usize =
+                    types.iter().map(|&g| state.free_of_type(g)).sum();
+                if avail < w {
+                    stats.find_alloc_calls += 1;
+                    specs.push(Spec::Infeasible);
+                    continue;
                 }
-                out.push((jobs[i].id, alloc));
+                let row_valid = none_rows.get(&job.id).map_or(false, |r| {
+                    r.round_sig == round_sig
+                        && r.progress_bits == job.progress.to_bits()
+                        && r.weight_bits == job.weight.to_bits()
+                        && now >= r.now
+                        && r.type_digest == state.digest_of_types(types)
+                });
+                if row_valid {
+                    specs.push(Spec::RowNone);
+                } else {
+                    specs.push(Spec::Scored(to_score.len() as u32));
+                    to_score.push((job, types));
+                }
             }
+            let mut outcomes =
+                score_batch(&cfg, &to_score, state, prices, now, threads);
+            stats.find_alloc_calls += to_score.len() as u64;
+
+            // Serial commit walk in density order. `dirty` accumulates
+            // the GPU types touched by commits in this batch; a job
+            // whose mask misses it is provably unaffected.
+            let mut dirty = 0u32;
+            let mut conflicted = false;
+            for (&ji, spec) in batch.iter().zip(&specs) {
+                if state.is_full() {
+                    break 'stream; // the serial loop's is_full() break
+                }
+                let job = jobs[ji as usize];
+                let types = type_order
+                    .get(&job.id)
+                    .expect("type order cached in pass 0")
+                    .as_slice();
+                let jmask = type_mask(types);
+                let o = match spec {
+                    // Infeasibility is monotone within a round (free
+                    // counts only shrink), so it survives any commit.
+                    Spec::Infeasible => continue,
+                    Spec::RowNone if dirty & jmask == 0 => {
+                        stats.none_row_hits += 1;
+                        continue;
+                    }
+                    Spec::Scored(oi) if dirty & jmask == 0 => {
+                        let o =
+                            std::mem::take(&mut outcomes[*oi as usize]);
+                        stats.candidates_scored += o.candidates;
+                        o
+                    }
+                    // An earlier commit dirtied one of this job's types:
+                    // the speculative score (or cached row) may no
+                    // longer match the state — rescore serially.
+                    _ => {
+                        conflicted = true;
+                        stats.rescore_conflicts += 1;
+                        stats.find_alloc_calls += 1;
+                        if let Spec::Scored(oi) = spec {
+                            stats.candidates_scored +=
+                                outcomes[*oi as usize].candidates;
+                        }
+                        let o = Self::score_alloc(&cfg, job, types, state,
+                                                  prices, now);
+                        stats.candidates_scored += o.candidates;
+                        o
+                    }
+                };
+                match o.best {
+                    Some((alloc, _)) => {
+                        for a in alloc.assignments(job.id) {
+                            state.allocate(a);
+                        }
+                        dirty |= type_mask(&alloc.gpu_types());
+                        none_rows.remove(&job.id);
+                        out.push((job.id, alloc));
+                    }
+                    None if o.assembled && job.weight >= 0.0 => {
+                        // Clean items scored against digests that still
+                        // hold; rescored items against the live state —
+                        // either way the *current* digest is the one the
+                        // outcome was computed under.
+                        none_rows.insert(job.id, NoneRow {
+                            type_digest: state.digest_of_types(types),
+                            round_sig,
+                            progress_bits: job.progress.to_bits(),
+                            weight_bits: job.weight.to_bits(),
+                            now,
+                        });
+                    }
+                    None => {}
+                }
+            }
+            // Grow the batch while speculation holds; shrink to the
+            // floor on any conflict. Outcome-driven only, so the batch
+            // trajectory is identical at every worker count.
+            k = if conflicted {
+                SPEC_BATCH_MIN
+            } else {
+                (k * 2).min(SPEC_BATCH_MAX)
+            };
         }
         out
     }
 
-    /// Drop the per-job type cache for completed jobs (bounded memory).
-    /// Called by the engines through [`Scheduler::job_completed`].
+    /// Drop the per-job caches (type order, no-candidate row) for
+    /// completed jobs (bounded memory). Called by the engines through
+    /// [`Scheduler::job_completed`].
     pub fn forget_job(&mut self, id: JobId) {
         self.type_order.remove(&id);
+        self.none_rows.remove(&id);
     }
 
     /// Feed this round's [`HadarStats`] deltas into the global metrics
@@ -454,6 +795,14 @@ impl Hadar {
             .add(self.stats.dp_invocations - before.dp_invocations);
         m.greedy_rounds
             .add(self.stats.greedy_invocations - before.greedy_invocations);
+        m.hadar_find_alloc_calls
+            .add(self.stats.find_alloc_calls - before.find_alloc_calls);
+        m.hadar_candidates_scored
+            .add(self.stats.candidates_scored - before.candidates_scored);
+        m.hadar_rescore_conflicts
+            .add(self.stats.rescore_conflicts - before.rescore_conflicts);
+        m.hadar_none_row_hits
+            .add(self.stats.none_row_hits - before.none_row_hits);
     }
 }
 
@@ -482,6 +831,7 @@ impl Scheduler for Hadar {
             PriceBounds::from_jobs(&jobs, &gpu_types, ctx.horizon, self.cfg.eta);
         let prices = PriceTable::new(bounds);
         let mut state = ClusterState::new(ctx.cluster);
+        let round_sig = round_signature(&state, prices.bounds());
         let mut plan = RoundPlan::new();
 
         // Incremental mode: carry over running jobs' allocations when they
@@ -507,25 +857,43 @@ impl Scheduler for Hadar {
             pending = jobs.clone();
         }
 
-        // LPT-flavoured queue order: longest *total* best-case runtime
-        // first, so FIND_ALLOC hands the fastest pools to the jobs that
-        // gate the makespan. The key is static (t_j^min, not remaining
-        // time) so the order — and therefore the job->node matching — is
-        // stable across rounds: re-sorting on remaining time makes jobs
-        // swap nodes mid-flight and pay checkpoint-restart every round.
-        // total_cmp, not partial_cmp().unwrap(): a degenerate job (zero
-        // throughput row -> infinite/NaN t_min) must not panic the round.
-        pending.sort_by(|a, b| {
-            b.t_min().total_cmp(&a.t_min()).then(a.id.cmp(&b.id))
-        });
-
         let chosen: Vec<(JobId, JobAllocation)> =
-            if pending.len() <= self.cfg.dp_job_cap {
-                self.stats.dp_invocations += 1;
-                self.dp_plan(&pending, &mut state, &prices, ctx.now)
+            if pending.is_empty() || state.is_full() {
+                // Nothing can place: the DP returns all-skip on a full
+                // state and the greedy breaks before its first decision,
+                // so skip the ordering and dispatch entirely — this is
+                // what makes an incremental no-op round O(carried)
+                // instead of O(pending log pending).
+                Vec::new()
             } else {
-                self.stats.greedy_invocations += 1;
-                self.greedy(&pending, &mut state, &prices, ctx.now)
+                // LPT-flavoured queue order: longest *total* best-case
+                // runtime first, so FIND_ALLOC hands the fastest pools
+                // to the jobs that gate the makespan. The key is static
+                // (t_j^min, not remaining time) so the order — and
+                // therefore the job->node matching — is stable across
+                // rounds: re-sorting on remaining time makes jobs swap
+                // nodes mid-flight and pay checkpoint-restart every
+                // round. Decorate-sorted: t_min is a per-job constant,
+                // so precomputed keys reproduce the comparator order at
+                // O(n) key computations. total_cmp, not
+                // partial_cmp().unwrap(): a degenerate job (zero
+                // throughput row -> infinite/NaN t_min) must not panic
+                // the round.
+                let mut keyed: Vec<(f64, &Job)> =
+                    pending.iter().map(|j| (j.t_min(), *j)).collect();
+                keyed.sort_by(|a, b| {
+                    b.0.total_cmp(&a.0).then(a.1.id.cmp(&b.1.id))
+                });
+                let pending: Vec<&Job> =
+                    keyed.into_iter().map(|(_, j)| j).collect();
+                if pending.len() <= self.cfg.dp_job_cap {
+                    self.stats.dp_invocations += 1;
+                    self.dp_plan(&pending, &mut state, &prices, ctx.now)
+                } else {
+                    self.stats.greedy_invocations += 1;
+                    self.greedy(&pending, &mut state, &prices, ctx.now,
+                                round_sig)
+                }
             };
         for (id, alloc) in chosen {
             plan.insert(id, alloc);
@@ -569,6 +937,9 @@ impl Scheduler for Hadar {
             dp_rounds: self.stats.dp_invocations,
             greedy_rounds: self.stats.greedy_invocations,
             rounds_with_change: self.stats.rounds_with_change,
+            find_alloc_calls: self.stats.find_alloc_calls,
+            candidates_scored: self.stats.candidates_scored,
+            rescore_conflicts: self.stats.rescore_conflicts,
         })
     }
 }
@@ -777,5 +1148,145 @@ mod tests {
         assert!(plan.get(JobId(1)).is_none());
         assert!(plan.get(JobId(2)).is_none());
         assert!(plan.get(JobId(3)).is_some());
+    }
+
+    /// A greedy-regime queue with deterministic per-job variety (mixed
+    /// widths, throughputs, arrival 0) — enough jobs that some place,
+    /// some lose to capacity, and some are squeezed onto slow types.
+    fn streaming_queue(n: u64) -> (JobQueue, Vec<JobId>) {
+        let mut q = JobQueue::new();
+        for id in 0..n {
+            let w = [1usize, 1, 2, 2, 3, 4][(id % 6) as usize];
+            let mut j =
+                Job::new(id, DlModel::Lstm, 0.0, w, 2 + (id % 5), 100);
+            j.set_throughput(GpuType::V100, 30.0 + (id % 17) as f64);
+            j.set_throughput(GpuType::P100, 20.0 + (id % 11) as f64);
+            if id % 4 != 0 {
+                j.set_throughput(GpuType::K80, 5.0 + (id % 7) as f64);
+            }
+            q.admit(j);
+        }
+        (q, (0..n).map(JobId).collect())
+    }
+
+    #[test]
+    fn speculative_greedy_is_thread_count_invariant() {
+        // Plans AND counters must be bit-identical at any worker count:
+        // batch sizing is outcome-driven, speculative scores are pure,
+        // and conflicts rescore against the live state. Two rounds so
+        // cross-round no-candidate rows get exercised too.
+        let cluster = ClusterSpec::sim60();
+        let (queue, active) = streaming_queue(120);
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut hadar = Hadar::with_config(HadarConfig {
+                plan_threads: threads,
+                ..Default::default()
+            });
+            let p0 = hadar.schedule(&ctx(&queue, &active, &cluster));
+            let p1 = hadar.schedule(&ctx(&queue, &active, &cluster));
+            runs.push((p0, p1, hadar.stats));
+        }
+        for (p0, p1, stats) in &runs[1..] {
+            assert_eq!(
+                p0.allocations, runs[0].0.allocations,
+                "round-0 plan differs across thread counts"
+            );
+            assert_eq!(
+                p1.allocations, runs[0].1.allocations,
+                "round-1 plan differs across thread counts"
+            );
+            assert_eq!(*stats, runs[0].2, "counters differ across threads");
+        }
+        assert_eq!(runs[0].2.greedy_invocations, 2);
+        assert!(runs[0].2.find_alloc_calls > 0);
+        assert!(runs[0].2.candidates_scored > 0);
+    }
+
+    #[test]
+    fn infeasible_width_bails_without_scoring_candidates() {
+        // Σ free over the job's usable types < W_j: the feasibility bail
+        // must answer None in O(types), before any candidate is scored.
+        let cluster = ClusterSpec::motivational(); // 6 GPUs total
+        let mut queue = JobQueue::new();
+        let mut j = Job::new(1, DlModel::Lstm, 0.0, 9, 4, 100);
+        j.set_throughput(GpuType::V100, 40.0);
+        j.set_throughput(GpuType::P100, 25.0);
+        j.set_throughput(GpuType::K80, 8.0);
+        queue.admit(j);
+        let active = vec![JobId(1)];
+        let mut hadar = Hadar::new();
+        let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert!(plan.get(JobId(1)).is_none());
+        assert!(hadar.stats.find_alloc_calls >= 1);
+        assert_eq!(
+            hadar.stats.candidates_scored, 0,
+            "bail fired: no candidate may be assembled, let alone scored"
+        );
+    }
+
+    #[test]
+    fn none_rows_skip_rescoring_in_steady_state() {
+        // Every candidate is rejected by an impossible efficiency floor,
+        // so round 0 records a no-candidate row per job; round 1 (same
+        // state, prices, progress, now) must serve every decision from
+        // the rows without a single new scoring pass.
+        let cluster = ClusterSpec::sim60();
+        let mut queue = JobQueue::new();
+        for id in 0..40u64 {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, 2, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            queue.admit(j);
+        }
+        let active: Vec<JobId> = (0..40).map(JobId).collect();
+        let mut hadar = Hadar::with_config(HadarConfig {
+            dp_job_cap: 0, // force the greedy path
+            min_efficiency: 1.5, // x_min < 1.5 * max always: reject all
+            ..Default::default()
+        });
+        let p0 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert!(p0.scheduled_jobs().is_empty());
+        let calls_after_r0 = hadar.stats.find_alloc_calls;
+        assert_eq!(hadar.stats.none_row_hits, 0);
+
+        let p1 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert!(p1.scheduled_jobs().is_empty());
+        assert_eq!(hadar.stats.none_row_hits, 40, "all 40 served by rows");
+        assert_eq!(
+            hadar.stats.find_alloc_calls, calls_after_r0,
+            "steady-state round must not rescore anything"
+        );
+    }
+
+    #[test]
+    fn incremental_full_cluster_round_skips_dispatch() {
+        // Round 0 fills all 60 GPUs; round 1 carries every allocation
+        // over, leaving a full state — the dispatch (and its sort) must
+        // be skipped entirely, reproducing round 0's plan with no second
+        // greedy invocation.
+        let cluster = ClusterSpec::sim60();
+        let mut queue = JobQueue::new();
+        for id in 0..80u64 {
+            let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, 4, 100);
+            j.set_throughput(GpuType::V100, 60.0);
+            j.set_throughput(GpuType::P100, 40.0);
+            j.set_throughput(GpuType::K80, 15.0);
+            queue.admit(j);
+        }
+        let active: Vec<JobId> = (0..80).map(JobId).collect();
+        let mut hadar = Hadar::with_config(HadarConfig {
+            incremental: true,
+            ..Default::default()
+        });
+        let p0 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(p0.total_gpus(), 60, "round 0 fills the cluster");
+        let p1 = hadar.schedule(&ctx(&queue, &active, &cluster));
+        assert_eq!(p0.allocations, p1.allocations);
+        assert_eq!(
+            hadar.stats.greedy_invocations, 1,
+            "full-state round must skip the dispatch"
+        );
     }
 }

@@ -57,6 +57,15 @@ pub struct SolverStats {
     pub greedy_rounds: u64,
     /// Rounds whose plan differed from the previous round's.
     pub rounds_with_change: u64,
+    /// `FIND_ALLOC` invocations (Hadar's candidate-generation subroutine;
+    /// speculative scores and commit-time rescores both count).
+    pub find_alloc_calls: u64,
+    /// Candidate allocations scored across all `FIND_ALLOC` calls —
+    /// packed, pure-spread, and mixed-spread candidates together.
+    pub candidates_scored: u64,
+    /// Speculatively scored jobs whose winning candidate touched a GPU
+    /// type dirtied by an earlier commit and had to be rescored serially.
+    pub rescore_conflicts: u64,
 }
 
 /// A round-based cluster scheduler.

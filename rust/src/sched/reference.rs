@@ -19,7 +19,12 @@
 //!    requires identical [`RoundPlan`]s round for round.
 //! 2. **Baseline for the perf claim** — `benches/l3_sched_micro.rs` and
 //!    `hadar bench --json` time it against the optimised solver; the
-//!    before/after gap is the number `docs/performance.md` tracks.
+//!    before/after gap is the number `docs/performance.md` tracks. This
+//!    now includes the streaming rows: [`RefHadar`] is the **frozen
+//!    serial reference** the `hadar_stream_*` bench cases and the
+//!    thread-count-invariance property pin the speculative sharded
+//!    greedy against (above 200k jobs the bench skips this side — the
+//!    per-call re-sorts preserved here would dominate the run).
 //!
 //! Deliberate deviations from the historical code: float comparators use
 //! `total_cmp` instead of `partial_cmp().unwrap()` (so a degenerate input

@@ -5,7 +5,10 @@
 //! paths (exact DP and payoff-density greedy), in incremental mode, and
 //! through drain preemptions and completions. This is the non-negotiable
 //! gate on the perf rework: any divergence is a solver bug, not a tuning
-//! difference.
+//! difference. The same file pins the speculative sharded greedy: plans
+//! must be bit-identical at `plan_threads` 1, 2, and 8 (the
+//! `HADAR_PLAN_THREADS` knob), so the worker count is a pure throughput
+//! dial, never a behaviour dial.
 //!
 //! The same contract pins the gang HadarE planner to its frozen
 //! single-GPU predecessor (`sched::reference::RefHadarE`) on single-GPU
@@ -549,6 +552,141 @@ fn prop_hadare_empty_carry_over_degrades_to_plan_round() {
                     }
                     if tracker.is_parent_complete(parent) {
                         warm.job_completed(parent);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------ Hadar speculative sharding
+
+/// Random cluster for the sharding domain: the small heterogeneous mix
+/// above, or a `scaled:NxG` preset large enough that a speculative batch
+/// exceeds the serial-fallback threshold and the worker shards genuinely
+/// run (small clusters exercise the conflict/rescore path instead, since
+/// nearly every commit dirties the types the next job wants).
+fn gen_shard_cluster(rng: &mut Rng) -> ClusterSpec {
+    if rng.below(2) == 0 {
+        gen_cluster(rng)
+    } else {
+        ClusterSpec::scaled(rng.range_u(4, 12) as usize,
+                            rng.range_u(2, 8) as usize)
+    }
+}
+
+/// Thread-count invariance over ≥70 seeded scenarios: with speculative
+/// parallel FIND_ALLOC scoring and the deterministic density-order
+/// commit, [`Hadar`] must produce plans **bit-identical** at
+/// `plan_threads` 1, 2, and 8 — and identical to the frozen serial
+/// [`RefHadar`] — across multiple rounds with progress, completions,
+/// preemptions, and node churn, on both the DP and greedy regimes
+/// (mirroring `prop_hadare_warm_start_equals_cold_replanning` in shape).
+#[test]
+fn prop_hadar_sharded_plans_thread_count_invariant() {
+    check_no_shrink(
+        Config { cases: 70, seed: 0x5EED6 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cluster = gen_shard_cluster(&mut rng);
+            let n_jobs = rng.range_u(8, 40);
+            let mut queue = JobQueue::new();
+            for id in 0..n_jobs {
+                queue.admit(gen_job(&mut rng, id));
+            }
+            let base = HadarConfig {
+                // Half the scenarios force the greedy path; the other
+                // half leave the DP open for small fronts. Incremental
+                // carry-over is driven half the time.
+                dp_job_cap: if rng.below(2) == 0 { 12 } else { 4 },
+                min_efficiency: if rng.below(2) == 0 { 0.0 } else { 0.1 },
+                incremental: rng.below(2) == 0,
+                ..Default::default()
+            };
+            let mut solvers: Vec<Hadar> = [1usize, 2, 8]
+                .iter()
+                .map(|&t| {
+                    Hadar::with_config(HadarConfig {
+                        plan_threads: t,
+                        ..base
+                    })
+                })
+                .collect();
+            let mut reference = RefHadar::with_config(base);
+            let slot = 360.0;
+
+            for round in 0..4u64 {
+                let now = round as f64 * slot;
+                let active = queue.active_at(now);
+                if active.is_empty() {
+                    break;
+                }
+                let (plans, p_ref) = {
+                    let c = ctx(now, &queue, &active, &cluster);
+                    let plans: Vec<RoundPlan> = solvers
+                        .iter_mut()
+                        .map(|s| s.schedule(&c))
+                        .collect();
+                    (plans, reference.schedule(&c))
+                };
+                for (i, p) in plans.iter().enumerate() {
+                    if !plans_equal(p, &p_ref) {
+                        return Err(format!(
+                            "round {round}: plan at plan_threads {} \
+                             diverged from serial reference: {:?} vs \
+                             {:?}",
+                            [1, 2, 8][i],
+                            p.allocations,
+                            p_ref.allocations
+                        ));
+                    }
+                }
+
+                // Advance progress by the engine's bottleneck rule and
+                // notify completions identically on every solver.
+                let p0 = &plans[0];
+                let scheduled = p0.scheduled_jobs();
+                for &id in &scheduled {
+                    let alloc = p0.get(id).unwrap().clone();
+                    let job = queue.get_mut(id).unwrap();
+                    let x_min = alloc
+                        .gpu_types()
+                        .iter()
+                        .map(|&g| job.throughput_on(g))
+                        .fold(f64::INFINITY, f64::min);
+                    if x_min.is_finite() && x_min > 0.0 {
+                        job.progress +=
+                            alloc.total_gpus() as f64 * x_min * slot;
+                    }
+                    if job.is_complete() {
+                        for s in &mut solvers {
+                            s.job_completed(id);
+                        }
+                        reference.job_completed(id);
+                    }
+                }
+
+                // Random drain: drop a node and preempt the jobs whose
+                // placement touched it — identically on all four
+                // solvers, as the engine does.
+                if rng.f64() < 0.35 && cluster.nodes.len() > 1 {
+                    let victim = cluster.nodes
+                        [rng.below(cluster.nodes.len() as u64) as usize]
+                        .id;
+                    cluster.remove_node(victim);
+                    for &id in &scheduled {
+                        let touches = p0
+                            .get(id)
+                            .map(|a| a.nodes().contains(&victim))
+                            .unwrap_or(false);
+                        if touches {
+                            for s in &mut solvers {
+                                s.preempt(id);
+                            }
+                            reference.preempt(id);
+                        }
                     }
                 }
             }
