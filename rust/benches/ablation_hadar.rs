@@ -31,7 +31,7 @@ fn run_with(cfg: HadarConfig, n_jobs: usize) -> (f64, f64, f64) {
     }
     let mut queue = JobQueue::new();
     for j in jobs {
-        queue.admit(j);
+        queue.admit(j).unwrap();
     }
     let mut hadar = Hadar::with_config(cfg);
     let res = engine::run(&mut queue, &mut hadar, &cluster,

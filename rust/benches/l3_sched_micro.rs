@@ -58,7 +58,7 @@ fn main() {
         let jobs = materialize(&trace, &cluster, 3);
         let mut queue = JobQueue::new();
         for j in jobs {
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active = queue.active_at(0.0);
         Bencher::new(&format!("hadar_decision_{n}jobs"))
@@ -73,6 +73,7 @@ fn main() {
                     horizon: 1e7,
                     queue: &queue,
                     active: &active,
+                    delta: None,
                     cluster: &cluster,
                 };
                 hadar.schedule(&ctx).scheduled_jobs().len()
@@ -91,7 +92,7 @@ fn main() {
             j.total_iters(),
             &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
         );
-        queue.admit(j.clone());
+        queue.admit(j.clone()).unwrap();
     }
     Bencher::new("hadare_plan_round_m12")
         .warmup(2)
@@ -105,6 +106,7 @@ fn main() {
                 horizon: 1e7,
                 queue: &queue,
                 active: &[],
+                delta: None,
                 cluster: &cluster,
             };
             planner.plan_round(&ctx, &tracker).scheduled_jobs().len()

@@ -141,7 +141,7 @@ pub fn run_scheduler_emulation(
     // 1) Virtual schedule.
     let mut queue = JobQueue::new();
     for j in jobs {
-        queue.admit(j.clone());
+        queue.admit(j.clone())?;
     }
     let sim = engine::run(&mut queue, scheduler, cluster, &cfg.sim, true);
 

@@ -93,7 +93,7 @@ pub fn run_scenario_observed(spec: &ScenarioSpec,
             let mut scheduler = sched::by_name(&spec.scheduler)?;
             let mut queue = JobQueue::new();
             for j in jobs {
-                queue.admit(j);
+                queue.admit(j).map_err(|e| e.to_string())?;
             }
             engine::run_observed(
                 &mut queue,

@@ -56,7 +56,7 @@ pub fn run() -> Fig1 {
     let run_one = |mut s: Box<dyn Scheduler>| -> SimResult {
         let mut q = JobQueue::new();
         for j in jobs() {
-            q.admit(j);
+            q.admit(j).unwrap();
         }
         engine::run(&mut q, s.as_mut(), &cluster, &cfg, true)
     };

@@ -56,7 +56,7 @@ pub fn run(scales: &[usize]) -> Vec<Fig5Point> {
         let jobs = materialize(&trace, &cluster, 11);
         let mut queue = JobQueue::new();
         for j in jobs {
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active = queue.active_at(0.0);
         let time_one = |s: &mut dyn Scheduler, rounds: usize| -> f64 {
@@ -69,6 +69,7 @@ pub fn run(scales: &[usize]) -> Vec<Fig5Point> {
                     horizon: 1e7,
                     queue: &queue,
                     active: &active,
+                    delta: None,
                     cluster: &cluster,
                 };
                 let t0 = Instant::now();
@@ -159,7 +160,7 @@ pub fn run_forked(scales: &[usize], nodes_per_type: usize,
         });
         let mut queue = JobQueue::new();
         for j in materialize(&trace, &cluster, 11) {
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let ids = ForkIds {
             max_job_count: (n as u64).max(64),
@@ -178,6 +179,7 @@ pub fn run_forked(scales: &[usize], nodes_per_type: usize,
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let mut warm = HadarE::new(1);

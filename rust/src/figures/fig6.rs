@@ -33,7 +33,7 @@ pub fn run() -> Fig6 {
     };
     let mut queue = JobQueue::new();
     for j in &jobs {
-        queue.admit(j.clone());
+        queue.admit(j.clone()).unwrap();
     }
     let hadar =
         engine::run(&mut queue, &mut Hadar::new(), &cluster, &cfg, true);

@@ -48,6 +48,15 @@ pub struct JobTracker {
     /// Copy-id arithmetic shared with the forker.
     pub ids: ForkIds,
     parents: BTreeMap<JobId, ParentProgress>,
+    /// Registered parents not yet complete, maintained by [`register`]
+    /// and [`report_steps`] so [`all_complete`] is O(1) — the engines
+    /// test it every round, which at streaming scale (1M parents) would
+    /// otherwise be a full scan per round.
+    ///
+    /// [`register`]: JobTracker::register
+    /// [`report_steps`]: JobTracker::report_steps
+    /// [`all_complete`]: JobTracker::all_complete
+    incomplete: usize,
 }
 
 impl JobTracker {
@@ -56,6 +65,7 @@ impl JobTracker {
         JobTracker {
             ids,
             parents: BTreeMap::new(),
+            incomplete: 0,
         }
     }
 
@@ -65,14 +75,23 @@ impl JobTracker {
         for &c in copies {
             debug_assert_eq!(self.ids.parent_of(c), parent);
         }
-        self.parents.insert(
-            parent,
-            ParentProgress {
-                total_steps,
-                done_steps: 0.0,
-                copies: copies.to_vec(),
-            },
-        );
+        let progress = ParentProgress {
+            total_steps,
+            done_steps: 0.0,
+            copies: copies.to_vec(),
+        };
+        let now_complete = progress.is_complete();
+        let prior = self.parents.insert(parent, progress);
+        // Re-registration replaces the prior entry; only its incomplete
+        // contribution carries over.
+        if let Some(p) = prior {
+            if !p.is_complete() {
+                self.incomplete -= 1;
+            }
+        }
+        if !now_complete {
+            self.incomplete += 1;
+        }
     }
 
     /// One parent's progress.
@@ -99,7 +118,11 @@ impl JobTracker {
     pub fn report_steps(&mut self, copy: JobId, steps: f64) -> JobId {
         let parent = self.resolve(copy);
         if let Some(p) = self.parents.get_mut(&parent) {
+            let was_complete = p.is_complete();
             p.done_steps = (p.done_steps + steps).min(p.total_steps);
+            if !was_complete && p.is_complete() {
+                self.incomplete -= 1;
+            }
         }
         parent
     }
@@ -113,9 +136,10 @@ impl JobTracker {
             .unwrap_or(false)
     }
 
-    /// Whether every registered parent completed.
+    /// Whether every registered parent completed. O(1): the engines ask
+    /// every round, so the answer is a maintained counter, not a scan.
     pub fn all_complete(&self) -> bool {
-        self.parents.values().all(|p| p.is_complete())
+        self.incomplete == 0
     }
 
     /// §V-B work division: split the parent's remaining steps across the
@@ -196,6 +220,24 @@ mod tests {
         t.report_steps(JobId(301), 500.0); // overshoot capped
         assert_eq!(t.parent(JobId(1)).unwrap().done_steps, 1000.0);
         assert!(t.is_parent_complete(JobId(1)));
+        assert!(t.all_complete());
+    }
+
+    #[test]
+    fn all_complete_counter_survives_reregistration() {
+        let ids = ForkIds { max_job_count: 100 };
+        let mut t = JobTracker::new(ids);
+        assert!(t.all_complete(), "empty tracker is trivially complete");
+        t.register(JobId(1), 100.0, &[JobId(101)]);
+        t.register(JobId(2), 0.0, &[JobId(102)]);
+        assert!(!t.all_complete(), "parent 1 still has steps");
+        // Re-registering an incomplete parent must not double-count it.
+        t.register(JobId(1), 50.0, &[JobId(101)]);
+        t.report_steps(JobId(101), 50.0);
+        assert!(t.is_parent_complete(JobId(1)));
+        assert!(t.all_complete(), "counter drained exactly to zero");
+        // Reports past completion stay idempotent.
+        t.report_steps(JobId(101), 10.0);
         assert!(t.all_complete());
     }
 

@@ -1,13 +1,145 @@
 //! The global job queue managed by the scheduler (paper §III-A): arrival
 //! admission, status tracking, and the per-round waiting set.
+//!
+//! # Delta-driven round pipeline
+//!
+//! Round-based schedulers are naturally incremental: between two rounds
+//! only *arrivals*, *completions*, *preemptions*, and cluster *events*
+//! change the problem. The queue therefore maintains two indexes next to
+//! the job map:
+//!
+//! - `pending` — jobs admitted but not yet surfaced to a round, ordered
+//!   by `(arrival, id)`;
+//! - `active` — the persistent waiting set: surfaced and not completed.
+//!
+//! [`JobQueue::poll_round`] advances the arrival watermark, drains the
+//! newly-arrived jobs from `pending` into `active`, and returns a
+//! [`RoundDelta`] snapshot of everything that changed since the previous
+//! poll. [`JobQueue::waiting`] and [`JobQueue::next_arrival_after`] then
+//! answer from the indexes in O(active) / O(log n) instead of scanning
+//! every job ever admitted — the difference between O(delta) and
+//! O(universe) per round at the 1M-job streaming scale.
+//!
+//! # Index contract
+//!
+//! The indexes are authoritative only if lifecycle transitions go
+//! through the queue API: [`JobQueue::admit`] to add,
+//! [`JobQueue::complete`] to finish, [`JobQueue::note_preempted`] to
+//! record a drain preemption. Mutating `status` directly via
+//! [`JobQueue::get_mut`]/[`JobQueue::iter_mut`] leaves `progress` /
+//! bookkeeping fields untouched by the indexes and desynchronizes
+//! [`JobQueue::waiting`] and [`JobQueue::all_complete`] (the full-scan
+//! [`JobQueue::active_at`] still sees it). The property suite pins
+//! index-vs-rebuild agreement over the API
+//! (`tests/prop_invariants.rs::prop_queue_indexes_agree_with_rebuild`).
 
 use crate::jobs::job::{Job, JobId, JobStatus};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Admission failure: the id is already in the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmitError {
+    /// The duplicate id.
+    pub id: JobId,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "duplicate job id {}", self.id)
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Everything that changed in the queue since the previous
+/// [`JobQueue::poll_round`] — the incremental view of a round boundary
+/// that delta-aware schedulers consume instead of re-deriving state from
+/// the full job list.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoundDelta {
+    /// Jobs whose arrival time was crossed by this poll, in
+    /// `(arrival, id)` order.
+    pub arrivals: Vec<JobId>,
+    /// Jobs completed (via [`JobQueue::complete`]) since the last poll.
+    pub completions: Vec<JobId>,
+    /// Jobs drain-preempted (via [`JobQueue::note_preempted`]) since the
+    /// last poll.
+    pub preemptions: Vec<JobId>,
+    /// Cluster timeline events applied at this round boundary. The queue
+    /// cannot see the cluster; the sim engines stamp this after polling.
+    pub events: u64,
+}
+
+impl RoundDelta {
+    /// Whether nothing changed at this round boundary.
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+            && self.completions.is_empty()
+            && self.preemptions.is_empty()
+            && self.events == 0
+    }
+
+    /// Fold `other` into `self` (idle-skipped round boundaries carry
+    /// their delta forward into the next scheduled round).
+    pub fn merge(&mut self, other: RoundDelta) {
+        self.arrivals.extend(other.arrivals);
+        self.completions.extend(other.completions);
+        self.preemptions.extend(other.preemptions);
+        self.events += other.events;
+    }
+}
+
+/// Monotone total-order key for finite arrival times (IEEE-754 sign
+/// flip), so `f64` arrivals can index a `BTreeSet`.
+fn arrival_key(arrival: f64) -> u64 {
+    let bits = arrival.to_bits();
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | (1 << 63)
+    }
+}
+
+/// Inverse of [`arrival_key`].
+fn key_arrival(key: u64) -> f64 {
+    if key >> 63 == 1 {
+        f64::from_bits(key & !(1 << 63))
+    } else {
+        f64::from_bits(!key)
+    }
+}
 
 /// Owns all jobs through their lifecycle.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct JobQueue {
     jobs: BTreeMap<JobId, Job>,
+    /// Admitted, not yet surfaced by a poll: `(arrival_key, id)` order.
+    pending: BTreeSet<(u64, JobId)>,
+    /// Surfaced (arrival <= watermark) and not completed, in id order —
+    /// iteration order matches [`JobQueue::active_at`]'s output.
+    active: BTreeSet<JobId>,
+    /// Jobs moved to `Completed` via [`JobQueue::complete`].
+    completed_count: usize,
+    /// Arrival watermark of the latest [`JobQueue::poll_round`].
+    polled_to: f64,
+    /// Completions buffered for the next [`RoundDelta`].
+    delta_completions: Vec<JobId>,
+    /// Preemptions buffered for the next [`RoundDelta`].
+    delta_preemptions: Vec<JobId>,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        JobQueue {
+            jobs: BTreeMap::new(),
+            pending: BTreeSet::new(),
+            active: BTreeSet::new(),
+            completed_count: 0,
+            polled_to: f64::NEG_INFINITY,
+            delta_completions: Vec::new(),
+            delta_preemptions: Vec::new(),
+        }
+    }
 }
 
 impl JobQueue {
@@ -16,14 +148,20 @@ impl JobQueue {
         JobQueue::default()
     }
 
-    /// Admit a job (panics on duplicate ids — admission bug).
-    pub fn admit(&mut self, job: Job) {
-        assert!(
-            !self.jobs.contains_key(&job.id),
-            "duplicate job id {}",
-            job.id
-        );
+    /// Admit a job. Fails (leaving the queue untouched) if the id was
+    /// already admitted. The job enters the arrival index and surfaces
+    /// in the [`RoundDelta`] of the first poll at or past its arrival.
+    pub fn admit(&mut self, job: Job) -> Result<(), AdmitError> {
+        if self.jobs.contains_key(&job.id) {
+            return Err(AdmitError { id: job.id });
+        }
+        if job.status == JobStatus::Completed {
+            self.completed_count += 1;
+        } else {
+            self.pending.insert((arrival_key(job.arrival), job.id));
+        }
         self.jobs.insert(job.id, job);
+        Ok(())
     }
 
     /// Look up a job.
@@ -31,7 +169,9 @@ impl JobQueue {
         self.jobs.get(&id)
     }
 
-    /// Look up a job mutably.
+    /// Look up a job mutably. See the index contract in the module docs:
+    /// lifecycle transitions must go through [`JobQueue::complete`], not
+    /// a direct `status` write.
     pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
         self.jobs.get_mut(&id)
     }
@@ -56,8 +196,84 @@ impl JobQueue {
         self.jobs.values_mut()
     }
 
+    /// Advance the arrival watermark to `now` and return the
+    /// [`RoundDelta`] accumulated since the previous poll: jobs whose
+    /// arrival was crossed (drained from the pending index into the
+    /// active set) plus buffered completions and preemptions. O(delta).
+    pub fn poll_round(&mut self, now: f64) -> RoundDelta {
+        if now > self.polled_to {
+            self.polled_to = now;
+        }
+        let bound = arrival_key(self.polled_to);
+        let mut arrivals = Vec::new();
+        while let Some(&(key, id)) = self.pending.first() {
+            if key > bound {
+                break;
+            }
+            self.pending.pop_first();
+            self.active.insert(id);
+            arrivals.push(id);
+        }
+        RoundDelta {
+            arrivals,
+            completions: std::mem::take(&mut self.delta_completions),
+            preemptions: std::mem::take(&mut self.delta_preemptions),
+            events: 0,
+        }
+    }
+
+    /// The persistent waiting set `Q` as of the last poll, in id order —
+    /// the indexed O(active) counterpart of [`JobQueue::active_at`].
+    pub fn waiting(&self) -> Vec<JobId> {
+        self.active.iter().copied().collect()
+    }
+
+    /// Size of the persistent waiting set (O(1)).
+    pub fn waiting_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// The arrival watermark of the latest [`JobQueue::poll_round`]
+    /// (`-inf` before the first poll).
+    pub fn polled_to(&self) -> f64 {
+        self.polled_to
+    }
+
+    /// Complete a job: stamps `Completed` + `finish_time`, removes it
+    /// from the waiting/arrival indexes, and buffers it into the next
+    /// [`RoundDelta`]. Returns `false` (and does nothing) if the id is
+    /// unknown or already completed.
+    pub fn complete(&mut self, id: JobId, finish_time: f64) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else {
+            return false;
+        };
+        if job.status == JobStatus::Completed {
+            return false;
+        }
+        let arrival = job.arrival;
+        job.status = JobStatus::Completed;
+        job.finish_time = Some(finish_time);
+        self.completed_count += 1;
+        if !self.active.remove(&id) {
+            self.pending.remove(&(arrival_key(arrival), id));
+        }
+        self.delta_completions.push(id);
+        true
+    }
+
+    /// Record a drain preemption for the next [`RoundDelta`]. The job
+    /// stays in the waiting set (the scheduler re-places it); this only
+    /// feeds the delta consumers.
+    pub fn note_preempted(&mut self, id: JobId) {
+        if self.active.contains(&id) {
+            self.delta_preemptions.push(id);
+        }
+    }
+
     /// Jobs that have arrived by `now` and are not complete — the waiting
-    /// set `Q` a scheduler sees in a round.
+    /// set `Q` a scheduler sees in a round. Full O(n) scan retained as
+    /// the reference/compat path; round loops should poll and use
+    /// [`JobQueue::waiting`].
     pub fn active_at(&self, now: f64) -> Vec<JobId> {
         self.jobs
             .values()
@@ -66,11 +282,10 @@ impl JobQueue {
             .collect()
     }
 
-    /// Whether every admitted job completed.
+    /// Whether every admitted job completed (O(1); counts transitions
+    /// made through [`JobQueue::complete`]).
     pub fn all_complete(&self) -> bool {
-        self.jobs
-            .values()
-            .all(|j| j.status == JobStatus::Completed)
+        self.completed_count == self.jobs.len()
     }
 
     /// The completed jobs, in id order.
@@ -81,15 +296,24 @@ impl JobQueue {
             .collect()
     }
 
-    /// Earliest arrival among jobs not yet arrived at `now` (next event).
+    /// Earliest arrival among non-completed jobs not yet arrived at
+    /// `now` (next event; completing a future job — e.g. cancelling it
+    /// before it arrives — removes it from consideration on both
+    /// paths). At or past the poll watermark this is an O(log n) range
+    /// probe of the pending index; behind the watermark it falls back to
+    /// the full scan.
     pub fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        if now >= self.polled_to {
+            // Every job with arrival > now is still pending (arrivals
+            // drain only up to the watermark <= now).
+            let from = (arrival_key(now).wrapping_add(1), JobId(0));
+            return self.pending.range(from..).next().map(|&(k, _)| key_arrival(k));
+        }
         self.jobs
             .values()
-            .filter(|j| j.arrival > now)
+            .filter(|j| j.arrival > now && j.status != JobStatus::Completed)
             .map(|j| j.arrival)
-            .fold(None, |acc, a| {
-                Some(acc.map_or(a, |b: f64| b.min(a)))
-            })
+            .fold(None, |acc, a| Some(acc.map_or(a, |b: f64| b.min(a))))
     }
 }
 
@@ -105,42 +329,131 @@ mod tests {
     #[test]
     fn admission_and_lookup() {
         let mut q = JobQueue::new();
-        q.admit(mk(1, 0.0));
-        q.admit(mk(2, 5.0));
+        q.admit(mk(1, 0.0)).unwrap();
+        q.admit(mk(2, 5.0)).unwrap();
         assert_eq!(q.len(), 2);
         assert!(q.get(JobId(1)).is_some());
         assert!(q.get(JobId(3)).is_none());
     }
 
     #[test]
-    #[should_panic(expected = "duplicate")]
-    fn duplicate_admission_panics() {
+    fn duplicate_admission_is_an_error() {
         let mut q = JobQueue::new();
-        q.admit(mk(1, 0.0));
-        q.admit(mk(1, 1.0));
+        q.admit(mk(1, 0.0)).unwrap();
+        let err = q.admit(mk(1, 1.0)).unwrap_err();
+        assert_eq!(err, AdmitError { id: JobId(1) });
+        assert!(err.to_string().contains("duplicate job id J1"));
+        // The queue is untouched by the rejected admission.
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.get(JobId(1)).unwrap().arrival, 0.0);
     }
 
     #[test]
     fn active_set_respects_arrival_and_completion() {
         let mut q = JobQueue::new();
-        q.admit(mk(1, 0.0));
-        q.admit(mk(2, 100.0));
+        q.admit(mk(1, 0.0)).unwrap();
+        q.admit(mk(2, 100.0)).unwrap();
         assert_eq!(q.active_at(50.0), vec![JobId(1)]);
         assert_eq!(q.active_at(100.0).len(), 2);
-        q.get_mut(JobId(1)).unwrap().status = JobStatus::Completed;
+        q.complete(JobId(1), 60.0);
         assert_eq!(q.active_at(100.0), vec![JobId(2)]);
         assert!(!q.all_complete());
-        q.get_mut(JobId(2)).unwrap().status = JobStatus::Completed;
+        q.complete(JobId(2), 130.0);
         assert!(q.all_complete());
     }
 
     #[test]
     fn next_arrival() {
         let mut q = JobQueue::new();
-        q.admit(mk(1, 10.0));
-        q.admit(mk(2, 30.0));
+        q.admit(mk(1, 10.0)).unwrap();
+        q.admit(mk(2, 30.0)).unwrap();
         assert_eq!(q.next_arrival_after(0.0), Some(10.0));
         assert_eq!(q.next_arrival_after(10.0), Some(30.0));
         assert_eq!(q.next_arrival_after(30.0), None);
+    }
+
+    #[test]
+    fn next_arrival_agrees_with_index_after_polls() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 10.0)).unwrap();
+        q.admit(mk(2, 30.0)).unwrap();
+        q.admit(mk(3, 30.0)).unwrap();
+        q.poll_round(10.0);
+        // At/past the watermark: answered from the pending index.
+        assert_eq!(q.next_arrival_after(10.0), Some(30.0));
+        assert_eq!(q.next_arrival_after(29.0), Some(30.0));
+        assert_eq!(q.next_arrival_after(30.0), None);
+        // Behind the watermark: the full-scan fallback still answers.
+        assert_eq!(q.next_arrival_after(5.0), Some(10.0));
+        q.poll_round(30.0);
+        assert_eq!(q.next_arrival_after(30.0), None);
+        assert_eq!(q.waiting(), vec![JobId(1), JobId(2), JobId(3)]);
+    }
+
+    #[test]
+    fn poll_round_reports_arrivals_completions_preemptions() {
+        let mut q = JobQueue::new();
+        q.admit(mk(1, 0.0)).unwrap();
+        q.admit(mk(2, 5.0)).unwrap();
+        q.admit(mk(3, 50.0)).unwrap();
+        let d = q.poll_round(10.0);
+        assert_eq!(d.arrivals, vec![JobId(1), JobId(2)]);
+        assert!(d.completions.is_empty() && d.preemptions.is_empty());
+        assert_eq!(q.waiting(), vec![JobId(1), JobId(2)]);
+
+        q.complete(JobId(1), 12.0);
+        q.note_preempted(JobId(2));
+        let d = q.poll_round(50.0);
+        assert_eq!(d.arrivals, vec![JobId(3)]);
+        assert_eq!(d.completions, vec![JobId(1)]);
+        assert_eq!(d.preemptions, vec![JobId(2)]);
+        assert_eq!(q.waiting(), vec![JobId(2), JobId(3)]);
+        assert_eq!(q.get(JobId(1)).unwrap().finish_time, Some(12.0));
+
+        // Nothing changed since: the next delta is empty.
+        assert!(q.poll_round(50.0).is_empty());
+        // Completing twice is a no-op and reports nothing new.
+        assert!(!q.complete(JobId(1), 99.0));
+        assert!(q.poll_round(50.0).is_empty());
+    }
+
+    #[test]
+    fn waiting_matches_full_scan_and_arrival_order_breaks_ties() {
+        let mut q = JobQueue::new();
+        // Same arrival, ids out of order; plus a later arrival.
+        q.admit(mk(7, 1.0)).unwrap();
+        q.admit(mk(3, 1.0)).unwrap();
+        q.admit(mk(5, 2.0)).unwrap();
+        let d = q.poll_round(1.5);
+        // Arrival order, id-tiebreak within the same arrival.
+        assert_eq!(d.arrivals, vec![JobId(3), JobId(7)]);
+        // Waiting set is id-ordered, exactly like active_at.
+        assert_eq!(q.waiting(), q.active_at(1.5));
+        q.poll_round(2.0);
+        assert_eq!(q.waiting(), q.active_at(2.0));
+        assert_eq!(q.waiting_len(), 3);
+    }
+
+    #[test]
+    fn delta_merge_accumulates_idle_rounds() {
+        let mut a = RoundDelta {
+            arrivals: vec![JobId(1)],
+            completions: vec![],
+            preemptions: vec![JobId(2)],
+            events: 1,
+        };
+        let b = RoundDelta {
+            arrivals: vec![JobId(3)],
+            completions: vec![JobId(1)],
+            preemptions: vec![],
+            events: 2,
+        };
+        a.merge(b);
+        assert_eq!(a.arrivals, vec![JobId(1), JobId(3)]);
+        assert_eq!(a.completions, vec![JobId(1)]);
+        assert_eq!(a.preemptions, vec![JobId(2)]);
+        assert_eq!(a.events, 3);
+        assert!(!a.is_empty());
+        assert!(RoundDelta::default().is_empty());
     }
 }

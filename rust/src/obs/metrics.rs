@@ -315,6 +315,13 @@ pub struct CoreMetrics {
     pub sim_restart_charges: Counter,
     /// Arrived, incomplete jobs at the latest round (waiting set depth).
     pub sim_queue_depth: Gauge,
+    /// Jobs in the persistent active set at the latest scheduled round
+    /// (the delta pipeline's waiting-set size).
+    pub sim_active_jobs: Gauge,
+    /// Round-delta arrivals consumed by schedulers (sum over rounds).
+    pub sim_delta_arrivals: Counter,
+    /// Round-delta completions consumed by schedulers (sum over rounds).
+    pub sim_delta_completions: Counter,
     /// Per-round `Scheduler::schedule` wall clock (seconds).
     pub sched_round_secs: Histogram,
 }
@@ -351,6 +358,9 @@ pub fn core() -> &'static CoreMetrics {
             sim_preemptions: r.counter("sim.preemptions"),
             sim_restart_charges: r.counter("sim.restart_charges"),
             sim_queue_depth: r.gauge("sim.queue_depth"),
+            sim_active_jobs: r.gauge("sim.active_jobs"),
+            sim_delta_arrivals: r.counter("sim.delta_arrivals"),
+            sim_delta_completions: r.counter("sim.delta_completions"),
             sched_round_secs: r.histogram("sim.sched_round_secs"),
         }
     })

@@ -48,10 +48,15 @@
 //!   `plans-carried`: the carried plan must equal round 0's plan
 //!   bit-for-bit, and the cold-vs-incremental speedup gates.
 //!
+//! …and the **delta rows** (`delta_*`) at the same streaming job
+//! counts: the queue layer's per-round boundary cost, full O(jobs)
+//! scans vs the indexed delta pipeline the engines run after the
+//! round-delta refactor — see [`run_delta_cases`].
+//!
 //! The serial reference is skipped above 200k jobs (its comparator
 //! sorts dominate and tell us nothing new), so a 1M-job `--stream-jobs`
-//! run emits only the `hadar_shard_*`/`hadar_incr_*` rows and stays
-//! minutes-scale.
+//! run emits only the `hadar_shard_*`/`hadar_incr_*`/`delta_*` rows and
+//! stays minutes-scale.
 //!
 //! Shared by the `hadar bench` CLI subcommand (which emits
 //! `BENCH_sched.json`, the artifact the perf trajectory tracks — see
@@ -144,7 +149,7 @@ fn case_queue(cluster: &ClusterSpec, n_jobs: usize) -> JobQueue {
     });
     let mut queue = JobQueue::new();
     for j in materialize(&trace, cluster, 3) {
-        queue.admit(j);
+        queue.admit(j).unwrap();
     }
     queue
 }
@@ -287,8 +292,8 @@ fn scaled_cluster() -> ClusterSpec {
 ///   gates.
 fn run_stream_cases(iters: usize, n_jobs: usize,
                     out: &mut Vec<CaseResult>) {
-    use crate::sched::hadare::{alloc_throughput, resolve_plan_threads,
-                               PrevRound};
+    use crate::sched::hadare::{alloc_throughput, PrevRound};
+    use crate::sched::resolve_plan_threads;
     let cluster = scaled_cluster();
     let copies = 1u64;
     let queue = case_queue(&cluster, n_jobs);
@@ -302,6 +307,7 @@ fn run_stream_cases(iters: usize, n_jobs: usize,
         horizon: 1e7,
         queue: &queue,
         active: &active,
+        delta: None,
         cluster: &cluster,
     };
     let mut warm = HadarE::new(copies);
@@ -321,6 +327,7 @@ fn run_stream_cases(iters: usize, n_jobs: usize,
         horizon: 1e7,
         queue: &queue,
         active: &active,
+        delta: None,
         cluster: &cluster,
     };
 
@@ -388,6 +395,97 @@ fn run_stream_cases(iters: usize, n_jobs: usize,
     });
 }
 
+/// The `delta_*` rows: the queue layer's steady-state round-boundary
+/// cost — the pre-refactor full path (an O(jobs) [`JobQueue::active_at`]
+/// status scan every round) against the indexed delta path the engines
+/// now run ([`JobQueue::poll_round`] + [`JobQueue::waiting`] +
+/// [`JobQueue::next_arrival_after`], O(churn + active)). No solver runs:
+/// the row isolates what the delta-pipeline refactor changed, so the
+/// speedup is the O(jobs)-vs-O(delta) claim itself (the acceptance floor
+/// is ≥2x at 100k jobs). Both paths retire the same jobs each round and
+/// must report identical waiting sets and next-arrival probes
+/// (`check: plans-equal`, so the row gates against the committed
+/// baseline).
+///
+/// The stream is sized like the streaming rows: ~512 arrivals per round
+/// over `jobs/512` rounds, and each round retires everything beyond the
+/// newest 512 waiting jobs — a mid-stream steady state where the full
+/// scan touches every job ever admitted while the delta path touches
+/// only the round's churn.
+fn run_delta_cases(iters: usize, n_jobs: usize, out: &mut Vec<CaseResult>) {
+    use crate::jobs::job::{Job, JobId};
+    use crate::jobs::model::DlModel;
+    let cluster = scaled_cluster();
+    let slot = 360.0;
+    // ~512 arrivals per round; small counts still spread over 8 rounds.
+    let span_rounds = (n_jobs / 512).max(8);
+    let keep = 512usize;
+    let mut base = JobQueue::new();
+    for i in 0..n_jobs {
+        let arrival =
+            slot * span_rounds as f64 * (i as f64 / n_jobs as f64);
+        base.admit(Job::new(i as u64, DlModel::Lstm, arrival, 1, 1, 100))
+            .unwrap();
+    }
+    // Warm to mid-stream steady state with the same per-round lifecycle
+    // the timed window applies.
+    let warm_rounds = span_rounds / 2;
+    for r in 0..warm_rounds {
+        let now = r as f64 * slot;
+        base.poll_round(now);
+        let act = base.waiting();
+        for &id in act.iter().take(act.len().saturating_sub(keep)) {
+            base.complete(id, now);
+        }
+    }
+    let window = 32usize;
+    let start = warm_rounds;
+    // One timed pass over the steady-state window: per round, read the
+    // waiting set and the next arrival, then retire everything beyond
+    // the newest `keep` jobs. The retire cost is identical on both
+    // sides; only the boundary reads differ.
+    let measure = |use_index: bool| {
+        let mut best = f64::INFINITY;
+        let mut rounds: Vec<(Vec<JobId>, Option<f64>)> = Vec::new();
+        for _ in 0..iters.max(1) {
+            let mut q = base.clone();
+            rounds.clear();
+            let t0 = Instant::now();
+            for r in 0..window {
+                let now = (start + r) as f64 * slot;
+                let act = if use_index {
+                    q.poll_round(now);
+                    q.waiting()
+                } else {
+                    q.active_at(now)
+                };
+                let next = q.next_arrival_after(now);
+                for &id in
+                    act.iter().take(act.len().saturating_sub(keep))
+                {
+                    q.complete(id, now);
+                }
+                rounds.push((act, next));
+            }
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        (best, rounds)
+    };
+    let (ref_ms, ref_rounds) = measure(false);
+    let (opt_ms, opt_rounds) = measure(true);
+    out.push(CaseResult {
+        name: format!("delta_{}_{n_jobs}jobs", cluster.name),
+        path: "delta",
+        cluster: cluster.name.clone(),
+        jobs: n_jobs,
+        ref_ms,
+        opt_ms,
+        speedup: if opt_ms > 0.0 { ref_ms / opt_ms } else { 0.0 },
+        check: "plans-equal",
+        plans_equal: ref_rounds == opt_rounds,
+    });
+}
+
 /// Above this queue size the `hadar_stream_*` serial-reference row is
 /// skipped: `RefHadar`'s per-comparison `t_min` sorts dominate its wall
 /// time there, so the ratio stops measuring the solver. The optimised
@@ -403,7 +501,7 @@ const HADAR_REF_JOB_CAP: usize = 200_000;
 fn run_hadar_stream_cases(iters: usize, n_jobs: usize,
                           out: &mut Vec<CaseResult>) {
     use crate::sched::hadar::HadarConfig;
-    use crate::sched::hadare::resolve_plan_threads;
+    use crate::sched::resolve_plan_threads;
     let cluster = scaled_cluster();
     let queue = case_queue(&cluster, n_jobs);
     let active = queue.active_at(0.0);
@@ -415,6 +513,7 @@ fn run_hadar_stream_cases(iters: usize, n_jobs: usize,
         horizon: 1e7,
         queue: &queue,
         active: &active,
+        delta: None,
         cluster: &cluster,
     };
 
@@ -490,6 +589,7 @@ fn run_hadar_stream_cases(iters: usize, n_jobs: usize,
         horizon: 1e7,
         queue: &queue,
         active: &active,
+        delta: None,
         cluster: &cluster,
     };
     let (cold_ms, _) = time_decision(iters, || Box::new(Hadar::new()), &ctx1);
@@ -548,6 +648,7 @@ pub fn run_suite_with(quick: bool, hadare_stream_jobs: Option<&[usize]>,
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let (ref_ms, ref_plan) =
@@ -583,6 +684,7 @@ pub fn run_suite_with(quick: bool, hadare_stream_jobs: Option<&[usize]>,
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let (ref_ms, ref_plan) = time_hadare_decision(
@@ -621,6 +723,7 @@ pub fn run_suite_with(quick: bool, hadare_stream_jobs: Option<&[usize]>,
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let (ref_ms, _) = time_hadare_decision(
@@ -655,6 +758,12 @@ pub fn run_suite_with(quick: bool, hadare_stream_jobs: Option<&[usize]>,
     // same preset.
     for &n_jobs in hadar_jobs {
         run_hadar_stream_cases(stream_iters, n_jobs, &mut out);
+    }
+
+    // Delta rows: the queue layer's round-boundary cost (full scan vs
+    // the indexed delta pipeline) at the same streaming job counts.
+    for &n_jobs in hadar_jobs {
+        run_delta_cases(stream_iters, n_jobs, &mut out);
     }
     out
 }
@@ -815,6 +924,8 @@ mod tests {
                 "hadar 1-vs-N-worker row present");
         assert!(results.iter().any(|r| r.path == "hadar-incr"),
                 "hadar cold-vs-incremental row present");
+        assert!(results.iter().any(|r| r.path == "delta"),
+                "queue delta-pipeline row present");
         for r in &results {
             let want = match r.path {
                 "fork-shared" => "occupancy",

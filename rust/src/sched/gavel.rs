@@ -212,6 +212,7 @@ mod tests {
             horizon: 100_000.0,
             queue,
             active,
+            delta: None,
             cluster,
         }
     }
@@ -223,7 +224,7 @@ mod tests {
         // with >= 3), never mixing.
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 3));
+        queue.admit(mk_job(1, 3)).unwrap();
         let active = vec![JobId(1)];
         let mut g = Gavel::new();
         let plan = g.schedule(&ctx(&queue, &active, &cluster));
@@ -237,7 +238,7 @@ mod tests {
         // 4-GPU job: no type has 4 free -> must wait (Hadar would run it).
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 4));
+        queue.admit(mk_job(1, 4)).unwrap();
         let active = vec![JobId(1)];
         let mut g = Gavel::new();
         let plan = g.schedule(&ctx(&queue, &active, &cluster));
@@ -250,8 +251,8 @@ mod tests {
         // priority drops and J2 gets the fast type.
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 2));
-        queue.admit(mk_job(2, 2));
+        queue.admit(mk_job(1, 2)).unwrap();
+        queue.admit(mk_job(2, 2)).unwrap();
         let active = vec![JobId(1), JobId(2)];
         let mut g = Gavel::new();
         let p1 = g.schedule(&ctx(&queue, &active, &cluster));
@@ -277,8 +278,8 @@ mod tests {
     fn job_completed_drops_service_history() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 2));
-        queue.admit(mk_job(2, 2));
+        queue.admit(mk_job(1, 2)).unwrap();
+        queue.admit(mk_job(2, 2)).unwrap();
         let active = vec![JobId(1), JobId(2)];
         let mut g = Gavel::new();
         let _ = g.schedule(&ctx(&queue, &active, &cluster));
@@ -317,8 +318,8 @@ mod tests {
         for g in GpuType::ALL {
             bad.set_throughput(g, f64::NAN);
         }
-        queue.admit(bad);
-        queue.admit(mk_job(2, 2));
+        queue.admit(bad).unwrap();
+        queue.admit(mk_job(2, 2)).unwrap();
         let active = vec![JobId(1), JobId(2)];
         let mut g = Gavel::new();
         let plan = g.schedule(&ctx(&queue, &active, &cluster));

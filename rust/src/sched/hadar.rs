@@ -61,7 +61,8 @@ use crate::jobs::job::{Job, JobId};
 use crate::obs;
 use crate::sched::alloc::{JobAllocation, RoundPlan};
 use crate::sched::price::{PriceBounds, PriceTable};
-use crate::sched::{RoundCtx, Scheduler, SolverStats};
+use crate::jobs::queue::JobQueue;
+use crate::sched::{RoundCtx, RoundDelta, Scheduler, SolverStats};
 use std::collections::{BTreeMap, HashMap};
 
 /// Tunables (ablated in `benches/ablation_*.rs`).
@@ -89,7 +90,7 @@ pub struct HadarConfig {
     /// to the `HADAR_PLAN_THREADS` environment variable (the same knob
     /// the HadarE planner shards on), then to
     /// `min(4, available_parallelism)` — resolved once at construction
-    /// ([`crate::sched::hadare::resolve_plan_threads`]). Plans are
+    /// ([`crate::sched::resolve_plan_threads`]). Plans are
     /// bit-identical at any value.
     pub plan_threads: usize,
 }
@@ -294,7 +295,7 @@ impl Hadar {
     /// Hadar with explicit tunables (the ablation benches use this).
     pub fn with_config(cfg: HadarConfig) -> Self {
         Hadar {
-            threads: crate::sched::hadare::resolve_plan_threads(
+            threads: crate::sched::resolve_plan_threads(
                 cfg.plan_threads,
             ),
             cfg,
@@ -927,6 +928,27 @@ impl Scheduler for Hadar {
         self.prev_plan.allocations.remove(&job);
     }
 
+    /// Fold the round boundary's diff into the cross-round caches:
+    /// completions drop their type-order / `NoneRow` / carried-plan
+    /// entries (idempotent with [`Scheduler::job_completed`], which the
+    /// engines also call), and arrivals pre-compute their
+    /// descending-throughput type order so `FIND_ALLOC` never derives it
+    /// mid-round from the full list. A pure cache fold: none of these
+    /// operations touch [`HadarStats`], so plans *and* solver stats stay
+    /// bit-identical whether the engine feeds the delta or not (pinned
+    /// by `rust/tests/prop_delta.rs`).
+    fn observe_delta(&mut self, delta: &RoundDelta, queue: &JobQueue) {
+        for &id in &delta.completions {
+            self.forget_job(id);
+            self.prev_plan.allocations.remove(&id);
+        }
+        for &id in &delta.arrivals {
+            if let Some(job) = queue.get(id) {
+                Self::cached_type_order(&mut self.type_order, job);
+            }
+        }
+    }
+
     /// Hadar's cumulative [`HadarStats`], mapped onto the generic
     /// telemetry shape — this is how memo efficiency reaches sweep
     /// artifacts and per-round telemetry instead of dying in-process.
@@ -961,7 +983,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 40.0);
             j.set_throughput(GpuType::P100, 25.0);
             j.set_throughput(GpuType::K80, 8.0);
-            q.admit(j);
+            q.admit(j).unwrap();
         }
         q
     }
@@ -975,6 +997,7 @@ mod tests {
             horizon: 100_000.0,
             queue,
             active,
+            delta: None,
             cluster,
         }
     }
@@ -1000,7 +1023,7 @@ mod tests {
         j.set_throughput(GpuType::V100, 40.0);
         j.set_throughput(GpuType::P100, 25.0);
         j.set_throughput(GpuType::K80, 8.0);
-        queue.admit(j);
+        queue.admit(j).unwrap();
         let active = vec![JobId(1)];
         let mut hadar = Hadar::new();
         let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
@@ -1051,7 +1074,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 60.0);
             j.set_throughput(GpuType::P100, 40.0);
             j.set_throughput(GpuType::K80, 15.0);
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active: Vec<JobId> = (0..40).map(JobId).collect();
         let mut hadar = Hadar::new();
@@ -1118,7 +1141,7 @@ mod tests {
             if id == 7 {
                 j.weight = f64::NAN;
             }
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active: Vec<JobId> = (0..20).map(JobId).collect();
         let mut hadar = Hadar::new();
@@ -1135,13 +1158,13 @@ mod tests {
         let mut queue = JobQueue::new();
         let mut j_nan = Job::new(1, DlModel::Lstm, 0.0, 2, 2, 100);
         j_nan.set_throughput(GpuType::V100, f64::NAN);
-        queue.admit(j_nan);
+        queue.admit(j_nan).unwrap();
         let mut j_zero = Job::new(2, DlModel::Lstm, 0.0, 2, 2, 100);
         j_zero.set_throughput(GpuType::V100, 0.0);
-        queue.admit(j_zero);
+        queue.admit(j_zero).unwrap();
         let mut j_ok = Job::new(3, DlModel::Lstm, 0.0, 2, 2, 100);
         j_ok.set_throughput(GpuType::V100, 40.0);
-        queue.admit(j_ok);
+        queue.admit(j_ok).unwrap();
         let active = vec![JobId(1), JobId(2), JobId(3)];
         let mut hadar = Hadar::new();
         let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
@@ -1164,7 +1187,7 @@ mod tests {
             if id % 4 != 0 {
                 j.set_throughput(GpuType::K80, 5.0 + (id % 7) as f64);
             }
-            q.admit(j);
+            q.admit(j).unwrap();
         }
         (q, (0..n).map(JobId).collect())
     }
@@ -1213,7 +1236,7 @@ mod tests {
         j.set_throughput(GpuType::V100, 40.0);
         j.set_throughput(GpuType::P100, 25.0);
         j.set_throughput(GpuType::K80, 8.0);
-        queue.admit(j);
+        queue.admit(j).unwrap();
         let active = vec![JobId(1)];
         let mut hadar = Hadar::new();
         let plan = hadar.schedule(&ctx(&queue, &active, &cluster));
@@ -1238,7 +1261,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 60.0);
             j.set_throughput(GpuType::P100, 40.0);
             j.set_throughput(GpuType::K80, 15.0);
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active: Vec<JobId> = (0..40).map(JobId).collect();
         let mut hadar = Hadar::with_config(HadarConfig {
@@ -1273,7 +1296,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 60.0);
             j.set_throughput(GpuType::P100, 40.0);
             j.set_throughput(GpuType::K80, 15.0);
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let active: Vec<JobId> = (0..80).map(JobId).collect();
         let mut hadar = Hadar::with_config(HadarConfig {

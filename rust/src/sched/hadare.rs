@@ -129,7 +129,7 @@
 //! stable sort. Plans are therefore **bit-identical at any thread
 //! count** (pinned by `rust/tests/hadare_stream.rs` at 1/2/8 workers).
 //! The worker count comes from [`GangConfig::plan_threads`] via
-//! [`resolve_plan_threads`]; tiny inputs stay serial.
+//! [`crate::sched::resolve_plan_threads`]; tiny inputs stay serial.
 //!
 //! §Perf: `plan_round` follows the PR-3 zero-clone idiom — the per-round
 //! `BTreeMap`s (`node_load`, `copies_used`, `placed_on`) are flat
@@ -174,7 +174,7 @@ pub struct GangConfig {
     pub share_nodes: bool,
     /// Worker threads for the sharded gang-matrix build and candidate
     /// sort. `0` (the default) resolves at planner construction via
-    /// [`resolve_plan_threads`]: the `HADAR_PLAN_THREADS` environment
+    /// [`crate::sched::resolve_plan_threads`]: the `HADAR_PLAN_THREADS`
     /// variable if set to a positive integer, else
     /// `min(4, available_parallelism)`. Plans are **bit-identical at any
     /// thread count** (deterministic merge order, pinned by
@@ -212,32 +212,12 @@ const SHARD_MIN_CELLS: usize = 1 << 14;
 /// reason.
 const SHARD_MIN_CANDS: usize = 1 << 14;
 
-/// Parse a `HADAR_PLAN_THREADS`-style override. `None`, empty, garbage
-/// and `0` all mean "no override" (the zero case so exporting
-/// `HADAR_PLAN_THREADS=0` behaves like unsetting it).
-fn threads_from(raw: Option<&str>) -> Option<usize> {
-    raw.and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-}
-
-/// Resolve a [`GangConfig::plan_threads`] setting to a concrete worker
-/// count: an explicit positive value wins; `0` falls back to the
-/// `HADAR_PLAN_THREADS` environment variable, then to
-/// `min(4, available_parallelism)`. Called once at planner construction
-/// so a round never re-reads the environment.
+/// Moved to [`crate::sched::resolve_plan_threads`] (it is shared by the
+/// Hadar planner and `sched::bench`, not HadarE-specific). This
+/// forwarding shim keeps the old path compiling for external callers.
+#[deprecated(note = "moved to crate::sched::resolve_plan_threads")]
 pub fn resolve_plan_threads(configured: usize) -> usize {
-    if configured > 0 {
-        return configured;
-    }
-    if let Some(n) =
-        threads_from(std::env::var("HADAR_PLAN_THREADS").ok().as_deref())
-    {
-        return n;
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(4)
+    crate::sched::resolve_plan_threads(configured)
 }
 
 /// Shared tail of the gang rate model, so the three public rating
@@ -568,18 +548,43 @@ impl Tables {
 /// keeps id order on ties). The engine registers every parent with the
 /// tracker up front, so arrival gates here — a parent with `arrival >
 /// now` must not train before it exists.
+///
+/// When the caller supplies the waiting set (`ctx.active`, the queue's
+/// persistent delta-maintained index, id-ordered exactly like
+/// [`JobTracker::parents`]), candidates come from it in O(active)
+/// instead of scanning every parent ever registered — the HadarE-side
+/// half of the delta round pipeline. Both paths apply the same
+/// unfinished + arrived filters, so they select the identical parent
+/// set whenever `ctx.active` covers the arrived, incomplete parents
+/// (pinned by `rust/tests/prop_delta.rs`). An empty `ctx.active` falls
+/// back to the full tracker scan (one-shot contexts, the frozen
+/// reference tests).
 fn sorted_parents(ctx: &RoundCtx, tracker: &JobTracker)
                   -> Vec<(JobId, f64)> {
-    let mut parents: Vec<(JobId, f64)> = tracker
-        .parents()
-        .filter(|(_, p)| !p.is_complete())
-        .filter(|&(&id, _)| {
-            ctx.queue
-                .get(id)
-                .map_or(false, |j| j.arrival <= ctx.now)
-        })
-        .map(|(&id, p)| (id, p.remaining()))
-        .collect();
+    let arrived = |id: JobId| {
+        ctx.queue
+            .get(id)
+            .map_or(false, |j| j.arrival <= ctx.now)
+    };
+    let mut parents: Vec<(JobId, f64)> = if ctx.active.is_empty() {
+        tracker
+            .parents()
+            .filter(|(_, p)| !p.is_complete())
+            .filter(|&(&id, _)| arrived(id))
+            .map(|(&id, p)| (id, p.remaining()))
+            .collect()
+    } else {
+        ctx.active
+            .iter()
+            .filter(|&&id| arrived(id))
+            .filter_map(|&id| {
+                tracker
+                    .parent(id)
+                    .filter(|p| !p.is_complete())
+                    .map(|p| (id, p.remaining()))
+            })
+            .collect()
+    };
     parents.sort_by(|a, b| b.1.total_cmp(&a.1));
     parents
 }
@@ -782,13 +787,13 @@ impl HadarE {
 
     /// Planner with explicit gang-model knobs. The sharding worker count
     /// is resolved here, once, from `gang.plan_threads`
-    /// ([`resolve_plan_threads`]).
+    /// environment override ([`crate::sched::resolve_plan_threads`]).
     pub fn with_gang(copies: u64, gang: GangConfig) -> Self {
         HadarE {
             copies,
             gang,
             stats: WarmStats::default(),
-            threads: resolve_plan_threads(gang.plan_threads),
+            threads: crate::sched::resolve_plan_threads(gang.plan_threads),
             rows: BTreeMap::new(),
             rows_sig: 0,
         }
@@ -865,8 +870,17 @@ impl HadarE {
         }
 
         // Row-cache validity: any slot-inventory change (cluster event,
-        // mode flip) clears every cached row.
-        let sig = slots_sig(&slots, self.gang.share_nodes);
+        // mode flip) clears every cached row. A round delta with zero
+        // cluster events guarantees the inventory is unchanged since the
+        // previous round, so the cached signature stays valid without
+        // recomputing the FNV fold over every slot — the delta-fed
+        // invalidation path. Anything else (no delta, events > 0, no
+        // cache yet) recomputes and compares as before, so a caller that
+        // replans from the full list gets identical behaviour.
+        let sig = match ctx.delta {
+            Some(d) if d.events == 0 && self.rows_sig != 0 => self.rows_sig,
+            _ => slots_sig(&slots, self.gang.share_nodes),
+        };
         if sig != self.rows_sig {
             if self.rows_sig != 0 {
                 self.stats.invalidations += 1;
@@ -1240,7 +1254,7 @@ mod tests {
                     .map(|i| ids.copy_id(j.id, i))
                     .collect::<Vec<_>>(),
             );
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         (cluster, queue, tracker)
     }
@@ -1258,6 +1272,7 @@ mod tests {
             horizon: 100_000.0,
             queue,
             active: &[],
+            delta: None,
             cluster,
         }
     }
@@ -1429,7 +1444,7 @@ mod tests {
                 j.total_iters(),
                 &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
             );
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let mut h = HadarE::new(5);
         // now = 0: only parent 0 exists.
@@ -1560,7 +1575,7 @@ mod tests {
                 j.total_iters(),
                 &(1..=5).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
             );
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         let mut h = HadarE::new(5);
         let plan = h.plan_round(&ctx(&queue, &cluster), &tracker);
@@ -1569,19 +1584,6 @@ mod tests {
             assert_eq!(tracker.resolve(id), JobId(1),
                        "only the well-formed parent runs");
         }
-    }
-
-    #[test]
-    fn thread_override_parsing() {
-        assert_eq!(threads_from(None), None);
-        assert_eq!(threads_from(Some("")), None);
-        assert_eq!(threads_from(Some("banana")), None);
-        assert_eq!(threads_from(Some("0")), None, "0 = unset");
-        assert_eq!(threads_from(Some("4")), Some(4));
-        assert_eq!(threads_from(Some(" 8 ")), Some(8));
-        // Explicit config always beats the fallbacks.
-        assert_eq!(resolve_plan_threads(3), 3);
-        assert!(resolve_plan_threads(0) >= 1);
     }
 
     #[test]
@@ -1700,7 +1702,7 @@ mod tests {
             j.set_throughput(GpuType::K80, 10.0);
             tracker.register(j.id, j.total_iters(),
                              &[ids.copy_id(j.id, 1)]);
-            queue.admit(j);
+            queue.admit(j).unwrap();
         }
         // Parent 1 has less work left → parent 0 picks first.
         tracker.report_steps(ids.copy_id(JobId(1), 1), 500.0);

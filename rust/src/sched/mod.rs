@@ -19,6 +19,8 @@ use crate::cluster::spec::ClusterSpec;
 use crate::jobs::job::JobId;
 use crate::jobs::queue::JobQueue;
 
+pub use crate::jobs::queue::RoundDelta;
+
 /// Everything a scheduler sees in one round.
 pub struct RoundCtx<'a> {
     /// Round number (0-based).
@@ -33,6 +35,14 @@ pub struct RoundCtx<'a> {
     pub queue: &'a JobQueue,
     /// Arrived, incomplete jobs (waiting set `Q`).
     pub active: &'a [JobId],
+    /// What changed since the previous round — arrivals, completions,
+    /// preemptions, cluster events ([`JobQueue::poll_round`] plus the
+    /// engine's event count). `None` when the caller replans from the
+    /// full list (one-shot contexts, benches, the frozen references);
+    /// delta-aware schedulers must then fall back to full derivation.
+    /// When `Some`, the delta is exact: every change since the last
+    /// `schedule` call on this instance is listed.
+    pub delta: Option<&'a RoundDelta>,
     /// The cluster **as of this round**. Under a cluster event timeline
     /// (node joins/drains, capacity changes — see
     /// [`crate::cluster::events`]) this changes between rounds, so
@@ -103,6 +113,19 @@ pub trait Scheduler {
     fn solver_stats(&self) -> Option<SolverStats> {
         None
     }
+
+    /// Fold a round boundary's [`RoundDelta`] into cross-round state
+    /// *before* [`Scheduler::schedule`] runs. The engines call this once
+    /// per scheduled round with the exact diff since the previous call
+    /// (idle-skipped boundaries are merged in). The default adapter does
+    /// nothing — delta-unaware schedulers (Gavel, Tiresias, YARN-CS, the
+    /// frozen references) keep deriving everything from `ctx.active` /
+    /// `ctx.queue` and behave identically. Delta-aware schedulers
+    /// (Hadar) use it to prime/drop per-job caches incrementally instead
+    /// of re-deriving them from the full list. Must be a pure cache
+    /// fold: plans and [`SolverStats`] have to come out bit-identical
+    /// whether or not it is called (the `prop_delta` suite pins this).
+    fn observe_delta(&mut self, _delta: &RoundDelta, _queue: &JobQueue) {}
 }
 
 /// Construct a scheduler by name (CLI surface).
@@ -152,3 +175,52 @@ pub fn is_known(name: &str) -> bool {
 
 /// All baseline names, in the paper's comparison order.
 pub const SCHEDULER_NAMES: [&str; 4] = ["yarn-cs", "tiresias", "gavel", "hadar"];
+
+/// Parse a `HADAR_PLAN_THREADS`-style override. `None`, empty, garbage
+/// and `0` all mean "no override" (the zero case so exporting
+/// `HADAR_PLAN_THREADS=0` behaves like unsetting it).
+fn threads_from(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// Resolve a plan-worker setting ([`hadare::GangConfig::plan_threads`],
+/// [`hadar::HadarConfig::plan_threads`]) to a concrete worker count: an
+/// explicit positive value wins; `0` falls back to the
+/// `HADAR_PLAN_THREADS` environment variable, then to
+/// `min(4, available_parallelism)`. Called once at planner construction
+/// so a round never re-reads the environment. Shared by the Hadar and
+/// HadarE planners and `sched::bench`; thread count is a pure throughput
+/// dial — plans and stats are bit-identical at any value.
+pub fn resolve_plan_threads(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    if let Some(n) =
+        threads_from(std::env::var("HADAR_PLAN_THREADS").ok().as_deref())
+    {
+        return n;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(threads_from(None), None);
+        assert_eq!(threads_from(Some("")), None);
+        assert_eq!(threads_from(Some("banana")), None);
+        assert_eq!(threads_from(Some("0")), None, "0 = unset");
+        assert_eq!(threads_from(Some("4")), Some(4));
+        assert_eq!(threads_from(Some(" 8 ")), Some(8));
+        // Explicit config always beats the fallbacks.
+        assert_eq!(resolve_plan_threads(3), 3);
+        assert!(resolve_plan_threads(0) >= 1);
+    }
+}

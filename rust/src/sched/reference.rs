@@ -563,7 +563,7 @@ mod tests {
         j.set_throughput(GpuType::V100, 40.0);
         j.set_throughput(GpuType::P100, 25.0);
         j.set_throughput(GpuType::K80, 8.0);
-        queue.admit(j);
+        queue.admit(j).unwrap();
         let active = vec![JobId(1)];
         let mut s = RefHadar::new();
         let ctx = RoundCtx {
@@ -573,6 +573,7 @@ mod tests {
             horizon: 100_000.0,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let plan = s.schedule(&ctx);
@@ -600,7 +601,7 @@ mod tests {
             j.total_iters(),
             &(1..=15).map(|i| ids.copy_id(j.id, i)).collect::<Vec<_>>(),
         );
-        queue.admit(j);
+        queue.admit(j).unwrap();
         let mut r = RefHadarE::new(15);
         let ctx = RoundCtx {
             round: 0,
@@ -609,6 +610,7 @@ mod tests {
             horizon: 100_000.0,
             queue: &queue,
             active: &[],
+            delta: None,
             cluster: &cluster,
         };
         let plan = r.plan_round(&ctx, &tracker);

@@ -164,6 +164,7 @@ mod tests {
             horizon: 100_000.0,
             queue,
             active,
+            delta: None,
             cluster,
         }
     }
@@ -172,7 +173,7 @@ mod tests {
     fn single_type_gangs_only() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 4, 0.0)); // no type has 4
+        queue.admit(mk_job(1, 4, 0.0)).unwrap(); // no type has 4
         let active = vec![JobId(1)];
         let mut t = Tiresias::new();
         let plan = t.schedule(&ctx(&queue, &active, &cluster));
@@ -183,8 +184,8 @@ mod tests {
     fn las_prioritises_low_attained_service() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 3, 0.0));
-        queue.admit(mk_job(2, 3, 5.0)); // later arrival
+        queue.admit(mk_job(1, 3, 0.0)).unwrap();
+        queue.admit(mk_job(2, 3, 5.0)).unwrap(); // later arrival
         let active = vec![JobId(1), JobId(2)];
         let mut t = Tiresias::new();
         // J1 has consumed a lot of service -> demoted to queue 1.
@@ -199,8 +200,8 @@ mod tests {
     fn fifo_within_queue() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 3, 10.0));
-        queue.admit(mk_job(2, 3, 0.0)); // earlier
+        queue.admit(mk_job(1, 3, 10.0)).unwrap();
+        queue.admit(mk_job(2, 3, 0.0)).unwrap(); // earlier
         let active = vec![JobId(1), JobId(2)];
         let mut t = Tiresias::new();
         let plan = t.schedule(&ctx(&queue, &active, &cluster));
@@ -222,7 +223,7 @@ mod tests {
     fn service_recorded_per_round() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 2, 0.0));
+        queue.admit(mk_job(1, 2, 0.0)).unwrap();
         let active = vec![JobId(1)];
         let mut t = Tiresias::new();
         let _ = t.schedule(&ctx(&queue, &active, &cluster));
@@ -237,8 +238,8 @@ mod tests {
         // place jobs.
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 2, f64::NAN));
-        queue.admit(mk_job(2, 2, 0.0));
+        queue.admit(mk_job(1, 2, f64::NAN)).unwrap();
+        queue.admit(mk_job(2, 2, 0.0)).unwrap();
         let active = vec![JobId(1), JobId(2)];
         let mut t = Tiresias::new();
         let plan = t.schedule(&ctx(&queue, &active, &cluster));

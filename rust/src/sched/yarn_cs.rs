@@ -174,6 +174,7 @@ mod tests {
             horizon: 100_000.0,
             queue,
             active,
+            delta: None,
             cluster,
         }
     }
@@ -182,9 +183,9 @@ mod tests {
     fn fifo_with_backfill() {
         let cluster = ClusterSpec::motivational(); // 6 GPUs
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 5, 0.0)); // takes most of the cluster
-        queue.admit(mk_job(2, 4, 1.0)); // cannot fit -> waits
-        queue.admit(mk_job(3, 1, 2.0)); // backfills the last GPU
+        queue.admit(mk_job(1, 5, 0.0)).unwrap(); // takes most of the cluster
+        queue.admit(mk_job(2, 4, 1.0)).unwrap(); // cannot fit -> waits
+        queue.admit(mk_job(3, 1, 2.0)).unwrap(); // backfills the last GPU
         let active = vec![JobId(1), JobId(2), JobId(3)];
         let mut y = YarnCs::new();
         let plan = y.schedule(&ctx(&queue, &active, &cluster));
@@ -197,7 +198,7 @@ mod tests {
     fn allocations_are_pinned_until_completion() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 2, 0.0));
+        queue.admit(mk_job(1, 2, 0.0)).unwrap();
         let active = vec![JobId(1)];
         let mut y = YarnCs::new();
         let p1 = y.schedule(&ctx(&queue, &active, &cluster));
@@ -219,7 +220,7 @@ mod tests {
     fn mixes_types_when_no_single_type_fits() {
         let cluster = ClusterSpec::motivational();
         let mut queue = JobQueue::new();
-        queue.admit(mk_job(1, 5, 0.0));
+        queue.admit(mk_job(1, 5, 0.0)).unwrap();
         let active = vec![JobId(1)];
         let mut y = YarnCs::new();
         let plan = y.schedule(&ctx(&queue, &active, &cluster));

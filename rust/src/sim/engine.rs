@@ -201,6 +201,11 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
     let mut sched_wall = 0.0;
     let mut timeline = Vec::new();
     let mut changed_rounds = 0u64;
+    // Round boundaries accumulate into this delta until a scheduling
+    // round consumes it — idle skips to the next arrival carry their
+    // arrivals/completions/events forward instead of dropping them, so
+    // the delta a scheduler observes is exact across skipped boundaries.
+    let mut carry = crate::sched::RoundDelta::default();
 
     while !queue.all_complete() && round < cfg.max_rounds {
         let _round_span = obs::trace::span("sim.round");
@@ -232,6 +237,7 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                     queue.get(id).map_or(false, |j| !j.is_complete());
                 if live {
                     scheduler.preempt(id);
+                    queue.note_preempted(id);
                     if let Some(job) = queue.get_mut(id) {
                         job.status = JobStatus::Queued;
                     }
@@ -241,9 +247,17 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
         }
         drop(event_span);
 
-        let active = queue.active_at(now);
+        // Delta production: drain this boundary's arrivals into the
+        // persistent waiting set and fold in the buffered completions /
+        // preemptions plus the cluster events just applied. O(changes),
+        // not O(jobs ever admitted).
+        let mut boundary = queue.poll_round(now);
+        boundary.events = view.events_applied() - events_before;
+        carry.merge(boundary);
+        let active = queue.waiting();
         if active.is_empty() {
-            // Idle until the next arrival.
+            // Idle until the next arrival; `carry` keeps this boundary's
+            // delta for the round that eventually schedules.
             match queue.next_arrival_after(now) {
                 Some(t) => {
                     now = t;
@@ -252,6 +266,8 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 None => break,
             }
         }
+        let delta = std::mem::take(&mut carry);
+        scheduler.observe_delta(&delta, queue);
         let (plan, round_wall) = {
             let ctx = RoundCtx {
                 round,
@@ -260,6 +276,7 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 horizon: cfg.horizon,
                 queue,
                 active: &active,
+                delta: Some(&delta),
                 cluster: view.cluster(),
             };
             let t0 = Instant::now();
@@ -315,6 +332,7 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
             let used_secs = (need / rate).min(eff);
             job.progress += rate * used_secs;
             job.status = JobStatus::Running;
+            let done = job.is_complete();
             rec.busy_gpu_secs += alloc.total_gpus() as f64 * used_secs;
             rec.alloc_gpu_secs += alloc.total_gpus() as f64 * cfg.slot_secs;
             if record_timeline {
@@ -328,10 +346,11 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                     },
                 );
             }
-            if job.is_complete() {
+            if done {
+                // Through the queue so the waiting-set index and the
+                // next round's delta see the completion.
                 let f = now + overhead + used_secs;
-                job.finish_time = Some(f);
-                job.status = JobStatus::Completed;
+                queue.complete(id, f);
                 last_finish = last_finish.max(f);
                 completed_now.push(id);
             }
@@ -348,6 +367,9 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
             let m = obs::metrics::core();
             m.sim_rounds.add(1);
             m.sim_queue_depth.set(active.len() as f64);
+            m.sim_active_jobs.set(active.len() as f64);
+            m.sim_delta_arrivals.add(delta.arrivals.len() as u64);
+            m.sim_delta_completions.add(delta.completions.len() as u64);
             m.sim_preemptions.add(preemptions - preempts_before);
             m.sim_restart_charges.add(restart_charges);
             m.sched_round_secs.record(round_wall);
@@ -464,7 +486,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 60.0);
             j.set_throughput(GpuType::P100, 40.0);
             j.set_throughput(GpuType::K80, 15.0);
-            q.admit(j);
+            q.admit(j).unwrap();
         }
         q
     }
@@ -511,7 +533,7 @@ mod tests {
         let mut q = JobQueue::new();
         let mut j = Job::new(0, DlModel::Lstm, 1000.0, 1, 1, 10);
         j.set_throughput(GpuType::V100, 60.0);
-        q.admit(j);
+        q.admit(j).unwrap();
         let res = run(&mut q, &mut sched::hadar::Hadar::new(), &cluster,
                       &SimConfig::default(), false);
         let job = q.get(JobId(0)).unwrap();
@@ -573,8 +595,8 @@ mod tests {
         // preempted; it pays the 10 s restart exactly once when re-placed.
         let cluster = duo_cluster();
         let mut q = JobQueue::new();
-        q.admit(duo_job(0, 50)); // 5000 iters
-        q.admit(duo_job(1, 14)); // 1400 iters
+        q.admit(duo_job(0, 50)).unwrap(); // 5000 iters
+        q.admit(duo_job(1, 14)).unwrap(); // 1400 iters
         let mut events = EventTimeline::empty();
         events.push(360.0, EventKind::Leave { node: 0 });
         let mut sched = sched::yarn_cs::YarnCs::new();
@@ -624,8 +646,8 @@ mod tests {
             j
         };
         let mut q = JobQueue::new();
-        q.admit(mk(0));
-        q.admit(mk(1));
+        q.admit(mk(0)).unwrap();
+        q.admit(mk(1)).unwrap();
         let mut events = EventTimeline::empty();
         events.push(
             360.0,
@@ -647,7 +669,7 @@ mod tests {
     fn bad_event_timeline_is_a_clear_error() {
         let cluster = duo_cluster();
         let mut q = JobQueue::new();
-        q.admit(duo_job(0, 1));
+        q.admit(duo_job(0, 1)).unwrap();
         let mut events = EventTimeline::empty();
         events.push(10.0, EventKind::Leave { node: 42 });
         let err = run_with_events(&mut q, &mut sched::hadar::Hadar::new(),
@@ -671,7 +693,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 60.0);
             j.set_throughput(GpuType::P100, 40.0);
             j.set_throughput(GpuType::K80, 15.0);
-            q.admit(j);
+            q.admit(j).unwrap();
         }
         let mut hadar = crate::sched::hadar::Hadar::new();
         let res = run(&mut q, &mut hadar, &cluster, &SimConfig::default(),
@@ -693,7 +715,7 @@ mod tests {
             j.set_throughput(GpuType::V100, 40.0);
             j.set_throughput(GpuType::P100, 25.0);
             j.set_throughput(GpuType::K80, 8.0);
-            q.admit(j);
+            q.admit(j).unwrap();
             q
         };
         let cfg = SimConfig {

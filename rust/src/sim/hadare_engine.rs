@@ -38,7 +38,7 @@ use crate::cluster::gpu::GpuType;
 use crate::cluster::spec::ClusterSpec;
 use crate::forking::forker::{fork, ForkIds};
 use crate::forking::tracker::JobTracker;
-use crate::jobs::job::{Job, JobId, JobStatus};
+use crate::jobs::job::{Job, JobId};
 use crate::jobs::queue::JobQueue;
 use crate::obs;
 use crate::obs::export::{RoundTelemetry, TelemetrySink};
@@ -142,13 +142,17 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
     let mut tracker = JobTracker::new(ids);
     let mut queue = JobQueue::new();
     for p in parents {
+        // Admit before registering so a duplicate parent id surfaces as
+        // a simulation error without leaving a half-registered tracker.
+        queue
+            .admit(p.clone())
+            .map_err(|e| format!("admitting parent failed: {e}"))?;
         let copy_jobs = fork(p, copies, ids);
         tracker.register(
             p.id,
             p.total_iters(),
             &copy_jobs.iter().map(|c| c.id).collect::<Vec<_>>(),
         );
-        queue.admit(p.clone());
     }
 
     let mut planner = HadarE::with_gang(copies, gang);
@@ -213,10 +217,25 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
                 }
             }
             preemptions += preempted.len() as u64;
+            // One delta entry per distinct preempted parent (a parent
+            // unbound on several nodes is still one queue-level
+            // preemption).
+            let parents_hit: BTreeSet<JobId> =
+                preempted.iter().map(|&(_, p)| p).collect();
+            for p in parents_hit {
+                queue.note_preempted(p);
+            }
         }
         drop(event_span);
 
-        let active = queue.active_at(now);
+        // Delta production: drain this boundary's arrivals into the
+        // persistent waiting set and fold in buffered completions /
+        // preemptions plus the cluster events just applied. The HadarE
+        // round loop never skips boundaries, so each round consumes its
+        // own boundary delta directly. O(changes), not O(parents).
+        let mut delta = queue.poll_round(now);
+        delta.events = view.events_applied() - events_before;
+        let active = queue.waiting();
         // Hand the planner the binding carry-over, resolved to parent
         // ids: warm start (fewer rescored rows) + switch-cost-aware
         // payoffs, with the same `restart_overhead` the engine charges
@@ -237,6 +256,7 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
                 horizon: cfg.horizon,
                 queue: &queue,
                 active: &active,
+                delta: Some(&delta),
                 cluster: view.cluster(),
             };
             let t0 = Instant::now();
@@ -376,6 +396,9 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
                 last_finish = last_finish.max(f);
                 completed_count += 1;
                 planner.job_completed(*parent);
+                // Through the queue so the waiting-set index and the
+                // next round's delta see the completion.
+                queue.complete(*parent, f);
             }
         }
 
@@ -383,6 +406,9 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
             let m = obs::metrics::core();
             m.sim_rounds.add(1);
             m.sim_queue_depth.set(active.len() as f64);
+            m.sim_active_jobs.set(active.len() as f64);
+            m.sim_delta_arrivals.add(delta.arrivals.len() as u64);
+            m.sim_delta_completions.add(delta.completions.len() as u64);
             m.sim_preemptions.add(preemptions - preempts_before);
             m.sim_restart_charges.add(restart_charges);
             m.sched_round_secs.record(round_wall);
@@ -425,13 +451,12 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
         now += cfg.slot_secs;
     }
 
-    // Mark queue state + collect metrics.
+    // Finished parents already went through [`JobQueue::complete`]
+    // (status + finish time); stamp their progress and collect metrics.
     let mut jct = BTreeMap::new();
     let mut finish_times = Vec::new();
     for job in queue.iter_mut() {
         if let Some(&f) = finish.get(&job.id) {
-            job.finish_time = Some(f);
-            job.status = JobStatus::Completed;
             job.progress = job.total_iters();
             jct.insert(job.id, f - job.arrival);
             finish_times.push(f);

@@ -41,7 +41,7 @@ fn stream_queue(cluster: &ClusterSpec, n_jobs: usize)
     });
     let mut queue = JobQueue::new();
     for j in materialize(&trace, cluster, 7) {
-        queue.admit(j);
+        queue.admit(j).unwrap();
     }
     let max_id = queue.iter().map(|j| j.id.0).max().unwrap_or(0);
     let ids = ForkIds {
@@ -79,6 +79,7 @@ fn planner_is_bit_identical_at_1_2_and_8_workers() {
         horizon: 1e7,
         queue: &queue,
         active: &active,
+        delta: None,
         cluster: &cluster,
     };
     // Carry-over from a round-0 plan, so the warm path is exercised
@@ -184,6 +185,7 @@ fn stale_bindings_to_removed_nodes_are_dropped_cleanly() {
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         warm.plan_round(&ctx, &tracker)
@@ -201,6 +203,7 @@ fn stale_bindings_to_removed_nodes_are_dropped_cleanly() {
             horizon: 1e7,
             queue: &queue,
             active: &active,
+            delta: None,
             cluster: &cluster,
         };
         let cold = HadarE::with_gang(copies, at(1));

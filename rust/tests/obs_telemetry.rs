@@ -36,7 +36,7 @@ fn run_hadar_sim60() -> (SimResult, String) {
     .unwrap();
     let mut queue = JobQueue::new();
     for j in jobs {
-        queue.admit(j);
+        queue.admit(j).unwrap();
     }
     let mut scheduler = sched::by_name("hadar").unwrap();
     let mut sink = TelemetrySink::in_memory(false);

@@ -1,0 +1,419 @@
+//! Delta-pipeline equivalence: a scheduler fed incremental round deltas
+//! ([`RoundDelta`] via [`RoundCtx::delta`] + `observe_delta`, with the
+//! queue driven through its indexed lifecycle API) must produce plans
+//! **and** solver statistics bit-identical to full-list replanning (the
+//! pre-refactor world: `active_at` scans, `delta: None`, job status
+//! mutated in place) across seeded churn/preemption/completion
+//! scenarios, several rounds deep, at `plan_threads` 1, 2, and 8.
+//!
+//! This is the non-negotiable gate on the round-pipeline refactor: the
+//! delta is an *optimisation channel*, never a behaviour channel. Any
+//! divergence — a plan, a `SolverStats` counter, a `WarmStats` counter
+//! — is a pipeline bug, not a tuning difference.
+//!
+//! Two universes run side by side from identical seeds:
+//!
+//! * **delta universe**: its own [`JobQueue`] driven through
+//!   [`JobQueue::poll_round`] / [`JobQueue::complete`] /
+//!   [`JobQueue::note_preempted`], with idle boundaries merging their
+//!   deltas into a carry exactly as the sim engine does, the waiting
+//!   set read from [`JobQueue::waiting`], and the scheduler observing
+//!   every delta;
+//! * **full universe**: its own [`JobQueue`] mutated the pre-refactor
+//!   way (status writes through `get_mut`), the waiting set rebuilt by
+//!   [`JobQueue::active_at`] every round, and `delta: None`.
+
+use hadar::cluster::gpu::{GpuType, PcieGen};
+use hadar::cluster::node::Node;
+use hadar::cluster::spec::ClusterSpec;
+use hadar::forking::forker::ForkIds;
+use hadar::forking::tracker::JobTracker;
+use hadar::jobs::job::{Job, JobId, JobStatus};
+use hadar::jobs::model::DlModel;
+use hadar::jobs::queue::JobQueue;
+use hadar::sched::hadar::{Hadar, HadarConfig};
+use hadar::sched::hadare::{GangConfig, HadarE, PrevRound};
+use hadar::sched::{RoundCtx, RoundDelta, RoundPlan, Scheduler};
+use hadar::util::prop::{check_no_shrink, Config};
+use hadar::util::rng::Rng;
+use std::collections::BTreeMap;
+
+const TYPES: [GpuType; 4] =
+    [GpuType::V100, GpuType::P100, GpuType::K80, GpuType::T4];
+
+/// Random heterogeneous cluster: 3-8 nodes, one random type of 1-4 GPUs
+/// per node.
+fn gen_cluster(rng: &mut Rng) -> ClusterSpec {
+    let n = rng.range_u(3, 8) as usize;
+    let nodes = (0..n)
+        .map(|id| {
+            let t = *rng.choice(&TYPES);
+            let cap = rng.range_u(1, 4) as usize;
+            Node::new(id, &format!("n{id}"), &[(t, cap)], PcieGen::Gen3)
+        })
+        .collect();
+    ClusterSpec::new("rand", nodes)
+}
+
+/// Random job with a staggered arrival (0-3 slots late), so scenarios
+/// exercise genuine mid-run arrivals flowing through the delta.
+fn gen_job(rng: &mut Rng, id: u64, slot: f64) -> Job {
+    let w = [1usize, 1, 2, 2, 3, 4][rng.below(6) as usize];
+    let epochs = rng.range_u(1, 8);
+    let mut j = Job::new(id, DlModel::Lstm, 0.0, w, epochs, 50);
+    j.arrival = slot * rng.below(4) as f64;
+    let base = rng.range_f(5.0, 80.0);
+    for (i, &g) in TYPES.iter().enumerate() {
+        if i == 0 || rng.f64() < 0.8 {
+            j.set_throughput(g, base * rng.range_f(0.1, 1.0));
+        }
+    }
+    j
+}
+
+fn plans_equal(a: &RoundPlan, b: &RoundPlan) -> bool {
+    a.allocations == b.allocations
+}
+
+/// Delta-fed Hadar vs full-list Hadar over ≥70 seeded scenarios: plans
+/// and [`hadar::sched::SolverStats`] must match round for round across
+/// staggered arrivals, engine-rule progress, completions, drain
+/// preemptions with node removal, and idle boundaries whose deltas
+/// carry forward — at `plan_threads` 1, 2, and 8 (rotated per
+/// scenario; the thread count must stay a pure throughput dial in the
+/// delta world too).
+#[test]
+fn prop_hadar_delta_fed_matches_full_replanning() {
+    check_no_shrink(
+        Config { cases: 70, seed: 0xDE17A1 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cluster = gen_cluster(&mut rng);
+            let slot = 360.0;
+            let n_jobs = rng.range_u(3, 16);
+            let mut queue_d = JobQueue::new();
+            let mut queue_f = JobQueue::new();
+            for id in 0..n_jobs {
+                let j = gen_job(&mut rng, id, slot);
+                queue_d.admit(j.clone()).unwrap();
+                queue_f.admit(j).unwrap();
+            }
+            let cfg = HadarConfig {
+                dp_job_cap: if rng.below(2) == 0 { 12 } else { 4 },
+                incremental: rng.below(2) == 0,
+                plan_threads: [1usize, 2, 8][rng.below(3) as usize],
+                ..Default::default()
+            };
+            let mut sched_d = Hadar::with_config(cfg);
+            let mut sched_f = Hadar::with_config(cfg);
+            // Idle boundaries accumulate here, as in the sim engine.
+            let mut carry = RoundDelta::default();
+            // Cluster events applied since the last boundary.
+            let mut pending_events = 0u64;
+
+            for round in 0..6u64 {
+                let now = round as f64 * slot;
+                let mut boundary = queue_d.poll_round(now);
+                boundary.events = pending_events;
+                pending_events = 0;
+                carry.merge(boundary);
+                let active_d = queue_d.waiting();
+                let active_f = queue_f.active_at(now);
+                if active_d != active_f {
+                    return Err(format!(
+                        "round {round}: waiting sets diverged: delta \
+                         {active_d:?} vs full {active_f:?}"
+                    ));
+                }
+                if active_d.is_empty() {
+                    continue; // idle boundary; `carry` keeps the delta
+                }
+                let delta = std::mem::take(&mut carry);
+                sched_d.observe_delta(&delta, &queue_d);
+                let p_d = sched_d.schedule(&RoundCtx {
+                    round,
+                    now,
+                    slot_secs: slot,
+                    horizon: 1e7,
+                    queue: &queue_d,
+                    active: &active_d,
+                    delta: Some(&delta),
+                    cluster: &cluster,
+                });
+                let p_f = sched_f.schedule(&RoundCtx {
+                    round,
+                    now,
+                    slot_secs: slot,
+                    horizon: 1e7,
+                    queue: &queue_f,
+                    active: &active_f,
+                    delta: None,
+                    cluster: &cluster,
+                });
+                if !plans_equal(&p_d, &p_f) {
+                    return Err(format!(
+                        "round {round} (threads {}): plans diverged: \
+                         delta {:?} vs full {:?}",
+                        cfg.plan_threads, p_d.allocations, p_f.allocations
+                    ));
+                }
+                if sched_d.solver_stats() != sched_f.solver_stats() {
+                    return Err(format!(
+                        "round {round}: solver stats diverged: delta \
+                         {:?} vs full {:?}",
+                        sched_d.solver_stats(), sched_f.solver_stats()
+                    ));
+                }
+
+                // Advance progress by the engine's bottleneck rule,
+                // identically in both universes; completions go through
+                // the queue API on the delta side and through direct
+                // status writes (the pre-refactor way) on the full side.
+                let scheduled = p_d.scheduled_jobs();
+                for &id in &scheduled {
+                    let alloc = p_d.get(id).unwrap().clone();
+                    let x_min = alloc
+                        .gpu_types()
+                        .iter()
+                        .map(|&g| {
+                            queue_d.get(id).unwrap().throughput_on(g)
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    if !x_min.is_finite() || x_min <= 0.0 {
+                        continue;
+                    }
+                    let gain = alloc.total_gpus() as f64 * x_min * slot;
+                    let done = {
+                        let jd = queue_d.get_mut(id).unwrap();
+                        jd.progress += gain;
+                        jd.status = JobStatus::Running;
+                        jd.is_complete()
+                    };
+                    {
+                        let jf = queue_f.get_mut(id).unwrap();
+                        jf.progress += gain;
+                        jf.status = JobStatus::Running;
+                    }
+                    if done {
+                        queue_d.complete(id, now + slot);
+                        sched_d.job_completed(id);
+                        let jf = queue_f.get_mut(id).unwrap();
+                        jf.status = JobStatus::Completed;
+                        jf.finish_time = Some(now + slot);
+                        sched_f.job_completed(id);
+                    }
+                }
+
+                // Random drain: drop a node and preempt the jobs whose
+                // placement touched it — identically in both universes,
+                // with the delta queue additionally noting the
+                // preemption and the event for the next boundary.
+                if rng.f64() < 0.4 && cluster.nodes.len() > 1 {
+                    let victim = cluster.nodes
+                        [rng.below(cluster.nodes.len() as u64) as usize]
+                        .id;
+                    cluster.remove_node(victim);
+                    pending_events += 1;
+                    for &id in &scheduled {
+                        let touches = p_d
+                            .get(id)
+                            .map(|a| a.nodes().contains(&victim))
+                            .unwrap_or(false);
+                        let live = queue_d
+                            .get(id)
+                            .map_or(false, |j| !j.is_complete());
+                        if touches && live {
+                            sched_d.preempt(id);
+                            queue_d.note_preempted(id);
+                            if let Some(j) = queue_d.get_mut(id) {
+                                j.status = JobStatus::Queued;
+                            }
+                            sched_f.preempt(id);
+                            if let Some(j) = queue_f.get_mut(id) {
+                                j.status = JobStatus::Queued;
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random parent for the HadarE scenarios: a throughput entry for most
+/// of the cluster's types, arrival staggered 0-2 slots.
+fn gen_parent(rng: &mut Rng, id: u64, cluster: &ClusterSpec, slot: f64)
+              -> Job {
+    let mut j = Job::new(id, DlModel::Lstm, 0.0, 1, rng.range_u(1, 10), 50);
+    j.arrival = slot * rng.below(3) as f64;
+    for (ti, &g) in cluster.gpu_types().iter().enumerate() {
+        if ti == 0 || rng.f64() < 0.85 {
+            j.set_throughput(g, rng.range_f(0.5, 60.0));
+        }
+    }
+    j
+}
+
+/// Random cluster for the HadarE scenarios: paper presets and scaled
+/// multi-GPU shapes — the domains the warm-row signature skip must stay
+/// exact on.
+fn gen_hadare_cluster(rng: &mut Rng) -> ClusterSpec {
+    match rng.below(3) {
+        0 => ClusterSpec::testbed5(),
+        1 => ClusterSpec::big(2, 4),
+        _ => ClusterSpec::scaled(rng.range_u(1, 3) as usize,
+                                 rng.range_u(1, 4) as usize),
+    }
+}
+
+/// Delta-fed HadarE vs full-list HadarE over ≥70 seeded scenarios:
+/// [`HadarE::plan_round_with`] reading `ctx.delta` (waiting set from the
+/// indexed queue, `events == 0` rounds eligible for the row-signature
+/// skip) must produce plans and [`hadar::sched::hadare::WarmStats`]
+/// identical to the same planner fed the full `active_at` list with
+/// `delta: None` (signature recomputed every round) — across arrivals,
+/// copy progress with mid-run completions, node churn (with stale
+/// carry-over bindings kept), and both gang modes.
+#[test]
+fn prop_hadare_delta_fed_matches_full_replanning() {
+    check_no_shrink(
+        Config { cases: 70, seed: 0xDE17A2 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cluster = gen_hadare_cluster(&mut rng);
+            let slot = 360.0;
+            let n_nodes = cluster.nodes.len() as u64;
+            let copies = rng.range_u(1, n_nodes + 2);
+            let gang = if rng.below(2) == 0 {
+                GangConfig::default()
+            } else {
+                GangConfig::shared()
+            };
+            let ids = ForkIds { max_job_count: 64 };
+            let mut tracker = JobTracker::new(ids);
+            let mut queue_d = JobQueue::new();
+            let mut queue_f = JobQueue::new();
+            let n_parents = rng.range_u(1, 8);
+            for id in 0..n_parents {
+                let j = gen_parent(&mut rng, id, &cluster, slot);
+                tracker.register(
+                    j.id,
+                    j.total_iters(),
+                    &(1..=copies)
+                        .map(|i| ids.copy_id(j.id, i))
+                        .collect::<Vec<_>>(),
+                );
+                queue_d.admit(j.clone()).unwrap();
+                queue_f.admit(j).unwrap();
+            }
+            let mut plan_d = HadarE::with_gang(copies, gang);
+            let mut plan_f = HadarE::with_gang(copies, gang);
+            // Shared carry-over bindings, as the engine maintains them.
+            let mut bind_map: BTreeMap<(usize, GpuType), JobId> =
+                BTreeMap::new();
+            let mut pending_events = 0u64;
+
+            for round in 0..5u64 {
+                let now = round as f64 * slot;
+                let mut delta = queue_d.poll_round(now);
+                delta.events = pending_events;
+                pending_events = 0;
+                let active_d = queue_d.waiting();
+                let active_f = queue_f.active_at(now);
+                let mut prev = PrevRound::new(10.0);
+                for (&(node, g), &pid) in &bind_map {
+                    prev.bind(node, g, pid);
+                }
+                let p_d = plan_d.plan_round_with(
+                    &RoundCtx {
+                        round,
+                        now,
+                        slot_secs: slot,
+                        horizon: 1e7,
+                        queue: &queue_d,
+                        active: &active_d,
+                        delta: Some(&delta),
+                        cluster: &cluster,
+                    },
+                    &tracker,
+                    &prev,
+                );
+                let p_f = plan_f.plan_round_with(
+                    &RoundCtx {
+                        round,
+                        now,
+                        slot_secs: slot,
+                        horizon: 1e7,
+                        queue: &queue_f,
+                        active: &active_f,
+                        delta: None,
+                        cluster: &cluster,
+                    },
+                    &tracker,
+                    &prev,
+                );
+                if !plans_equal(&p_d, &p_f) {
+                    return Err(format!(
+                        "round {round} (copies {copies}, shared {}): \
+                         plans diverged: delta {:?} vs full {:?}",
+                        gang.share_nodes, p_d.allocations, p_f.allocations
+                    ));
+                }
+                if plan_d.stats != plan_f.stats {
+                    return Err(format!(
+                        "round {round}: warm stats diverged: delta {:?} \
+                         vs full {:?}",
+                        plan_d.stats, plan_f.stats
+                    ));
+                }
+
+                // Advance the shared tracker from the agreed plan;
+                // parent completions go through the delta queue's
+                // lifecycle API and are notified to both planners.
+                bind_map.clear();
+                for (&copy, alloc) in &p_d.allocations {
+                    let parent = tracker.resolve(copy);
+                    for (&(node, g), _) in alloc.slots.iter() {
+                        bind_map.insert((node, g), parent);
+                    }
+                    if let Some(j) = queue_d.get(parent) {
+                        let g = alloc.gpu_types()[0];
+                        let x = j.throughput_on(g);
+                        let steps = if rng.f64() < 0.15 {
+                            1e9
+                        } else {
+                            x * slot * rng.f64()
+                        };
+                        tracker.report_steps(copy, steps);
+                    }
+                    if tracker.is_parent_complete(parent)
+                        && queue_d
+                            .get(parent)
+                            .map_or(false, |j| {
+                                j.status != JobStatus::Completed
+                            })
+                    {
+                        plan_d.job_completed(parent);
+                        plan_f.job_completed(parent);
+                        queue_d.complete(parent, now + slot);
+                    }
+                }
+
+                // Churn: occasionally drop a node, keep its stale
+                // bindings (churn-safety), and stamp the event so the
+                // delta side recomputes the slot signature.
+                if rng.f64() < 0.3 && cluster.nodes.len() > 1 {
+                    let victim = cluster.nodes
+                        [rng.below(cluster.nodes.len() as u64) as usize]
+                        .id;
+                    cluster.remove_node(victim);
+                    pending_events += 1;
+                }
+            }
+            Ok(())
+        },
+    );
+}

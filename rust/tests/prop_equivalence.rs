@@ -76,6 +76,7 @@ fn ctx<'a>(now: f64, queue: &'a JobQueue, active: &'a [JobId],
         horizon: 1e7,
         queue,
         active,
+        delta: None,
         cluster,
     }
 }
@@ -97,7 +98,7 @@ fn prop_single_round_plans_identical() {
             let n_jobs = rng.range_u(1, 14);
             let mut queue = JobQueue::new();
             for id in 0..n_jobs {
-                queue.admit(gen_job(&mut rng, id));
+                queue.admit(gen_job(&mut rng, id)).unwrap();
             }
             let cfg = HadarConfig {
                 // Half the scenarios force the greedy path.
@@ -137,7 +138,7 @@ fn prop_incremental_rounds_with_preemption_identical() {
             let n_jobs = rng.range_u(2, 10);
             let mut queue = JobQueue::new();
             for id in 0..n_jobs {
-                queue.admit(gen_job(&mut rng, id));
+                queue.admit(gen_job(&mut rng, id)).unwrap();
             }
             let cfg = HadarConfig {
                 incremental: true,
@@ -288,7 +289,7 @@ fn prop_hadare_single_gpu_plans_identical() {
                         .map(|i| ids.copy_id(j.id, i))
                         .collect::<Vec<_>>(),
                 );
-                queue.admit(j);
+                queue.admit(j).unwrap();
             }
             // The compatibility mode is pinned explicitly (not via the
             // Default impl), so a future default flip cannot silently
@@ -409,7 +410,7 @@ fn prop_hadare_warm_start_equals_cold_replanning() {
                         .map(|i| ids.copy_id(j.id, i))
                         .collect::<Vec<_>>(),
                 );
-                queue.admit(j);
+                queue.admit(j).unwrap();
             }
             let mut warm = HadarE::with_gang(copies, gang);
             // Persistent (node, pool) -> parent carry-over, exactly as
@@ -516,7 +517,7 @@ fn prop_hadare_empty_carry_over_degrades_to_plan_round() {
                         .map(|i| ids.copy_id(j.id, i))
                         .collect::<Vec<_>>(),
                 );
-                queue.admit(j);
+                queue.admit(j).unwrap();
             }
             let mut warm = HadarE::with_gang(copies, gang);
             let slot = 360.0;
@@ -594,7 +595,7 @@ fn prop_hadar_sharded_plans_thread_count_invariant() {
             let n_jobs = rng.range_u(8, 40);
             let mut queue = JobQueue::new();
             for id in 0..n_jobs {
-                queue.admit(gen_job(&mut rng, id));
+                queue.admit(gen_job(&mut rng, id)).unwrap();
             }
             let base = HadarConfig {
                 // Half the scenarios force the greedy path; the other

@@ -45,7 +45,7 @@ fn prop_capacity_and_gang_constraints() {
                 for j in jobs {
                     let mut j = j.clone();
                     j.arrival = 0.0;
-                    queue.admit(j);
+                    queue.admit(j).unwrap();
                 }
                 let active = queue.active_at(0.0);
                 let mut s = by_name(name).unwrap();
@@ -56,6 +56,7 @@ fn prop_capacity_and_gang_constraints() {
                     horizon: 1e7,
                     queue: &queue,
                     active: &active,
+                    delta: None,
                     cluster: &cluster,
                 };
                 let plan = s.schedule(&ctx);
@@ -156,7 +157,7 @@ fn prop_simulation_conservation() {
                     // Re-derive throughputs across sim60's types.
                     j.set_throughput(GpuType::V100,
                                      j.throughput_on(GpuType::V100));
-                    queue.admit(j);
+                    queue.admit(j).unwrap();
                 }
                 let mut s = by_name(name).unwrap();
                 let cfg = SimConfig {
@@ -220,7 +221,7 @@ fn prop_hadar_never_uses_zero_throughput_types() {
             for j in jobs {
                 let mut j = j.clone();
                 j.arrival = 0.0;
-                queue.admit(j);
+                queue.admit(j).unwrap();
             }
             let active = queue.active_at(0.0);
             let mut s = by_name("hadar").unwrap();
@@ -231,6 +232,7 @@ fn prop_hadar_never_uses_zero_throughput_types() {
                 horizon: 1e7,
                 queue: &queue,
                 active: &active,
+                delta: None,
                 cluster: &cluster,
             };
             let plan = s.schedule(&ctx);
@@ -386,6 +388,181 @@ fn prop_hadare_no_idle_nodes_before_last_round() {
                     return Err(format!(
                         "round {i}: {nodes_busy}/{n_nodes} nodes busy"
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The incremental waiting/arrival indexes inside [`JobQueue`] always
+/// agree with a from-scratch rebuild of the same state, after arbitrary
+/// interleavings of `admit` / `poll_round` / `complete` /
+/// `note_preempted` — including late admissions behind the watermark,
+/// non-monotone poll times, double completions, and preemptions of
+/// jobs that never arrived. The oracle is a plain model: a list of
+/// `(id, arrival)` pairs plus a drained set and a completed set,
+/// updated by the obvious O(n) logic.
+#[test]
+fn prop_queue_indexes_agree_with_rebuild() {
+    check_no_shrink(
+        Config { cases: 60, seed: 0x1DE7 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut q = JobQueue::new();
+
+            // The model.
+            let mut admitted: Vec<(JobId, f64)> = Vec::new();
+            let mut drained: std::collections::BTreeSet<JobId> =
+                Default::default();
+            let mut done: std::collections::BTreeSet<JobId> =
+                Default::default();
+            let mut exp_completions: Vec<JobId> = Vec::new();
+            let mut exp_preemptions: Vec<JobId> = Vec::new();
+            let mut watermark = f64::NEG_INFINITY;
+
+            let mut next_id = 0u64;
+            let mut now = 0.0f64;
+            let ops = rng.range_u(20, 60);
+            for op in 0..ops {
+                match rng.below(4) {
+                    0 => {
+                        // Admit a small batch, arrivals both behind and
+                        // ahead of the watermark.
+                        for _ in 0..rng.range_u(1, 4) {
+                            let arrival = rng.range_f(0.0, now + 500.0);
+                            let j = Job::new(next_id, DlModel::Lstm,
+                                             arrival, 1, 1, 10);
+                            q.admit(j).unwrap();
+                            admitted.push((JobId(next_id), arrival));
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        // Poll; a quarter of the polls go backwards in
+                        // time (the watermark must stay monotone).
+                        let t = if rng.below(4) == 0 && now > 0.0 {
+                            rng.range_f(0.0, now)
+                        } else {
+                            now + rng.range_f(0.0, 200.0)
+                        };
+                        now = now.max(t);
+                        let delta = q.poll_round(t);
+                        watermark = watermark.max(t);
+                        // Oracle arrivals: admitted, not yet drained,
+                        // not completed, arrival within the watermark —
+                        // in (arrival, id) order, like the index.
+                        let mut want: Vec<(JobId, f64)> = admitted
+                            .iter()
+                            .filter(|(id, a)| {
+                                *a <= watermark
+                                    && !drained.contains(id)
+                                    && !done.contains(id)
+                            })
+                            .copied()
+                            .collect();
+                        want.sort_by(|x, y| {
+                            x.1.partial_cmp(&y.1).unwrap()
+                                .then(x.0.cmp(&y.0))
+                        });
+                        let want: Vec<JobId> =
+                            want.into_iter().map(|(id, _)| id).collect();
+                        if delta.arrivals != want {
+                            return Err(format!(
+                                "op {op}: poll({t}) arrivals {:?} != \
+                                 oracle {:?}",
+                                delta.arrivals, want));
+                        }
+                        for id in &delta.arrivals {
+                            drained.insert(*id);
+                        }
+                        if delta.completions != exp_completions {
+                            return Err(format!(
+                                "op {op}: delta completions {:?} != \
+                                 buffered {:?}",
+                                delta.completions, exp_completions));
+                        }
+                        if delta.preemptions != exp_preemptions {
+                            return Err(format!(
+                                "op {op}: delta preemptions {:?} != \
+                                 buffered {:?}",
+                                delta.preemptions, exp_preemptions));
+                        }
+                        if delta.events != 0 {
+                            return Err("poll stamped events".into());
+                        }
+                        exp_completions.clear();
+                        exp_preemptions.clear();
+                    }
+                    2 => {
+                        // Complete a random id: known or unknown,
+                        // possibly already completed, possibly not yet
+                        // arrived (an admission cancelled early).
+                        let id = JobId(rng.below(next_id.max(1) + 2));
+                        let known = admitted.iter()
+                            .any(|&(j, _)| j == id);
+                        let expect = known && !done.contains(&id);
+                        if q.complete(id, now) != expect {
+                            return Err(format!(
+                                "op {op}: complete({id:?}) returned \
+                                 {}", !expect));
+                        }
+                        if expect {
+                            done.insert(id);
+                            drained.remove(&id);
+                            exp_completions.push(id);
+                        }
+                    }
+                    _ => {
+                        // Preempt a random id; only members of the
+                        // waiting set may surface in the delta.
+                        let id = JobId(rng.below(next_id.max(1) + 2));
+                        q.note_preempted(id);
+                        if drained.contains(&id) {
+                            exp_preemptions.push(id);
+                        }
+                    }
+                }
+
+                // Waiting set == drained minus completed, in id order
+                // (the model removes completions from `drained`).
+                let want: Vec<JobId> = drained.iter().copied().collect();
+                if q.waiting() != want {
+                    return Err(format!(
+                        "op {op}: waiting() {:?} != rebuild {:?}",
+                        q.waiting(), want));
+                }
+                if q.waiting_len() != want.len() {
+                    return Err(format!("op {op}: waiting_len mismatch"));
+                }
+                if q.all_complete() != (done.len() == admitted.len()) {
+                    return Err(format!(
+                        "op {op}: all_complete() {} != scan {}",
+                        q.all_complete(), done.len() == admitted.len()));
+                }
+
+                // Arrival probes on both sides of the watermark hit the
+                // index path and the fallback scan; both must agree
+                // with the O(n) fold over non-completed arrivals.
+                let probes = [now + rng.range_f(0.0, 300.0),
+                              rng.range_f(-1.0, now.max(0.0))];
+                for probe in probes {
+                    let want = admitted
+                        .iter()
+                        .filter(|(id, a)| {
+                            *a > probe && !done.contains(id)
+                        })
+                        .map(|&(_, a)| a)
+                        .fold(None, |acc: Option<f64>, a| {
+                            Some(acc.map_or(a, |b| b.min(a)))
+                        });
+                    if q.next_arrival_after(probe) != want {
+                        return Err(format!(
+                            "op {op}: next_arrival_after({probe}) \
+                             {:?} != oracle {:?}",
+                            q.next_arrival_after(probe), want));
+                    }
                 }
             }
             Ok(())
