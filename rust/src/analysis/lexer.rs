@@ -1,0 +1,508 @@
+//! Comment/string stripping and pragma extraction for `hadar lint`.
+//!
+//! The rule engine ([`crate::analysis::rules`]) scans for tokens like
+//! `partial_cmp` or `Instant::now`. Matching those against raw source
+//! would flag the *documentation* of past bugs (e.g. the NaN-comparator
+//! regression notes in `util/stats.rs` and `sched/hadar.rs`), so every
+//! file first passes through [`mask`]: comments, string literals, and
+//! char literals are replaced byte-for-byte with spaces while newlines
+//! are kept, leaving a same-length text where byte offsets and line
+//! numbers still agree with the original file.
+//!
+//! Suppression pragmas live in ordinary `//` comments and are collected
+//! during the same pass (masking would otherwise erase them):
+//!
+//! ```text
+//! // lint: allow(wall-clock, reason = "bench timing, not plan input")
+//! // lint: allow-file(wall-clock, reason = "every row here is timed")
+//! ```
+//!
+//! A standalone pragma comment covers the next code line; a pragma
+//! trailing code on the same line covers that line; `allow-file` covers
+//! the whole file. The `reason` is mandatory — a pragma without one is
+//! reported as a `pragma-syntax` finding, and a pragma that suppresses
+//! nothing is reported as `stale-pragma` (see the rule engine).
+
+/// A parsed lint-suppression pragma.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pragma {
+    /// 1-based line of the pragma comment.
+    pub line: usize,
+    /// `true` for `allow-file(...)`: suppresses the rule in the whole
+    /// file. `false` for line-scoped `allow(...)`.
+    pub file_level: bool,
+    /// `true` when code precedes the comment on its line (the pragma
+    /// then covers that line); `false` for a standalone comment line
+    /// (covers the next code line).
+    pub trailing: bool,
+    /// Rule id being suppressed (validated by the rule engine).
+    pub rule: String,
+    /// Mandatory human justification.
+    pub reason: String,
+}
+
+/// A comment that announces itself as a pragma (`// lint: ...`) but does
+/// not parse — wrong shape, unknown verb, or a missing/empty reason.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PragmaError {
+    /// 1-based line of the malformed pragma.
+    pub line: usize,
+    /// What is wrong with it.
+    pub msg: String,
+}
+
+/// The masked view of one source file (see module docs).
+#[derive(Debug)]
+pub struct Masked {
+    /// Same byte length as the input; comments, strings, and char
+    /// literals are spaces, newlines survive.
+    pub text: String,
+    /// Well-formed suppression pragmas, in file order.
+    pub pragmas: Vec<Pragma>,
+    /// Malformed pragmas, in file order.
+    pub errors: Vec<PragmaError>,
+    /// Byte offset of each line start; index `k` is line `k + 1`.
+    line_starts: Vec<usize>,
+}
+
+impl Masked {
+    /// 1-based line containing byte offset `at`.
+    pub fn line_of(&self, at: usize) -> usize {
+        match self.line_starts.binary_search(&at) {
+            Ok(k) => k + 1,
+            Err(k) => k,
+        }
+    }
+
+    /// 1-based number of the first line at or after line `from` (1-based)
+    /// that carries any masked (i.e. code) content, or `None` when the
+    /// rest of the file is comments/blank. Standalone pragmas use this to
+    /// find the line they cover.
+    pub fn next_code_line(&self, from: usize) -> Option<usize> {
+        let bytes = self.text.as_bytes();
+        for k in from.saturating_sub(1)..self.line_starts.len() {
+            let start = self.line_starts[k];
+            let end = self
+                .line_starts
+                .get(k + 1)
+                .copied()
+                .unwrap_or(bytes.len());
+            if self.text[start..end].trim().is_empty() {
+                continue;
+            }
+            return Some(k + 1);
+        }
+        None
+    }
+}
+
+/// Is `c` an identifier byte (`[A-Za-z0-9_]`)?
+pub fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Strip comments, strings, and char literals from `src` (see module
+/// docs), collecting pragmas on the way.
+pub fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let line_of = |at: usize| -> usize {
+        match line_starts.binary_search(&at) {
+            Ok(k) => k + 1,
+            Err(k) => k,
+        }
+    };
+    let blank = |out: &mut [u8], lo: usize, hi: usize| {
+        for c in out[lo..hi].iter_mut() {
+            if *c != b'\n' && *c != b'\r' {
+                *c = b' ';
+            }
+        }
+    };
+
+    let mut pragmas = Vec::new();
+    let mut errors = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment (incl. doc comments) — possibly a pragma.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let end = src[i..]
+                .find('\n')
+                .map(|k| i + k)
+                .unwrap_or(b.len());
+            let line = line_of(i);
+            let start = line_starts[line - 1];
+            let trailing =
+                !src[start..i].trim().is_empty();
+            match parse_pragma(&src[i..end]) {
+                PragmaParse::Ok(rule, file_level, reason) => {
+                    pragmas.push(Pragma {
+                        line,
+                        file_level,
+                        trailing,
+                        rule,
+                        reason,
+                    });
+                }
+                PragmaParse::Bad(msg) => {
+                    errors.push(PragmaError { line, msg });
+                }
+                PragmaParse::NotAPragma => {}
+            }
+            blank(&mut out, i, end);
+            i = end;
+            continue;
+        }
+        // Block comment, nested per Rust.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*'
+                    && j + 1 < b.len()
+                    && b[j + 1] == b'/'
+                {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Raw / byte / raw-byte strings: r"", r#""#, b"", br#""#.
+        if (c == b'r' || c == b'b')
+            && (i == 0 || !is_ident_byte(b[i - 1]))
+        {
+            if let Some(j) = raw_or_byte_string_end(b, i) {
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+        }
+        // Ordinary string literal.
+        if c == b'"' {
+            let j = string_end(b, i);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if let Some(j) = char_literal_end(b, i) {
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            // Lifetime: skip the quote and its identifier unmasked.
+            i += 1;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+
+    Masked {
+        text: String::from_utf8(out)
+            .expect("masking only rewrites bytes to ASCII spaces"),
+        pragmas,
+        errors,
+        line_starts,
+    }
+}
+
+/// End (exclusive) of the `"..."` literal starting at `i`.
+fn string_end(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// End of a raw/byte/raw-byte string starting at `i` (`r`/`b` seen), or
+/// `None` when `i` does not actually start one.
+fn raw_or_byte_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    // `br` / `rb` prefixes: at most one more prefix byte.
+    if j < b.len()
+        && (b[j] == b'r' || b[j] == b'b')
+        && b[i] != b[j]
+    {
+        j += 1;
+    }
+    let raw = b[i..j].contains(&b'r');
+    if !raw {
+        // Plain byte string `b"..."`.
+        return if j < b.len() && b[j] == b'"' {
+            Some(string_end(b, j))
+        } else {
+            None
+        };
+    }
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && k < b.len() && b[k] == b'#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// End of the char literal at `i` (a `'` seen), or `None` when the quote
+/// starts a lifetime instead.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    let next = *b.get(i + 1)?;
+    if next == b'\\' {
+        // Scan from the backslash itself so `\\` and `\'` consume
+        // their escaped byte before the closing quote is looked for
+        // (mirrors [`string_end`]).
+        let mut j = i + 1;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'\'' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        return Some(b.len());
+    }
+    // `'a'` is a char; `'a` (no closing quote after one ident char run)
+    // is a lifetime. Multi-byte scalars (`'∂'`) fall to the scan below.
+    if is_ident_byte(next) {
+        let mut j = i + 1;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        return if j < b.len() && b[j] == b'\'' {
+            Some(j + 1)
+        } else {
+            None
+        };
+    }
+    if next == b'\'' {
+        // `''` cannot happen in valid Rust; treat as empty literal.
+        return Some(i + 2);
+    }
+    // Non-identifier scalar: scan to the closing quote on this line.
+    let mut j = i + 1;
+    while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'\'' {
+        Some(j + 1)
+    } else {
+        None
+    }
+}
+
+enum PragmaParse {
+    Ok(String, bool, String),
+    Bad(String),
+    NotAPragma,
+}
+
+/// Parse one `//...` comment as a pragma. Doc comments (`///`, `//!`)
+/// never count; anything starting `lint:` must parse fully or is an
+/// error.
+fn parse_pragma(comment: &str) -> PragmaParse {
+    let body = &comment[2..];
+    if body.starts_with('/') || body.starts_with('!') {
+        return PragmaParse::NotAPragma;
+    }
+    let body = body.trim();
+    let Some(rest) = body.strip_prefix("lint:") else {
+        return PragmaParse::NotAPragma;
+    };
+    let rest = rest.trim();
+    let (file_level, rest) =
+        if let Some(r) = rest.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            return PragmaParse::Bad(format!(
+                "expected `allow(<rule>, reason = \"...\")` or \
+                 `allow-file(...)`, got `{rest}`"
+            ));
+        };
+    let Some(rest) = rest.strip_suffix(')') else {
+        return PragmaParse::Bad("missing closing `)`".to_string());
+    };
+    let Some((rule, reason_part)) = rest.split_once(',') else {
+        return PragmaParse::Bad(
+            "missing `, reason = \"...\"` after the rule id".to_string(),
+        );
+    };
+    let rule = rule.trim();
+    if rule.is_empty() {
+        return PragmaParse::Bad("empty rule id".to_string());
+    }
+    let reason_part = reason_part.trim();
+    let Some(q) = reason_part.strip_prefix("reason") else {
+        return PragmaParse::Bad(
+            "expected `reason = \"...\"`".to_string(),
+        );
+    };
+    let Some(q) = q.trim_start().strip_prefix('=') else {
+        return PragmaParse::Bad(
+            "expected `=` after `reason`".to_string(),
+        );
+    };
+    let q = q.trim();
+    let reason = q
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or("");
+    if reason.trim().is_empty() {
+        return PragmaParse::Bad(
+            "reason must be a non-empty quoted string".to_string(),
+        );
+    }
+    PragmaParse::Ok(rule.to_string(), file_level, reason.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let m = mask("let x = 1; // partial_cmp here\n/* and\nhere */y");
+        assert!(!m.text.contains("partial_cmp"));
+        assert!(!m.text.contains("here"));
+        assert!(m.text.contains("let x = 1;"));
+        assert!(m.text.contains('y'));
+        assert_eq!(m.text.len(), 46);
+        assert_eq!(m.text.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let m = mask("a /* one /* two */ still */ b");
+        assert!(m.text.contains('a'));
+        assert!(m.text.contains('b'));
+        assert!(!m.text.contains("still"));
+    }
+
+    #[test]
+    fn strips_strings_and_escapes() {
+        let m = mask(r#"let s = "Instant::now \" quoted"; t"#);
+        assert!(!m.text.contains("Instant"));
+        assert!(m.text.contains("let s ="));
+        assert!(m.text.ends_with("; t"));
+    }
+
+    #[test]
+    fn strips_raw_and_byte_strings() {
+        let m = mask(r##"a r#"thread_rng "#; b"env::var"; r"x"; c"##);
+        assert!(!m.text.contains("thread_rng"));
+        assert!(!m.text.contains("env::var"));
+        assert!(m.text.contains('a'));
+        assert!(m.text.contains('c'));
+    }
+
+    #[test]
+    fn char_literals_masked_lifetimes_kept() {
+        let m = mask("fn f<'a>(x: &'a str) { let c = 'u'; let d = '\\n'; }");
+        assert!(m.text.contains("<'a>"));
+        assert!(m.text.contains("&'a str"));
+        assert!(!m.text.contains("'u'"));
+        assert!(!m.text.contains("\\n"));
+    }
+
+    #[test]
+    fn escaped_backslash_and_quote_char_literals_end_correctly() {
+        // Regression: `'\\'` must not eat its own closing quote and
+        // mask everything to the next stray `"`/`'` in the file.
+        let m = mask("let a = '\\\\'; let keep = 1; let b = '\\''; tail");
+        assert!(m.text.contains("let keep = 1;"), "{}", m.text);
+        assert!(m.text.ends_with("tail"), "{}", m.text);
+        assert!(!m.text.contains('\\'));
+    }
+
+    #[test]
+    fn pragma_line_and_file_level() {
+        let src = "\
+// lint: allow-file(wall-clock, reason = \"bench module\")
+let a = 1; // lint: allow(env-read, reason = \"config knob\")
+// lint: allow(no-unsafe, reason = \"ffi\")
+let b = 2;
+";
+        let m = mask(src);
+        assert_eq!(m.errors.len(), 0, "{:?}", m.errors);
+        assert_eq!(m.pragmas.len(), 3);
+        assert!(m.pragmas[0].file_level);
+        assert!(!m.pragmas[0].trailing);
+        assert_eq!(m.pragmas[0].rule, "wall-clock");
+        assert!(m.pragmas[1].trailing);
+        assert_eq!(m.pragmas[1].line, 2);
+        assert_eq!(m.pragmas[2].line, 3);
+        assert!(!m.pragmas[2].trailing);
+        // Standalone pragma on line 3 covers the code on line 4.
+        assert_eq!(m.next_code_line(4), Some(4));
+    }
+
+    #[test]
+    fn malformed_pragmas_are_errors() {
+        let cases = [
+            "// lint: allow(wall-clock)",
+            "// lint: allow(wall-clock, reason = \"\")",
+            "// lint: deny(wall-clock, reason = \"x\")",
+            "// lint: allow(, reason = \"x\")",
+            "// lint: allow(wall-clock, reason = \"x\"",
+        ];
+        for c in cases {
+            let m = mask(c);
+            assert_eq!(m.pragmas.len(), 0, "{c}");
+            assert_eq!(m.errors.len(), 1, "{c}");
+        }
+        // Doc comments and strings never parse as pragmas.
+        let m = mask("/// lint: allow(x, reason = \"y\")\nlet s = \"lint: allow(x, reason = \\\"y\\\")\";");
+        assert!(m.pragmas.is_empty() && m.errors.is_empty());
+    }
+
+    #[test]
+    fn line_of_and_next_code_line() {
+        let m = mask("a\n\n// c\nb\n");
+        assert_eq!(m.line_of(0), 1);
+        assert_eq!(m.line_of(2), 2);
+        assert_eq!(m.next_code_line(2), Some(4));
+        assert_eq!(m.next_code_line(5), None);
+    }
+}

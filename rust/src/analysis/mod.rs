@@ -1,0 +1,208 @@
+//! Static analysis for determinism and plan-path hygiene (`hadar lint`).
+//!
+//! The repo's core guarantee — plans and solver stats bit-identical at
+//! any `HADAR_PLAN_THREADS` count, replays reproducible from a seed —
+//! is defended *dynamically* by `prop_equivalence`/`prop_delta`. Three
+//! past PRs each had to sweep freshly reintroduced nondeterminism
+//! (`partial_cmp().unwrap()` comparators, unordered scans, ad-hoc
+//! thread pools) after the property tests caught it. This subsystem
+//! catches the same classes *statically*, at diff time, and CI gates on
+//! it (`hadar lint --json`).
+//!
+//! Pipeline (all dependency-free, `std` + [`crate::util::json`] only):
+//!
+//! 1. [`lexer`] strips comments/strings so rules cannot flag prose, and
+//!    extracts `// lint: allow(...)` suppression pragmas;
+//! 2. [`modgraph`] discovers the crate from `mod` declarations (the
+//!    compiler's view, not a glob) and classifies every file
+//!    **plan-path** vs **harness**;
+//! 3. [`rules`] runs the eight-rule engine with per-rule diagnostics,
+//!    pragma suppression, and stale-pragma detection.
+//!
+//! [`lint_tree`] ties it together; `hadar lint [--json]` is the CLI
+//! face, and `rust/tests/lint_selfaudit.rs` keeps the live tree clean
+//! inside `cargo test`. The rule catalog, pragma syntax, and report
+//! schema are documented in `docs/static-analysis.md`.
+
+pub mod lexer;
+pub mod modgraph;
+pub mod rules;
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use rules::Finding;
+
+/// Per-file summary carried in the report (module map + dep edges).
+#[derive(Debug)]
+pub struct FileSummary {
+    /// Path relative to the lint root.
+    pub file: String,
+    /// `::`-joined module path (`sched::hadar`; `lib` for the root).
+    pub module: String,
+    /// `plan-path` or `harness`.
+    pub class: &'static str,
+    /// Top-level crate modules this file references.
+    pub deps: Vec<String>,
+}
+
+/// Outcome of linting a whole tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Lint root, as given.
+    pub root: String,
+    /// Every discovered file, path-sorted.
+    pub files: Vec<FileSummary>,
+    /// Surviving diagnostics across all files, (file, line)-sorted.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by pragmas, tree-wide.
+    pub suppressed: usize,
+    /// Well-formed pragmas seen, tree-wide.
+    pub pragmas: usize,
+}
+
+impl LintReport {
+    /// `true` when nothing (violations, stale pragmas, pragma errors)
+    /// was found — the state CI requires.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Number of plan-path files.
+    pub fn plan_path_files(&self) -> usize {
+        self.files.iter().filter(|f| f.class == "plan-path").count()
+    }
+
+    /// Human-readable report: one line per finding plus a summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{} [{}] {}\n    hint: {}\n",
+                f.file, f.line, f.rule, f.message, f.suggestion
+            ));
+        }
+        let verdict = if self.clean() { "clean" } else { "DIRTY" };
+        out.push_str(&format!(
+            "hadar lint: {verdict} — {} finding(s) in {} files \
+             ({} plan-path; {} pragmas suppressing {} site(s))\n",
+            self.findings.len(),
+            self.files.len(),
+            self.plan_path_files(),
+            self.pragmas,
+            self.suppressed,
+        ));
+        out
+    }
+
+    /// Machine-readable report (schema: docs/static-analysis.md).
+    pub fn to_json(&self) -> Json {
+        let rules = Json::Arr(
+            rules::RULES
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("id", r.id)
+                        .set("summary", r.summary)
+                        .set(
+                            "scope",
+                            if r.plan_path_only {
+                                "plan-path"
+                            } else {
+                                "all"
+                            },
+                        )
+                        .set("in_tests", r.in_tests)
+                })
+                .collect(),
+        );
+        let modules = Json::Arr(
+            self.files
+                .iter()
+                .map(|f| {
+                    Json::obj()
+                        .set("file", f.file.as_str())
+                        .set("module", f.module.as_str())
+                        .set("class", f.class)
+                        .set(
+                            "deps",
+                            Json::Arr(
+                                f.deps
+                                    .iter()
+                                    .map(|d| Json::Str(d.clone()))
+                                    .collect(),
+                            ),
+                        )
+                })
+                .collect(),
+        );
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    Json::obj()
+                        .set("rule", f.rule.as_str())
+                        .set("file", f.file.as_str())
+                        .set("line", f.line)
+                        .set("class", f.class)
+                        .set("message", f.message.as_str())
+                        .set("suggestion", f.suggestion.as_str())
+                })
+                .collect(),
+        );
+        Json::obj()
+            .set("tool", "hadar-lint")
+            .set("version", 1u64)
+            .set("root", self.root.as_str())
+            .set("rules", rules)
+            .set("modules", modules)
+            .set("findings", findings)
+            .set(
+                "summary",
+                Json::obj()
+                    .set("files", self.files.len())
+                    .set("plan_path_files", self.plan_path_files())
+                    .set("findings", self.findings.len())
+                    .set("pragmas", self.pragmas)
+                    .set("suppressed", self.suppressed)
+                    .set("clean", self.clean()),
+            )
+    }
+}
+
+/// Lint the crate rooted at `src_root` (the directory holding
+/// `lib.rs`). Fails only on infrastructure problems (unreadable files,
+/// unresolvable `mod` declarations) — findings are data, not errors.
+pub fn lint_tree(src_root: &Path) -> Result<LintReport, String> {
+    let graph = modgraph::build(src_root)?;
+    let mut report = LintReport {
+        root: src_root.display().to_string(),
+        files: Vec::new(),
+        findings: Vec::new(),
+        suppressed: 0,
+        pragmas: 0,
+    };
+    for sf in &graph.files {
+        let fl = rules::lint_file(sf);
+        report.suppressed += fl.suppressed;
+        report.pragmas += fl.pragmas;
+        report.findings.extend(fl.findings);
+        report.files.push(FileSummary {
+            file: sf.rel.clone(),
+            module: if sf.module.is_empty() {
+                "lib".to_string()
+            } else {
+                sf.module.join("::")
+            },
+            class: sf.class.as_str(),
+            deps: sf.deps.clone(),
+        });
+    }
+    report
+        .findings
+        .sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule.as_str())
+                .cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+        });
+    Ok(report)
+}

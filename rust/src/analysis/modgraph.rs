@@ -1,0 +1,290 @@
+//! Module-graph discovery and plan-path classification for `hadar lint`.
+//!
+//! The tree is discovered the way rustc does it: start at `lib.rs` (and
+//! `main.rs` for the binary), parse `mod x;` declarations out of the
+//! masked source, and resolve each to `x.rs` or `x/mod.rs` next to the
+//! declaring file. Walking declarations instead of globbing the
+//! directory means dead files that nothing mounts are *not* linted —
+//! exactly the compiler's view of the crate.
+//!
+//! Each discovered file is classified:
+//!
+//! * **plan-path** — modules whose behaviour can leak into a
+//!   [`crate::sched::RoundPlan`] or into solver statistics: `sched/`,
+//!   `cluster/`, `jobs/`, `sim/`, `forking/`. The determinism contract
+//!   (bit-identical plans at any `HADAR_PLAN_THREADS`, pinned
+//!   dynamically by `prop_equivalence`/`prop_delta`) applies here, so
+//!   the strictest rules do too.
+//! * **harness** — everything that observes or drives the plan path
+//!   without feeding it: `obs/`, `expt/`, `figures/`, `util/`, `exec/`,
+//!   `runtime/`, `trace/`, the CLI, and any module with a `bench` or
+//!   `tests` path segment (`sched::bench` is a harness even though it
+//!   lives under `sched/`).
+//!
+//! `use crate::…` / inline `crate::…` paths are also collected as
+//! dependency edges; they travel in the JSON report so reviewers can see
+//! when a plan-path module grows a new harness dependency.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::lexer;
+
+/// Which rule set applies to a file (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// Can influence plans/solver stats; strict determinism rules.
+    PlanPath,
+    /// Observes or drives the plan path; relaxed rules.
+    Harness,
+}
+
+impl FileClass {
+    /// Stable lowercase name used in reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FileClass::PlanPath => "plan-path",
+            FileClass::Harness => "harness",
+        }
+    }
+}
+
+/// One discovered source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated (`sched/hadar.rs`).
+    pub rel: String,
+    /// Module path (`["sched", "hadar"]`; empty for `lib.rs`, `["main"]`
+    /// for the binary root).
+    pub module: Vec<String>,
+    /// Rule-set classification.
+    pub class: FileClass,
+    /// Top-level crate modules this file references (`use crate::…` and
+    /// inline `crate::…` paths), sorted and deduplicated.
+    pub deps: Vec<String>,
+    /// Raw source text.
+    pub src: String,
+}
+
+/// The discovered crate, in deterministic (path-sorted) order.
+#[derive(Debug)]
+pub struct ModuleGraph {
+    /// All files reachable from `lib.rs` / `main.rs`.
+    pub files: Vec<SourceFile>,
+}
+
+/// Top-level modules whose files are plan-path (unless a harness
+/// segment overrides).
+const PLAN_PATH_ROOTS: &[&str] =
+    &["sched", "cluster", "jobs", "sim", "forking"];
+
+/// Path segments that force harness class anywhere they appear.
+const HARNESS_SEGMENTS: &[&str] = &["bench", "benches", "test", "tests"];
+
+/// Classify a module path (see module docs).
+pub fn classify(module: &[String]) -> FileClass {
+    if module
+        .iter()
+        .any(|s| HARNESS_SEGMENTS.contains(&s.as_str()))
+    {
+        return FileClass::Harness;
+    }
+    match module.first() {
+        Some(first) if PLAN_PATH_ROOTS.contains(&first.as_str()) => {
+            FileClass::PlanPath
+        }
+        _ => FileClass::Harness,
+    }
+}
+
+/// Parse `mod x;` declarations (any visibility) out of masked source.
+/// Inline `mod x { … }` blocks are *not* child files and are skipped.
+pub fn mod_decls(masked: &str) -> Vec<String> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(k) = masked[from..].find("mod") {
+        let at = from + k;
+        from = at + 3;
+        if at > 0 && lexer::is_ident_byte(b[at - 1]) {
+            continue;
+        }
+        let mut j = at + 3;
+        if j >= b.len() || !b[j].is_ascii_whitespace() {
+            continue;
+        }
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && lexer::is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue;
+        }
+        let name = &masked[name_start..j];
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b';' {
+            out.push(name.to_string());
+        }
+    }
+    out
+}
+
+/// Collect the top-level targets of `crate::…` paths in masked source.
+pub fn crate_deps(masked: &str) -> Vec<String> {
+    let b = masked.as_bytes();
+    let mut out = BTreeSet::new();
+    let mut from = 0usize;
+    while let Some(k) = masked[from..].find("crate::") {
+        let at = from + k;
+        from = at + 7;
+        if at > 0 && lexer::is_ident_byte(b[at - 1]) {
+            continue;
+        }
+        let mut j = at + 7;
+        let seg_start = j;
+        while j < b.len() && lexer::is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if j > seg_start {
+            out.insert(masked[seg_start..j].to_string());
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Discover the crate under `src_root` (must hold `lib.rs`; `main.rs`
+/// is picked up when present). Fails on unreadable files and on `mod`
+/// declarations that resolve to no file — a lint tree that silently
+/// skipped files would certify nothing.
+pub fn build(src_root: &Path) -> Result<ModuleGraph, String> {
+    let mut files: Vec<SourceFile> = Vec::new();
+    visit(src_root, "lib.rs", Vec::new(), &mut files)?;
+    if src_root.join("main.rs").is_file() {
+        visit(src_root, "main.rs", vec!["main".to_string()], &mut files)?;
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(ModuleGraph { files })
+}
+
+/// Load one file, record it, and recurse into its `mod` declarations.
+fn visit(root: &Path, rel: &str, module: Vec<String>,
+         files: &mut Vec<SourceFile>) -> Result<(), String> {
+    let path = root.join(rel);
+    let src = std::fs::read_to_string(&path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let masked = lexer::mask(&src);
+    let decls = mod_decls(&masked.text);
+    let deps = crate_deps(&masked.text);
+
+    // Children of `a/mod.rs`, `lib.rs`, and `main.rs` live in the
+    // declaring file's directory; children of `a/b.rs` live in `a/b/`.
+    let file_name = rel.rsplit('/').next().unwrap_or(rel);
+    let parent_dir = match rel.rfind('/') {
+        Some(k) => &rel[..k],
+        None => "",
+    };
+    let child_dir = if file_name == "lib.rs"
+        || file_name == "main.rs"
+        || file_name == "mod.rs"
+    {
+        parent_dir.to_string()
+    } else {
+        let stem = file_name.trim_end_matches(".rs");
+        if parent_dir.is_empty() {
+            stem.to_string()
+        } else {
+            format!("{parent_dir}/{stem}")
+        }
+    };
+
+    let class = classify(&module);
+    let child_prefix = module.clone();
+    files.push(SourceFile {
+        rel: rel.to_string(),
+        class,
+        module,
+        deps,
+        src,
+    });
+
+    for child in decls {
+        let flat = if child_dir.is_empty() {
+            format!("{child}.rs")
+        } else {
+            format!("{child_dir}/{child}.rs")
+        };
+        let nested = if child_dir.is_empty() {
+            format!("{child}/mod.rs")
+        } else {
+            format!("{child_dir}/{child}/mod.rs")
+        };
+        let child_rel = if root.join(&flat).is_file() {
+            flat
+        } else if root.join(&nested).is_file() {
+            nested
+        } else {
+            return Err(format!(
+                "{rel}: `mod {child};` resolves to neither {flat} nor \
+                 {nested}"
+            ));
+        };
+        let mut child_module = child_prefix.clone();
+        child_module.push(child.clone());
+        visit(root, &child_rel, child_module, files)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn classification() {
+        assert_eq!(classify(&m(&["sched", "hadar"])), FileClass::PlanPath);
+        assert_eq!(classify(&m(&["cluster", "state"])),
+                   FileClass::PlanPath);
+        assert_eq!(classify(&m(&["jobs", "queue"])), FileClass::PlanPath);
+        assert_eq!(classify(&m(&["sim", "engine"])), FileClass::PlanPath);
+        assert_eq!(classify(&m(&["forking", "tracker"])),
+                   FileClass::PlanPath);
+        // Bench/test segments are harness even under plan-path roots.
+        assert_eq!(classify(&m(&["sched", "bench"])), FileClass::Harness);
+        assert_eq!(classify(&m(&["sched", "hadar", "tests"])),
+                   FileClass::Harness);
+        assert_eq!(classify(&m(&["obs", "trace"])), FileClass::Harness);
+        assert_eq!(classify(&m(&["util", "rng"])), FileClass::Harness);
+        assert_eq!(classify(&m(&["expt", "runner"])), FileClass::Harness);
+        assert_eq!(classify(&m(&["main"])), FileClass::Harness);
+        assert_eq!(classify(&m(&[])), FileClass::Harness);
+    }
+
+    #[test]
+    fn mod_decl_parsing() {
+        let masked = lexer::mask(
+            "pub mod alloc;\nmod inner;\npub(crate) mod x;\n\
+             mod tests {\n}\n// mod commented;\n",
+        );
+        assert_eq!(mod_decls(&masked.text),
+                   vec!["alloc", "inner", "x"]);
+    }
+
+    #[test]
+    fn crate_dep_parsing() {
+        let masked = lexer::mask(
+            "use crate::jobs::job::JobId;\n\
+             let t = crate::sched::resolve_plan_threads(0);\n\
+             use crate::jobs::queue::JobQueue;\n",
+        );
+        assert_eq!(crate_deps(&masked.text), vec!["jobs", "sched"]);
+    }
+}

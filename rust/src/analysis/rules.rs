@@ -1,0 +1,661 @@
+//! The `hadar lint` rule engine: eight determinism/plan-path rules, a
+//! suppression-pragma layer, and stale-pragma detection.
+//!
+//! Every rule encodes an invariant the property tests
+//! (`prop_equivalence`, `prop_delta`) defend *dynamically* — plans and
+//! solver stats bit-identical at any `HADAR_PLAN_THREADS` count, replays
+//! reproducible from a seed — so violations are caught at diff time
+//! instead of at property-test time. Rules scan the masked text
+//! ([`crate::analysis::lexer::mask`]), so comments and string literals
+//! can mention any forbidden token freely.
+//!
+//! The catalog, with rationale per rule, lives in
+//! `docs/static-analysis.md`. Suppression uses
+//! `// lint: allow(<rule>, reason = "...")` pragmas (line scope) or
+//! `allow-file(...)` (file scope); a pragma that suppresses nothing is
+//! itself reported (`stale-pragma`), as is one that does not parse or
+//! names an unknown rule (`pragma-syntax`).
+
+use std::collections::BTreeSet;
+
+use super::lexer::{self, Masked};
+use super::modgraph::{FileClass, SourceFile};
+
+/// Static description of one rule.
+#[derive(Debug)]
+pub struct Rule {
+    /// Stable kebab-case id (used in pragmas and reports).
+    pub id: &'static str,
+    /// One-line statement of the invariant.
+    pub summary: &'static str,
+    /// `true`: only plan-path files are checked.
+    pub plan_path_only: bool,
+    /// `true`: `#[cfg(test)] mod … { }` blocks are checked too.
+    pub in_tests: bool,
+    /// What to do instead (rendered as the finding's hint).
+    pub suggestion: &'static str,
+}
+
+/// The rule catalog. Ids are load-bearing: pragmas and fixture tests
+/// reference them, and `docs/static-analysis.md` documents them 1:1.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "float-total-cmp",
+        summary: "float comparisons must use total_cmp, never \
+                  partial_cmp",
+        plan_path_only: false,
+        in_tests: true,
+        suggestion: "sort/compare floats with f64::total_cmp — \
+                     partial_cmp().unwrap() panics on NaN and its \
+                     Option detour invites order-unstable fallbacks \
+                     (PR 3/4 swept these once already)",
+    },
+    Rule {
+        id: "unordered-iteration",
+        summary: "no HashMap/HashSet iteration in plan-path modules \
+                  (keyed probes are fine)",
+        plan_path_only: true,
+        in_tests: false,
+        suggestion: "iterate a BTreeMap/BTreeSet instead, or keep the \
+                     hash container strictly keyed (get/insert/remove) \
+                     — hash iteration order can differ across runs and \
+                     leak into plans",
+    },
+    Rule {
+        id: "wall-clock",
+        summary: "no Instant::now/SystemTime::now outside obs:: and \
+                  util::log",
+        plan_path_only: false,
+        in_tests: false,
+        suggestion: "route timing through obs:: spans/metrics; a \
+                     harness timer that never feeds a plan may carry a \
+                     `// lint: allow(wall-clock, reason = ...)` pragma",
+    },
+    Rule {
+        id: "raw-thread",
+        summary: "thread::spawn/scope must size workers via \
+                  sched::resolve_plan_threads",
+        plan_path_only: false,
+        in_tests: false,
+        suggestion: "take the worker count from \
+                     sched::resolve_plan_threads (the \
+                     HADAR_PLAN_THREADS knob) — ad-hoc pools are how \
+                     thread-count-dependent plans sneak in; the \
+                     enclosing fn must call it or accept a `threads` \
+                     parameter",
+    },
+    Rule {
+        id: "deprecated-shim",
+        summary: "no #[deprecated] forwarding shims",
+        plan_path_only: false,
+        in_tests: true,
+        suggestion: "repoint the callers and delete the shim — \
+                     deprecated forwarding lives at most one PR (the \
+                     PR 9 resolve_plan_threads shim is the cautionary \
+                     example)",
+    },
+    Rule {
+        id: "no-unsafe",
+        summary: "no unsafe code",
+        plan_path_only: false,
+        in_tests: true,
+        suggestion: "rewrite with safe std primitives; the crate is \
+                     dependency-free safe Rust throughout and the \
+                     solvers get their speed from algorithmic work, \
+                     not unsafe",
+    },
+    Rule {
+        id: "nondet-rng",
+        summary: "no thread_rng/from_entropy/RandomState entropy \
+                  sources",
+        plan_path_only: false,
+        in_tests: true,
+        suggestion: "use util::rng::Rng (seeded, forkable) so every \
+                     trace, sweep, and property case replays from its \
+                     seed",
+    },
+    Rule {
+        id: "env-read",
+        summary: "no std::env reads outside the config layer",
+        plan_path_only: false,
+        in_tests: false,
+        suggestion: "read the environment once at construction/config \
+                     time (resolve_plan_threads is the pattern) and \
+                     pass the value down — mid-round env reads make \
+                     behaviour depend on when a round runs",
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One diagnostic: a rule violation, a stale pragma, or a pragma
+/// syntax error.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id (`stale-pragma`/`pragma-syntax` for engine diagnostics).
+    pub rule: String,
+    /// File, relative to the lint root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Classification of the file (`plan-path`/`harness`).
+    pub class: &'static str,
+    /// What was found.
+    pub message: String,
+    /// What to do about it.
+    pub suggestion: String,
+}
+
+/// Lint outcome for one file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    /// Surviving diagnostics (post-suppression), line-sorted.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by pragmas.
+    pub suppressed: usize,
+    /// Pragmas seen (well-formed).
+    pub pragmas: usize,
+}
+
+/// Run every applicable rule over one file (see module docs).
+pub fn lint_file(sf: &SourceFile) -> FileLint {
+    let m = lexer::mask(&sf.src);
+    let tests = test_ranges(&m.text);
+    let fns = fn_spans(&m.text);
+
+    // (byte offset, rule, message) before suppression.
+    let mut raw: Vec<(usize, &'static Rule, String)> = Vec::new();
+    for r in RULES {
+        if r.plan_path_only && sf.class != FileClass::PlanPath {
+            continue;
+        }
+        let sites: Vec<(usize, String)> = match r.id {
+            "float-total-cmp" => ident_sites(&m.text, "partial_cmp")
+                .into_iter()
+                .map(|at| (at, "partial_cmp on the \
+                                comparison path".to_string()))
+                .collect(),
+            "unordered-iteration" => unordered_iteration(&m.text),
+            "wall-clock" => wall_clock(sf, &m.text),
+            "raw-thread" => raw_thread(&m.text, &fns),
+            "deprecated-shim" => substr_sites(&m.text, "#[deprecated")
+                .into_iter()
+                .map(|at| (at, "#[deprecated] forwarding \
+                                shim".to_string()))
+                .collect(),
+            "no-unsafe" => ident_sites(&m.text, "unsafe")
+                .into_iter()
+                .map(|at| (at, "unsafe block/impl/fn".to_string()))
+                .collect(),
+            "nondet-rng" => nondet_rng(&m.text),
+            "env-read" => env_read(&m.text),
+            _ => Vec::new(),
+        };
+        for (at, msg) in sites {
+            if !r.in_tests && in_ranges(&tests, at) {
+                continue;
+            }
+            raw.push((at, r, msg));
+        }
+    }
+
+    // Suppression: first covering pragma wins and is marked used.
+    let mut used = vec![0usize; m.pragmas.len()];
+    let mut out = FileLint {
+        pragmas: m.pragmas.len(),
+        ..FileLint::default()
+    };
+    for (at, r, msg) in raw {
+        let line = m.line_of(at);
+        let hit = m.pragmas.iter().enumerate().find(|(_, p)| {
+            p.rule == r.id
+                && (p.file_level
+                    || (p.trailing && p.line == line)
+                    || (!p.trailing
+                        && m.next_code_line(p.line + 1) == Some(line)))
+        });
+        match hit {
+            Some((pi, _)) => {
+                used[pi] += 1;
+                out.suppressed += 1;
+            }
+            None => out.findings.push(Finding {
+                rule: r.id.to_string(),
+                file: sf.rel.clone(),
+                line,
+                class: sf.class.as_str(),
+                message: msg,
+                suggestion: r.suggestion.to_string(),
+            }),
+        }
+    }
+
+    // Engine diagnostics: malformed, unknown-rule, and stale pragmas.
+    for e in &m.errors {
+        out.findings.push(Finding {
+            rule: "pragma-syntax".to_string(),
+            file: sf.rel.clone(),
+            line: e.line,
+            class: sf.class.as_str(),
+            message: format!("malformed lint pragma: {}", e.msg),
+            suggestion: "write `// lint: allow(<rule>, reason = \
+                         \"...\")` or `allow-file(...)`"
+                .to_string(),
+        });
+    }
+    for (pi, p) in m.pragmas.iter().enumerate() {
+        if rule(&p.rule).is_none() {
+            out.findings.push(Finding {
+                rule: "pragma-syntax".to_string(),
+                file: sf.rel.clone(),
+                line: p.line,
+                class: sf.class.as_str(),
+                message: format!("pragma names unknown rule `{}`",
+                                 p.rule),
+                suggestion: "rule ids are listed in \
+                             docs/static-analysis.md"
+                    .to_string(),
+            });
+        } else if used[pi] == 0 {
+            out.findings.push(Finding {
+                rule: "stale-pragma".to_string(),
+                file: sf.rel.clone(),
+                line: p.line,
+                class: sf.class.as_str(),
+                message: format!(
+                    "allow({}) suppresses nothing (reason was: {})",
+                    p.rule, p.reason
+                ),
+                suggestion: "the violation it covered is gone — \
+                             delete the pragma"
+                    .to_string(),
+            });
+        }
+    }
+
+    out.findings.sort_by(|a, b| {
+        (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str()))
+    });
+    out
+}
+
+// ------------------------------------------------------------- scanning
+
+/// Byte offsets of `word` as a standalone identifier.
+fn ident_sites(text: &str, word: &str) -> Vec<usize> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(k) = text[from..].find(word) {
+        let at = from + k;
+        from = at + word.len();
+        let pre_ok = at == 0 || !lexer::is_ident_byte(b[at - 1]);
+        let end = at + word.len();
+        let post_ok = end >= b.len() || !lexer::is_ident_byte(b[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Byte offsets of a path-like pattern (e.g. `thread::spawn`): the
+/// leading segment must start on an identifier boundary; with
+/// `prefix = false` the trailing end must sit on one too.
+fn path_sites_with(text: &str, pat: &str, prefix: bool) -> Vec<usize> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(k) = text[from..].find(pat) {
+        let at = from + k;
+        from = at + pat.len();
+        let pre_ok = at == 0 || !lexer::is_ident_byte(b[at - 1]);
+        let end = at + pat.len();
+        let post_ok =
+            prefix || end >= b.len() || !lexer::is_ident_byte(b[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// [`path_sites_with`] requiring both boundaries.
+fn path_sites(text: &str, pat: &str) -> Vec<usize> {
+    path_sites_with(text, pat, false)
+}
+
+/// Raw substring offsets (for non-identifier patterns).
+fn substr_sites(text: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(k) = text[from..].find(pat) {
+        out.push(from + k);
+        from = from + k + pat.len();
+    }
+    out
+}
+
+/// Is `at` inside any of the half-open byte ranges?
+fn in_ranges(ranges: &[(usize, usize)], at: usize) -> bool {
+    ranges.iter().any(|&(lo, hi)| at >= lo && at < hi)
+}
+
+/// Byte ranges of `#[cfg(test)]`-gated `mod`/`fn` items (masked text).
+fn test_ranges(text: &str) -> Vec<(usize, usize)> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    for at in substr_sites(text, "#[cfg(test)]") {
+        let mut j = at + "#[cfg(test)]".len();
+        // Skip whitespace and further attributes.
+        loop {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'#' {
+                while j < b.len() && b[j] != b']' {
+                    j += 1;
+                }
+                j += 1;
+                continue;
+            }
+            break;
+        }
+        // The gated item must be a mod/fn to carve a range out; other
+        // items (consts, uses) carry no lintable body of their own.
+        let rest = &text[j..];
+        let is_item = rest.starts_with("mod ")
+            || rest.starts_with("pub mod ")
+            || rest.starts_with("fn ")
+            || rest.starts_with("pub fn ")
+            || rest.starts_with("pub(crate) mod ")
+            || rest.starts_with("pub(crate) fn ");
+        if !is_item {
+            continue;
+        }
+        if let Some(open) = text[j..].find('{') {
+            let open = j + open;
+            if let Some(close) = match_brace(b, open) {
+                out.push((at, close));
+            }
+        }
+    }
+    out
+}
+
+/// Offset just past the `}` matching the `{` at `open` (masked text, so
+/// braces in strings/comments are already gone).
+fn match_brace(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < b.len() {
+        match b[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j + 1);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// One `fn` item's signature + body byte span.
+struct FnSpan {
+    sig_start: usize,
+    body_start: usize,
+    body_end: usize,
+}
+
+/// All `fn` spans in the file (masked text), including nested fns.
+fn fn_spans(text: &str) -> Vec<FnSpan> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    for at in ident_sites(text, "fn") {
+        // Body opens at the first `{`; a `;` first means a bodiless
+        // trait/extern declaration.
+        let mut j = at;
+        while j < b.len() && b[j] != b'{' && b[j] != b';' {
+            j += 1;
+        }
+        if j >= b.len() || b[j] == b';' {
+            continue;
+        }
+        if let Some(end) = match_brace(b, j) {
+            out.push(FnSpan {
+                sig_start: at,
+                body_start: j,
+                body_end: end,
+            });
+        }
+    }
+    out
+}
+
+/// The innermost `fn` span containing `at`.
+fn enclosing_fn<'a>(fns: &'a [FnSpan], at: usize) -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|f| at >= f.sig_start && at < f.body_end)
+        .max_by_key(|f| f.sig_start)
+}
+
+// ------------------------------------------------------------ the rules
+
+/// `wall-clock`: `Instant::now`/`SystemTime::now` anywhere but the
+/// sanctioned timer homes (`obs::*`, `util::log`).
+fn wall_clock(sf: &SourceFile, text: &str) -> Vec<(usize, String)> {
+    let exempt = sf.module.first().map(String::as_str) == Some("obs")
+        || sf.module == ["util".to_string(), "log".to_string()];
+    if exempt {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for pat in ["Instant::now", "SystemTime::now"] {
+        for at in path_sites(text, pat) {
+            out.push((at, format!("{pat} outside obs::/util::log")));
+        }
+    }
+    out.sort_by_key(|&(at, _)| at);
+    out
+}
+
+/// `raw-thread`: a `thread::spawn`/`thread::scope` whose enclosing fn
+/// neither calls `resolve_plan_threads` nor receives a `threads`
+/// parameter in its signature.
+fn raw_thread(text: &str, fns: &[FnSpan]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for pat in ["thread::spawn", "thread::scope"] {
+        for at in path_sites(text, pat) {
+            let justified = match enclosing_fn(fns, at) {
+                Some(f) => {
+                    let sig = &text[f.sig_start..f.body_start];
+                    let body = &text[f.body_start..f.body_end];
+                    !ident_sites(sig, "threads").is_empty()
+                        || !ident_sites(body, "resolve_plan_threads")
+                            .is_empty()
+                }
+                None => false,
+            };
+            if !justified {
+                out.push((at, format!(
+                    "{pat} with a worker count not tied to \
+                     resolve_plan_threads"
+                )));
+            }
+        }
+    }
+    out.sort_by_key(|&(at, _)| at);
+    out
+}
+
+/// `nondet-rng`: ambient entropy sources.
+fn nondet_rng(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for word in ["thread_rng", "from_entropy", "RandomState"] {
+        for at in ident_sites(text, word) {
+            out.push((at, format!("nondeterministic entropy source \
+                                   `{word}`")));
+        }
+    }
+    for at in path_sites(text, "rand::random") {
+        out.push((at, "nondeterministic entropy source \
+                       `rand::random`".to_string()));
+    }
+    out.sort_by_key(|&(at, _)| at);
+    out
+}
+
+/// `env-read`: any `std::env::var*`/`env::vars*` read.
+fn env_read(text: &str) -> Vec<(usize, String)> {
+    path_sites_with(text, "env::var", true)
+        .into_iter()
+        .map(|at| (at, "environment read outside the config \
+                        layer".to_string()))
+        .collect()
+}
+
+/// `unordered-iteration`: iteration over identifiers bound to
+/// `HashMap`/`HashSet` in this file. Bindings are recognised from
+/// `name: HashMap<…>` (fields, params, typed lets) and
+/// `name = HashMap::new()`-style initialisers; iteration is
+/// `.iter()/.keys()/.values()/.drain()/.retain()/…` on such a name, or
+/// a `for … in name` loop. Keyed probes (`get`/`insert`/`remove`/…)
+/// never flag.
+fn unordered_iteration(text: &str) -> Vec<(usize, String)> {
+    let b = text.as_bytes();
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for ty in ["HashMap", "HashSet"] {
+        for at in ident_sites(text, ty) {
+            if let Some(name) = binding_name_before(text, at) {
+                names.insert(name);
+            }
+        }
+    }
+    const ITER_METHODS: &[&str] = &[
+        "iter", "iter_mut", "keys", "values", "values_mut",
+        "into_iter", "into_keys", "into_values", "drain", "retain",
+    ];
+    let mut out = Vec::new();
+    for name in &names {
+        for at in ident_sites(text, name) {
+            let end = at + name.len();
+            if let Some(meth) = dot_method_after(text, end) {
+                if ITER_METHODS.contains(&meth.as_str()) {
+                    out.push((at, format!(
+                        "hash-order iteration `{name}.{meth}()` \
+                         (container is a HashMap/HashSet)"
+                    )));
+                }
+                continue;
+            }
+            if for_in_before(b, at) {
+                out.push((at, format!(
+                    "hash-order iteration `for … in {name}`"
+                )));
+            }
+        }
+    }
+    out.sort_by_key(|&(at, _)| at);
+    out
+}
+
+/// Walk back from a `HashMap`/`HashSet` token to the identifier it is
+/// bound to, across `name: [&][mut] Hash…` and `name = Hash…` shapes
+/// (newlines included — declarations wrap at 80 cols here).
+fn binding_name_before(text: &str, at: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let mut j = at;
+    let skip_ws = |j: &mut usize| {
+        while *j > 0 && b[*j - 1].is_ascii_whitespace() {
+            *j -= 1;
+        }
+    };
+    skip_ws(&mut j);
+    // Optional `mut`, optional reference sigils.
+    if j >= 3 && &b[j - 3..j] == b"mut" {
+        j -= 3;
+        skip_ws(&mut j);
+    }
+    while j > 0 && b[j - 1] == b'&' {
+        j -= 1;
+        skip_ws(&mut j);
+    }
+    if j == 0 {
+        return None;
+    }
+    let sep = b[j - 1];
+    if sep != b':' && sep != b'=' {
+        return None;
+    }
+    j -= 1;
+    // `::HashMap` is a path, not a binding; `==` is a comparison.
+    if j > 0 && (b[j - 1] == b':' || b[j - 1] == b'=') {
+        return None;
+    }
+    skip_ws(&mut j);
+    let end = j;
+    while j > 0 && lexer::is_ident_byte(b[j - 1]) {
+        j -= 1;
+    }
+    if j == end {
+        return None;
+    }
+    let name = text.get(j..end)?;
+    if name.as_bytes()[0].is_ascii_digit() {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// The `.method` chained right after byte `end`, if any.
+fn dot_method_after(text: &str, end: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let mut j = end;
+    while j < b.len() && b[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'.' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() && b[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    let start = j;
+    while j < b.len() && lexer::is_ident_byte(b[j]) {
+        j += 1;
+    }
+    if j == start {
+        return None;
+    }
+    Some(text[start..j].to_string())
+}
+
+/// Is the identifier at `at` the sequence of a `for … in [&][mut]` loop?
+fn for_in_before(b: &[u8], at: usize) -> bool {
+    let mut j = at;
+    let skip_ws = |j: &mut usize| {
+        while *j > 0 && b[*j - 1].is_ascii_whitespace() {
+            *j -= 1;
+        }
+    };
+    skip_ws(&mut j);
+    if j >= 3 && &b[j - 3..j] == b"mut" {
+        j -= 3;
+        skip_ws(&mut j);
+    }
+    while j > 0 && b[j - 1] == b'&' {
+        j -= 1;
+        skip_ws(&mut j);
+    }
+    j >= 2
+        && &b[j - 2..j] == b"in"
+        && (j == 2 || !lexer::is_ident_byte(b[j - 3]))
+}

@@ -199,6 +199,7 @@ pub fn run_scenarios_observed(scenarios: &[ScenarioSpec], workers: usize,
         // (already-running ones finish); queued scenarios stay `None`.
         let stop = AtomicBool::new(false);
         let (tx, rx) = mpsc::channel::<(usize, Result<SimResult, String>)>();
+        // lint: allow(raw-thread, reason = "sweep worker pool sized by the --workers CLI arg, not a plan-thread count; scenario order is restored by index on collect")
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 let tx = tx.clone();

@@ -33,6 +33,11 @@
 //! * [`obs`] — observability: scoped span tracing with folded-stack
 //!   export, a counters/gauges/histograms registry, and per-round JSONL
 //!   telemetry (off by default; see `docs/observability.md`).
+//! * [`analysis`] — the `hadar lint` static-analysis pass: a
+//!   comment/string-stripping lexer, the module graph with plan-path vs
+//!   harness classification, and an eight-rule determinism engine with
+//!   suppression pragmas (see `docs/static-analysis.md`; CI gates on a
+//!   clean tree).
 //! * [`util`] — self-contained substrates (JSON, RNG, CLI, stats, tables,
 //!   property-test + bench harnesses).
 //!
@@ -43,6 +48,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod cluster;
 pub mod exec;
 pub mod expt;

@@ -15,6 +15,8 @@
 //!   train       end-to-end real-training emulation + Table IV
 //!   bench       scheduler hot-path microbench -> BENCH_sched.json
 //!   bench-info  where each figure's bench target lives
+//!   lint        determinism & plan-path static analysis (CI gate;
+//!               see docs/static-analysis.md)
 
 use hadar::util::cli::{App, Args, Command, Parsed};
 
@@ -119,6 +121,19 @@ fn app() -> App {
             .switch("quick", "CI smoke profile: fewer cases and iterations"),
         )
         .command(Command::new("bench-info", "map figures/tables to bench targets"))
+        .command(
+            Command::new(
+                "lint",
+                "determinism & plan-path static analysis over the \
+                 source tree (docs/static-analysis.md)",
+            )
+            .opt("src", Some(""),
+                 "source root to lint (default: ./rust/src, then ./src)")
+            .opt("out", Some(""), "also write the JSON report here")
+            .switch("json",
+                    "print the machine-readable JSON report instead of \
+                     text"),
+        )
 }
 
 /// Apply the shared `--log-json` / `--log-timestamps` switches.
@@ -315,6 +330,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    // lint: allow(wall-clock, reason = "sweep wall-time banner for the operator; not consumed by any scheduler")
     let t0 = std::time::Instant::now();
     let results = runner::run_scenarios_observed(&scenarios, workers,
                                                  telemetry_dir.as_deref())
@@ -404,6 +420,43 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `hadar lint`: run the static-analysis pass and exit non-zero on any
+/// finding (rule violation, stale pragma, or malformed pragma) — the
+/// same contract the CI job gates on.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use std::path::PathBuf;
+    let src = args.get_str("src");
+    let root = if src.is_empty() {
+        ["rust/src", "src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "neither ./rust/src nor ./src holds a lib.rs; \
+                     pass --src <dir>"
+                )
+            })?
+    } else {
+        PathBuf::from(src)
+    };
+    let report = hadar::analysis::lint_tree(&root)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let out = args.get_str("out");
+    if !out.is_empty() {
+        std::fs::write(&out, report.to_json().pretty())?;
+    }
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if !report.clean() {
+        anyhow::bail!("{} lint finding(s)", report.findings.len());
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     use hadar::exec::emulation::*;
     use hadar::sim::engine::SimConfig;
@@ -480,6 +533,12 @@ fn main() {
             }
             "bench" => {
                 if let Err(e) = cmd_bench(&args) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            "lint" => {
+                if let Err(e) = cmd_lint(&args) {
                     eprintln!("error: {e:#}");
                     std::process::exit(1);
                 }

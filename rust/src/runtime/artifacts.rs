@@ -160,6 +160,7 @@ impl Manifest {
 
     /// Default artifact directory: `$HADAR_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
+        // lint: allow(env-read, reason = "artifact-dir config knob, resolved once at load time; never read on the plan path")
         std::env::var("HADAR_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))

@@ -65,6 +65,8 @@
 //! equivalence (or occupancy) shows up in the artifact, not just in the
 //! property tests.
 
+// lint: allow-file(wall-clock, reason = "a microbench measures wall time by definition; every timing here lands in BENCH_sched.json, never in a plan")
+
 use crate::cluster::spec::ClusterSpec;
 use crate::forking::forker::ForkIds;
 use crate::forking::tracker::JobTracker;

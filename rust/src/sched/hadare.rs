@@ -212,14 +212,6 @@ const SHARD_MIN_CELLS: usize = 1 << 14;
 /// reason.
 const SHARD_MIN_CANDS: usize = 1 << 14;
 
-/// Moved to [`crate::sched::resolve_plan_threads`] (it is shared by the
-/// Hadar planner and `sched::bench`, not HadarE-specific). This
-/// forwarding shim keeps the old path compiling for external callers.
-#[deprecated(note = "moved to crate::sched::resolve_plan_threads")]
-pub fn resolve_plan_threads(configured: usize) -> usize {
-    crate::sched::resolve_plan_threads(configured)
-}
-
 /// Shared tail of the gang rate model, so the three public rating
 /// functions cannot drift apart: a bottleneck of `x_min` it/s over
 /// `n_gpus` GPUs — empty gangs and zero/NaN/infinite bottlenecks are

@@ -197,6 +197,7 @@ pub fn resolve_plan_threads(configured: usize) -> usize {
         return configured;
     }
     if let Some(n) =
+        // lint: allow(env-read, reason = "the config layer itself: the one sanctioned HADAR_PLAN_THREADS read, passed down as an explicit count")
         threads_from(std::env::var("HADAR_PLAN_THREADS").ok().as_deref())
     {
         return n;

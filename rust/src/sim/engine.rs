@@ -279,6 +279,7 @@ pub fn run_observed(queue: &mut JobQueue, scheduler: &mut dyn Scheduler,
                 delta: Some(&delta),
                 cluster: view.cluster(),
             };
+            // lint: allow(wall-clock, reason = "sched_wall telemetry only; the timing feeds SimResult reporting, never scheduling decisions")
             let t0 = Instant::now();
             let plan = {
                 let _s = obs::trace::span("sched.schedule");

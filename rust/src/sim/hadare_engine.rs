@@ -259,6 +259,7 @@ pub fn run_with_gang_observed(parents: &[Job], cluster: &ClusterSpec,
                 delta: Some(&delta),
                 cluster: view.cluster(),
             };
+            // lint: allow(wall-clock, reason = "sched_wall telemetry only; the timing feeds SimResult reporting, never planning decisions")
             let t0 = Instant::now();
             let plan = {
                 let _s = obs::trace::span("sched.schedule");

@@ -49,6 +49,7 @@ impl Bencher {
         let mut s = Summary::new();
         let mut last = None;
         for _ in 0..self.iters.max(1) {
+            // lint: allow(wall-clock, reason = "the bench harness exists to measure wall time; results are reporting-only")
             let t0 = Instant::now();
             let out = f();
             s.add(t0.elapsed().as_secs_f64() * 1e3);

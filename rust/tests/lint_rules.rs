@@ -1,0 +1,500 @@
+//! Fixture tests for the `hadar lint` rule engine: every rule gets at
+//! least one fixture proving it fires and one proving the masking layer
+//! or a pragma suppresses it. The fixtures are small synthetic source
+//! files pushed through [`hadar::analysis::rules::lint_file`] with a
+//! hand-built [`SourceFile`], so each case pins one behaviour without
+//! touching the real tree (that is `lint_selfaudit.rs`' job).
+
+use hadar::analysis::modgraph::{self, FileClass, SourceFile};
+use hadar::analysis::rules::{lint_file, FileLint};
+use hadar::analysis::{lint_tree, rules};
+
+/// Build a [`SourceFile`] fixture under the given module path; the
+/// class is derived exactly as the module graph would.
+fn fixture(rel: &str, module: &[&str], src: &str) -> SourceFile {
+    let module: Vec<String> =
+        module.iter().map(|s| s.to_string()).collect();
+    let class = modgraph::classify(&module);
+    SourceFile {
+        rel: rel.to_string(),
+        class,
+        module,
+        deps: Vec::new(),
+        src: src.to_string(),
+    }
+}
+
+/// Lint a fixture in a plan-path module (`sched::fixture`).
+fn lint_plan(src: &str) -> FileLint {
+    lint_file(&fixture("sched/fixture.rs", &["sched", "fixture"], src))
+}
+
+/// Lint a fixture in a harness module (`expt::fixture`).
+fn lint_harness(src: &str) -> FileLint {
+    lint_file(&fixture("expt/fixture.rs", &["expt", "fixture"], src))
+}
+
+/// Rule ids of the surviving findings, in report order.
+fn ids(fl: &FileLint) -> Vec<&str> {
+    fl.findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+// ------------------------------------------------------ float-total-cmp
+
+#[test]
+fn float_total_cmp_fires_on_code() {
+    let fl = lint_plan(
+        "fn f(xs: &mut Vec<f64>) {\n\
+             xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["float-total-cmp"]);
+    assert_eq!(fl.findings[0].line, 2);
+}
+
+#[test]
+fn float_total_cmp_ignores_comments_and_strings() {
+    // The two real comment-only mentions in the tree (the regression
+    // notes in util/stats.rs and sched/hadar.rs) must never flag; this
+    // fixture reproduces both shapes plus a string literal.
+    let fl = lint_plan(
+        "// the old partial_cmp comparator panicked on NaN\n\
+         /* partial_cmp */\n\
+         fn f(a: f64, b: f64) -> std::cmp::Ordering {\n\
+             let _doc = \"partial_cmp\";\n\
+             a.total_cmp(&b)\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+#[test]
+fn float_total_cmp_fires_inside_tests_too() {
+    let fl = lint_plan(
+        "#[cfg(test)]\nmod tests {\n\
+             fn f(a: f64, b: f64) -> bool {\n\
+                 a.partial_cmp(&b).is_some()\n\
+             }\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["float-total-cmp"]);
+}
+
+// -------------------------------------------------- unordered-iteration
+
+#[test]
+fn unordered_iteration_fires_on_hash_iteration_in_plan_path() {
+    let fl = lint_plan(
+        "use std::collections::HashMap;\n\
+         fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+             let mut s = 0;\n\
+             for (_, v) in m {\n\
+                 s += v;\n\
+             }\n\
+             s + m.values().sum::<u32>()\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["unordered-iteration", "unordered-iteration"]);
+    assert_eq!(fl.findings[0].line, 4);
+    assert_eq!(fl.findings[1].line, 7);
+}
+
+#[test]
+fn unordered_iteration_allows_keyed_probes() {
+    // get/insert/remove/len on a HashMap are deterministic — exactly
+    // the `none_rows` pattern in sched/hadar.rs.
+    let fl = lint_plan(
+        "use std::collections::HashMap;\n\
+         fn f(m: &mut HashMap<u32, u32>, k: u32) -> Option<u32> {\n\
+             m.insert(k, 1);\n\
+             m.remove(&(k + 1));\n\
+             let _ = m.len();\n\
+             m.get(&k).copied()\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+#[test]
+fn unordered_iteration_is_plan_path_only() {
+    let src = "use std::collections::HashMap;\n\
+               fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   m.values().sum()\n\
+               }\n";
+    assert_eq!(ids(&lint_plan(src)), ["unordered-iteration"]);
+    assert!(lint_harness(src).findings.is_empty());
+    // A bench module under sched/ is harness too.
+    let bench =
+        fixture("sched/bench.rs", &["sched", "bench"], src);
+    assert_eq!(bench.class, FileClass::Harness);
+    assert!(lint_file(&bench).findings.is_empty());
+}
+
+#[test]
+fn unordered_iteration_skips_cfg_test_blocks() {
+    let fl = lint_plan(
+        "use std::collections::HashMap;\n\
+         #[cfg(test)]\nmod tests {\n\
+             fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                 m.values().sum()\n\
+             }\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+// ----------------------------------------------------------- wall-clock
+
+#[test]
+fn wall_clock_fires_everywhere_but_the_timer_homes() {
+    let src = "fn f() -> std::time::Instant {\n\
+                   std::time::Instant::now()\n\
+               }\n";
+    assert_eq!(ids(&lint_plan(src)), ["wall-clock"]);
+    assert_eq!(ids(&lint_harness(src)), ["wall-clock"]);
+    let sys = "fn f() -> std::time::SystemTime {\n\
+                   std::time::SystemTime::now()\n\
+               }\n";
+    assert_eq!(ids(&lint_harness(sys)), ["wall-clock"]);
+}
+
+#[test]
+fn wall_clock_exempts_obs_and_util_log() {
+    let src = "fn f() -> std::time::Instant {\n\
+                   std::time::Instant::now()\n\
+               }\n";
+    let obs = fixture("obs/trace.rs", &["obs", "trace"], src);
+    assert!(lint_file(&obs).findings.is_empty());
+    let log = fixture("util/log.rs", &["util", "log"], src);
+    assert!(lint_file(&log).findings.is_empty());
+    // …but not the rest of util/.
+    let stats = fixture("util/stats.rs", &["util", "stats"], src);
+    assert_eq!(ids(&lint_file(&stats)), ["wall-clock"]);
+}
+
+#[test]
+fn wall_clock_skips_cfg_test_blocks() {
+    let fl = lint_plan(
+        "#[cfg(test)]\nmod tests {\n\
+             fn f() -> std::time::Instant {\n\
+                 std::time::Instant::now()\n\
+             }\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+// ----------------------------------------------------------- raw-thread
+
+#[test]
+fn raw_thread_fires_without_a_resolved_worker_count() {
+    let fl = lint_plan(
+        "fn f() {\n\
+             std::thread::spawn(|| {});\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["raw-thread"]);
+    let fl = lint_harness(
+        "fn f(workers: usize) {\n\
+             std::thread::scope(|s| { let _ = (s, workers); });\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["raw-thread"]);
+}
+
+#[test]
+fn raw_thread_allows_threads_param_or_resolver_call() {
+    // The two sanctioned shapes: the enclosing fn receives an explicit
+    // `threads` count, or it resolves one itself.
+    let fl = lint_plan(
+        "fn f(threads: usize) {\n\
+             std::thread::scope(|s| { let _ = (s, threads); });\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    let fl = lint_plan(
+        "fn g() {\n\
+             let n = crate::sched::resolve_plan_threads(0);\n\
+             std::thread::spawn(move || n);\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+// ------------------------------------------------------ deprecated-shim
+
+#[test]
+fn deprecated_shim_fires_even_in_tests() {
+    let fl = lint_plan(
+        "#[deprecated(note = \"moved\")]\n\
+         pub fn old() {}\n\
+         #[cfg(test)]\nmod tests {\n\
+             #[deprecated]\nfn older() {}\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["deprecated-shim", "deprecated-shim"]);
+}
+
+// ------------------------------------------------------------ no-unsafe
+
+#[test]
+fn no_unsafe_fires_on_blocks_and_fns() {
+    let fl = lint_plan(
+        "fn f() {\n\
+             let x = [1u8];\n\
+             let _ = unsafe { *x.as_ptr() };\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["no-unsafe"]);
+    // Prose mentions never flag.
+    let fl = lint_plan("// unsafe is banned here\nfn f() {}\n");
+    assert!(fl.findings.is_empty());
+}
+
+// ----------------------------------------------------------- nondet-rng
+
+#[test]
+fn nondet_rng_fires_on_entropy_sources() {
+    let fl = lint_plan(
+        "fn f() {\n\
+             let r = rand::thread_rng();\n\
+             let s: std::collections::hash_map::RandomState =\n\
+                 Default::default();\n\
+             let _ = (r, s);\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["nondet-rng", "nondet-rng"]);
+    // The seeded house RNG does not.
+    let fl = lint_plan(
+        "fn f() -> u64 {\n\
+             crate::util::rng::Rng::new(42).next_u64()\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+// ------------------------------------------------------------- env-read
+
+#[test]
+fn env_read_fires_on_var_and_vars() {
+    let fl = lint_plan(
+        "fn f() -> usize {\n\
+             let _ = std::env::var(\"HADAR_X\");\n\
+             std::env::vars().count()\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["env-read", "env-read"]);
+    // env::args (CLI argv) is not an environment read.
+    let fl = lint_harness("fn f() -> usize { std::env::args().count() }\n");
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+#[test]
+fn env_read_skips_cfg_test_blocks() {
+    let fl = lint_plan(
+        "#[cfg(test)]\nmod tests {\n\
+             fn f() {\n\
+                 let _ = std::env::var(\"HADAR_PLAN_THREADS\");\n\
+             }\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+// -------------------------------------------------------------- pragmas
+
+#[test]
+fn standalone_pragma_covers_next_code_line() {
+    let fl = lint_harness(
+        "fn f() -> std::time::Instant {\n\
+             // lint: allow(wall-clock, reason = \"fixture timer\")\n\
+             std::time::Instant::now()\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    assert_eq!((fl.pragmas, fl.suppressed), (1, 1));
+}
+
+#[test]
+fn standalone_pragma_skips_blank_and_comment_lines() {
+    let fl = lint_harness(
+        "fn f() -> std::time::Instant {\n\
+             // lint: allow(wall-clock, reason = \"fixture timer\")\n\
+             \n\
+             // which is to say:\n\
+             std::time::Instant::now()\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+}
+
+#[test]
+fn trailing_pragma_covers_its_own_line() {
+    let fl = lint_harness(
+        "fn f() -> std::time::Instant {\n\
+             std::time::Instant::now() // lint: allow(wall-clock, reason = \"fixture timer\")\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    // …and only that line: a trailing pragma one line early is stale
+    // and the site still fires.
+    let fl = lint_harness(
+        "fn f() -> std::time::Instant { // lint: allow(wall-clock, reason = \"wrong line\")\n\
+             std::time::Instant::now()\n\
+         }\n",
+    );
+    assert_eq!(ids(&fl), ["stale-pragma", "wall-clock"]);
+}
+
+#[test]
+fn allow_file_pragma_covers_the_whole_file() {
+    let fl = lint_harness(
+        "// lint: allow-file(wall-clock, reason = \"bench fixture\")\n\
+         fn f() -> f64 {\n\
+             let t0 = std::time::Instant::now();\n\
+             t0.elapsed().as_secs_f64() + seconds()\n\
+         }\n\
+         fn seconds() -> f64 {\n\
+             let t1 = std::time::Instant::now();\n\
+             t1.elapsed().as_secs_f64()\n\
+         }\n",
+    );
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    assert_eq!((fl.pragmas, fl.suppressed), (1, 2));
+}
+
+#[test]
+fn pragma_only_suppresses_its_own_rule() {
+    let fl = lint_harness(
+        "fn f() {\n\
+             // lint: allow(wall-clock, reason = \"fixture\")\n\
+             let _ = std::env::var(\"X\");\n\
+         }\n",
+    );
+    // The env read survives and the mismatched pragma is stale.
+    assert_eq!(ids(&fl), ["stale-pragma", "env-read"]);
+}
+
+#[test]
+fn stale_pragma_is_reported() {
+    let fl = lint_harness(
+        "// lint: allow(wall-clock, reason = \"nothing left to cover\")\n\
+         fn f() {}\n",
+    );
+    assert_eq!(ids(&fl), ["stale-pragma"]);
+    assert_eq!(fl.findings[0].line, 1);
+    assert_eq!((fl.pragmas, fl.suppressed), (1, 0));
+}
+
+#[test]
+fn malformed_and_unknown_rule_pragmas_are_syntax_findings() {
+    // No reason.
+    let fl = lint_harness("// lint: allow(wall-clock)\nfn f() {}\n");
+    assert_eq!(ids(&fl), ["pragma-syntax"]);
+    // Empty reason.
+    let fl = lint_harness(
+        "// lint: allow(wall-clock, reason = \"\")\nfn f() {}\n",
+    );
+    assert_eq!(ids(&fl), ["pragma-syntax"]);
+    // Unknown rule id.
+    let fl = lint_harness(
+        "// lint: allow(no-such-rule, reason = \"x\")\nfn f() {}\n",
+    );
+    assert_eq!(ids(&fl), ["pragma-syntax"]);
+}
+
+// ------------------------------------------------------------- lint_tree
+
+/// Write a tiny crate to a scratch dir, lint it end-to-end, and check
+/// the report and its JSON shape.
+#[test]
+fn lint_tree_end_to_end() {
+    let root = std::env::temp_dir()
+        .join(format!("hadar_lint_e2e_{}", std::process::id()));
+    let sched = root.join("sched");
+    std::fs::create_dir_all(&sched).unwrap();
+    std::fs::write(
+        root.join("lib.rs"),
+        "pub mod sched;\npub mod util;\n",
+    )
+    .unwrap();
+    std::fs::write(sched.join("mod.rs"), "pub mod solver;\n").unwrap();
+    std::fs::write(
+        sched.join("solver.rs"),
+        "pub fn pick(xs: &mut Vec<f64>) {\n\
+             xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+         }\n",
+    )
+    .unwrap();
+    std::fs::write(
+        root.join("util.rs"),
+        "pub fn helper() -> u32 { crate::sched::SEED }\n",
+    )
+    .unwrap();
+
+    let report = lint_tree(&root).unwrap();
+    assert_eq!(report.files.len(), 4);
+    assert!(!report.clean());
+    assert_eq!(report.findings.len(), 1);
+    let f = &report.findings[0];
+    assert_eq!(
+        (f.rule.as_str(), f.file.as_str(), f.line, f.class),
+        ("float-total-cmp", "sched/solver.rs", 2, "plan-path"),
+    );
+    // Classification + dep edges surface in the file summaries.
+    let util = report
+        .files
+        .iter()
+        .find(|s| s.file == "util.rs")
+        .unwrap();
+    assert_eq!(util.class, "harness");
+    assert_eq!(util.deps, ["sched"]);
+
+    // JSON report: stable tool tag, the finding, and a dirty summary.
+    let json = report.to_json().pretty();
+    assert!(json.contains("hadar-lint"), "{json}");
+    assert!(json.contains("float-total-cmp"), "{json}");
+    assert!(json.contains("\"clean\": false"), "{json}");
+    let text = report.render();
+    assert!(text.contains("sched/solver.rs:2"), "{text}");
+    assert!(text.contains("DIRTY"), "{text}");
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// An unresolvable `mod` declaration is an infrastructure error, not a
+/// finding — a lint run that silently skipped files would certify
+/// nothing.
+#[test]
+fn lint_tree_rejects_unresolvable_mods() {
+    let root = std::env::temp_dir()
+        .join(format!("hadar_lint_badmod_{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(root.join("lib.rs"), "mod missing;\n").unwrap();
+    let err = lint_tree(&root).unwrap_err();
+    assert!(err.contains("mod missing"), "{err}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The catalog itself: ids are unique, and the per-rule scoping flags
+/// the docs promise are what the engine ships.
+#[test]
+fn rule_catalog_is_consistent() {
+    let mut ids: Vec<&str> =
+        rules::RULES.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), rules::RULES.len());
+    assert_eq!(rules::RULES.len(), 8);
+    let by = |id: &str| rules::rule(id).unwrap();
+    assert!(by("unordered-iteration").plan_path_only);
+    assert!(!by("unordered-iteration").in_tests);
+    assert!(!by("wall-clock").in_tests);
+    assert!(!by("raw-thread").in_tests);
+    assert!(!by("env-read").in_tests);
+    assert!(by("float-total-cmp").in_tests);
+    assert!(by("no-unsafe").in_tests);
+    assert!(by("nondet-rng").in_tests);
+    assert!(by("deprecated-shim").in_tests);
+    assert!(rules::rule("no-such-rule").is_none());
+}
